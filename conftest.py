@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the root by
+putting the python/ package directory on sys.path (the suite imports
+`compile.kernels` etc. relative to python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

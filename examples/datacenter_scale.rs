@@ -1,0 +1,58 @@
+//! Datacenter scalability study (paper Fig. 7 / §III-C): sweep array sizes
+//! from edge (32x32) to TPU-v1 scale (256x256) and show the Flex-vs-OS gap
+//! widening, with per-model detail and utilization.
+//!
+//! Run: `cargo run --release --example datacenter_scale`
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::metrics::{mean, sci, Table};
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+fn main() {
+    let sizes = [32u32, 64, 128, 256];
+    let mut summary = Table::new(&["S", "avg speedup vs OS", "avg speedup vs IS", "avg speedup vs WS"]);
+
+    for s in sizes {
+        let arch = ArchConfig::square(s);
+        let pipeline = FlexPipeline::new(arch);
+        let mut t = Table::new(&[
+            "Model",
+            "IS",
+            "OS",
+            "WS",
+            "Flex",
+            "Speedup vs OS",
+            "Flex util",
+        ]);
+        let mut sp_os = Vec::new();
+        let mut sp_is = Vec::new();
+        let mut sp_ws = Vec::new();
+        for topo in zoo::all_models() {
+            let d = pipeline.deploy(&topo);
+            sp_os.push(d.speedup_vs(Dataflow::Os));
+            sp_is.push(d.speedup_vs(Dataflow::Is));
+            sp_ws.push(d.speedup_vs(Dataflow::Ws));
+            t.row(vec![
+                topo.name.clone(),
+                sci(d.static_cycles(Dataflow::Is)),
+                sci(d.static_cycles(Dataflow::Os)),
+                sci(d.static_cycles(Dataflow::Ws)),
+                sci(d.total_cycles()),
+                format!("{:.3}x", d.speedup_vs(Dataflow::Os)),
+                format!("{:.3}", d.flex.utilization(&arch)),
+            ]);
+        }
+        println!("== S = {s}x{s} ==\n{}", t.render());
+        summary.row(vec![
+            format!("{s}x{s}"),
+            format!("{:.3}", mean(&sp_os)),
+            format!("{:.3}", mean(&sp_is)),
+            format!("{:.3}", mean(&sp_ws)),
+        ]);
+    }
+
+    println!("== Scalability summary (paper Fig. 7: OS column grows) ==");
+    println!("{}", summary.render());
+}

@@ -1,0 +1,70 @@
+//! Edge deployment study: MobileNet + YOLO-Tiny on Coral-class arrays
+//! (8x8 / 16x16), the paper's edge motivation — plus the cost model's
+//! energy estimate per inference (extension, clearly beyond the paper).
+//!
+//! Run: `cargo run --release --example edge_deployment`
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::cost::energy;
+use flex_tpu::cost::synth::critical_path_ns;
+use flex_tpu::cost::PeVariant;
+use flex_tpu::metrics::Table;
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+fn main() {
+    let models = [zoo::mobilenet(), zoo::yolo_tiny()];
+    let mut t = Table::new(&[
+        "Array",
+        "Model",
+        "Flex cycles",
+        "Best static",
+        "Speedup",
+        "Latency (ms)",
+        "Energy/inf (mJ)",
+    ]);
+
+    for s in [8u32, 16] {
+        let arch = ArchConfig::square(s);
+        let pipeline = FlexPipeline::new(arch);
+        let cpd_ns = critical_path_ns(s, PeVariant::Flex);
+        for model in &models {
+            let d = pipeline.deploy(model);
+            let (best_df, best_cycles) = d.best_static();
+            let latency_ms = d.total_cycles() as f64 * cpd_ns * 1e-6;
+            // Full energy model: MAC + SRAM traffic + leakage (cost::energy).
+            let energy_mj = energy::network_energy(&arch, PeVariant::Flex, &d.flex).total_mj();
+            t.row(vec![
+                format!("{s}x{s}"),
+                model.name.clone(),
+                d.total_cycles().to_string(),
+                format!("{best_cycles} ({best_df})"),
+                format!("{:.3}x", best_cycles as f64 / d.total_cycles() as f64),
+                format!("{latency_ms:.2}"),
+                format!("{energy_mj:.3}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // Edge arrays reconfigure more per cycle saved — show the CMU tables.
+    for model in &models {
+        let d = FlexPipeline::new(ArchConfig::square(8)).deploy(model);
+        let table: Vec<String> = d
+            .selection
+            .per_layer
+            .iter()
+            .map(|df| df.name().to_string())
+            .collect();
+        println!("{} CMU table (8x8): {}", model.name, table.join(","));
+        println!(
+            "  transitions: {} (reconfig overhead {} cycles total)",
+            d.flex.reconfig_cycles / d.arch.reconfig_cycles.max(1),
+            d.flex.reconfig_cycles
+        );
+        for df in Dataflow::ALL {
+            println!("  speedup vs {df}: {:.3}x", d.speedup_vs(df));
+        }
+    }
+}

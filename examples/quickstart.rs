@@ -1,0 +1,49 @@
+//! Quickstart: deploy ResNet-18 on a 32x32 Flex-TPU and print the per-layer
+//! dataflow selection plus the Table-I-style speedup summary.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::metrics::Table;
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+fn main() {
+    // 1. Pick a workload from the zoo (or parse your own ScaleSim CSV with
+    //    flex_tpu::topology::parse_csv).
+    let model = zoo::resnet18();
+
+    // 2. Describe the hardware: a 32x32 systolic array, paper defaults.
+    let arch = ArchConfig::square(32);
+
+    // 3. Run the paper's pre-deployment flow: profile each layer under
+    //    IS/OS/WS, program the CMU with the per-layer argmin, simulate.
+    let deployment = FlexPipeline::new(arch).deploy(&model);
+
+    // 4. Inspect the per-layer selection (paper Fig. 1 content).
+    let mut t = Table::new(&["Layer", "IS cycles", "OS cycles", "WS cycles", "CMU pick"]);
+    for (i, layer) in model.layers.iter().enumerate() {
+        let c = deployment.selection.cycles[i];
+        t.row(vec![
+            layer.name.clone(),
+            c[0].to_string(),
+            c[1].to_string(),
+            c[2].to_string(),
+            deployment.selection.per_layer[i].to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 5. The Table-I row for this model.
+    println!("Flex-TPU total: {} cycles", deployment.total_cycles());
+    for df in Dataflow::ALL {
+        println!(
+            "  static {df}: {:>9} cycles -> Flex speedup {:.3}x",
+            deployment.static_cycles(df),
+            deployment.speedup_vs(df)
+        );
+    }
+    let wins = deployment.selection.wins();
+    println!("layer wins IS/OS/WS: {}/{}/{}", wins[0], wins[1], wins[2]);
+}

@@ -1,0 +1,116 @@
+"""AOT compile path: lower the L2 model + L1 kernels to HLO text artifacts.
+
+Interchange format is HLO *text*, NOT serialized HloModuleProto and NOT
+jax.export bytes: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's runtime (xla_extension 0.5.1) rejects (`proto.id() <=
+INT_MAX`); the HLO text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Artifacts (written to --outdir, default ../artifacts):
+  model_flex.hlo.txt     FlexNet-Tiny fwd, per-layer dataflows from the CMU
+  model_os.hlo.txt       static-OS baseline (same math; the rust e2e example
+  model_ws.hlo.txt       asserts all variants agree bitwise-ish, mirroring
+  model_is.hlo.txt       the paper's claim that dataflow only changes time)
+  gemm_{os,ws,is}.hlo.txt  64x64x64 GEMM per dataflow for runtime tests
+  manifest.json          shapes + dataflow tables for the rust loader
+
+Weights are baked into the HLO as constants (seed-0 init): the rust request
+path passes only the input batch.  Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import systolic
+
+GEMM_DIM = 64
+DATAFLOWS = ("os", "ws", "is")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(params, dataflows) -> str:
+    def fwd(xs):
+        return (model.forward_batch(params, xs, dataflows),)
+
+    spec = jax.ShapeDtypeStruct(
+        (model.BATCH, model.INPUT_HW, model.INPUT_HW, 3), jnp.float32
+    )
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_gemm(dataflow: str, dim: int = GEMM_DIM) -> str:
+    def fn(a, b):
+        return (systolic.matmul(a, b, dataflow=dataflow,
+                                block_m=32, block_n=32, block_k=32),)
+
+    spec = jax.ShapeDtypeStruct((dim, dim), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    params = model.init_params(args.seed)
+    manifest = {
+        "batch": model.BATCH,
+        "input_hw": model.INPUT_HW,
+        "input_channels": 3,
+        "num_classes": model.NUM_CLASSES,
+        "seed": args.seed,
+        "gemm_dim": GEMM_DIM,
+        "models": {},
+        "gemms": {},
+        "conv_layers": [
+            {"name": n, "kh": kh, "kw": kw, "cin": ci, "cout": co,
+             "stride": s, "padding": p}
+            for (n, kh, kw, ci, co, s, p) in model.CONV_LAYERS
+        ],
+    }
+
+    variants = {"flex": list(model.DEFAULT_DATAFLOWS)}
+    for df in DATAFLOWS:
+        variants[df] = [df] * (len(model.CONV_LAYERS) + 1)
+
+    for name, dfs in variants.items():
+        path = f"model_{name}.hlo.txt"
+        text = lower_model(params, dfs)
+        with open(os.path.join(args.outdir, path), "w") as f:
+            f.write(text)
+        manifest["models"][name] = {"path": path, "dataflows": dfs}
+        print(f"wrote {path}: {len(text)} chars")
+
+    for df in DATAFLOWS:
+        path = f"gemm_{df}.hlo.txt"
+        text = lower_gemm(df)
+        with open(os.path.join(args.outdir, path), "w") as f:
+            f.write(text)
+        manifest["gemms"][df] = {"path": path, "dim": GEMM_DIM}
+        print(f"wrote {path}: {len(text)} chars")
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

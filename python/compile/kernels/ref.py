@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracles for the Pallas systolic-GEMM kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis in python/tests/). They intentionally use nothing but jnp so they
+lower to stock XLA ops and cannot share bugs with the Pallas schedules.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain GEMM oracle: (M,K) @ (K,N) -> (M,N) in f32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def matmul_bias_relu_ref(a, b, bias):
+    """GEMM + bias + ReLU oracle (the fused epilogue used by conv layers)."""
+    y = matmul_ref(a, b) + bias.astype(jnp.float32)
+    return jnp.maximum(y, 0.0)
+
+
+def im2col_ref(x, kh: int, kw: int, stride: int, padding: int):
+    """Explicit im2col patch extraction oracle.
+
+    x: (H, W, C) -> (out_h * out_w, kh * kw * C) patch matrix, matching the
+    layout produced by model._im2col (rows = output pixels in row-major
+    order, cols = (dy, dx, c) in row-major order).
+    """
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    out_h = (h + 2 * padding - kh) // stride + 1
+    out_w = (w + 2 * padding - kw) // stride + 1
+    rows = []
+    for oy in range(out_h):
+        for ox in range(out_w):
+            patch = xp[oy * stride : oy * stride + kh, ox * stride : ox * stride + kw, :]
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows, axis=0)
+
+
+def conv2d_ref(x, w, bias, stride: int, padding: int):
+    """Direct convolution oracle via im2col + GEMM.
+
+    x: (H, W, Cin), w: (KH, KW, Cin, Cout), bias: (Cout,)
+    returns (out_h, out_w, Cout) after ReLU.
+    """
+    kh, kw, cin, cout = w.shape
+    h, wdt, _ = x.shape
+    patches = im2col_ref(x, kh, kw, stride, padding)  # (M, K)
+    wmat = w.reshape(kh * kw * cin, cout)  # (K, N)
+    out_h = (h + 2 * padding - kh) // stride + 1
+    out_w = (wdt + 2 * padding - kw) // stride + 1
+    y = matmul_bias_relu_ref(patches, wmat, bias)
+    return y.reshape(out_h, out_w, cout)
+
+
+def quantized_matmul_ref(a, b, scale_a: float, scale_b: float):
+    """Exact int32-accumulation quantized GEMM oracle."""
+    acc = jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+    return acc.astype(jnp.float32) * (scale_a * scale_b)
+
+
+def avgpool_ref(x, pool: int):
+    """Non-overlapping average pool oracle. x: (H, W, C)."""
+    h, w, c = x.shape
+    return x[: h - h % pool, : w - w % pool, :].reshape(
+        h // pool, pool, w // pool, pool, c
+    ).mean(axis=(1, 3))

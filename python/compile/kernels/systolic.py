@@ -1,0 +1,308 @@
+"""L1 Pallas kernels: the systolic GEMM hot-spot under three dataflow schedules.
+
+The Flex-TPU paper reconfigures a systolic array between input-stationary
+(IS), output-stationary (OS) and weight-stationary (WS) dataflows per layer.
+On a TPU the analogue of "which operand is pinned in PE registers" is "which
+operand block stays resident in VMEM across the inner grid loop".  Each
+schedule below expresses one dataflow through Pallas grid ordering and
+BlockSpec index maps (see DESIGN.md §7 Hardware-Adaptation):
+
+  OS: grid (m, n, k), k innermost  -> the OUTPUT block (m, n) is revisited
+      every k step and accumulated in place: outputs stationary.
+  WS: grid (n, k, m), m innermost  -> the WEIGHT block index map (k, n)
+      ignores m: weights stationary while activations stream.
+  IS: grid (m, k, n), n innermost  -> the ACTIVATION block index map (m, k)
+      ignores n: inputs stationary while weights stream.
+
+All kernels compute the same GEMM (bit-identical up to f32 accumulation
+order) and are verified against kernels.ref by pytest + hypothesis.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO (see aot_recipe /
+/opt/xla-example/README.md).  Real-TPU VMEM/MXU estimates: DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Dataflow = Literal["os", "ws", "is"]
+
+# MXU-aligned default; small blocks are allowed (tests use 8/16) since
+# interpret mode has no hardware tiling constraint.
+DEFAULT_BLOCK = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _os_body(a_ref, b_ref, o_ref, *, k_steps: int):
+    """Output-stationary: o block pinned across the innermost k loop."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _ws_body(a_ref, b_ref, o_ref, *, k_steps: int):
+    """Weight-stationary: b block constant across the innermost m loop.
+
+    Grid is (n, k, m); the output block (m, n) is revisited once per k step
+    (middle dim), so zero-init at k == 0 and accumulate after.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _is_body(a_ref, b_ref, o_ref, *, k_steps: int):
+    """Input-stationary: a block constant across the innermost n loop."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# schedules: grid + BlockSpecs per dataflow
+# ---------------------------------------------------------------------------
+
+
+def _schedule(dataflow: Dataflow, mt: int, nt: int, kt: int, bm: int, bn: int, bk: int):
+    """Return (body, grid, a_spec, b_spec, o_spec) for one dataflow."""
+    if dataflow == "os":
+        # grid (m, n, k); output (m, n) ignores k -> stationary output block
+        return (
+            functools.partial(_os_body, k_steps=kt),
+            (mt, nt, kt),
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        )
+    if dataflow == "ws":
+        # grid (n, k, m); weight (k, n) ignores m -> stationary weight block
+        return (
+            functools.partial(_ws_body, k_steps=kt),
+            (nt, kt, mt),
+            pl.BlockSpec((bm, bk), lambda n, k, m: (m, k)),
+            pl.BlockSpec((bk, bn), lambda n, k, m: (k, n)),
+            pl.BlockSpec((bm, bn), lambda n, k, m: (m, n)),
+        )
+    if dataflow == "is":
+        # grid (m, k, n); activation (m, k) ignores n -> stationary input block
+        return (
+            functools.partial(_is_body, k_steps=kt),
+            (mt, kt, nt),
+            pl.BlockSpec((bm, bk), lambda m, k, n: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, k, n: (k, n)),
+            pl.BlockSpec((bm, bn), lambda m, k, n: (m, n)),
+        )
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    dataflow: Dataflow = "os",
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """Systolic GEMM (M,K)@(K,N)->(M,N) under the given dataflow schedule.
+
+    Inputs may be f32/bf16/int8; accumulation is f32 and the result is f32.
+    Shapes need not be block-aligned; operands are zero-padded up and the
+    result sliced back (zero padding is exact for matmul).
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block_m, _ceil_to(m, 8)), min(block_n, _ceil_to(n, 8)),
+                  min(block_k, _ceil_to(k, 8)))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    ap = _pad2(a, mp, kp)
+    bp = _pad2(b, kp, np_)
+    mt, nt, kt = mp // bm, np_ // bn, kp // bk
+
+    body, grid, a_spec, b_spec, o_spec = _schedule(dataflow, mt, nt, kt, bm, bn, bk)
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _fused_body(a_ref, b_ref, bias_ref, o_ref, *, k_axis: int, k_steps: int):
+    """GEMM body with the bias+ReLU epilogue fused into the final K step.
+
+    The output block stays resident across the K grid dimension (whichever
+    grid axis that is for the schedule); on its last visit the accumulated
+    block gets bias added and ReLU applied in place — the systolic-array
+    analogue of folding the activation into the drain path.
+    """
+    k = pl.program_id(k_axis)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = jnp.maximum(o_ref[...] + bias_ref[...], 0.0)
+
+
+def matmul_bias_relu(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    dataflow: Dataflow = "os",
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """GEMM with the bias+ReLU epilogue fused *inside* the Pallas kernel.
+
+    Used by every conv/FC layer of the L2 model.  The epilogue fires on the
+    output block's final K-step visit, so no extra pass over the output is
+    needed (and on a real TPU no extra HBM round-trip).
+    """
+    if bias.shape != (b.shape[1],):
+        raise ValueError(f"bias shape {bias.shape} != ({b.shape[1]},)")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block_m, _ceil_to(m, 8)), min(block_n, _ceil_to(n, 8)),
+                  min(block_k, _ceil_to(k, 8)))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    ap = _pad2(a, mp, kp)
+    bp = _pad2(b, kp, np_)
+    biasp = jnp.pad(bias.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+    mt, nt, kt = mp // bm, np_ // bn, kp // bk
+
+    _, grid, a_spec, b_spec, o_spec = _schedule(dataflow, mt, nt, kt, bm, bn, bk)
+    # K grid-axis index per schedule: OS has k innermost (2), WS/IS middle (1).
+    k_axis = 2 if dataflow == "os" else 1
+    # Bias block follows the output's N index under each schedule.
+    if dataflow == "os":
+        bias_spec = pl.BlockSpec((1, bn), lambda m_, n_, k_: (0, n_))
+    elif dataflow == "ws":
+        bias_spec = pl.BlockSpec((1, bn), lambda n_, k_, m_: (0, n_))
+    else:  # is
+        bias_spec = pl.BlockSpec((1, bn), lambda m_, k_, n_: (0, n_))
+
+    out = pl.pallas_call(
+        functools.partial(_fused_body, k_axis=k_axis, k_steps=kt),
+        grid=grid,
+        in_specs=[a_spec, b_spec, bias_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp, biasp)
+    return out[:m, :n]
+
+
+def _quantized_body(a_ref, b_ref, o_ref, *, k_axis: int):
+    """INT8 x INT8 -> INT32 accumulation (Edge-TPU datapath)."""
+    k = pl.program_id(k_axis)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quantized_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    scale_a: float = 1.0,
+    scale_b: float = 1.0,
+    dataflow: Dataflow = "os",
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """Quantized GEMM: int8 operands, exact int32 accumulation, dequantized
+    float output (`scale_a * scale_b * (a_int @ b_int)`).
+
+    Mirrors the INT8 MAC datapath of the paper's PEs (and of the functional
+    rust array in `rust/src/arch/`), under any of the three schedules.
+    """
+    if a.dtype != jnp.int8 or b.dtype != jnp.int8:
+        raise ValueError(f"quantized_matmul expects int8, got {a.dtype}/{b.dtype}")
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block_m, _ceil_to(m, 8)), min(block_n, _ceil_to(n, 8)),
+                  min(block_k, _ceil_to(k, 8)))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    ap = _pad2(a, mp, kp)
+    bp = _pad2(b, kp, np_)
+    mt, nt, kt = mp // bm, np_ // bn, kp // bk
+
+    _, grid, a_spec, b_spec, o_spec = _schedule(dataflow, mt, nt, kt, bm, bn, bk)
+    k_axis = 2 if dataflow == "os" else 1
+    acc = pl.pallas_call(
+        functools.partial(_quantized_body, k_axis=k_axis),
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(ap, bp)
+    return acc[:m, :n].astype(jnp.float32) * (scale_a * scale_b)

@@ -1,0 +1,119 @@
+"""L2: the JAX CNN whose GEMMs flow through the L1 Pallas systolic kernels.
+
+This is the functional half of the Flex-TPU reproduction: the cycle-accurate
+simulator (rust L3) provides *time*; this model, AOT-lowered to HLO and run
+by the rust PJRT runtime, provides *values*.  The network ("FlexNet-Tiny")
+is a small conv-net sized so the interpret-mode Pallas lowering stays cheap
+while still exercising conv -> im2col -> GEMM -> bias/ReLU -> pool -> FC,
+i.e. every layer shape class the paper's workloads contain.
+
+Every conv/FC is lowered onto kernels.systolic.matmul_bias_relu with a
+per-layer dataflow argument — the software twin of the CMU reconfiguring the
+array per layer.  Python runs only at build time (make artifacts).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import systolic
+
+# (name, kh, kw, cin, cout, stride, padding) for the conv trunk.
+CONV_LAYERS = (
+    ("conv1", 3, 3, 3, 8, 1, 1),
+    ("conv2", 3, 3, 8, 16, 1, 1),
+)
+INPUT_HW = 16  # 16x16x3 inputs
+POOL = 2
+NUM_CLASSES = 10
+FC_IN = (INPUT_HW // POOL // POOL) ** 2 * CONV_LAYERS[-1][4]  # 4*4*16 = 256
+BATCH = 8
+
+# Per-layer dataflow baked into the exported artifact (the rust CMU owns the
+# authoritative table and picks which artifact variant to execute).
+# Order: conv1, conv2, fc.
+DEFAULT_DATAFLOWS: Sequence[systolic.Dataflow] = ("ws", "os", "is")
+
+
+def init_params(seed: int = 0) -> dict:
+    """Deterministic He-style init; synthetic weights (see DESIGN.md §6)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, kh, kw, cin, cout, _s, _p in CONV_LAYERS:
+        key, wkey = jax.random.split(key)
+        fan_in = kh * kw * cin
+        params[name] = {
+            "w": jax.random.normal(wkey, (kh, kw, cin, cout), jnp.float32)
+            * jnp.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((cout,), jnp.float32),
+        }
+    key, fc_key = jax.random.split(key)
+    params["fc"] = {
+        "w": jax.random.normal(fc_key, (FC_IN, NUM_CLASSES), jnp.float32)
+        * jnp.sqrt(2.0 / FC_IN),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+    return params
+
+
+def _im2col(x: jnp.ndarray, kh: int, kw: int, stride: int, padding: int) -> jnp.ndarray:
+    """(H, W, C) -> (out_h*out_w, kh*kw*C) patch matrix, (dy, dx, c) order.
+
+    Matches kernels.ref.im2col_ref exactly (tested), but builds the patch
+    matrix from kh*kw strided slices instead of a per-pixel python loop so
+    tracing stays O(kernel size), not O(output pixels).
+    """
+    h, w, _c = x.shape
+    xp = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    out_h = (h + 2 * padding - kh) // stride + 1
+    out_w = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(
+                xp[dy : dy + out_h * stride : stride, dx : dx + out_w * stride : stride, :]
+            )
+    patches = jnp.stack(cols, axis=2)  # (out_h, out_w, kh*kw, C)
+    return patches.reshape(out_h * out_w, kh * kw * _c)
+
+
+def conv2d(x, w, b, stride: int, padding: int, dataflow: systolic.Dataflow):
+    """Conv+bias+ReLU on one sample via im2col + the systolic GEMM kernel."""
+    kh, kw, cin, cout = w.shape
+    h, wdt, _ = x.shape
+    out_h = (h + 2 * padding - kh) // stride + 1
+    out_w = (wdt + 2 * padding - kw) // stride + 1
+    patches = _im2col(x, kh, kw, stride, padding)  # (M, K)
+    wmat = w.reshape(kh * kw * cin, cout)  # (K, N)
+    y = systolic.matmul_bias_relu(patches, wmat, b, dataflow=dataflow)
+    return y.reshape(out_h, out_w, cout)
+
+
+def avgpool(x: jnp.ndarray, pool: int) -> jnp.ndarray:
+    h, w, c = x.shape
+    return x.reshape(h // pool, pool, w // pool, pool, c).mean(axis=(1, 3))
+
+
+def forward_single(
+    params: dict,
+    x: jnp.ndarray,
+    dataflows: Sequence[systolic.Dataflow] = DEFAULT_DATAFLOWS,
+) -> jnp.ndarray:
+    """Logits for one (H, W, 3) image."""
+    df = list(dataflows)
+    for i, (name, _kh, _kw, _cin, _cout, stride, padding) in enumerate(CONV_LAYERS):
+        p = params[name]
+        x = conv2d(x, p["w"], p["b"], stride, padding, df[i])
+        x = avgpool(x, POOL)
+    flat = x.reshape(1, -1)  # (1, FC_IN): FC is a degenerate M=1 GEMM
+    logits = systolic.matmul(flat, params["fc"]["w"], dataflow=df[-1])
+    return (logits + params["fc"]["b"])[0]
+
+
+def forward_batch(params: dict, xs: jnp.ndarray,
+                  dataflows: Sequence[systolic.Dataflow] = DEFAULT_DATAFLOWS):
+    """Logits for a (B, H, W, 3) batch (vmapped single-sample forward)."""
+    return jax.vmap(lambda x: forward_single(params, x, dataflows))(xs)

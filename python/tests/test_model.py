@@ -1,0 +1,115 @@
+"""L2 correctness: im2col layout, conv lowering, and full-model invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _img(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "h,w,c,kh,kw,stride,padding",
+    [
+        (6, 6, 3, 3, 3, 1, 1),
+        (8, 8, 2, 3, 3, 2, 1),
+        (7, 5, 4, 1, 1, 1, 0),   # pointwise
+        (9, 9, 1, 5, 5, 1, 2),
+        (8, 8, 3, 3, 3, 2, 0),   # no padding, strided
+    ],
+)
+def test_im2col_matches_ref(h, w, c, kh, kw, stride, padding):
+    """model._im2col's strided-slice construction == per-pixel oracle."""
+    x = _img((h, w, c))
+    got = model._im2col(x, kh, kw, stride, padding)
+    want = ref.im2col_ref(x, kh, kw, stride, padding)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dataflow", ["os", "ws", "is"])
+def test_conv2d_matches_ref(dataflow):
+    x = _img((8, 8, 3), 1)
+    w = _img((3, 3, 3, 4), 2) * 0.2
+    b = _img((4,), 3)
+    got = model.conv2d(x, w, b, stride=1, padding=1, dataflow=dataflow)
+    want = ref.conv2d_ref(x, w, b, stride=1, padding=1)
+    assert got.shape == (8, 8, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_avgpool_matches_ref():
+    x = _img((8, 8, 5), 4)
+    np.testing.assert_allclose(
+        np.asarray(model.avgpool(x, 2)), np.asarray(ref.avgpool_ref(x, 2)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_forward_shapes():
+    params = model.init_params(0)
+    x = _img((model.INPUT_HW, model.INPUT_HW, 3), 5)
+    logits = model.forward_single(params, x)
+    assert logits.shape == (model.NUM_CLASSES,)
+    xs = _img((model.BATCH, model.INPUT_HW, model.INPUT_HW, 3), 6)
+    batch_logits = model.forward_batch(params, xs)
+    assert batch_logits.shape == (model.BATCH, model.NUM_CLASSES)
+
+
+def test_forward_batch_consistent_with_single():
+    params = model.init_params(0)
+    xs = _img((3, model.INPUT_HW, model.INPUT_HW, 3), 7)
+    batched = model.forward_batch(params, xs[: model.BATCH])
+    for i in range(3):
+        single = model.forward_single(params, xs[i])
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(single), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_dataflow_variants_agree():
+    """Static-OS/WS/IS and the flex per-layer table give identical logits —
+    the functional statement of 'reconfiguration changes time, not math'."""
+    params = model.init_params(0)
+    x = _img((model.INPUT_HW, model.INPUT_HW, 3), 8)
+    base = model.forward_single(params, x, ["os", "os", "os"])
+    for dfs in (["ws", "ws", "ws"], ["is", "is", "is"], list(model.DEFAULT_DATAFLOWS)):
+        other = model.forward_single(params, x, dfs)
+        np.testing.assert_allclose(
+            np.asarray(base), np.asarray(other), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_init_params_deterministic():
+    p1 = model.init_params(0)
+    p2 = model.init_params(0)
+    np.testing.assert_array_equal(
+        np.asarray(p1["conv1"]["w"]), np.asarray(p2["conv1"]["w"])
+    )
+    p3 = model.init_params(1)
+    assert not np.array_equal(
+        np.asarray(p1["conv1"]["w"]), np.asarray(p3["conv1"]["w"])
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(4, 10),
+    c=st.integers(1, 4),
+    cout=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 1000),
+)
+def test_conv2d_property(h, c, cout, stride, seed):
+    """Hypothesis: conv via systolic GEMM == direct oracle for random geometry."""
+    x = _img((h, h, c), seed)
+    w = _img((3, 3, c, cout), seed + 1) * 0.3
+    b = _img((cout,), seed + 2)
+    got = model.conv2d(x, w, b, stride=stride, padding=1, dataflow="os")
+    want = ref.conv2d_ref(x, w, b, stride=stride, padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,146 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * selector: exhaustive (paper) vs shape heuristic (future work) —
+//!   agreement and forfeited speedup;
+//! * reconfiguration cost: sweep cycles-per-change until Flex loses;
+//! * depthwise mapping: ScaleSim-compatible dense vs honest grouped;
+//! * memory model: DRAM bandwidth sweep to find the compute-bound edge.
+
+mod harness;
+
+use flex_tpu::config::{ArchConfig, SimFidelity};
+use flex_tpu::coordinator::pipeline::SelectorKind;
+use flex_tpu::coordinator::selector::{agreement, select_exhaustive, select_heuristic};
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::sim::engine::{simulate_network, SimOptions};
+use flex_tpu::sim::{Dataflow, DwMapping};
+use flex_tpu::topology::zoo;
+
+fn main() {
+    let mut b = harness::Bench::new("ablations");
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+
+    // --- Selector ablation -------------------------------------------------
+    for topo in zoo::all_models() {
+        let ex = select_exhaustive(&arch, &topo, opts);
+        let hu = select_heuristic(&arch, &topo, opts);
+        let agree = agreement(&ex, &hu);
+        let loss = hu.flex_compute_cycles() as f64 / ex.flex_compute_cycles() as f64;
+        b.metric(
+            &format!("selector/{}", topo.name),
+            "heuristic agreement, cycle ratio",
+            format!("{:.2}, {:.4}", agree, loss),
+        );
+    }
+    b.bench("selector/exhaustive/resnet18", || {
+        select_exhaustive(&arch, &zoo::resnet18(), opts)
+    });
+    b.bench("selector/heuristic/resnet18", || {
+        select_heuristic(&arch, &zoo::resnet18(), opts)
+    });
+
+    // --- Reconfiguration-cost sweep ----------------------------------------
+    let topo = zoo::resnet18();
+    for reconfig in [1u64, 100, 10_000, 1_000_000] {
+        let mut a = arch;
+        a.reconfig_cycles = reconfig;
+        let d = FlexPipeline::new(a).deploy(&topo);
+        b.metric(
+            &format!("reconfig/{reconfig}cyc"),
+            "flex speedup vs OS",
+            format!("{:.4}", d.speedup_vs(Dataflow::Os)),
+        );
+    }
+
+    // --- Depthwise mapping ablation (MobileNet) -----------------------------
+    for (name, dw) in [("scalesim", DwMapping::ScaleSim), ("grouped", DwMapping::Grouped)] {
+        let o = SimOptions {
+            dw_mapping: dw,
+            ..Default::default()
+        };
+        let mobilenet = zoo::mobilenet();
+        let cycles = simulate_network(&arch, &mobilenet, Dataflow::Os, o).total_cycles();
+        b.metric(
+            &format!("dw_mapping/{name}"),
+            "mobilenet OS cycles",
+            cycles,
+        );
+        let d = FlexPipeline::new(arch).with_options(o).deploy(&mobilenet);
+        b.metric(
+            &format!("dw_mapping/{name}"),
+            "flex speedup vs OS",
+            format!("{:.3}", d.speedup_vs(Dataflow::Os)),
+        );
+    }
+
+    // --- Memory-bandwidth sweep ---------------------------------------------
+    let yolo = zoo::yolo_tiny();
+    for bw in [1u64, 2, 4, 8, 16, 64] {
+        let mut a = arch;
+        a.memory.dram_bytes_per_cycle = bw;
+        let o = SimOptions {
+            fidelity: SimFidelity::WithMemory,
+            ..Default::default()
+        };
+        let s = simulate_network(&a, &yolo, Dataflow::Os, o);
+        b.metric(
+            &format!("dram_bw/{bw}B-per-cycle"),
+            "yolo stall fraction",
+            format!(
+                "{:.3}",
+                s.total_cycles().saturating_sub(s.compute_cycles()) as f64
+                    / s.total_cycles() as f64
+            ),
+        );
+    }
+    b.bench("memory_model/yolo", || {
+        simulate_network(
+            &arch,
+            &yolo,
+            Dataflow::Os,
+            SimOptions {
+                fidelity: SimFidelity::WithMemory,
+                ..Default::default()
+            },
+        )
+    });
+
+    // --- Synthetic workload sweep (workload generator) -----------------------
+    {
+        use flex_tpu::topology::synth::{generate, SynthConfig};
+        let mut worst: f64 = f64::INFINITY;
+        let mut best: f64 = 0.0;
+        for seed in 0..20u64 {
+            let t = generate(&format!("synth{seed}"), &SynthConfig::default(), seed);
+            let d = FlexPipeline::new(arch).deploy(&t);
+            let sp = d.speedup_vs(Dataflow::Os);
+            worst = worst.min(sp);
+            best = best.max(sp);
+        }
+        b.metric(
+            "synth_workloads/20-random-nets",
+            "flex-vs-OS speedup min..max",
+            format!("{worst:.3}..{best:.3}"),
+        );
+        assert!(worst >= 1.0);
+        b.bench("synth_workloads/gen+deploy", || {
+            let t = generate("bench", &SynthConfig::default(), 42);
+            FlexPipeline::new(arch).deploy(&t).total_cycles()
+        });
+    }
+
+    // --- Selector kind end-to-end -------------------------------------------
+    for (name, kind) in [
+        ("exhaustive", SelectorKind::Exhaustive),
+        ("heuristic", SelectorKind::Heuristic),
+    ] {
+        let d = FlexPipeline::new(arch).with_selector(kind).deploy(&topo);
+        b.metric(
+            &format!("pipeline/{name}"),
+            "resnet18 flex cycles",
+            d.total_cycles(),
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,62 @@
+//! Perf benches on the L3 hot path: `simulate_layer` / `simulate_network`
+//! and the functional PE-level array.  These drive the §Perf optimization
+//! log in EXPERIMENTS.md (DESIGN.md §9 target: >=1e6 layer-sims/s).
+
+mod harness;
+
+use flex_tpu::arch::{FlexArray, Mat};
+use flex_tpu::config::{ArchConfig, SimFidelity};
+use flex_tpu::sim::engine::{simulate_layer, simulate_network, SimOptions};
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+fn main() {
+    let mut b = harness::Bench::new("engine");
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+    let mem_opts = SimOptions {
+        fidelity: SimFidelity::WithMemory,
+        ..Default::default()
+    };
+    let resnet = zoo::resnet18();
+    let conv = resnet.layers[5].clone();
+
+    // Single-layer hot path (the selector calls this 3x per layer).
+    let s = b.bench("simulate_layer/conv", || {
+        simulate_layer(&arch, &conv, Dataflow::Os, opts)
+    });
+    b.metric(
+        "simulate_layer/conv",
+        "layer-sims per second",
+        format!("{:.2e}", 1e9 / s.mean_ns),
+    );
+
+    b.bench("simulate_layer/conv+memory", || {
+        simulate_layer(&arch, &conv, Dataflow::Os, mem_opts)
+    });
+
+    // Whole networks under each fidelity.
+    b.bench("simulate_network/resnet18", || {
+        simulate_network(&arch, &resnet, Dataflow::Os, opts)
+    });
+    b.bench("simulate_network/resnet18+memory", || {
+        simulate_network(&arch, &resnet, Dataflow::Os, mem_opts)
+    });
+    let google = zoo::googlenet();
+    b.bench("simulate_network/googlenet", || {
+        simulate_network(&arch, &google, Dataflow::Os, opts)
+    });
+
+    // Functional array (validation path — not required to be fast, but
+    // tracked so regressions are visible).
+    let a = Mat::random_i8(16, 16, 1);
+    let wm = Mat::random_i8(16, 16, 2);
+    for df in Dataflow::ALL {
+        b.bench(&format!("functional_array_16x16/{df}"), || {
+            let mut arr = FlexArray::new(8, 8);
+            arr.configure(df);
+            arr.run_gemm(&a, &wm)
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,28 @@
+//! Bench for paper Fig. 1: ResNet-18 per-layer cycles under each static
+//! dataflow at S=32x32 (the heterogeneity evidence motivating Flex-TPU).
+
+mod harness;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::selector::select_exhaustive;
+use flex_tpu::report::fig1;
+use flex_tpu::sim::engine::SimOptions;
+use flex_tpu::topology::zoo;
+
+fn main() {
+    let mut b = harness::Bench::new("fig1");
+    let arch = ArchConfig::square(32);
+    let topo = zoo::resnet18();
+    b.bench("selector/resnet18", || {
+        select_exhaustive(&arch, &topo, SimOptions::default())
+    });
+
+    let t = fig1("resnet18", 32);
+    println!("\n== Fig. 1 (regenerated: ResNet-18 per-layer cycles) ==\n{}", t.render());
+
+    let sel = select_exhaustive(&arch, &topo, SimOptions::default());
+    let wins = sel.wins();
+    b.metric("resnet18", "wins IS/OS/WS", format!("{}/{}/{}", wins[0], wins[1], wins[2]));
+    assert!(wins.iter().all(|&w| w > 0), "every dataflow must win some layer");
+    b.finish();
+}

@@ -1,0 +1,14 @@
+//! Bench for paper Fig. 6: wall-clock inference time per model at S=32x32
+//! (cycles x synthesized critical path, VGG excluded like the paper).
+
+mod harness;
+
+use flex_tpu::report::fig6;
+
+fn main() {
+    let mut b = harness::Bench::new("fig6");
+    b.bench("fig6/regenerate", fig6);
+    let t = fig6();
+    println!("\n== Fig. 6 (regenerated, ms per inference) ==\n{}", t.render());
+    b.finish();
+}

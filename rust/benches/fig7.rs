@@ -1,0 +1,42 @@
+//! Bench for paper Fig. 7: scalability at S=128x128 and 256x256 — the
+//! Flex-vs-OS gap must widen with array size.
+
+mod harness;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::metrics::mean;
+use flex_tpu::report::fig7;
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+fn main() {
+    let mut b = harness::Bench::new("fig7");
+    for s in [128u32, 256] {
+        let pipeline = FlexPipeline::new(ArchConfig::square(s));
+        b.bench(&format!("deploy_all/{s}x{s}"), || {
+            zoo::all_models()
+                .iter()
+                .map(|t| pipeline.deploy(t).total_cycles())
+                .sum::<u64>()
+        });
+    }
+
+    let t = fig7();
+    println!("\n== Fig. 7 (regenerated) ==\n{}", t.render());
+
+    // Scalability claim: avg Flex-vs-OS speedup grows with S.
+    let avg_speedup = |s: u32| {
+        let pipeline = FlexPipeline::new(ArchConfig::square(s));
+        mean(
+            &zoo::all_models()
+                .iter()
+                .map(|t| pipeline.deploy(t).speedup_vs(Dataflow::Os))
+                .collect::<Vec<_>>(),
+        )
+    };
+    let (a32, a128, a256) = (avg_speedup(32), avg_speedup(128), avg_speedup(256));
+    b.metric("avg-speedup-vs-os", "32/128/256", format!("{a32:.3}/{a128:.3}/{a256:.3}"));
+    assert!(a128 > a32 && a256 > a128, "scalability trend violated");
+    b.finish();
+}

@@ -1,0 +1,122 @@
+//! Minimal benchmark harness (criterion substitute; offline registry has no
+//! bench crates — see DESIGN.md §6).
+//!
+//! Usage from a `harness = false` bench target:
+//!
+//! ```ignore
+//! mod harness;
+//! fn main() {
+//!     let mut b = harness::Bench::new("table1");
+//!     b.bench("resnet18/os", || { ... });
+//!     b.finish();
+//! }
+//! ```
+//!
+//! Each case is warmed up, then run for a target wall-time; mean, stddev
+//! and throughput-style ns/iter are reported, plus an optional custom
+//! metric line (used by the paper-table benches to print the regenerated
+//! rows next to the timings).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    results: Vec<(String, Stats)>,
+}
+
+/// Timing statistics for one case.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Honor a quick mode for CI-style runs: FLEX_TPU_BENCH_QUICK=1.
+        let quick = std::env::var("FLEX_TPU_BENCH_QUICK").is_ok();
+        Self {
+            name: name.to_string(),
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record the result under `case`.
+    pub fn bench<R>(&mut self, case: &str, mut f: impl FnMut() -> R) -> Stats {
+        // Warmup and initial calibration.
+        let warm_start = Instant::now();
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 1 {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            one = t.elapsed();
+            warm_iters += 1;
+        }
+        // Choose a batch size so each sample is ~1ms or at least 1 iter.
+        let batch = ((Duration::from_millis(1).as_nanos() as f64
+            / one.as_nanos().max(1) as f64)
+            .ceil() as u64)
+            .max(1);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let run_start = Instant::now();
+        let mut iters = 0u64;
+        while run_start.elapsed() < self.measure {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            iters += batch;
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / samples.len().max(1) as f64;
+        let stats = Stats {
+            iters,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+        };
+        println!(
+            "{}/{case}: {:>12.1} ns/iter (± {:.1}, {} iters)",
+            self.name, stats.mean_ns, stats.stddev_ns, stats.iters
+        );
+        self.results.push((case.to_string(), stats));
+        stats
+    }
+
+    /// Print a non-timing metric line aligned with the bench output.
+    #[allow(dead_code)] // not every bench target emits custom metrics
+    pub fn metric(&self, case: &str, what: &str, value: impl std::fmt::Display) {
+        println!("{}/{case}: {what} = {value}", self.name);
+    }
+
+    /// Final summary (also guards against benches silently doing nothing).
+    pub fn finish(self) {
+        assert!(!self.results.is_empty(), "bench {} ran no cases", self.name);
+        println!(
+            "{}: {} cases done",
+            self.name,
+            self.results.len()
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench for paper Table I: regenerate the full Flex-vs-static comparison
+//! at S=32x32 and time the deployment pipeline per model.
+//!
+//! Run: `cargo bench --bench table1` (FLEX_TPU_BENCH_QUICK=1 for a fast pass).
+
+mod harness;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::report::table1;
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+fn main() {
+    let mut b = harness::Bench::new("table1");
+
+    // Time the per-model deployment (3 profiling passes + flex run).
+    let arch = ArchConfig::square(32);
+    let pipeline = FlexPipeline::new(arch);
+    for topo in zoo::all_models() {
+        b.bench(&format!("deploy/{}", topo.name), || pipeline.deploy(&topo));
+    }
+
+    // Regenerate and print the table itself (the paper artifact).
+    let t = table1(32);
+    println!("\n== Table I (regenerated, S=32x32) ==\n{}", t.render());
+
+    // Headline sanity for the bench log: flex beats every static dataflow.
+    for topo in zoo::all_models() {
+        let d = pipeline.deploy(&topo);
+        for df in Dataflow::ALL {
+            assert!(d.speedup_vs(df) >= 1.0, "{} vs {df}", topo.name);
+        }
+        b.metric(
+            &topo.name,
+            "speedup IS/OS/WS",
+            format!(
+                "{:.3}/{:.3}/{:.3}",
+                d.speedup_vs(Dataflow::Is),
+                d.speedup_vs(Dataflow::Os),
+                d.speedup_vs(Dataflow::Ws)
+            ),
+        );
+    }
+    b.finish();
+}

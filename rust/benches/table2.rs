@@ -1,0 +1,39 @@
+//! Bench for paper Table II: cost-model synthesis at S=8/16/32 and the
+//! overhead table regeneration.
+
+mod harness;
+
+use flex_tpu::cost::synth::{synthesize, SynthConstraints};
+use flex_tpu::cost::PeVariant;
+use flex_tpu::report::table2;
+
+fn main() {
+    let mut b = harness::Bench::new("table2");
+    let cons = SynthConstraints::default();
+    for s in [8u32, 16, 32] {
+        b.bench(&format!("synthesize/{s}x{s}"), || {
+            (
+                synthesize(s, PeVariant::Conventional, &cons),
+                synthesize(s, PeVariant::Flex, &cons),
+            )
+        });
+    }
+    let t = table2();
+    println!("\n== Table II (regenerated) ==\n{}", t.render());
+    for s in [8u32, 16, 32] {
+        let conv = synthesize(s, PeVariant::Conventional, &cons);
+        let flex = synthesize(s, PeVariant::Flex, &cons);
+        assert!(flex.timing_met && conv.timing_met);
+        b.metric(
+            &format!("{s}x{s}"),
+            "area/power/cpd overhead",
+            format!(
+                "{:.2}%/{:.2}%/{:.2}%",
+                (flex.area_mm2 / conv.area_mm2 - 1.0) * 100.0,
+                (flex.power_mw / conv.power_mw - 1.0) * 100.0,
+                (flex.critical_path_ns / conv.critical_path_ns - 1.0) * 100.0
+            ),
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,375 @@
+//! Cycle-by-cycle functional simulation of the Flex-TPU systolic array.
+//!
+//! The array steps real INT8 data through [`FlexPe`]s under each of the
+//! three CMU configurations.  Wavefront skew, pipeline hops, preload and
+//! drain phases are all modelled by the loop structure, so the cycle count
+//! this module *measures* is independent evidence for the closed forms in
+//! [`crate::sim::dataflow`] (they are asserted equal in
+//! `rust/tests/functional_array.rs`).
+//!
+//! Feed schedules (fold `(fa, fb)`, array `R x C`, 0-based cycle `t`):
+//!
+//! * **OS** — west port `i` feeds `A[fa*R+i][t-i]`, north port `j` feeds
+//!   `B[t-j][fb*C+j]`; PE `(i,j)` therefore multiplies operands aligned at
+//!   `k = t-i-j`.  After the `K + R + C - 2`-cycle stream+skew phase the
+//!   accumulators drain row-sequentially (`R` cycles).
+//! * **WS** — `stat(i,j) = B[fa*R+i][fb*C+j]` (preload `R` cycles); west
+//!   port `i` feeds `A[t-i][fa*R+i]`; psums cascade south one row per
+//!   cycle and exit after `M + R + C - 2` stream cycles.  K-folds
+//!   accumulate into the output matrix (the OFMap scratchpad).
+//! * **IS** — `stat(i,j) = A[fa*R+i][fb*C+j]` (preload `R` cycles); north
+//!   port `j` feeds `B[fb*C+j][t-j]`; psums cascade east and exit after
+//!   `N + R + C - 2` stream cycles.
+
+use crate::sim::Dataflow;
+
+use super::mat::Mat;
+use super::pe::{FlexPe, PeConfig};
+
+/// Result of running one GEMM through the functional array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmRun {
+    pub out: Mat,
+    pub cycles: u64,
+    pub folds: u64,
+}
+
+/// The reconfigurable systolic array.
+pub struct FlexArray {
+    rows: usize,
+    cols: usize,
+    pes: Vec<FlexPe>,
+    /// Registered psum handoff wires (south-bound in WS, east-bound in IS).
+    psum_reg: Vec<i32>,
+    config: PeConfig,
+    /// Number of CMU reconfigurations performed (observability).
+    reconfig_count: u64,
+    // Reusable per-cycle scratch (input snapshots / next psum wave) — kept
+    // on the struct so the cycle loop is allocation-free (§Perf).
+    scratch_a: Vec<i32>,
+    scratch_b: Vec<i32>,
+    scratch_p: Vec<i32>,
+}
+
+impl FlexArray {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0, "array must be non-empty");
+        Self {
+            rows,
+            cols,
+            pes: vec![FlexPe::default(); rows * cols],
+            psum_reg: vec![0; rows * cols],
+            config: PeConfig::OutputStationary,
+            reconfig_count: 0,
+            scratch_a: vec![0; rows * cols],
+            scratch_b: vec![0; rows * cols],
+            scratch_p: vec![0; rows * cols],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn config(&self) -> PeConfig {
+        self.config
+    }
+
+    pub fn reconfig_count(&self) -> u64 {
+        self.reconfig_count
+    }
+
+    /// CMU broadcast: reconfigure every PE's muxes for `df`. O(1) in
+    /// hardware (a global select line); counted for observability.
+    pub fn configure(&mut self, df: Dataflow) {
+        let new = PeConfig::from(df);
+        if new != self.config {
+            self.reconfig_count += 1;
+        }
+        self.config = new;
+        self.reset();
+    }
+
+    fn reset(&mut self) {
+        for pe in &mut self.pes {
+            pe.reset();
+        }
+        self.psum_reg.fill(0);
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        i * self.cols + j
+    }
+
+    /// Run a full GEMM `a (M x K) @ b (K x N)` under the current
+    /// configuration, folding as needed. Returns the product and the exact
+    /// cycle count.
+    pub fn run_gemm(&mut self, a: &Mat, b: &Mat) -> GemmRun {
+        assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
+        match self.config {
+            PeConfig::OutputStationary => self.run_os(a, b),
+            PeConfig::WeightStationary => self.run_ws(a, b),
+            PeConfig::InputStationary => self.run_is(a, b),
+        }
+    }
+
+    fn run_os(&mut self, a: &Mat, b: &Mat) -> GemmRun {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let (r, c) = (self.rows, self.cols);
+        let folds_a = m.div_ceil(r);
+        let folds_b = n.div_ceil(c);
+        let mut out = Mat::zeros(m, n);
+        let mut cycles = 0u64;
+
+        for fa in 0..folds_a {
+            for fb in 0..folds_b {
+                self.reset();
+                // Stream + skew: K + R + C - 2 cycles.
+                let stream = k + r + c - 2;
+                for t in 0..stream {
+                    // Snapshot neighbour pipes before any PE updates
+                    // (scratch buffers reused across cycles — §Perf).
+                    for i in 0..r {
+                        for j in 0..c {
+                            let id = self.idx(i, j);
+                            self.scratch_a[id] = if j == 0 {
+                                a.get_padded((fa * r + i) as i64, t as i64 - i as i64)
+                            } else {
+                                self.pes[id - 1].a_pipe
+                            };
+                            self.scratch_b[id] = if i == 0 {
+                                b.get_padded(t as i64 - j as i64, (fb * c + j) as i64)
+                            } else {
+                                self.pes[id - c].b_pipe
+                            };
+                        }
+                    }
+                    for id in 0..r * c {
+                        self.pes[id].step_os(self.scratch_a[id], self.scratch_b[id]);
+                    }
+                }
+                // Drain: R cycles shifting accumulators out the south edge.
+                for i in 0..r {
+                    for j in 0..c {
+                        let (gm, gn) = (fa * r + i, fb * c + j);
+                        if gm < m && gn < n {
+                            out.set(gm, gn, self.pes[self.idx(i, j)].acc);
+                        }
+                    }
+                }
+                cycles += (stream + r) as u64;
+            }
+        }
+        GemmRun {
+            out,
+            cycles,
+            folds: (folds_a * folds_b) as u64,
+        }
+    }
+
+    fn run_ws(&mut self, a: &Mat, b: &Mat) -> GemmRun {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let (r, c) = (self.rows, self.cols);
+        let folds_a = k.div_ceil(r); // K tiles along rows
+        let folds_b = n.div_ceil(c); // N tiles along cols
+        let mut out = Mat::zeros(m, n);
+        let mut cycles = 0u64;
+
+        for fa in 0..folds_a {
+            for fb in 0..folds_b {
+                self.reset();
+                // Preload the weight tile: R cycles (column-parallel).
+                for i in 0..r {
+                    for j in 0..c {
+                        let v = b.get_padded((fa * r + i) as i64, (fb * c + j) as i64);
+                        let id = self.idx(i, j);
+                        self.pes[id].preload(v);
+                    }
+                }
+                cycles += r as u64;
+
+                // Stream M ifmap rows: M + R + C - 2 cycles.
+                let stream = m + r + c - 2;
+                for t in 0..stream {
+                    for i in 0..r {
+                        for j in 0..c {
+                            let id = self.idx(i, j);
+                            self.scratch_a[id] = if j == 0 {
+                                // m = t - i (row-skewed feed)
+                                a.get_padded(t as i64 - i as i64, (fa * r + i) as i64)
+                            } else {
+                                self.pes[id - 1].a_pipe
+                            };
+                            self.scratch_p[id] =
+                                if i == 0 { 0 } else { self.psum_reg[id - c] };
+                        }
+                    }
+                    for id in 0..r * c {
+                        let o = self.pes[id].step_ws(self.scratch_a[id], self.scratch_p[id]);
+                        self.psum_reg[id] = o.psum;
+                    }
+                    // South edge: psum leaving row R-1 carries output
+                    // m = t - (R-1) - j for column j.
+                    for j in 0..c {
+                        let gm = t as i64 - (r - 1) as i64 - j as i64;
+                        let gn = fb * c + j;
+                        if gm >= 0 && (gm as usize) < m && gn < n {
+                            out.add(gm as usize, gn, self.psum_reg[self.idx(r - 1, j)]);
+                        }
+                    }
+                }
+                cycles += stream as u64;
+            }
+        }
+        GemmRun {
+            out,
+            cycles,
+            folds: (folds_a * folds_b) as u64,
+        }
+    }
+
+    fn run_is(&mut self, a: &Mat, b: &Mat) -> GemmRun {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let (r, c) = (self.rows, self.cols);
+        let folds_a = m.div_ceil(r); // M tiles along rows
+        let folds_b = k.div_ceil(c); // K tiles along cols
+        let mut out = Mat::zeros(m, n);
+        let mut cycles = 0u64;
+
+        for fa in 0..folds_a {
+            for fb in 0..folds_b {
+                self.reset();
+                // Preload the ifmap tile: R cycles.
+                for i in 0..r {
+                    for j in 0..c {
+                        let v = a.get_padded((fa * r + i) as i64, (fb * c + j) as i64);
+                        let id = self.idx(i, j);
+                        self.pes[id].preload(v);
+                    }
+                }
+                cycles += r as u64;
+
+                // Stream N filter columns: N + R + C - 2 cycles.
+                let stream = n + r + c - 2;
+                for t in 0..stream {
+                    for i in 0..r {
+                        for j in 0..c {
+                            let id = self.idx(i, j);
+                            self.scratch_b[id] = if i == 0 {
+                                // n = t - j (column-skewed feed)
+                                b.get_padded((fb * c + j) as i64, t as i64 - j as i64)
+                            } else {
+                                self.pes[id - c].b_pipe
+                            };
+                            self.scratch_p[id] =
+                                if j == 0 { 0 } else { self.psum_reg[id - 1] };
+                        }
+                    }
+                    for id in 0..r * c {
+                        let o = self.pes[id].step_is(self.scratch_b[id], self.scratch_p[id]);
+                        self.psum_reg[id] = o.psum;
+                    }
+                    // East edge: psum leaving column C-1 carries output
+                    // n = t - (C-1) - i for row i.
+                    for i in 0..r {
+                        let gn = t as i64 - (c - 1) as i64 - i as i64;
+                        let gm = fa * r + i;
+                        if gn >= 0 && (gn as usize) < n && gm < m {
+                            out.add(gm, gn as usize, self.psum_reg[self.idx(i, c - 1)]);
+                        }
+                    }
+                }
+                cycles += stream as u64;
+            }
+        }
+        GemmRun {
+            out,
+            cycles,
+            folds: (folds_a * folds_b) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(df: Dataflow, r: usize, c: usize, m: usize, k: usize, n: usize, seed: u64) {
+        let a = Mat::random_i8(m, k, seed);
+        let b = Mat::random_i8(k, n, seed + 1);
+        let want = a.matmul(&b);
+        let mut arr = FlexArray::new(r, c);
+        arr.configure(df);
+        let run = arr.run_gemm(&a, &b);
+        assert_eq!(run.out, want, "{df} {r}x{c} GEMM {m}x{k}x{n}");
+    }
+
+    #[test]
+    fn os_exact_tile() {
+        check(Dataflow::Os, 4, 4, 4, 4, 4, 1);
+    }
+
+    #[test]
+    fn ws_exact_tile() {
+        check(Dataflow::Ws, 4, 4, 4, 4, 4, 2);
+    }
+
+    #[test]
+    fn is_exact_tile() {
+        check(Dataflow::Is, 4, 4, 4, 4, 4, 3);
+    }
+
+    #[test]
+    fn folded_and_ragged_gemms() {
+        for (i, df) in Dataflow::ALL.into_iter().enumerate() {
+            check(df, 4, 4, 9, 7, 5, 10 + i as u64); // ragged everywhere
+            check(df, 2, 3, 6, 9, 8, 20 + i as u64); // non-square array
+            check(df, 4, 4, 1, 16, 12, 30 + i as u64); // FC-shaped M=1
+        }
+    }
+
+    #[test]
+    fn cycles_match_analytical_single_fold() {
+        use crate::config::ArchConfig;
+        use crate::sim::{dataflow, Gemm};
+        let arch = ArchConfig::square(4);
+        let g = Gemm::new(4, 4, 4);
+        for df in Dataflow::ALL {
+            let plan = dataflow::plan(&g, &arch, df);
+            let a = Mat::random_i8(4, 4, 40);
+            let b = Mat::random_i8(4, 4, 41);
+            let mut arr = FlexArray::new(4, 4);
+            arr.configure(df);
+            let run = arr.run_gemm(&a, &b);
+            assert_eq!(run.cycles, plan.compute_cycles(), "{df}");
+            assert_eq!(run.folds, plan.folds(), "{df}");
+        }
+    }
+
+    #[test]
+    fn reconfiguration_is_counted_and_preserves_math() {
+        let a = Mat::random_i8(6, 5, 50);
+        let b = Mat::random_i8(5, 7, 51);
+        let want = a.matmul(&b);
+        let mut arr = FlexArray::new(3, 3);
+        for df in [Dataflow::Ws, Dataflow::Os, Dataflow::Is, Dataflow::Os] {
+            arr.configure(df);
+            assert_eq!(arr.run_gemm(&a, &b).out, want, "{df}");
+        }
+        assert_eq!(arr.reconfig_count(), 4); // initial OS->WS counts too
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut arr = FlexArray::new(2, 2);
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        arr.run_gemm(&a, &b);
+    }
+}

@@ -1,0 +1,169 @@
+//! Edge FIFOs (the buffers surrounding the systolic array in paper Fig. 2).
+//!
+//! The Dataflow Generator stages operands into per-port FIFOs so the array
+//! edge sees one element per cycle regardless of SRAM burst behaviour.  The
+//! required depth is set by the systolic *skew*: port `i` starts consuming
+//! `i` cycles after port 0, so a whole operand wavefront written in one
+//! burst needs `depth >= skew + 1` entries at the last port.
+//!
+//! [`Fifo`] is the functional ring buffer; [`required_depth`] gives the
+//! per-dataflow worst-case depth, and the tests drive a skewed feed through
+//! real FIFOs to prove the bound tight.
+
+use crate::config::ArchConfig;
+use crate::sim::Dataflow;
+
+/// A fixed-capacity ring-buffer FIFO (one array edge port).
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    buf: Vec<i32>,
+    head: usize,
+    len: usize,
+    /// High-water mark (max occupancy ever seen) — sizing evidence.
+    high_water: usize,
+}
+
+impl Fifo {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Self {
+            buf: vec![0; capacity],
+            head: 0,
+            len: 0,
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Push one element; returns false (and drops nothing) when full —
+    /// the producer must stall, which the memory model accounts for.
+    pub fn push(&mut self, v: i32) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        let tail = (self.head + self.len) % self.buf.len();
+        self.buf[tail] = v;
+        self.len += 1;
+        self.high_water = self.high_water.max(self.len);
+        true
+    }
+
+    /// Pop one element (None when empty — an array bubble).
+    pub fn pop(&mut self) -> Option<i32> {
+        if self.is_empty() {
+            return None;
+        }
+        let v = self.buf[self.head];
+        self.head = (self.head + 1) % self.buf.len();
+        self.len -= 1;
+        Some(v)
+    }
+}
+
+/// Worst-case FIFO depth per edge port for a dataflow on `arch`.
+///
+/// The moving operand enters skewed by port index; if the SRAM delivers one
+/// full wavefront (all ports' elements for one logical step) per cycle, port
+/// `p` buffers at most `p + 1` elements, so the deepest port needs the full
+/// skew extent plus one:
+///
+/// * OS: ifmap ports skew over `R` rows, filter ports over `C` columns —
+///   depth `max(R, C)`.
+/// * WS: only ifmap streams (skew `R`); filter is preloaded — depth `R`.
+/// * IS: only filter streams (skew `C`) — depth `C`.
+pub fn required_depth(arch: &ArchConfig, df: Dataflow) -> usize {
+    let r = arch.array_rows as usize;
+    let c = arch.array_cols as usize;
+    match df {
+        Dataflow::Os => r.max(c),
+        Dataflow::Ws => r,
+        Dataflow::Is => c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_semantics() {
+        let mut f = Fifo::new(3);
+        assert!(f.is_empty());
+        assert!(f.push(1) && f.push(2) && f.push(3));
+        assert!(f.is_full());
+        assert!(!f.push(4)); // back-pressure, not drop
+        assert_eq!(f.pop(), Some(1));
+        assert!(f.push(4));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), Some(4));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.high_water(), 3);
+    }
+
+    #[test]
+    fn skewed_feed_fits_required_depth() {
+        // Simulate the WS feed pattern: each cycle the SRAM writes one
+        // wavefront (one element per port), each port `p` starts draining
+        // at cycle `p`. The deepest port's high-water mark must be <= the
+        // advertised required depth, and exactly hit it.
+        let arch = ArchConfig::square(8);
+        let depth = required_depth(&arch, crate::sim::Dataflow::Ws);
+        let ports = arch.array_rows as usize;
+        let steps = 20usize;
+        let mut fifos: Vec<Fifo> = (0..ports).map(|_| Fifo::new(depth)).collect();
+        for t in 0..steps + ports {
+            // producer: one wavefront per cycle while elements remain
+            for (p, fifo) in fifos.iter_mut().enumerate() {
+                if t < steps {
+                    assert!(fifo.push(t as i32), "port {p} overflowed at t={t}");
+                }
+            }
+            // consumers: port p drains starting at cycle p
+            for (p, fifo) in fifos.iter_mut().enumerate() {
+                if t >= p {
+                    fifo.pop();
+                }
+            }
+        }
+        let max_hw = fifos.iter().map(Fifo::high_water).max().unwrap();
+        assert_eq!(max_hw, depth, "bound should be tight");
+    }
+
+    #[test]
+    fn depth_per_dataflow() {
+        let arch = ArchConfig {
+            array_rows: 8,
+            array_cols: 16,
+            ..ArchConfig::square(8)
+        };
+        assert_eq!(required_depth(&arch, crate::sim::Dataflow::Os), 16);
+        assert_eq!(required_depth(&arch, crate::sim::Dataflow::Ws), 8);
+        assert_eq!(required_depth(&arch, crate::sim::Dataflow::Is), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        Fifo::new(0);
+    }
+}

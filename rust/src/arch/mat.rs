@@ -1,0 +1,132 @@
+//! Minimal integer matrix used by the functional array and its oracles.
+
+/// Row-major `i32` matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<i32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[i32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self {
+            rows,
+            cols,
+            data: data.to_vec(),
+        }
+    }
+
+    /// Deterministic pseudo-random INT8-range matrix (xorshift; no external
+    /// RNG dependency, reproducible across runs).
+    pub fn random_i8(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut next = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as i32 % 256) - 128 // [-128, 127]
+        };
+        let data = (0..rows * cols).map(|_| next().clamp(-128, 127)).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Bounds-checked get that returns 0 outside the matrix — the zero
+    /// padding edge folds feed into the array.
+    #[inline]
+    pub fn get_padded(&self, r: i64, c: i64) -> i32 {
+        if r < 0 || c < 0 || r as usize >= self.rows || c as usize >= self.cols {
+            0
+        } else {
+            self.get(r as usize, c as usize)
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] += v;
+    }
+
+    /// Reference GEMM oracle: `self @ other` with i32 accumulation.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "GEMM shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.add(i, j, a * other.get(k, j));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_oracle() {
+        let a = Mat::from_slice(2, 2, &[1, 2, 3, 4]);
+        let b = Mat::from_slice(2, 2, &[1, 1, 1, 1]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_slice(2, 2, &[3, 3, 7, 7]));
+    }
+
+    #[test]
+    fn padded_get() {
+        let a = Mat::from_slice(1, 1, &[7]);
+        assert_eq!(a.get_padded(0, 0), 7);
+        assert_eq!(a.get_padded(-1, 0), 0);
+        assert_eq!(a.get_padded(0, 5), 0);
+    }
+
+    #[test]
+    fn random_deterministic_and_in_range() {
+        let a = Mat::random_i8(4, 4, 42);
+        let b = Mat::random_i8(4, 4, 42);
+        assert_eq!(a, b);
+        let c = Mat::random_i8(4, 4, 43);
+        assert_ne!(a, c);
+        for r in 0..4 {
+            for col in 0..4 {
+                let v = a.get(r, col);
+                assert!((-128..=127).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        a.matmul(&b);
+    }
+}

@@ -1,0 +1,28 @@
+//! Functional PE-level model of the Flex-TPU systolic array.
+//!
+//! Where [`crate::sim`] *counts* cycles analytically, this module *moves
+//! data*: it implements the paper's Fig. 3 processing element (one extra
+//! register + two muxes on top of a conventional MAC PE) and steps a whole
+//! `R x C` array through each dataflow configuration cycle by cycle,
+//! INT8 operands with INT32 accumulation like the Edge TPU datapath.
+//!
+//! Two properties are checked against it (see `rust/tests/functional_array.rs`
+//! and the proptest suite):
+//!
+//! 1. **Values**: for every dataflow configuration the array produces the
+//!    exact GEMM result — the paper's implicit claim that reconfiguration
+//!    changes scheduling, never math.
+//! 2. **Cycles**: the cycle count the functional array takes equals the
+//!    closed-form [`crate::sim::dataflow`] fold plan, fold for fold — the
+//!    evidence that the analytical simulator models the microarchitecture
+//!    it claims to.
+
+mod array;
+pub mod fifo;
+mod mat;
+mod pe;
+
+pub use array::FlexArray;
+pub use fifo::Fifo;
+pub use mat::Mat;
+pub use pe::{FlexPe, PeConfig};

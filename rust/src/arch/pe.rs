@@ -1,0 +1,182 @@
+//! The Flex-TPU processing element (paper Fig. 3).
+//!
+//! A conventional TPU PE is a multiplier + adder + pipeline registers.  The
+//! Flex-PE adds **one register** (`stat`, holding the stationary weight or
+//! ifmap) and **two muxes**:
+//!
+//! * **MUX-A** selects the multiplier's second operand: the streaming wire
+//!   (OS mode) or the stationary register (IS/WS modes).
+//! * **MUX-B** selects where the adder's result goes / where its second
+//!   input comes from: the local accumulator (OS mode, select = 1) or the
+//!   pass-through partial-sum wire (IS/WS modes, select = 0).
+//!
+//! The CMU broadcasts the same select pair to every PE, which is what makes
+//! the reconfiguration a per-layer, O(1) operation (charged as
+//! `ArchConfig::reconfig_cycles` by the engine).
+
+use crate::sim::Dataflow;
+
+/// Runtime configuration of a PE — the decoded CMU mux selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeConfig {
+    /// Fig. 4(b): accumulator pinned, both operands stream.
+    OutputStationary,
+    /// Fig. 4(c): `stat` holds a weight, ifmap streams, psums cascade.
+    WeightStationary,
+    /// Fig. 4(a): `stat` holds an ifmap value, weights stream, psums cascade.
+    InputStationary,
+}
+
+impl From<Dataflow> for PeConfig {
+    fn from(df: Dataflow) -> Self {
+        match df {
+            Dataflow::Os => PeConfig::OutputStationary,
+            Dataflow::Ws => PeConfig::WeightStationary,
+            Dataflow::Is => PeConfig::InputStationary,
+        }
+    }
+}
+
+/// One Flex-TPU processing element.
+///
+/// INT8 operands, INT32 accumulation (Edge-TPU-style datapath; the i32
+/// fields model the 32-bit accumulator / wires).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlexPe {
+    /// The added stationary register (weight in WS, ifmap in IS; unused in
+    /// OS — exactly the paper's "one extra register" overhead).
+    pub stat: i32,
+    /// Local accumulator (pinned in OS; unused as state in WS/IS where the
+    /// adder feeds the pass-through wire instead).
+    pub acc: i32,
+    /// East-bound pipeline register (streaming ifmap / operand A).
+    pub a_pipe: i32,
+    /// South-bound pipeline register (streaming filter / operand B).
+    pub b_pipe: i32,
+}
+
+/// Combinational outputs of one PE cycle.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeOutputs {
+    /// Value forwarded east next cycle.
+    pub east: i32,
+    /// Value forwarded south next cycle.
+    pub south: i32,
+    /// Partial sum forwarded along the reduction direction (south in WS,
+    /// east in IS; unused in OS).
+    pub psum: i32,
+}
+
+impl FlexPe {
+    /// Reset all state (between folds / reconfigurations).
+    pub fn reset(&mut self) {
+        *self = FlexPe::default();
+    }
+
+    /// Preload the stationary register (Main Controller write path).
+    pub fn preload(&mut self, value: i32) {
+        self.stat = value;
+    }
+
+    /// One clock in OS mode: MUX-A selects the streaming wire, MUX-B routes
+    /// the adder into the local accumulator.  Returns the pass-through
+    /// wires for the east/south neighbours (values seen *this* cycle, i.e.
+    /// the pipeline registers written last cycle).
+    pub fn step_os(&mut self, a_in: i32, b_in: i32) -> PeOutputs {
+        let out = PeOutputs {
+            east: self.a_pipe,
+            south: self.b_pipe,
+            psum: 0,
+        };
+        self.acc += a_in * b_in;
+        self.a_pipe = a_in;
+        self.b_pipe = b_in;
+        out
+    }
+
+    /// One clock in WS mode: MUX-A selects `stat` (the pinned weight),
+    /// MUX-B routes the adder onto the psum wire: `psum_out = psum_in +
+    /// a_in * stat`. The ifmap operand passes east.
+    pub fn step_ws(&mut self, a_in: i32, psum_in: i32) -> PeOutputs {
+        let out = PeOutputs {
+            east: self.a_pipe,
+            south: 0,
+            psum: psum_in + a_in * self.stat,
+        };
+        self.a_pipe = a_in;
+        out
+    }
+
+    /// One clock in IS mode: MUX-A selects `stat` (the pinned ifmap),
+    /// MUX-B routes the adder onto the psum wire: `psum_out = psum_in +
+    /// b_in * stat`. The filter operand passes south.
+    pub fn step_is(&mut self, b_in: i32, psum_in: i32) -> PeOutputs {
+        let out = PeOutputs {
+            east: 0,
+            south: self.b_pipe,
+            psum: psum_in + b_in * self.stat,
+        };
+        self.b_pipe = b_in;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn os_accumulates_locally() {
+        let mut pe = FlexPe::default();
+        pe.step_os(2, 3);
+        pe.step_os(4, 5);
+        assert_eq!(pe.acc, 2 * 3 + 4 * 5);
+    }
+
+    #[test]
+    fn os_pass_through_is_pipelined() {
+        let mut pe = FlexPe::default();
+        let o1 = pe.step_os(7, 9);
+        assert_eq!((o1.east, o1.south), (0, 0)); // pipeline empty
+        let o2 = pe.step_os(1, 1);
+        assert_eq!((o2.east, o2.south), (7, 9)); // last cycle's inputs
+    }
+
+    #[test]
+    fn ws_uses_stationary_weight() {
+        let mut pe = FlexPe::default();
+        pe.preload(10);
+        let o = pe.step_ws(3, 100);
+        assert_eq!(o.psum, 100 + 30);
+        assert_eq!(pe.acc, 0); // accumulator untouched in WS
+    }
+
+    #[test]
+    fn is_uses_stationary_input() {
+        let mut pe = FlexPe::default();
+        pe.preload(4);
+        let o = pe.step_is(6, 50);
+        assert_eq!(o.psum, 50 + 24);
+    }
+
+    #[test]
+    fn reconfig_via_reset_changes_behaviour() {
+        // The same PE instance works in all three modes — the Flex claim.
+        let mut pe = FlexPe::default();
+        pe.preload(2);
+        assert_eq!(pe.step_ws(5, 0).psum, 10);
+        pe.reset();
+        pe.step_os(5, 2);
+        assert_eq!(pe.acc, 10);
+        pe.reset();
+        pe.preload(3);
+        assert_eq!(pe.step_is(5, 1).psum, 16);
+    }
+
+    #[test]
+    fn config_from_dataflow() {
+        assert_eq!(PeConfig::from(Dataflow::Os), PeConfig::OutputStationary);
+        assert_eq!(PeConfig::from(Dataflow::Ws), PeConfig::WeightStationary);
+        assert_eq!(PeConfig::from(Dataflow::Is), PeConfig::InputStationary);
+    }
+}

@@ -1,0 +1,188 @@
+//! TPU architecture configuration.
+
+
+use crate::error::{Error, Result};
+use crate::util::kvconf::KvConf;
+
+/// On-chip memory configuration (sizes in KiB, like ScaleSim's cfg files).
+///
+/// The paper's runs use ScaleSim's defaults, which are generous enough that
+/// every workload is compute-bound; the memory model in
+/// [`crate::sim::memory`] uses these to compute stalls when they are not.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryConfig {
+    /// IFMap scratchpad size (KiB), double-buffered.
+    pub ifmap_sram_kib: u64,
+    /// Filter scratchpad size (KiB), double-buffered.
+    pub filter_sram_kib: u64,
+    /// OFMap scratchpad size (KiB), double-buffered.
+    pub ofmap_sram_kib: u64,
+    /// DRAM bandwidth in bytes per cycle (per interface).
+    pub dram_bytes_per_cycle: u64,
+    /// Bytes per operand element (INT8 datapath like the Edge TPU / paper).
+    pub bytes_per_element: u64,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        // ScaleSim "google.cfg"-like defaults: 1 MiB operand SRAMs and a
+        // wide DRAM interface; compute-bound for all paper workloads.
+        Self {
+            ifmap_sram_kib: 1024,
+            filter_sram_kib: 1024,
+            ofmap_sram_kib: 1024,
+            dram_bytes_per_cycle: 64,
+            bytes_per_element: 1,
+        }
+    }
+}
+
+/// One TPU instance: the systolic array plus its memory system and clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchConfig {
+    /// Systolic array rows (the paper uses square arrays: 8/16/32/128/256).
+    pub array_rows: u32,
+    /// Systolic array columns.
+    pub array_cols: u32,
+    /// Memory system.
+    pub memory: MemoryConfig,
+    /// Cycles charged by the CMU per dataflow *change* between consecutive
+    /// layers (mux-select broadcast). The paper treats this as negligible;
+    /// default 1 cycle, swept by the `reconfig_ablation` bench.
+    pub reconfig_cycles: u64,
+    /// Clock period in nanoseconds for wall-clock conversions (Fig. 6 uses
+    /// the synthesized critical path instead; this is the constraint clock).
+    pub clock_ns: f64,
+}
+
+impl ArchConfig {
+    /// Square `n x n` array with default memory — the paper's configurations.
+    pub fn square(n: u32) -> Self {
+        Self {
+            array_rows: n,
+            array_cols: n,
+            memory: MemoryConfig::default(),
+            reconfig_cycles: 1,
+            clock_ns: 10.0,
+        }
+    }
+
+    /// Total number of PEs.
+    pub fn num_pes(&self) -> u64 {
+        self.array_rows as u64 * self.array_cols as u64
+    }
+
+    /// Systolic wavefront fill+flush skew: `rows + cols - 2` cycles.
+    pub fn skew(&self) -> u64 {
+        self.array_rows as u64 + self.array_cols as u64 - 2
+    }
+
+    /// Validate invariants; call after deserializing untrusted configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.array_rows == 0 || self.array_cols == 0 {
+            return Err(Error::InvalidConfig(format!(
+                "array must be non-empty, got {}x{}",
+                self.array_rows, self.array_cols
+            )));
+        }
+        if self.memory.bytes_per_element == 0 {
+            return Err(Error::InvalidConfig("bytes_per_element must be > 0".into()));
+        }
+        if self.memory.dram_bytes_per_cycle == 0 {
+            return Err(Error::InvalidConfig("dram bandwidth must be > 0".into()));
+        }
+        if !(self.clock_ns.is_finite() && self.clock_ns > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "clock_ns must be positive, got {}",
+                self.clock_ns
+            )));
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (see [`crate::util::kvconf`]); missing
+    /// keys fall back to the defaults of [`ArchConfig::square`] /
+    /// [`MemoryConfig::default`].
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_toml_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let kv = KvConf::parse(text)?;
+        let default_mem = MemoryConfig::default();
+        let cfg = ArchConfig {
+            array_rows: kv.u64_or("array_rows", 32)? as u32,
+            array_cols: kv.u64_or("array_cols", 32)? as u32,
+            memory: MemoryConfig {
+                ifmap_sram_kib: kv.u64_or("memory.ifmap_sram_kib", default_mem.ifmap_sram_kib)?,
+                filter_sram_kib: kv
+                    .u64_or("memory.filter_sram_kib", default_mem.filter_sram_kib)?,
+                ofmap_sram_kib: kv.u64_or("memory.ofmap_sram_kib", default_mem.ofmap_sram_kib)?,
+                dram_bytes_per_cycle: kv
+                    .u64_or("memory.dram_bytes_per_cycle", default_mem.dram_bytes_per_cycle)?,
+                bytes_per_element: kv
+                    .u64_or("memory.bytes_per_element", default_mem.bytes_per_element)?,
+            },
+            reconfig_cycles: kv.u64_or("reconfig_cycles", 1)?,
+            clock_ns: kv.f64_or("clock_ns", 10.0)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        ArchConfig::square(32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_geometry() {
+        let a = ArchConfig::square(32);
+        assert_eq!(a.num_pes(), 1024);
+        assert_eq!(a.skew(), 62);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_array_rejected() {
+        let mut a = ArchConfig::square(8);
+        a.array_rows = 0;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn zero_bandwidth_rejected() {
+        let mut a = ArchConfig::square(8);
+        a.memory.dram_bytes_per_cycle = 0;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn bad_clock_rejected() {
+        let mut a = ArchConfig::square(8);
+        a.clock_ns = 0.0;
+        assert!(a.validate().is_err());
+        a.clock_ns = f64::NAN;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn toml_subset_parsing() {
+        let text = "array_rows = 16\narray_cols = 16\nclock_ns = 5.0\n[memory]\ndram_bytes_per_cycle = 32\n";
+        let a = ArchConfig::from_toml_str(text).unwrap();
+        assert_eq!(a.array_rows, 16);
+        assert_eq!(a.clock_ns, 5.0);
+        assert_eq!(a.memory.dram_bytes_per_cycle, 32);
+        // defaults preserved
+        assert_eq!(a.memory.ifmap_sram_kib, MemoryConfig::default().ifmap_sram_kib);
+        // invalid configs rejected at parse time
+        assert!(ArchConfig::from_toml_str("array_rows = 0").is_err());
+    }
+}

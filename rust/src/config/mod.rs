@@ -1,0 +1,12 @@
+//! Architecture and run configuration.
+//!
+//! [`ArchConfig`] describes one TPU instance (array geometry, scratchpad
+//! sizes, DRAM bandwidth, clock) — the knobs ScaleSim V2 exposes through its
+//! `.cfg` files, plus the Flex-TPU-specific reconfiguration cost.  Configs
+//! can be loaded from TOML (see `configs/*.toml`) or built programmatically.
+
+mod arch;
+mod run;
+
+pub use arch::{ArchConfig, MemoryConfig};
+pub use run::{RunConfig, SimFidelity};

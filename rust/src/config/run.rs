@@ -1,0 +1,54 @@
+//! Run configuration: what to simulate and at which fidelity.
+
+
+/// Simulation fidelity selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimFidelity {
+    /// Closed-form fold-level model only (compute cycles; memory assumed to
+    /// keep up). This reproduces the paper's compute-bound setting and is
+    /// the hot path used by the selector and all benches.
+    #[default]
+    Analytical,
+    /// Analytical compute + the double-buffered SRAM / DRAM stall model.
+    WithMemory,
+}
+
+/// One simulation run request: a model on an architecture.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model name (zoo key) or path to a ScaleSim-format CSV.
+    pub model: String,
+    /// Fidelity of the per-layer simulation.
+    pub fidelity: SimFidelity,
+    /// Emit per-layer detail rather than just totals.
+    pub per_layer: bool,
+}
+
+impl RunConfig {
+    /// Run a zoo model at analytical fidelity (the paper's configuration).
+    pub fn analytical(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            fidelity: SimFidelity::Analytical,
+            per_layer: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_fidelity_is_analytical() {
+        assert_eq!(SimFidelity::default(), SimFidelity::Analytical);
+    }
+
+    #[test]
+    fn analytical_constructor() {
+        let r = RunConfig::analytical("resnet18");
+        assert_eq!(r.model, "resnet18");
+        assert_eq!(r.fidelity, SimFidelity::Analytical);
+        assert!(!r.per_layer);
+    }
+}

@@ -1,0 +1,166 @@
+//! The Configuration Management Unit (CMU).
+//!
+//! The CMU is the small piece of control hardware the paper adds next to
+//! the systolic array: it stores one dataflow selection per layer
+//! (programmed by the Main Controller after the offline optimization) and,
+//! when a layer starts, broadcasts the corresponding mux selects to every
+//! PE and informs the Dataflow Generator.
+
+
+use crate::error::{Error, Result};
+use crate::sim::Dataflow;
+use crate::util::json::{self, Value};
+
+/// The CMU's programmed state: the per-layer dataflow table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cmu {
+    model: String,
+    table: Vec<Dataflow>,
+    /// Cursor of the layer currently configured on the array.
+    current: Option<usize>,
+    /// Number of mux-select broadcasts that changed the configuration.
+    reconfigurations: u64,
+}
+
+impl Cmu {
+    /// Program the CMU with a per-layer table (Main Controller write path).
+    pub fn program(model: &str, table: Vec<Dataflow>) -> Result<Self> {
+        if table.is_empty() {
+            return Err(Error::InvalidConfig("CMU table must be non-empty".into()));
+        }
+        Ok(Self {
+            model: model.to_string(),
+            table,
+            current: None,
+            reconfigurations: 0,
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.table.len()
+    }
+
+    /// The programmed dataflow for a layer.
+    pub fn dataflow_for(&self, layer: usize) -> Result<Dataflow> {
+        self.table.get(layer).copied().ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "layer {layer} out of range (CMU has {} entries)",
+                self.table.len()
+            ))
+        })
+    }
+
+    /// Full table view.
+    pub fn table(&self) -> &[Dataflow] {
+        &self.table
+    }
+
+    /// Advance to `layer`: returns the mux select broadcast to the PEs and
+    /// whether it was an actual reconfiguration (dataflow changed).
+    pub fn advance_to(&mut self, layer: usize) -> Result<(u8, bool)> {
+        let df = self.dataflow_for(layer)?;
+        let changed = match self.current {
+            None => true, // first configuration counts as a broadcast
+            Some(prev) => self.table[prev] != df,
+        };
+        if changed {
+            self.reconfigurations += 1;
+        }
+        self.current = Some(layer);
+        Ok((df.mux_select(), changed))
+    }
+
+    /// Dataflow *changes* this table incurs when played start-to-finish
+    /// (excluding the initial configuration, which static TPUs also pay).
+    pub fn transition_count(&self) -> u64 {
+        self.table.windows(2).filter(|w| w[0] != w[1]).count() as u64
+    }
+
+    pub fn reconfigurations(&self) -> u64 {
+        self.reconfigurations
+    }
+
+    /// Serialize to JSON (the deployment artifact the Main Controller
+    /// ships to the device).
+    pub fn to_json(&self) -> Result<String> {
+        let table = Value::Arr(
+            self.table
+                .iter()
+                .map(|df| Value::Str(df.name().to_string()))
+                .collect(),
+        );
+        Ok(json::obj(vec![
+            ("model", Value::Str(self.model.clone())),
+            ("table", table),
+        ])
+        .to_string())
+    }
+
+    /// Load a previously serialized CMU image.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let model = v.req_str("model")?.to_string();
+        let table = v
+            .req("table")?
+            .as_array()
+            .ok_or_else(|| Error::InvalidConfig("CMU table must be an array".into()))?
+            .iter()
+            .map(|item| {
+                item.as_str()
+                    .and_then(Dataflow::parse)
+                    .ok_or_else(|| Error::InvalidConfig(format!("bad dataflow {item}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Cmu::program(&model, table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Vec<Dataflow> {
+        vec![Dataflow::Ws, Dataflow::Ws, Dataflow::Os, Dataflow::Is]
+    }
+
+    #[test]
+    fn program_and_query() {
+        let cmu = Cmu::program("m", table()).unwrap();
+        assert_eq!(cmu.num_layers(), 4);
+        assert_eq!(cmu.dataflow_for(2).unwrap(), Dataflow::Os);
+        assert!(cmu.dataflow_for(4).is_err());
+        assert!(Cmu::program("m", vec![]).is_err());
+    }
+
+    #[test]
+    fn transitions_counted_between_layers() {
+        let cmu = Cmu::program("m", table()).unwrap();
+        assert_eq!(cmu.transition_count(), 2); // ws->os, os->is
+    }
+
+    #[test]
+    fn advance_reports_changes() {
+        let mut cmu = Cmu::program("m", table()).unwrap();
+        let (sel, changed) = cmu.advance_to(0).unwrap();
+        assert_eq!(sel, 0); // WS -> mux select 0
+        assert!(changed);
+        let (_, changed) = cmu.advance_to(1).unwrap();
+        assert!(!changed); // ws -> ws
+        let (sel, changed) = cmu.advance_to(2).unwrap();
+        assert_eq!(sel, 1); // OS -> mux select 1
+        assert!(changed);
+        assert_eq!(cmu.reconfigurations(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cmu = Cmu::program("resnet18", table()).unwrap();
+        let text = cmu.to_json().unwrap();
+        let back = Cmu::from_json(&text).unwrap();
+        assert_eq!(cmu, back);
+    }
+}

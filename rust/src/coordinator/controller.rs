@@ -1,0 +1,178 @@
+//! The Main Controller: sequences layer execution on the Flex-TPU.
+//!
+//! In the paper's Fig. 2 the Main Controller "handles the data transfer
+//! between memories/FIFOs and the systolic array, programming the CMU
+//! units, and writes to the Weight/IFMap Register File".  Here it drives
+//! two execution backends:
+//!
+//! * **Timing** ([`run_timing`]): the analytical engine — per-layer cycles
+//!   under the CMU's dataflows plus reconfiguration charges.  This is the
+//!   backend every table/figure uses.
+//! * **Functional** ([`run_functional`]): the PE-level [`FlexArray`] with
+//!   real INT8 data — used by validation tests and small demos to prove
+//!   the CMU-driven reconfiguration preserves the math.
+
+use crate::arch::{FlexArray, Mat};
+use crate::config::ArchConfig;
+use crate::error::Result;
+use crate::sim::engine::{simulate_network_per_layer, NetworkStats, SimOptions};
+use crate::topology::Topology;
+
+use super::cmu::Cmu;
+
+/// The Main Controller, owning the CMU it programs.
+#[derive(Debug, Clone)]
+pub struct MainController {
+    arch: ArchConfig,
+    cmu: Cmu,
+}
+
+/// Result of a functional (data-moving) network execution.
+pub struct FunctionalRun {
+    /// Per-layer GEMM outputs (one entry per layer; grouped depthwise
+    /// launches are summed into one matrix like the OFMap SRAM would).
+    pub outputs: Vec<Mat>,
+    /// Cycles measured by the functional array (compute only).
+    pub cycles: u64,
+    /// Mux-select broadcasts that changed the array configuration.
+    pub reconfigurations: u64,
+}
+
+impl MainController {
+    /// Program a controller with a CMU table for `topo`.
+    pub fn new(arch: ArchConfig, cmu: Cmu) -> Self {
+        Self { arch, cmu }
+    }
+
+    pub fn cmu(&self) -> &Cmu {
+        &self.cmu
+    }
+
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    /// Timing backend: simulate the whole network under the CMU's
+    /// per-layer dataflows (reconfiguration cycles included).
+    pub fn run_timing(&self, topo: &Topology, opts: SimOptions) -> Result<NetworkStats> {
+        if topo.layers.len() != self.cmu.num_layers() {
+            return Err(crate::error::Error::InvalidConfig(format!(
+                "CMU programmed for {} layers but {} has {}",
+                self.cmu.num_layers(),
+                topo.name,
+                topo.layers.len()
+            )));
+        }
+        Ok(simulate_network_per_layer(
+            &self.arch,
+            topo,
+            self.cmu.table(),
+            opts,
+        ))
+    }
+
+    /// Functional backend: push real data through a PE-level array, layer
+    /// GEMMs driven by per-layer operand matrices supplied by the caller
+    /// (`layer_inputs[i] = (A_i, B_i)`).  Intended for small validation
+    /// networks — the array is O(R*C) per cycle.
+    pub fn run_functional(
+        &self,
+        layer_inputs: &[(Mat, Mat)],
+    ) -> Result<FunctionalRun> {
+        if layer_inputs.len() != self.cmu.num_layers() {
+            return Err(crate::error::Error::InvalidConfig(format!(
+                "CMU programmed for {} layers but got {} input pairs",
+                self.cmu.num_layers(),
+                layer_inputs.len()
+            )));
+        }
+        let mut array = FlexArray::new(
+            self.arch.array_rows as usize,
+            self.arch.array_cols as usize,
+        );
+        let mut cmu = self.cmu.clone();
+        let mut outputs = Vec::with_capacity(layer_inputs.len());
+        let mut cycles = 0u64;
+        for (i, (a, b)) in layer_inputs.iter().enumerate() {
+            let (_, _changed) = cmu.advance_to(i)?;
+            array.configure(cmu.dataflow_for(i)?);
+            let run = array.run_gemm(a, b);
+            cycles += run.cycles;
+            outputs.push(run.out);
+        }
+        Ok(FunctionalRun {
+            outputs,
+            cycles,
+            reconfigurations: array.reconfig_count(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Dataflow;
+    use crate::topology::zoo;
+
+    #[test]
+    fn timing_requires_matching_cmu() {
+        let topo = zoo::alexnet();
+        let cmu = Cmu::program("alexnet", vec![Dataflow::Os; 3]).unwrap();
+        let mc = MainController::new(ArchConfig::square(8), cmu);
+        assert!(mc.run_timing(&topo, SimOptions::default()).is_err());
+    }
+
+    #[test]
+    fn timing_includes_reconfig_cost() {
+        let topo = zoo::alexnet(); // 6 layers
+        let table = vec![
+            Dataflow::Ws,
+            Dataflow::Os,
+            Dataflow::Ws,
+            Dataflow::Os,
+            Dataflow::Ws,
+            Dataflow::Os,
+        ];
+        let arch = ArchConfig::square(8);
+        let cmu = Cmu::program("alexnet", table).unwrap();
+        let mc = MainController::new(arch, cmu);
+        let stats = mc.run_timing(&topo, SimOptions::default()).unwrap();
+        assert_eq!(stats.reconfig_cycles, 5 * arch.reconfig_cycles);
+    }
+
+    #[test]
+    fn functional_run_matches_oracle_per_layer() {
+        // Three small "layers" with alternating dataflows: the controller
+        // must produce exact GEMM results for each.
+        let arch = ArchConfig::square(4);
+        let cmu = Cmu::program(
+            "tiny",
+            vec![Dataflow::Ws, Dataflow::Os, Dataflow::Is],
+        )
+        .unwrap();
+        let mc = MainController::new(arch, cmu);
+        let inputs: Vec<(Mat, Mat)> = (0..3)
+            .map(|i| {
+                (
+                    Mat::random_i8(6, 5, 100 + i),
+                    Mat::random_i8(5, 7, 200 + i),
+                )
+            })
+            .collect();
+        let run = mc.run_functional(&inputs).unwrap();
+        assert_eq!(run.outputs.len(), 3);
+        for (i, (a, b)) in inputs.iter().enumerate() {
+            assert_eq!(run.outputs[i], a.matmul(b), "layer {i}");
+        }
+        assert!(run.cycles > 0);
+        assert!(run.reconfigurations >= 2);
+    }
+
+    #[test]
+    fn functional_rejects_wrong_layer_count() {
+        let cmu = Cmu::program("t", vec![Dataflow::Os; 2]).unwrap();
+        let mc = MainController::new(ArchConfig::square(2), cmu);
+        let one = vec![(Mat::zeros(2, 2), Mat::zeros(2, 2))];
+        assert!(mc.run_functional(&one).is_err());
+    }
+}

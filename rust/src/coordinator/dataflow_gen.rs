@@ -1,0 +1,165 @@
+//! The Dataflow Generator: operand address streams per dataflow.
+//!
+//! In the paper's Fig. 2 this block "generates the memory read/write
+//! addresses to store or retrieve the IFMaps, weights, and OFMap according
+//! to the selected dataflow dictated by the CMU".  We implement it on top
+//! of the demand traces in [`crate::sim::trace`]: the per-cycle edge-port
+//! events are mapped to flat scratchpad addresses under the standard
+//! row-major operand layouts:
+//!
+//! * IFMap operand matrix `(m, k)` -> `m * K + k`
+//! * Filter operand matrix `(k, n)` -> `k * N + n`
+//! * OFMap matrix `(m, n)` -> `m * N + n`
+
+
+use crate::config::ArchConfig;
+use crate::sim::trace::{edge_trace, PortEvent};
+use crate::sim::{Dataflow, Gemm};
+
+/// One address-stream entry: cycle plus flat scratchpad address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddressEvent {
+    pub cycle: u64,
+    pub address: u64,
+}
+
+/// Read/write address streams for one fold of one layer.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AddressStreams {
+    pub ifmap_reads: Vec<AddressEvent>,
+    pub filter_reads: Vec<AddressEvent>,
+    pub ofmap_writes: Vec<AddressEvent>,
+}
+
+impl AddressStreams {
+    pub fn total_events(&self) -> usize {
+        self.ifmap_reads.len() + self.filter_reads.len() + self.ofmap_writes.len()
+    }
+}
+
+/// Generate the address streams for fold `(fold_a, fold_b)` of `gemm`
+/// under `df`.  Preload events address the stationary operand's matrix
+/// (filter in WS, ifmap in IS).
+pub fn generate(
+    gemm: &Gemm,
+    arch: &ArchConfig,
+    df: Dataflow,
+    fold_a: u64,
+    fold_b: u64,
+) -> AddressStreams {
+    let r = arch.array_rows as u64;
+    let c = arch.array_cols as u64;
+    let mut out = AddressStreams::default();
+    let trace = edge_trace(gemm, arch, df, fold_a, fold_b);
+    for (cycle, events) in trace.iter().enumerate() {
+        let cycle = cycle as u64;
+        for ev in events {
+            match *ev {
+                PortEvent::IfmapIn { m, k, .. } => {
+                    if m < gemm.m && k < gemm.k {
+                        out.ifmap_reads.push(AddressEvent {
+                            cycle,
+                            address: m * gemm.k + k,
+                        });
+                    }
+                }
+                PortEvent::FilterIn { k, n, .. } => {
+                    if k < gemm.k && n < gemm.n {
+                        out.filter_reads.push(AddressEvent {
+                            cycle,
+                            address: k * gemm.n + n,
+                        });
+                    }
+                }
+                PortEvent::OfmapOut { m, n, .. } => {
+                    if m < gemm.m && n < gemm.n {
+                        out.ofmap_writes.push(AddressEvent {
+                            cycle,
+                            address: m * gemm.n + n,
+                        });
+                    }
+                }
+                PortEvent::Preload { row, col } => {
+                    // Stationary operand tile element (row, col) of this fold.
+                    match df {
+                        Dataflow::Ws => {
+                            let k = fold_a * r + row as u64;
+                            let n = fold_b * c + col as u64;
+                            if k < gemm.k && n < gemm.n {
+                                out.filter_reads.push(AddressEvent {
+                                    cycle,
+                                    address: k * gemm.n + n,
+                                });
+                            }
+                        }
+                        Dataflow::Is => {
+                            let m = fold_a * r + row as u64;
+                            let k = fold_b * c + col as u64;
+                            if m < gemm.m && k < gemm.k {
+                                out.ifmap_reads.push(AddressEvent {
+                                    cycle,
+                                    address: m * gemm.k + k,
+                                });
+                            }
+                        }
+                        Dataflow::Os => {}
+                    }
+                }
+                PortEvent::Bubble => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch4() -> ArchConfig {
+        ArchConfig::square(4)
+    }
+
+    #[test]
+    fn os_streams_cover_operands() {
+        let g = Gemm::new(4, 5, 4);
+        let s = generate(&g, &arch4(), Dataflow::Os, 0, 0);
+        // Every ifmap operand element read once: M*K.
+        assert_eq!(s.ifmap_reads.len() as u64, g.m * g.k);
+        assert_eq!(s.filter_reads.len() as u64, g.k * g.n);
+        assert_eq!(s.ofmap_writes.len() as u64, g.m * g.n);
+        // Addresses in range.
+        assert!(s.ifmap_reads.iter().all(|e| e.address < g.m * g.k));
+        assert!(s.ofmap_writes.iter().all(|e| e.address < g.m * g.n));
+    }
+
+    #[test]
+    fn ws_preload_reads_weight_tile() {
+        let g = Gemm::new(6, 4, 4); // single fold on 4x4
+        let s = generate(&g, &arch4(), Dataflow::Ws, 0, 0);
+        // Preload reads the full K x N tile; stream reads M per row.
+        assert_eq!(s.filter_reads.len() as u64, g.k * g.n);
+        assert_eq!(s.ifmap_reads.len() as u64, g.m * g.k);
+        assert_eq!(s.ofmap_writes.len() as u64, g.m * g.n);
+    }
+
+    #[test]
+    fn is_preload_reads_input_tile() {
+        let g = Gemm::new(4, 4, 7);
+        let s = generate(&g, &arch4(), Dataflow::Is, 0, 0);
+        assert_eq!(s.ifmap_reads.len() as u64, g.m * g.k);
+        assert_eq!(s.filter_reads.len() as u64, g.k * g.n);
+        assert_eq!(s.ofmap_writes.len() as u64, g.m * g.n);
+    }
+
+    #[test]
+    fn streams_are_cycle_ordered() {
+        let g = Gemm::new(4, 4, 4);
+        for df in Dataflow::ALL {
+            let s = generate(&g, &arch4(), df, 0, 0);
+            for pair in s.ifmap_reads.windows(2) {
+                assert!(pair[0].cycle <= pair[1].cycle, "{df}");
+            }
+        }
+    }
+}

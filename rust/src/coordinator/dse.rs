@@ -1,0 +1,189 @@
+//! Design-space exploration: array size x architecture variant sweeps.
+//!
+//! Hardware/software co-design extension: the paper fixes three sizes and
+//! compares Flex vs static; this module sweeps the whole (size, variant)
+//! plane for a workload and extracts the Pareto frontier over
+//! latency / area / energy — the question an SoC architect actually asks
+//! ("which array do I tape out for this model?").  Exposed via
+//! `flex-tpu dse` and `examples/datacenter_scale.rs`-style studies.
+
+use crate::config::ArchConfig;
+use crate::cost::energy::{self, EnergyBreakdown};
+use crate::cost::synth::critical_path_ns;
+use crate::cost::{PeVariant, TpuCost};
+use crate::sim::engine::{simulate_network, SimOptions};
+use crate::sim::Dataflow;
+use crate::topology::Topology;
+
+use super::pipeline::FlexPipeline;
+
+/// Which architecture a DSE point describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DseVariant {
+    /// Flex-TPU with the CMU-selected per-layer dataflows.
+    Flex,
+    /// Conventional TPU with one static dataflow.
+    Static(Dataflow),
+}
+
+impl std::fmt::Display for DseVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DseVariant::Flex => write!(f, "Flex"),
+            DseVariant::Static(df) => write!(f, "{df}"),
+        }
+    }
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DsePoint {
+    pub size: u32,
+    pub variant: DseVariant,
+    pub cycles: u64,
+    /// Wall-clock latency per inference, milliseconds.
+    pub latency_ms: f64,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub energy: EnergyBreakdown,
+    /// Energy-delay product, pJ·cycles.
+    pub edp: f64,
+}
+
+/// Evaluate every (size, variant) combination for `topo`.
+pub fn sweep(topo: &Topology, sizes: &[u32], opts: SimOptions) -> Vec<DsePoint> {
+    let mut points = Vec::new();
+    for &s in sizes {
+        let arch = ArchConfig::square(s);
+        // Flex point (deploy once, reuse baselines for the static points).
+        let d = FlexPipeline::new(arch).with_options(opts).deploy(topo);
+        let flex_cpd = critical_path_ns(s, PeVariant::Flex);
+        let conv_cpd = critical_path_ns(s, PeVariant::Conventional);
+        let flex_energy = energy::network_energy(&arch, PeVariant::Flex, &d.flex);
+        points.push(DsePoint {
+            size: s,
+            variant: DseVariant::Flex,
+            cycles: d.total_cycles(),
+            latency_ms: d.total_cycles() as f64 * flex_cpd * 1e-6,
+            area_mm2: TpuCost::square(s, PeVariant::Flex).area_mm2(),
+            power_mw: TpuCost::square(s, PeVariant::Flex).power_mw(),
+            energy: flex_energy,
+            edp: flex_energy.total_pj() * d.total_cycles() as f64,
+        });
+        for df in Dataflow::ALL {
+            let stats = simulate_network(&arch, topo, df, opts);
+            let e = energy::network_energy(&arch, PeVariant::Conventional, &stats);
+            points.push(DsePoint {
+                size: s,
+                variant: DseVariant::Static(df),
+                cycles: stats.total_cycles(),
+                latency_ms: stats.total_cycles() as f64 * conv_cpd * 1e-6,
+                area_mm2: TpuCost::square(s, PeVariant::Conventional).area_mm2(),
+                power_mw: TpuCost::square(s, PeVariant::Conventional).power_mw(),
+                energy: e,
+                edp: e.total_pj() * stats.total_cycles() as f64,
+            });
+        }
+    }
+    points
+}
+
+/// Indices of the Pareto-optimal points under (latency, area) minimization.
+///
+/// A point is dominated when another point is no worse on both axes and
+/// strictly better on at least one.
+pub fn pareto_latency_area(points: &[DsePoint]) -> Vec<usize> {
+    let dominated = |a: &DsePoint, b: &DsePoint| {
+        // b dominates a?
+        b.latency_ms <= a.latency_ms
+            && b.area_mm2 <= a.area_mm2
+            && (b.latency_ms < a.latency_ms || b.area_mm2 < a.area_mm2)
+    };
+    (0..points.len())
+        .filter(|&i| !points.iter().any(|b| dominated(&points[i], b)))
+        .collect()
+}
+
+/// The minimum-EDP point (the single-number co-design answer).
+pub fn best_edp(points: &[DsePoint]) -> Option<&DsePoint> {
+    points
+        .iter()
+        .min_by(|a, b| a.edp.total_cmp(&b.edp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::zoo;
+
+    fn points() -> Vec<DsePoint> {
+        sweep(&zoo::yolo_tiny(), &[8, 16, 32], SimOptions::default())
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let p = points();
+        assert_eq!(p.len(), 3 * 4); // 3 sizes x (flex + 3 static)
+        assert!(p.iter().all(|x| x.latency_ms > 0.0 && x.area_mm2 > 0.0));
+    }
+
+    #[test]
+    fn flex_dominates_same_size_statics_on_latency() {
+        for pt in points() {
+            if let DseVariant::Flex = pt.variant {
+                for other in points() {
+                    if other.size == pt.size && other.variant != pt.variant {
+                        assert!(
+                            pt.cycles <= other.cycles,
+                            "flex {} vs {} at {}",
+                            pt.cycles,
+                            other.cycles,
+                            pt.size
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_nonempty_and_undominated() {
+        let p = points();
+        let front = pareto_latency_area(&p);
+        assert!(!front.is_empty());
+        // Every non-front point must be dominated by some front point.
+        for i in 0..p.len() {
+            if front.contains(&i) {
+                continue;
+            }
+            let covered = front.iter().any(|&f| {
+                p[f].latency_ms <= p[i].latency_ms && p[f].area_mm2 <= p[i].area_mm2
+            });
+            assert!(covered, "point {i} not dominated by the front");
+        }
+        // The fastest point overall is always on the front.
+        let fastest = (0..p.len())
+            .min_by(|&a, &b| p[a].latency_ms.total_cmp(&p[b].latency_ms))
+            .unwrap();
+        assert!(front.contains(&fastest));
+    }
+
+    #[test]
+    fn bigger_arrays_cost_more_area_run_faster() {
+        let p = points();
+        let flex = |s: u32| {
+            *p.iter()
+                .find(|x| x.size == s && matches!(x.variant, DseVariant::Flex))
+                .unwrap()
+        };
+        assert!(flex(32).area_mm2 > flex(8).area_mm2);
+        assert!(flex(32).cycles < flex(8).cycles);
+    }
+
+    #[test]
+    fn best_edp_exists() {
+        let p = points();
+        let best = best_edp(&p).unwrap();
+        assert!(p.iter().all(|x| best.edp <= x.edp));
+    }
+}

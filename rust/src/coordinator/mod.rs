@@ -1,0 +1,31 @@
+//! The Flex-TPU coordination layer — the paper's system contribution.
+//!
+//! Mirrors the blocks of the paper's Fig. 2:
+//!
+//! * [`cmu`] — the **Configuration Management Unit**: holds the per-layer
+//!   dataflow table and broadcasts mux selects to the PEs.
+//! * [`selector`] — the **offline pre-deployment optimization**: run every
+//!   layer under all three dataflows, pick the per-layer argmin (paper
+//!   §II), plus the heuristic selector the paper lists as future work.
+//! * [`dataflow_gen`] — the **Dataflow Generator**: read/write address
+//!   streams for IFMap/Filter/OFMap according to the selected dataflow.
+//! * [`controller`] — the **Main Controller**: programs the CMU, sequences
+//!   layers, charges reconfiguration, moves data between memories and the
+//!   array.
+//! * [`pipeline`] — the end-to-end deployment flow gluing the above:
+//!   profile → program → run, producing the Flex-vs-static comparison the
+//!   paper's Table I reports.
+//! * [`dse`] — design-space exploration over (array size, variant):
+//!   latency/area/energy Pareto fronts (co-design extension).
+
+pub mod cmu;
+pub mod controller;
+pub mod dataflow_gen;
+pub mod dse;
+pub mod pipeline;
+pub mod selector;
+
+pub use cmu::Cmu;
+pub use controller::MainController;
+pub use pipeline::{Deployment, FlexPipeline};
+pub use selector::{select_exhaustive, select_heuristic, Selection};

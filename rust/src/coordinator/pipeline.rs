@@ -1,0 +1,186 @@
+//! The end-to-end Flex-TPU deployment pipeline.
+//!
+//! Paper §II: *"we should run each trained model on the Flex-TPU three
+//! times, once for each dataflow, during the development phase. … the
+//! optimal dataflow is then programmed into the CMU by the Main Controller
+//! … This process only needs to be performed once per DNN model prior to
+//! deployment."*
+//!
+//! [`FlexPipeline::deploy`] is that flow: profile (selector) → program
+//! (CMU) → run (Main Controller timing backend), and it also runs the
+//! three static baselines so a [`Deployment`] carries the paper's whole
+//! Table I row for its model.
+
+
+use crate::config::ArchConfig;
+use crate::sim::engine::{simulate_network, NetworkStats, SimOptions};
+use crate::sim::Dataflow;
+use crate::topology::Topology;
+
+use super::cmu::Cmu;
+use super::controller::MainController;
+use super::selector::{self, Selection};
+
+/// Which selector the pipeline uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectorKind {
+    /// The paper's three-profiling-runs argmin.
+    #[default]
+    Exhaustive,
+    /// Shape-only heuristic (paper future work).
+    Heuristic,
+}
+
+/// The pre-deployment pipeline.
+#[derive(Debug, Clone)]
+pub struct FlexPipeline {
+    arch: ArchConfig,
+    opts: SimOptions,
+    selector: SelectorKind,
+}
+
+/// A deployed model: CMU image + flex run + the three static baselines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Deployment {
+    pub arch: ArchConfig,
+    pub selection: Selection,
+    pub flex: NetworkStats,
+    /// Static baselines in `Dataflow::ALL` order (IS, OS, WS).
+    pub static_runs: [NetworkStats; 3],
+}
+
+impl FlexPipeline {
+    pub fn new(arch: ArchConfig) -> Self {
+        Self {
+            arch,
+            opts: SimOptions::default(),
+            selector: SelectorKind::default(),
+        }
+    }
+
+    pub fn with_options(mut self, opts: SimOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn with_selector(mut self, selector: SelectorKind) -> Self {
+        self.selector = selector;
+        self
+    }
+
+    /// Run the full pre-deployment flow for `topo`.
+    pub fn deploy(&self, topo: &Topology) -> Deployment {
+        let selection = match self.selector {
+            SelectorKind::Exhaustive => selector::select_exhaustive(&self.arch, topo, self.opts),
+            SelectorKind::Heuristic => selector::select_heuristic(&self.arch, topo, self.opts),
+        };
+        let cmu = Cmu::program(&topo.name, selection.per_layer.clone())
+            .expect("non-empty topology yields non-empty CMU table");
+        let controller = MainController::new(self.arch, cmu);
+        let flex = controller
+            .run_timing(topo, self.opts)
+            .expect("CMU table length matches topology");
+        let static_runs = Dataflow::ALL
+            .map(|df| simulate_network(&self.arch, topo, df, self.opts));
+        Deployment {
+            arch: self.arch,
+            selection,
+            flex,
+            static_runs,
+        }
+    }
+}
+
+impl Deployment {
+    /// Flex-TPU total cycles (incl. stalls + reconfiguration).
+    pub fn total_cycles(&self) -> u64 {
+        self.flex.total_cycles()
+    }
+
+    /// Static-baseline total cycles for `df`.
+    pub fn static_cycles(&self, df: Dataflow) -> u64 {
+        self.static_runs[selector::df_index(df)].total_cycles()
+    }
+
+    /// Paper Table I speedup: `static / flex`.
+    pub fn speedup_vs(&self, df: Dataflow) -> f64 {
+        self.static_cycles(df) as f64 / self.total_cycles() as f64
+    }
+
+    /// The best static dataflow for this model (what a well-chosen
+    /// conventional TPU would ship).
+    pub fn best_static(&self) -> (Dataflow, u64) {
+        Dataflow::ALL
+            .into_iter()
+            .map(|df| (df, self.static_cycles(df)))
+            .min_by_key(|&(_, c)| c)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::zoo;
+
+    #[test]
+    fn deploy_resnet18_table1_shape() {
+        // Paper Table I ResNet-18 speedups: IS 1.736, OS 1.051, WS 1.540.
+        // Shape requirements: speedup >= 1 against every static dataflow,
+        // largest gain vs IS, smallest vs OS.
+        let d = FlexPipeline::new(ArchConfig::square(32)).deploy(&zoo::resnet18());
+        let s_is = d.speedup_vs(Dataflow::Is);
+        let s_os = d.speedup_vs(Dataflow::Os);
+        let s_ws = d.speedup_vs(Dataflow::Ws);
+        assert!(s_is >= 1.0 && s_os >= 1.0 && s_ws >= 1.0);
+        assert!(s_is > s_ws && s_ws > s_os, "is={s_is} ws={s_ws} os={s_os}");
+        assert!((1.1..2.5).contains(&s_is), "is speedup {s_is}");
+        assert!((1.0..1.4).contains(&s_os), "os speedup {s_os}");
+    }
+
+    #[test]
+    fn flex_beats_even_best_static() {
+        for topo in zoo::all_models() {
+            let d = FlexPipeline::new(ArchConfig::square(32)).deploy(&topo);
+            let (df, best) = d.best_static();
+            assert!(
+                d.total_cycles() <= best,
+                "{}: flex {} > best static {df} {best}",
+                topo.name,
+                d.total_cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_array_size_vs_os() {
+        // Paper Fig. 7: avg Flex-vs-OS speedup is 1.090 (32x32), 1.238
+        // (128x128), 1.349 (256x256). Check monotone growth of the mean.
+        let mut prev = 0.0;
+        for s in [32u32, 128, 256] {
+            let mut sum = 0.0;
+            let models = zoo::all_models();
+            for topo in &models {
+                let d = FlexPipeline::new(ArchConfig::square(s)).deploy(topo);
+                sum += d.speedup_vs(Dataflow::Os);
+            }
+            let avg = sum / models.len() as f64;
+            assert!(avg >= prev, "avg speedup shrank at {s}: {avg} < {prev}");
+            prev = avg;
+        }
+        assert!(prev > 1.15, "256x256 avg Flex-vs-OS speedup only {prev}");
+    }
+
+    #[test]
+    fn heuristic_pipeline_still_beats_or_ties_worst_static() {
+        let d = FlexPipeline::new(ArchConfig::square(32))
+            .with_selector(SelectorKind::Heuristic)
+            .deploy(&zoo::mobilenet());
+        let worst = Dataflow::ALL
+            .into_iter()
+            .map(|df| d.static_cycles(df))
+            .max()
+            .unwrap();
+        assert!(d.total_cycles() <= worst);
+    }
+}

@@ -1,0 +1,176 @@
+//! Energy model: joules per layer/network from cycle + traffic statistics.
+//!
+//! Extension beyond the paper (which reports power, not energy): combines
+//! the [`super::pe`] power composition with standard 45 nm memory-access
+//! energy figures to turn [`crate::sim::engine::LayerStats`] into an energy
+//! breakdown.  Used by the edge example and the DSE module (energy and EDP
+//! are the metrics an edge deployment actually optimizes).
+//!
+//! Energy accounting per layer under a dataflow:
+//!
+//! * **MAC energy** — `macs x E_mac`, with `E_mac` derived from the active
+//!   PE power at the constraint clock (44 µW x 10 ns ≈ 0.44 pJ/MAC, in the
+//!   right neighbourhood for 45 nm INT8 MACs).
+//! * **SRAM energy** — operand-matrix accesses (the [`OperandTraffic`]
+//!   counts, which already include WS/IS partial-sum re-reads) at
+//!   `E_sram`/element.  This is where the dataflow choice shows up.
+//! * **DRAM energy** — fetch+writeback bytes at `E_dram`/byte (only
+//!   populated under `SimFidelity::WithMemory`).
+//! * **Idle/leakage energy** — whole-array leakage x total cycles.
+
+use crate::config::ArchConfig;
+use crate::sim::engine::{LayerStats, NetworkStats};
+
+use super::pe::{pe_cost, PeVariant};
+
+/// Energy per SRAM element access (8-bit), picojoules (45 nm-class SRAM).
+pub const SRAM_PJ_PER_ACCESS: f64 = 1.2;
+/// Energy per DRAM byte, picojoules (DDR3-era external memory).
+pub const DRAM_PJ_PER_BYTE: f64 = 40.0;
+/// Leakage fraction of active PE power (idle PEs still burn this).
+pub const LEAKAGE_FRACTION: f64 = 0.08;
+
+/// Energy breakdown of one layer (picojoules).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mac_pj: f64,
+    pub sram_pj: f64,
+    pub dram_pj: f64,
+    pub leakage_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.mac_pj + self.sram_pj + self.dram_pj + self.leakage_pj
+    }
+
+    /// Total in millijoules (the edge example's reporting unit).
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() * 1e-9
+    }
+
+    fn add(&mut self, other: &EnergyBreakdown) {
+        self.mac_pj += other.mac_pj;
+        self.sram_pj += other.sram_pj;
+        self.dram_pj += other.dram_pj;
+        self.leakage_pj += other.leakage_pj;
+    }
+}
+
+/// Per-MAC energy for a PE variant at the arch's clock, picojoules.
+pub fn mac_energy_pj(arch: &ArchConfig, variant: PeVariant) -> f64 {
+    // power (µW) x clock (ns) = 1e-6 W x 1e-9 s = 1e-15 J = 1e-3 pJ
+    pe_cost(variant).power_uw * arch.clock_ns * 1e-3
+}
+
+/// Energy of one simulated layer.
+pub fn layer_energy(arch: &ArchConfig, variant: PeVariant, stats: &LayerStats) -> EnergyBreakdown {
+    let e_mac = mac_energy_pj(arch, variant);
+    let leak_per_cycle_pj =
+        pe_cost(variant).power_uw * LEAKAGE_FRACTION * arch.num_pes() as f64 * arch.clock_ns
+            * 1e-3;
+    EnergyBreakdown {
+        mac_pj: stats.macs as f64 * e_mac,
+        sram_pj: stats.traffic.total() as f64 * SRAM_PJ_PER_ACCESS,
+        dram_pj: (stats.dram.fetch_bytes + stats.dram.writeback_bytes) as f64
+            * DRAM_PJ_PER_BYTE,
+        leakage_pj: stats.total_cycles() as f64 * leak_per_cycle_pj,
+    }
+}
+
+/// Energy of a whole simulated network.
+pub fn network_energy(
+    arch: &ArchConfig,
+    variant: PeVariant,
+    stats: &NetworkStats,
+) -> EnergyBreakdown {
+    let mut total = EnergyBreakdown::default();
+    for layer in &stats.layers {
+        total.add(&layer_energy(arch, variant, layer));
+    }
+    total
+}
+
+/// Energy-delay product in pJ·cycles (the DSE ranking metric).
+pub fn edp(arch: &ArchConfig, variant: PeVariant, stats: &NetworkStats) -> f64 {
+    network_energy(arch, variant, stats).total_pj() * stats.total_cycles() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{simulate_network, SimOptions};
+    use crate::sim::Dataflow;
+    use crate::topology::zoo;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::square(32)
+    }
+
+    #[test]
+    fn mac_energy_magnitude() {
+        // ~0.4-0.5 pJ/MAC for the conventional 45nm INT8 PE at 10 ns.
+        let e = mac_energy_pj(&arch(), PeVariant::Conventional);
+        assert!((0.3..0.6).contains(&e), "{e}");
+        // Flex PE burns slightly more per MAC (the added reg + muxes).
+        assert!(mac_energy_pj(&arch(), PeVariant::Flex) > e);
+    }
+
+    #[test]
+    fn deep_layer_os_saves_sram_energy() {
+        // OS writes outputs once; WS re-reads M*C partials per extra K-fold.
+        // For a deep layer (K >> M), OS must spend less SRAM energy.
+        let topo = zoo::resnet18();
+        let deep = topo.layers.iter().find(|l| l.name == "Conv5_1b").unwrap();
+        let a = arch();
+        let opts = SimOptions::default();
+        let os = crate::sim::engine::simulate_layer(&a, deep, Dataflow::Os, opts);
+        let ws = crate::sim::engine::simulate_layer(&a, deep, Dataflow::Ws, opts);
+        let e_os = layer_energy(&a, PeVariant::Flex, &os);
+        let e_ws = layer_energy(&a, PeVariant::Flex, &ws);
+        assert!(e_os.sram_pj < e_ws.sram_pj, "os={} ws={}", e_os.sram_pj, e_ws.sram_pj);
+    }
+
+    #[test]
+    fn network_energy_sums_layers() {
+        let a = arch();
+        let stats = simulate_network(&a, &zoo::alexnet(), Dataflow::Os, SimOptions::default());
+        let total = network_energy(&a, PeVariant::Flex, &stats);
+        let by_layer: f64 = stats
+            .layers
+            .iter()
+            .map(|l| layer_energy(&a, PeVariant::Flex, l).total_pj())
+            .sum();
+        assert!((total.total_pj() - by_layer).abs() < 1e-6 * by_layer);
+        assert!(total.total_mj() > 0.0);
+    }
+
+    #[test]
+    fn dram_energy_zero_without_memory_model() {
+        let a = arch();
+        let stats = simulate_network(&a, &zoo::alexnet(), Dataflow::Os, SimOptions::default());
+        let e = network_energy(&a, PeVariant::Flex, &stats);
+        assert_eq!(e.dram_pj, 0.0);
+    }
+
+    #[test]
+    fn edp_prefers_faster_runs_at_equal_energy_class() {
+        // Flex (per-layer optimal) must have lower EDP than the worst
+        // static dataflow on ResNet-18.
+        use crate::coordinator::FlexPipeline;
+        let a = arch();
+        let d = FlexPipeline::new(a).deploy(&zoo::resnet18());
+        let flex_edp = edp(&a, PeVariant::Flex, &d.flex);
+        let worst_static = Dataflow::ALL
+            .into_iter()
+            .map(|df| {
+                edp(
+                    &a,
+                    PeVariant::Conventional,
+                    &simulate_network(&a, &zoo::resnet18(), df, SimOptions::default()),
+                )
+            })
+            .fold(0.0f64, f64::max);
+        assert!(flex_edp < worst_static);
+    }
+}

@@ -1,0 +1,89 @@
+//! Standard-cell constants (Nangate 45 nm Open Cell Library neighbourhood).
+//!
+//! Area figures are the published X1-drive cell footprints; power figures
+//! are effective switching+leakage per cell at the paper's 100 MHz
+//! constraint clock (10 ns period) and nominal activity; delays are typical
+//! propagation delays.  Exact vendor numbers vary with characterization
+//! corner — the roll-up is calibrated at the TPU level (see
+//! [`super::tpu`]), so only the *ratios* between cells matter here.
+
+/// One standard cell's characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    /// Area in µm².
+    pub area_um2: f64,
+    /// Effective power in µW at 100 MHz, nominal activity.
+    pub power_uw: f64,
+    /// Propagation delay in ns.
+    pub delay_ns: f64,
+}
+
+/// D flip-flop (DFF_X1).
+pub const DFF: Cell = Cell {
+    area_um2: 4.522,
+    power_uw: 0.35,
+    delay_ns: 0.09,
+};
+
+/// Full adder (FA_X1).
+pub const FULL_ADDER: Cell = Cell {
+    area_um2: 4.256,
+    power_uw: 0.25,
+    delay_ns: 0.11,
+};
+
+/// 2-input AND (AND2_X1) — partial-product generation.
+pub const AND2: Cell = Cell {
+    area_um2: 0.798,
+    power_uw: 0.05,
+    delay_ns: 0.04,
+};
+
+/// 2:1 mux (MUX2_X1) — the Flex-PE's two added muxes are vectors of these.
+pub const MUX2: Cell = Cell {
+    area_um2: 1.596,
+    power_uw: 0.08,
+    delay_ns: 0.06,
+};
+
+/// Gate counts of an `w x w` -> `2w` array multiplier (Baugh-Wooley-style):
+/// `w²` partial-product AND gates and `w(w-1)` full adders plus a `w`-bit
+/// final-stage adder folded into the FA count.
+pub fn multiplier_gates(width: u64) -> (u64, u64) {
+    let ands = width * width;
+    let fas = width * width; // w(w-1) array + w final stage
+    (ands, fas)
+}
+
+/// Critical path length of the array multiplier in FA stages (≈ 2w for a
+/// ripple-carry reduction at 45 nm synthesis with some compression).
+pub fn multiplier_critical_fa_stages(width: u64) -> u64 {
+    2 * width
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_positive() {
+        for c in [DFF, FULL_ADDER, AND2, MUX2] {
+            assert!(c.area_um2 > 0.0 && c.power_uw > 0.0 && c.delay_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn int8_multiplier_composition() {
+        let (ands, fas) = multiplier_gates(8);
+        assert_eq!(ands, 64);
+        assert_eq!(fas, 64);
+        assert_eq!(multiplier_critical_fa_stages(8), 16);
+    }
+
+    #[test]
+    fn mux_is_cheaper_than_dff() {
+        // Sanity on relative magnitudes the overhead story rests on.
+        assert!(MUX2.area_um2 < DFF.area_um2);
+        assert!(MUX2.power_uw < DFF.power_uw);
+    }
+}

@@ -1,0 +1,36 @@
+//! Area / power / critical-path cost model (Synopsys DC + Nangate 45 nm
+//! stand-in — see DESIGN.md §6 Substitutions).
+//!
+//! The paper synthesizes a conventional (OS-dataflow) TPU and the Flex-TPU
+//! with Synopsys Design Compiler against the Nangate 45 nm Open Cell
+//! Library (clock 10 ns, uncertainty 2 %, clock-network delay 1 ns) and
+//! reports Table II + Fig. 5.  We replace the proprietary flow with a
+//! structural model:
+//!
+//! * [`gates`] — per-cell constants (area / switching power / delay) in the
+//!   neighbourhood of published Nangate 45 nm figures.
+//! * [`pe`] — gate composition of the conventional PE (multiplier, 32-bit
+//!   accumulator, pipeline registers) and the Flex-PE (one extra 8-bit
+//!   register + an 8-bit and a 32-bit 2:1 mux — the paper's Fig. 3 delta).
+//! * [`tpu`] — whole-chip roll-up: systolic array + per-PE-slot periphery
+//!   (FIFOs, whose depth scales with the array edge, hence ~quadratic) +
+//!   the CMU (Flex only).
+//! * [`synth`] — the "synthesis run": applies the paper's constraints and
+//!   emits Table II rows (area mm², power mW, critical path ns).
+//! * [`energy`] — joules per inference from cycle + traffic statistics
+//!   (extension beyond the paper; powers the edge/DSE studies).
+//!
+//! Calibration policy: the *conventional* column is anchored to the paper's
+//! Table II 32x32 point (layout factor + periphery share); the *Flex*
+//! column and all overhead percentages are then model **outputs**, compared
+//! against the paper in EXPERIMENTS.md.
+
+pub mod energy;
+pub mod gates;
+pub mod pe;
+pub mod synth;
+pub mod tpu;
+
+pub use pe::{PeCost, PeVariant};
+pub use synth::{synthesize, SynthConstraints, SynthReport};
+pub use tpu::{TpuBreakdown, TpuCost};

@@ -1,0 +1,142 @@
+//! The "synthesis run": constraints + critical-path model + Table II rows.
+//!
+//! Synopsys DC reports a post-synthesis critical path that grows with array
+//! size (wire load / clock-tree depth), saturating toward the constraint
+//! clock.  We model it as the PE MAC logic delay plus a wire/clock-tree
+//! term calibrated to the paper's conventional column
+//! (5.80 / 6.44 / 6.63 ns at 8/16/32):
+//!
+//! `cpd(N) = WIRE_SAT − WIRE_AMPL · exp(−N / WIRE_TAU)` for the
+//! conventional PE, plus the Flex mux hop for the Flex variant.
+
+
+use super::pe::{pe_cost, PeVariant};
+use super::tpu::TpuCost;
+
+/// The paper's synthesis constraints (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthConstraints {
+    /// Constraint clock period, ns.
+    pub clock_ns: f64,
+    /// Clock uncertainty, fraction of period.
+    pub uncertainty: f64,
+    /// Clock network delay, ns.
+    pub clock_network_ns: f64,
+}
+
+impl Default for SynthConstraints {
+    fn default() -> Self {
+        // "an uncertainty of 2%, a clock period of 10 ns, and a clock
+        //  network delay of 1 ns"
+        Self {
+            clock_ns: 10.0,
+            uncertainty: 0.02,
+            clock_network_ns: 1.0,
+        }
+    }
+}
+
+/// Wire/clock-tree critical-path calibration (conventional column).
+const WIRE_SAT: f64 = 6.67;
+const WIRE_AMPL: f64 = 3.30;
+const WIRE_TAU: f64 = 6.0;
+
+/// One synthesized design's report — a Table II cell triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthReport {
+    pub rows: u32,
+    pub cols: u32,
+    pub variant_flex: bool,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub critical_path_ns: f64,
+    /// Positive slack against the constraint clock?
+    pub timing_met: bool,
+}
+
+/// Post-synthesis critical path for an `N x N` array.
+pub fn critical_path_ns(n: u32, variant: PeVariant) -> f64 {
+    let base = WIRE_SAT - WIRE_AMPL * (-(n as f64) / WIRE_TAU).exp();
+    match variant {
+        PeVariant::Conventional => base,
+        PeVariant::Flex => {
+            let conv = pe_cost(PeVariant::Conventional).logic_delay_ns;
+            let flex = pe_cost(PeVariant::Flex).logic_delay_ns;
+            base + (flex - conv)
+        }
+    }
+}
+
+/// "Synthesize" a square TPU under the paper's constraints.
+pub fn synthesize(n: u32, variant: PeVariant, constraints: &SynthConstraints) -> SynthReport {
+    let tpu = TpuCost::square(n, variant);
+    let cpd = critical_path_ns(n, variant);
+    let budget =
+        constraints.clock_ns * (1.0 - constraints.uncertainty) - constraints.clock_network_ns;
+    SynthReport {
+        rows: n,
+        cols: n,
+        variant_flex: matches!(variant, PeVariant::Flex),
+        area_mm2: tpu.area_mm2(),
+        power_mw: tpu.power_mw(),
+        critical_path_ns: cpd,
+        timing_met: cpd <= budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conventional_cpd_tracks_paper() {
+        // Paper: 5.80 / 6.44 / 6.63 ns at 8 / 16 / 32.
+        for (n, want) in [(8u32, 5.80), (16, 6.44), (32, 6.63)] {
+            let got = critical_path_ns(n, PeVariant::Conventional);
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "N={n}: got {got}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn flex_cpd_penalty_small_like_paper() {
+        // Paper worst case 2.07 % (8x8); must stay under 3 % everywhere.
+        for n in [8u32, 16, 32, 128, 256] {
+            let conv = critical_path_ns(n, PeVariant::Conventional);
+            let flex = critical_path_ns(n, PeVariant::Flex);
+            let pct = flex / conv - 1.0;
+            assert!(pct > 0.0 && pct < 0.03, "N={n}: {pct}");
+        }
+    }
+
+    #[test]
+    fn timing_met_under_paper_constraints() {
+        let cons = SynthConstraints::default();
+        for n in [8u32, 16, 32] {
+            for v in [PeVariant::Conventional, PeVariant::Flex] {
+                let rep = synthesize(n, v, &cons);
+                assert!(rep.timing_met, "N={n} {v:?}: cpd={}", rep.critical_path_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn tight_clock_fails_timing() {
+        let cons = SynthConstraints {
+            clock_ns: 5.0,
+            ..Default::default()
+        };
+        let rep = synthesize(32, PeVariant::Flex, &cons);
+        assert!(!rep.timing_met);
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let rep = synthesize(16, PeVariant::Flex, &SynthConstraints::default());
+        assert!(rep.variant_flex);
+        assert_eq!((rep.rows, rep.cols), (16, 16));
+        assert!(rep.area_mm2 > 0.0 && rep.power_mw > 0.0);
+    }
+}

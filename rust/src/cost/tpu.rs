@@ -1,0 +1,172 @@
+//! Whole-TPU cost roll-up and the Fig. 5 area/power breakdown.
+//!
+//! Composition per the paper's Fig. 2: the systolic array dominates; around
+//! it sit the operand FIFOs (whose depth scales with the array edge, so
+//! their total size scales with PE count), the Dataflow Generator + Main
+//! Controller, and — Flex only — the CMU.  SRAM macros are off-die in the
+//! Table II synthesis (0.07 mm² total at 8x8 could not contain 3 MiB of
+//! SRAM), so they are excluded here too.
+//!
+//! Calibration (see DESIGN.md §6): `PERIPH_AREA_PER_SLOT` and
+//! `PERIPH_POWER_PER_SLOT` anchor the *conventional* TPU to the paper's
+//! Table II 32x32 baseline (1.192 mm², 55.621 mW) with the systolic array
+//! at ~78 % of area — inside the paper's 77-80 % (Fig. 5).  Everything
+//! about the *Flex* column is then a model output.
+
+
+use super::pe::{pe_cost, PeVariant};
+
+/// Per-PE-slot periphery area (FIFO bits + amortized controller), µm².
+pub const PERIPH_AREA_PER_SLOT: f64 = 256.0;
+/// Per-PE-slot periphery power, µW @ 100 MHz.
+pub const PERIPH_POWER_PER_SLOT: f64 = 10.3;
+/// Fixed CMU area (config table + select drivers), µm² — Flex only.
+pub const CMU_AREA_UM2: f64 = 2000.0;
+/// Fixed CMU power, µW — Flex only.
+pub const CMU_POWER_UW: f64 = 20.0;
+
+/// Area/power breakdown of one TPU (Fig. 5 content).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TpuBreakdown {
+    pub array_area_mm2: f64,
+    pub periphery_area_mm2: f64,
+    pub cmu_area_mm2: f64,
+    pub array_power_mw: f64,
+    pub periphery_power_mw: f64,
+    pub cmu_power_mw: f64,
+}
+
+impl TpuBreakdown {
+    pub fn total_area_mm2(&self) -> f64 {
+        self.array_area_mm2 + self.periphery_area_mm2 + self.cmu_area_mm2
+    }
+
+    pub fn total_power_mw(&self) -> f64 {
+        self.array_power_mw + self.periphery_power_mw + self.cmu_power_mw
+    }
+
+    /// Systolic-array share of total area (paper: 77-80 %).
+    pub fn array_area_share(&self) -> f64 {
+        self.array_area_mm2 / self.total_area_mm2()
+    }
+
+    /// Systolic-array share of total power (paper: 50-89 %).
+    pub fn array_power_share(&self) -> f64 {
+        self.array_power_mw / self.total_power_mw()
+    }
+}
+
+/// Cost model for one TPU instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TpuCost {
+    pub rows: u32,
+    pub cols: u32,
+    pub variant: PeVariant,
+}
+
+impl TpuCost {
+    pub fn new(rows: u32, cols: u32, variant: PeVariant) -> Self {
+        Self { rows, cols, variant }
+    }
+
+    pub fn square(n: u32, variant: PeVariant) -> Self {
+        Self::new(n, n, variant)
+    }
+
+    fn slots(&self) -> f64 {
+        self.rows as f64 * self.cols as f64
+    }
+
+    /// Full breakdown (the Fig. 5 data).
+    pub fn breakdown(&self) -> TpuBreakdown {
+        let pe = pe_cost(self.variant);
+        let slots = self.slots();
+        let um2_to_mm2 = 1e-6;
+        let uw_to_mw = 1e-3;
+        let (cmu_a, cmu_p) = match self.variant {
+            PeVariant::Flex => (CMU_AREA_UM2, CMU_POWER_UW),
+            PeVariant::Conventional => (0.0, 0.0),
+        };
+        TpuBreakdown {
+            array_area_mm2: slots * pe.area_um2 * um2_to_mm2,
+            periphery_area_mm2: slots * PERIPH_AREA_PER_SLOT * um2_to_mm2,
+            cmu_area_mm2: cmu_a * um2_to_mm2,
+            array_power_mw: slots * pe.power_uw * uw_to_mw,
+            periphery_power_mw: slots * PERIPH_POWER_PER_SLOT * uw_to_mw,
+            cmu_power_mw: cmu_p * uw_to_mw,
+        }
+    }
+
+    /// Total die area in mm².
+    pub fn area_mm2(&self) -> f64 {
+        self.breakdown().total_area_mm2()
+    }
+
+    /// Total power in mW at the 100 MHz constraint clock.
+    pub fn power_mw(&self) -> f64 {
+        self.breakdown().total_power_mw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchored_to_paper_32x32_baseline() {
+        // Paper Table II conventional 32x32: 1.192 mm², 55.621 mW.
+        let t = TpuCost::square(32, PeVariant::Conventional);
+        let area = t.area_mm2();
+        let power = t.power_mw();
+        assert!((area - 1.192).abs() / 1.192 < 0.02, "area {area}");
+        assert!((power - 55.621).abs() / 55.621 < 0.02, "power {power}");
+    }
+
+    #[test]
+    fn fig5_array_shares_in_paper_ranges() {
+        for n in [8u32, 16, 32] {
+            for v in [PeVariant::Conventional, PeVariant::Flex] {
+                let b = TpuCost::square(n, v).breakdown();
+                let a = b.array_area_share();
+                assert!((0.75..0.85).contains(&a), "{n} {v:?} area share {a}");
+                let p = b.array_power_share();
+                assert!((0.50..0.92).contains(&p), "{n} {v:?} power share {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn flex_overhead_in_paper_ranges() {
+        // Paper Table II: area overhead 10.1-13.6 %, power 7.6-10.7 %.
+        for n in [8u32, 16, 32] {
+            let conv = TpuCost::square(n, PeVariant::Conventional);
+            let flex = TpuCost::square(n, PeVariant::Flex);
+            let ao = flex.area_mm2() / conv.area_mm2() - 1.0;
+            let po = flex.power_mw() / conv.power_mw() - 1.0;
+            assert!((0.08..0.16).contains(&ao), "{n}: area overhead {ao}");
+            assert!((0.06..0.14).contains(&po), "{n}: power overhead {po}");
+        }
+    }
+
+    #[test]
+    fn overhead_shrinks_with_size() {
+        // The fixed CMU makes small arrays pay relatively more (paper trend:
+        // 13.6 % at 8x8 down to 10.1 % at 32x32).
+        let ov = |n: u32| {
+            TpuCost::square(n, PeVariant::Flex).area_mm2()
+                / TpuCost::square(n, PeVariant::Conventional).area_mm2()
+                - 1.0
+        };
+        assert!(ov(8) > ov(16));
+        assert!(ov(16) > ov(32));
+    }
+
+    #[test]
+    fn non_square_supported() {
+        let t = TpuCost::new(8, 16, PeVariant::Conventional);
+        let sq8 = TpuCost::square(8, PeVariant::Conventional);
+        let sq16 = TpuCost::square(16, PeVariant::Conventional);
+        assert!(t.area_mm2() > sq8.area_mm2());
+        assert!(t.area_mm2() < sq16.area_mm2());
+    }
+}

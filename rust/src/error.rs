@@ -1,0 +1,52 @@
+//! Library-wide error type.
+
+use std::fmt;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced by the Flex-TPU library.
+#[derive(Debug)]
+pub enum Error {
+    /// A topology file or CSV row could not be parsed.
+    TopologyParse(String),
+    /// A layer has geometry the GEMM mapper cannot lower (e.g. filter larger
+    /// than the padded ifmap).
+    InvalidLayer(String),
+    /// Architecture configuration is inconsistent (zero-sized array, ...).
+    InvalidConfig(String),
+    /// An artifact (HLO text / manifest) is missing or malformed.
+    Artifact(String),
+    /// The PJRT runtime returned an error.
+    Runtime(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::TopologyParse(m) => write!(f, "topology parse error: {m}"),
+            Error::InvalidLayer(m) => write!(f, "invalid layer: {m}"),
+            Error::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}

@@ -1,0 +1,14 @@
+//! Batched inference driver: functional PJRT execution + Flex-TPU timing.
+//!
+//! The e2e serving demo (DESIGN.md E8): requests arrive on a tokio channel,
+//! a batcher groups them into the artifact's batch size, the PJRT runtime
+//! computes the logits (*values*), and the deployed Flex-TPU simulation
+//! supplies the per-inference latency the hardware would deliver (*time*).
+//! Responses report both, plus the would-be latency under each static
+//! dataflow, so one serving run exhibits the paper's speedup end-to-end.
+
+mod request;
+mod server;
+
+pub use request::{InferenceRequest, InferenceResponse, TimingEstimate};
+pub use server::{Envelope, InferenceServer, ServerStats};

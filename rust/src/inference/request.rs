@@ -1,0 +1,76 @@
+//! Request/response types for the inference server.
+
+
+/// One inference request: a single image, row-major `H*W*C` f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub pixels: Vec<f32>,
+}
+
+/// Simulated Flex-TPU timing attached to a response.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingEstimate {
+    /// Simulated cycles for one inference on the deployed (flex) config.
+    pub flex_cycles: u64,
+    /// Simulated wall-clock at the flex critical path, nanoseconds.
+    pub flex_ns: f64,
+    /// Cycles under the static baselines `[IS, OS, WS]`.
+    pub static_cycles: [u64; 3],
+    /// Speedup of flex vs the best static dataflow.
+    pub speedup_vs_best_static: f64,
+}
+
+/// One inference response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Predicted class (argmax of logits).
+    pub class: usize,
+    pub timing: TimingEstimate,
+}
+
+impl InferenceResponse {
+    pub fn new(id: u64, logits: Vec<f32>, timing: TimingEstimate) -> Self {
+        let class = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Self {
+            id,
+            logits,
+            class,
+            timing,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing() -> TimingEstimate {
+        TimingEstimate {
+            flex_cycles: 100,
+            flex_ns: 669.0,
+            static_cycles: [150, 110, 140],
+            speedup_vs_best_static: 1.1,
+        }
+    }
+
+    #[test]
+    fn argmax_class() {
+        let r = InferenceResponse::new(7, vec![0.1, 2.5, -1.0, 2.4], timing());
+        assert_eq!(r.class, 1);
+        assert_eq!(r.id, 7);
+    }
+
+    #[test]
+    fn empty_logits_class_zero() {
+        let r = InferenceResponse::new(1, vec![], timing());
+        assert_eq!(r.class, 0);
+    }
+}

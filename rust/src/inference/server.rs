@@ -1,0 +1,165 @@
+//! The batched inference server.
+//!
+//! Architecture (vLLM-router-style, scaled to this workload): a front door
+//! accepts requests on a bounded mpsc channel; the serving loop drains it
+//! into fixed-size batches (the artifact's compiled batch — "continuous
+//! batching light"); the PJRT executable computes the logits; each response
+//! carries the deployed Flex-TPU timing estimate alongside the values.
+//!
+//! Threading: the offline registry has no async runtime, so the server uses
+//! `std::thread` + `std::sync::mpsc` (documented substitution, DESIGN.md
+//! §6).  PJRT execution is synchronous anyway, so the serving loop *is* the
+//! worker; callers run it on a dedicated thread (see
+//! `examples/e2e_inference.rs`).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ArchConfig;
+use crate::coordinator::pipeline::{Deployment, FlexPipeline};
+use crate::cost::synth::critical_path_ns;
+use crate::cost::PeVariant;
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::sim::Dataflow;
+
+use super::request::{InferenceRequest, InferenceResponse, TimingEstimate};
+
+/// A request paired with the channel its response goes back on.
+pub type Envelope = (InferenceRequest, Sender<InferenceResponse>);
+
+/// Aggregate statistics of one serving run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Host wall-clock of the whole run, microseconds.
+    pub wall_us: u64,
+    /// Mean host latency per request, microseconds.
+    pub mean_host_latency_us: f64,
+    /// Host throughput, requests/second.
+    pub host_throughput_rps: f64,
+    /// Simulated Flex-TPU latency per inference, nanoseconds.
+    pub sim_flex_latency_ns: f64,
+    /// Simulated throughput on the Flex-TPU, inferences/second.
+    pub sim_flex_throughput_ips: f64,
+    /// Simulated speedup vs the best static dataflow.
+    pub sim_speedup_vs_best_static: f64,
+}
+
+/// The server: a compiled runtime + a deployed Flex-TPU timing model.
+pub struct InferenceServer {
+    runtime: Arc<Runtime>,
+    deployment: Deployment,
+    timing: TimingEstimate,
+    variant: String,
+}
+
+impl InferenceServer {
+    /// Deploy: run the paper's pre-deployment flow for the artifact's
+    /// network on `arch` and bind the matching compiled model variant.
+    pub fn new(runtime: Runtime, arch: ArchConfig) -> Result<Self> {
+        let topo = runtime.manifest().topology();
+        let deployment = FlexPipeline::new(arch).deploy(&topo);
+        let variant = "flex".to_string();
+        if !runtime.model_variants().contains(&variant) {
+            return Err(Error::Artifact("no 'flex' model artifact".into()));
+        }
+        let flex_cycles = deployment.total_cycles();
+        let cpd = critical_path_ns(arch.array_rows, PeVariant::Flex);
+        let static_cycles = [
+            deployment.static_cycles(Dataflow::Is),
+            deployment.static_cycles(Dataflow::Os),
+            deployment.static_cycles(Dataflow::Ws),
+        ];
+        let (_, best) = deployment.best_static();
+        let timing = TimingEstimate {
+            flex_cycles,
+            flex_ns: flex_cycles as f64 * cpd,
+            static_cycles,
+            speedup_vs_best_static: best as f64 / flex_cycles as f64,
+        };
+        Ok(Self {
+            runtime: Arc::new(runtime),
+            deployment,
+            timing,
+            variant,
+        })
+    }
+
+    pub fn deployment(&self) -> &Deployment {
+        &self.deployment
+    }
+
+    pub fn timing(&self) -> &TimingEstimate {
+        &self.timing
+    }
+
+    /// Serve requests arriving on `rx` until the channel closes, sending
+    /// each response back through its envelope.  Returns aggregate stats.
+    pub fn serve(&self, rx: Receiver<Envelope>) -> Result<ServerStats> {
+        let m = self.runtime.manifest();
+        let batch = m.batch as usize;
+        let img = (m.input_hw * m.input_hw * m.input_channels) as usize;
+        let classes = m.num_classes as usize;
+
+        let start = Instant::now();
+        let mut stats = ServerStats::default();
+        let mut pending: Vec<Envelope> = Vec::with_capacity(batch);
+        let mut latency_sum_us = 0f64;
+
+        loop {
+            // Block for the first request of a batch, then drain whatever
+            // is already queued (continuous batching light).
+            match rx.recv() {
+                Ok(env) => pending.push(env),
+                Err(_) => break, // producers gone
+            }
+            while pending.len() < batch {
+                match rx.try_recv() {
+                    Ok(env) => pending.push(env),
+                    Err(_) => break,
+                }
+            }
+
+            // Pad the tail with zero images (the compiled batch is static).
+            let live = pending.len();
+            let mut input = vec![0f32; batch * img];
+            for (i, (req, _)) in pending.iter().enumerate() {
+                if req.pixels.len() != img {
+                    return Err(Error::Runtime(format!(
+                        "request {} has {} pixels, expected {img}",
+                        req.id,
+                        req.pixels.len()
+                    )));
+                }
+                input[i * img..(i + 1) * img].copy_from_slice(&req.pixels);
+            }
+
+            let batch_start = Instant::now();
+            let logits = self.runtime.execute_model(&self.variant, &input)?;
+            let batch_us = batch_start.elapsed().as_micros() as f64;
+
+            for (i, (req, tx)) in pending.drain(..).enumerate() {
+                let out = logits[i * classes..(i + 1) * classes].to_vec();
+                let resp = InferenceResponse::new(req.id, out, self.timing);
+                let _ = tx.send(resp);
+                latency_sum_us += batch_us;
+            }
+            stats.requests += live as u64;
+            stats.batches += 1;
+        }
+
+        let wall = start.elapsed();
+        stats.wall_us = wall.as_micros() as u64;
+        if stats.requests > 0 {
+            stats.mean_host_latency_us = latency_sum_us / stats.requests as f64;
+            stats.host_throughput_rps = stats.requests as f64 / wall.as_secs_f64();
+            stats.sim_flex_latency_ns = self.timing.flex_ns;
+            stats.sim_flex_throughput_ips = 1e9 / self.timing.flex_ns;
+            stats.sim_speedup_vs_best_static = self.timing.speedup_vs_best_static;
+        }
+        Ok(stats)
+    }
+}

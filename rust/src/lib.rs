@@ -1,0 +1,64 @@
+//! # Flex-TPU
+//!
+//! A reproduction of *"Flex-TPU: A Flexible TPU with Runtime Reconfigurable
+//! Dataflow Architecture"* (Elbtity, Chandarana, Zand — 2024) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The library contains everything the paper's evaluation depends on, built
+//! from scratch:
+//!
+//! * [`topology`] — DNN layer descriptions, a ScaleSim-format topology
+//!   parser, and the seven-model zoo the paper evaluates (AlexNet,
+//!   FasterRCNN, GoogleNet, MobileNetV1, ResNet-18, VGG-13, YOLO-Tiny).
+//! * [`sim`] — a cycle-accurate systolic-array simulator (ScaleSim-V2
+//!   equivalent): im2col GEMM mapping, the three dataflow timing models
+//!   (IS/OS/WS) with fold/skew/drain accounting, demand-trace generation,
+//!   and a double-buffered SRAM + DRAM memory model with stall accounting.
+//! * [`arch`] — a functional, PE-level model of the Flex-PE
+//!   micro-architecture (the paper's Fig. 3/4: one extra register + two
+//!   muxes) that moves real data through the array cycle-by-cycle in all
+//!   three configurations; it validates both the MAC results (vs a GEMM
+//!   oracle) and the analytical cycle counts (exact match required).
+//! * [`coordinator`] — the paper's contribution: the Configuration
+//!   Management Unit (CMU), the offline per-layer dataflow selector, the
+//!   dataflow (address) generator, and the main controller that sequences
+//!   layer execution with reconfiguration accounting.
+//! * [`cost`] — an area/power/critical-path model calibrated against the
+//!   paper's Nangate-45nm Synopsys DC results (Table II, Fig. 5).
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them; python never runs
+//!   on the request path.
+//! * [`inference`] — a batched inference driver combining functional PJRT
+//!   execution with simulated Flex-TPU timing (the e2e example).
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation (Table I/II, Fig. 1/5/6/7).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use flex_tpu::config::ArchConfig;
+//! use flex_tpu::coordinator::FlexPipeline;
+//! use flex_tpu::topology::zoo;
+//!
+//! let arch = ArchConfig::square(32);
+//! let model = zoo::resnet18();
+//! let deployment = FlexPipeline::new(arch).deploy(&model);
+//! println!("flex cycles: {}", deployment.total_cycles());
+//! ```
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod error;
+pub mod inference;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;
+
+pub use config::ArchConfig;
+pub use error::{Error, Result};
+pub use sim::Dataflow;

@@ -1,0 +1,339 @@
+//! `flex-tpu` — the Flex-TPU leader binary.
+//!
+//! ```text
+//! flex-tpu simulate --model resnet18 --size 32 --dataflow os [--memory] [--per-layer]
+//! flex-tpu deploy   --model resnet18 --size 32 [--cmu-out cmu.json] [--heuristic]
+//! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|all> [--size 32] [--csv DIR]
+//! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8]
+//! flex-tpu validate [--array 4] [--cases 20]
+//! ```
+
+use std::path::PathBuf;
+
+use flex_tpu::config::{ArchConfig, SimFidelity};
+use flex_tpu::coordinator::cmu::Cmu;
+use flex_tpu::coordinator::pipeline::SelectorKind;
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::inference::{InferenceRequest, InferenceServer};
+use flex_tpu::metrics::Table;
+use flex_tpu::report;
+use flex_tpu::runtime::Runtime;
+use flex_tpu::sim::engine::{simulate_network, SimOptions};
+use flex_tpu::sim::{Dataflow, DwMapping};
+use flex_tpu::topology::{parse_csv, zoo, Topology};
+use flex_tpu::util::cli::{Args, Parsed};
+
+const SUBCOMMANDS: &str = "simulate | deploy | report | infer | validate | dse";
+
+fn load_model(name: &str) -> anyhow::Result<Topology> {
+    if name.ends_with(".csv") {
+        Ok(parse_csv(name.as_ref())?)
+    } else {
+        Ok(zoo::by_name(name)?)
+    }
+}
+
+fn opts(memory: bool, batch: u32) -> SimOptions {
+    SimOptions {
+        fidelity: if memory {
+            SimFidelity::WithMemory
+        } else {
+            SimFidelity::Analytical
+        },
+        dw_mapping: DwMapping::ScaleSim,
+        batch,
+    }
+}
+
+fn emit(name: &str, table: &Table, csv: Option<&str>) -> anyhow::Result<()> {
+    println!("== {name} ==");
+    println!("{}", table.render());
+    if let Some(dir) = csv {
+        std::fs::create_dir_all(dir)?;
+        let path = PathBuf::from(dir).join(format!("{name}.csv"));
+        std::fs::write(&path, table.to_csv())?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn arch_from(p: &Parsed) -> anyhow::Result<ArchConfig> {
+    let arch = match p.get("config") {
+        Some(path) => ArchConfig::from_toml_file(path.as_ref())?,
+        None => ArchConfig::square(p.u32("size")?),
+    };
+    arch.validate()?;
+    Ok(arch)
+}
+
+fn cmd_simulate(p: &Parsed) -> anyhow::Result<()> {
+    let topo = load_model(p.req("model")?)?;
+    let df = Dataflow::parse(p.req("dataflow")?)
+        .ok_or_else(|| anyhow::anyhow!("bad --dataflow (use is/os/ws)"))?;
+    let arch = arch_from(p)?;
+    let size = arch.array_rows;
+    let stats = simulate_network(
+        &arch,
+        &topo,
+        df,
+        opts(p.is_set("memory"), p.u32("batch")?),
+    );
+    if p.is_set("per-layer") {
+        let mut t = Table::new(&["Layer", "Cycles", "Stalls", "Utilization"]);
+        for l in &stats.layers {
+            t.row(vec![
+                l.name.clone(),
+                l.compute_cycles.to_string(),
+                l.stall_cycles.to_string(),
+                format!("{:.3}", l.utilization),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!(
+        "{} on {size}x{size} {df}: {} cycles ({} compute), utilization {:.3}",
+        topo.name,
+        stats.total_cycles(),
+        stats.compute_cycles(),
+        stats.utilization(&arch),
+    );
+    Ok(())
+}
+
+fn cmd_deploy(p: &Parsed) -> anyhow::Result<()> {
+    let topo = load_model(p.req("model")?)?;
+    let selector = if p.is_set("heuristic") {
+        SelectorKind::Heuristic
+    } else {
+        SelectorKind::Exhaustive
+    };
+    let d = FlexPipeline::new(arch_from(p)?)
+        .with_selector(selector)
+        .deploy(&topo);
+    let mut t = Table::new(&["Layer", "IS", "OS", "WS", "Selected"]);
+    for (i, l) in topo.layers.iter().enumerate() {
+        let c = d.selection.cycles[i];
+        t.row(vec![
+            l.name.clone(),
+            c[0].to_string(),
+            c[1].to_string(),
+            c[2].to_string(),
+            d.selection.per_layer[i].to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("flex total: {} cycles", d.total_cycles());
+    for df in Dataflow::ALL {
+        println!(
+            "  vs static {df}: {} cycles, speedup {:.3}x",
+            d.static_cycles(df),
+            d.speedup_vs(df)
+        );
+    }
+    if let Some(path) = p.get("cmu-out") {
+        let cmu = Cmu::program(&topo.name, d.selection.per_layer.clone())?;
+        std::fs::write(path, cmu.to_json()?)?;
+        println!("wrote CMU image to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_report(p: &Parsed) -> anyhow::Result<()> {
+    let what = p
+        .positional(1)
+        .ok_or_else(|| anyhow::anyhow!("report needs an artifact name (table1/table2/fig1/fig5/fig6/fig7/all)"))?;
+    let size = p.u32("size")?;
+    let csv = p.get("csv");
+    match what {
+        "table1" => emit("table1", &report::table1(size), csv)?,
+        "table2" => emit("table2", &report::table2(), csv)?,
+        "fig1" => emit("fig1", &report::fig1(p.get("model").unwrap_or("resnet18"), size), csv)?,
+        "fig5" => emit("fig5", &report::fig5(), csv)?,
+        "fig6" => emit("fig6", &report::fig6(), csv)?,
+        "fig7" => emit("fig7", &report::fig7(), csv)?,
+        "paper" => emit("paper_comparison", &report::paper_comparison(), csv)?,
+        "all" => {
+            emit("table1", &report::table1(size), csv)?;
+            emit("table2", &report::table2(), csv)?;
+            emit("fig1", &report::fig1("resnet18", size), csv)?;
+            emit("fig5", &report::fig5(), csv)?;
+            emit("fig6", &report::fig6(), csv)?;
+            emit("fig7", &report::fig7(), csv)?;
+            emit("paper_comparison", &report::paper_comparison(), csv)?;
+        }
+        other => anyhow::bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_infer(p: &Parsed) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(p.req("artifacts")?);
+    let requests = p.u64("requests")?;
+    let size = p.u32("size")?;
+    let rt = Runtime::load(&artifacts)?;
+    println!("platform: {}", rt.platform());
+    let manifest = rt.manifest().clone();
+    let server = InferenceServer::new(rt, ArchConfig::square(size))?;
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let img = (manifest.input_hw * manifest.input_hw * manifest.input_channels) as usize;
+    let producer = std::thread::spawn(move || {
+        let mut response_rxs = Vec::new();
+        for id in 0..requests {
+            let (otx, orx) = std::sync::mpsc::channel();
+            let pixels: Vec<f32> = (0..img)
+                .map(|px| ((id as usize + px) % 17) as f32 / 17.0)
+                .collect();
+            tx.send((InferenceRequest { id, pixels }, otx))
+                .expect("server alive");
+            response_rxs.push(orx);
+        }
+        drop(tx);
+        let mut classes = vec![0usize; 10];
+        for orx in response_rxs {
+            let resp: flex_tpu::inference::InferenceResponse =
+                orx.recv().expect("response");
+            classes[resp.class % 10] += 1;
+        }
+        classes
+    });
+    let stats = server.serve(rx)?;
+    let classes = producer.join().expect("producer join");
+    println!("class histogram: {classes:?}");
+    println!(
+        "served {} requests in {} batches; host: {:.1} req/s, {:.0} us/req",
+        stats.requests, stats.batches, stats.host_throughput_rps, stats.mean_host_latency_us
+    );
+    println!(
+        "simulated Flex-TPU ({size}x{size}): {:.2} us/inference, {:.0} inf/s, {:.3}x vs best static",
+        stats.sim_flex_latency_ns / 1000.0,
+        stats.sim_flex_throughput_ips,
+        stats.sim_speedup_vs_best_static
+    );
+    Ok(())
+}
+
+fn cmd_validate(p: &Parsed) -> anyhow::Result<()> {
+    use flex_tpu::arch::{FlexArray, Mat};
+    use flex_tpu::sim::{dataflow, Gemm};
+    use flex_tpu::util::rng::Rng;
+    let array = p.u32("array")?;
+    let cases = p.u64("cases")?;
+    let arch = ArchConfig::square(array);
+    let mut rng = Rng::new(0xF1E);
+    for case in 0..cases {
+        let m = rng.range(1, 3 * array as usize);
+        let k = rng.range(1, 3 * array as usize);
+        let n = rng.range(1, 3 * array as usize);
+        let a = Mat::random_i8(m, k, rng.next_u64());
+        let b = Mat::random_i8(k, n, rng.next_u64());
+        let want = a.matmul(&b);
+        for df in Dataflow::ALL {
+            let mut arr = FlexArray::new(array as usize, array as usize);
+            arr.configure(df);
+            let run = arr.run_gemm(&a, &b);
+            let plan = dataflow::plan(&Gemm::new(m as u64, k as u64, n as u64), &arch, df);
+            anyhow::ensure!(run.out == want, "case {case}: values diverge ({df} {m}x{k}x{n})");
+            anyhow::ensure!(
+                run.cycles == plan.compute_cycles(),
+                "case {case}: cycles diverge ({df} {m}x{k}x{n}): functional {} vs analytical {}",
+                run.cycles,
+                plan.compute_cycles()
+            );
+        }
+    }
+    println!(
+        "validate: {cases}/{cases} random GEMMs bit-exact with analytical cycle match on {array}x{array} (all dataflows)"
+    );
+    Ok(())
+}
+
+fn cmd_dse(p: &Parsed) -> anyhow::Result<()> {
+    use flex_tpu::coordinator::dse;
+    let topo = load_model(p.req("model")?)?;
+    let sizes: Vec<u32> = p
+        .req("sizes")?
+        .split(',')
+        .map(|s| s.trim().parse::<u32>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| anyhow::anyhow!("--sizes must be comma-separated integers"))?;
+    let points = dse::sweep(&topo, &sizes, SimOptions::default());
+    let front = dse::pareto_latency_area(&points);
+    let mut t = Table::new(&[
+        "Size",
+        "Variant",
+        "Cycles",
+        "Latency (ms)",
+        "Area (mm2)",
+        "Energy (mJ)",
+        "EDP",
+        "Pareto",
+    ]);
+    for (i, pt) in points.iter().enumerate() {
+        t.row(vec![
+            format!("{0}x{0}", pt.size),
+            pt.variant.to_string(),
+            pt.cycles.to_string(),
+            format!("{:.3}", pt.latency_ms),
+            format!("{:.3}", pt.area_mm2),
+            format!("{:.4}", pt.energy.total_mj()),
+            format!("{:.3e}", pt.edp),
+            if front.contains(&i) { "*".into() } else { String::new() },
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(best) = dse::best_edp(&points) {
+        println!(
+            "minimum-EDP design: {}x{} {} ({:.3} ms, {:.3} mm2)",
+            best.size, best.size, best.variant, best.latency_ms, best.area_mm2
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = Args::new(
+        "flex-tpu",
+        "Flex-TPU: runtime-reconfigurable dataflow TPU (paper reproduction)",
+    )
+    .positional("subcommand", SUBCOMMANDS)
+    .flag("model", Some("resnet18"), "zoo model name or topology CSV path")
+    .flag("size", Some("32"), "square systolic-array size")
+    .flag("dataflow", Some("os"), "static dataflow: is/os/ws")
+    .flag("csv", None, "also write report CSVs into this directory")
+    .flag("cmu-out", None, "write the programmed CMU image (JSON) here")
+    .flag("artifacts", Some("artifacts"), "AOT artifact directory")
+    .flag("requests", Some("64"), "synthetic requests to serve")
+    .flag("array", Some("4"), "functional-array size for validate")
+    .flag("cases", Some("20"), "random GEMM cases for validate")
+    .flag("batch", Some("1"), "inference batch size (simulate)")
+    .flag("config", None, "TOML arch config file (overrides --size)")
+    .flag("sizes", Some("8,16,32,64,128"), "comma-separated sizes for dse")
+    .switch("memory", "enable the SRAM/DRAM stall model")
+    .switch("per-layer", "print per-layer detail")
+    .switch("heuristic", "use the shape-heuristic selector (future-work mode)");
+
+    let parsed = match spec.parse(&argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match parsed.positional(0) {
+        Some("simulate") => cmd_simulate(&parsed),
+        Some("deploy") => cmd_deploy(&parsed),
+        Some("report") => cmd_report(&parsed),
+        Some("infer") => cmd_infer(&parsed),
+        Some("validate") => cmd_validate(&parsed),
+        Some("dse") => cmd_dse(&parsed),
+        other => {
+            eprintln!(
+                "unknown or missing subcommand {other:?}; expected one of: {SUBCOMMANDS}\n\n{}",
+                spec.usage()
+            );
+            std::process::exit(2);
+        }
+    }
+}

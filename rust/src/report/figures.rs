@@ -1,0 +1,157 @@
+//! Figures 1, 5, 6 and 7 as data tables.
+
+use crate::config::ArchConfig;
+use crate::coordinator::{selector, FlexPipeline};
+use crate::cost::synth::critical_path_ns;
+use crate::cost::{PeVariant, TpuCost};
+use crate::metrics::{mean, sci, Table};
+use crate::sim::engine::SimOptions;
+use crate::sim::Dataflow;
+use crate::topology::zoo;
+
+/// Fig. 1: per-layer cycles of `model` under IS/OS/WS on an `S x S` array,
+/// plus the per-layer winner — the heterogeneity evidence.
+pub fn fig1(model: &str, s: u32) -> Table {
+    let topo = zoo::by_name(model).expect("zoo model");
+    let arch = ArchConfig::square(s);
+    let sel = selector::select_exhaustive(&arch, &topo, SimOptions::default());
+    let mut t = Table::new(&["Layer", "IS cycles", "OS cycles", "WS cycles", "Best"]);
+    for (i, layer) in topo.layers.iter().enumerate() {
+        let row = sel.cycles[i];
+        t.row(vec![
+            layer.name.clone(),
+            row[0].to_string(),
+            row[1].to_string(),
+            row[2].to_string(),
+            sel.per_layer[i].to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: area/power breakdown (systolic array vs periphery share).
+pub fn fig5() -> Table {
+    let mut t = Table::new(&[
+        "S",
+        "Variant",
+        "Array Area (mm2)",
+        "Total Area (mm2)",
+        "Array Area Share",
+        "Array Power Share",
+    ]);
+    for s in [8u32, 16, 32] {
+        for (v, name) in [(PeVariant::Conventional, "TPU"), (PeVariant::Flex, "Flex-TPU")] {
+            let b = TpuCost::square(s, v).breakdown();
+            t.row(vec![
+                format!("{s}x{s}"),
+                name.into(),
+                format!("{:.3}", b.array_area_mm2),
+                format!("{:.3}", b.total_area_mm2()),
+                format!("{:.1}%", b.array_area_share() * 100.0),
+                format!("{:.1}%", b.array_power_share() * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 6: wall-clock inference time per model at `S = 32x32` — cycles x
+/// critical path (conventional CPD for static dataflows, Flex CPD for the
+/// Flex-TPU).  VGG-13 excluded like the paper ("disrupts the clarity").
+pub fn fig6() -> Table {
+    let arch = ArchConfig::square(32);
+    let cpd_conv = critical_path_ns(32, PeVariant::Conventional);
+    let cpd_flex = critical_path_ns(32, PeVariant::Flex);
+    let pipeline = FlexPipeline::new(arch);
+    let mut t = Table::new(&["Model", "IS (ms)", "OS (ms)", "WS (ms)", "Flex-TPU (ms)"]);
+    for topo in zoo::all_models() {
+        if topo.name == "vgg13" {
+            continue;
+        }
+        let d = pipeline.deploy(&topo);
+        let ms = |cycles: u64, cpd: f64| cycles as f64 * cpd * 1e-6;
+        t.row(vec![
+            topo.name.clone(),
+            format!("{:.3}", ms(d.static_cycles(Dataflow::Is), cpd_conv)),
+            format!("{:.3}", ms(d.static_cycles(Dataflow::Os), cpd_conv)),
+            format!("{:.3}", ms(d.static_cycles(Dataflow::Ws), cpd_conv)),
+            format!("{:.3}", ms(d.total_cycles(), cpd_flex)),
+        ]);
+    }
+    t
+}
+
+/// Fig. 7: inference cycles per model at `S = 128x128` and `256x256`, with
+/// the average Flex-vs-OS speedup per size (the scalability claim).
+pub fn fig7() -> Table {
+    let mut t = Table::new(&[
+        "S",
+        "Model",
+        "IS cycles",
+        "OS cycles",
+        "WS cycles",
+        "Flex cycles",
+        "Speedup vs OS",
+    ]);
+    for s in [128u32, 256] {
+        let pipeline = FlexPipeline::new(ArchConfig::square(s));
+        let mut speedups = Vec::new();
+        for topo in zoo::all_models() {
+            let d = pipeline.deploy(&topo);
+            let sp = d.speedup_vs(Dataflow::Os);
+            speedups.push(sp);
+            t.row(vec![
+                format!("{s}x{s}"),
+                topo.name.clone(),
+                sci(d.static_cycles(Dataflow::Is)),
+                sci(d.static_cycles(Dataflow::Os)),
+                sci(d.static_cycles(Dataflow::Ws)),
+                sci(d.total_cycles()),
+                format!("{sp:.3}"),
+            ]);
+        }
+        t.row(vec![
+            format!("{s}x{s}"),
+            "AVERAGE".into(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            format!("{:.3}", mean(&speedups)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_row_per_layer() {
+        let t = fig1("resnet18", 32);
+        assert_eq!(t.num_rows(), 21);
+    }
+
+    #[test]
+    fn fig5_shares_rendered() {
+        let t = fig5();
+        assert_eq!(t.num_rows(), 6);
+        assert!(t.render().contains('%'));
+    }
+
+    #[test]
+    fn fig6_excludes_vgg() {
+        let t = fig6();
+        assert_eq!(t.num_rows(), 6); // 7 models minus vgg13
+        assert!(!t.render().contains("vgg13"));
+    }
+
+    #[test]
+    fn fig7_has_both_sizes_with_averages() {
+        let t = fig7();
+        assert_eq!(t.num_rows(), 2 * (7 + 1));
+        let s = t.render();
+        assert!(s.contains("128x128") && s.contains("256x256"));
+    }
+}

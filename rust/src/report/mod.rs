@@ -1,0 +1,16 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! Each function returns a [`crate::metrics::Table`] with exactly the rows
+//! / series the paper reports, so `flex-tpu report <exp>` (or the criterion
+//! benches) can print paper-vs-measured side by side.  Experiment index:
+//! DESIGN.md §4.
+
+mod figures;
+mod summary;
+mod table1;
+mod table2;
+
+pub use figures::{fig1, fig5, fig6, fig7};
+pub use summary::{paper_comparison, PAPER_TABLE1, PAPER_TABLE2};
+pub use table1::{table1, table1_rows, Table1Row};
+pub use table2::table2;

@@ -1,0 +1,119 @@
+//! Table I: Flex-TPU vs conventional static-dataflow TPU clock cycles.
+
+
+use crate::config::ArchConfig;
+use crate::coordinator::FlexPipeline;
+use crate::metrics::{mean, sci, Table};
+use crate::sim::engine::SimOptions;
+use crate::sim::Dataflow;
+use crate::topology::zoo;
+
+/// One model's Table I data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table1Row {
+    pub model: String,
+    pub flex_cycles: u64,
+    /// Static cycles in `Dataflow::ALL` order (IS, OS, WS).
+    pub static_cycles: [u64; 3],
+    /// Speedups in the same order.
+    pub speedups: [f64; 3],
+}
+
+/// Compute Table I for all zoo models on an `S x S` array.
+pub fn table1_rows(s: u32, opts: SimOptions) -> Vec<Table1Row> {
+    let arch = ArchConfig::square(s);
+    let pipeline = FlexPipeline::new(arch).with_options(opts);
+    zoo::all_models()
+        .iter()
+        .map(|topo| {
+            let d = pipeline.deploy(topo);
+            let flex = d.total_cycles();
+            let static_cycles = Dataflow::ALL.map(|df| d.static_cycles(df));
+            let speedups = Dataflow::ALL.map(|df| d.speedup_vs(df));
+            Table1Row {
+                model: topo.name.clone(),
+                flex_cycles: flex,
+                static_cycles,
+                speedups,
+            }
+        })
+        .collect()
+}
+
+/// Render Table I in the paper's layout (one row per model x dataflow).
+pub fn table1(s: u32) -> Table {
+    let rows = table1_rows(s, SimOptions::default());
+    let mut t = Table::new(&[
+        "Model",
+        "Flex-TPU Cycles",
+        "Dataflow",
+        "Static Cycles",
+        "Speedup",
+    ]);
+    for row in &rows {
+        for (i, df) in Dataflow::ALL.into_iter().enumerate() {
+            t.row(vec![
+                if i == 0 { row.model.clone() } else { String::new() },
+                if i == 0 {
+                    sci(row.flex_cycles)
+                } else {
+                    String::new()
+                },
+                df.to_string(),
+                sci(row.static_cycles[i]),
+                format!("{:.3}", row.speedups[i]),
+            ]);
+        }
+    }
+    // Paper §III-A: average speedups per dataflow across models.
+    let avg: Vec<f64> = (0..3)
+        .map(|i| mean(&rows.iter().map(|r| r.speedups[i]).collect::<Vec<_>>()))
+        .collect();
+    t.row(vec![
+        "AVERAGE".into(),
+        String::new(),
+        "IS/OS/WS".into(),
+        String::new(),
+        format!("{:.3}/{:.3}/{:.3}", avg[0], avg[1], avg[2]),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_models_and_speedups_ge_one() {
+        let rows = table1_rows(32, SimOptions::default());
+        assert_eq!(rows.len(), 7);
+        for r in &rows {
+            for (i, s) in r.speedups.iter().enumerate() {
+                assert!(*s >= 1.0, "{} dataflow {i}: speedup {s}", r.model);
+                assert!(*s < 4.0, "{} dataflow {i}: speedup {s} implausible", r.model);
+            }
+            // Flex cycles must equal or beat the per-dataflow minimum.
+            assert!(r.flex_cycles <= *r.static_cycles.iter().min().unwrap());
+        }
+    }
+
+    #[test]
+    fn average_speedup_ordering_matches_paper() {
+        // Paper: avg speedups 1.612 (IS) > 1.400 (WS) > 1.090 (OS) — the
+        // ordering must hold, with magnitudes in compatible bands
+        // (measured: 1.560/1.230/1.096, see EXPERIMENTS.md E7).
+        let rows = table1_rows(32, SimOptions::default());
+        let avg = |i: usize| mean(&rows.iter().map(|r| r.speedups[i]).collect::<Vec<_>>());
+        let (is, os, ws) = (avg(0), avg(1), avg(2));
+        assert!(is > ws && ws > os, "is={is} ws={ws} os={os}");
+        assert!((1.0..1.35).contains(&os), "os avg {os}");
+        assert!((1.25..2.2).contains(&is), "is avg {is}");
+        assert!((1.1..2.0).contains(&ws), "ws avg {ws}");
+    }
+
+    #[test]
+    fn rendered_table_has_3_rows_per_model_plus_average() {
+        let t = table1(8);
+        assert_eq!(t.num_rows(), 7 * 3 + 1);
+    }
+}

@@ -1,0 +1,60 @@
+//! Table II: area, power and critical-path overheads, Flex vs conventional.
+
+use crate::cost::synth::{synthesize, SynthConstraints};
+use crate::cost::PeVariant;
+use crate::metrics::Table;
+
+/// The paper's three synthesized sizes.
+pub const SIZES: [u32; 3] = [8, 16, 32];
+
+/// Render Table II (same columns as the paper).
+pub fn table2() -> Table {
+    let cons = SynthConstraints::default();
+    let mut t = Table::new(&[
+        "S",
+        "TPU Area (mm2)",
+        "Flex Area (mm2)",
+        "Area Ovh",
+        "TPU Power (mW)",
+        "Flex Power (mW)",
+        "Power Ovh",
+        "TPU CPD (ns)",
+        "Flex CPD (ns)",
+        "CPD Ovh",
+    ]);
+    for s in SIZES {
+        let conv = synthesize(s, PeVariant::Conventional, &cons);
+        let flex = synthesize(s, PeVariant::Flex, &cons);
+        t.row(vec![
+            format!("{s}x{s}"),
+            format!("{:.3}", conv.area_mm2),
+            format!("{:.3}", flex.area_mm2),
+            format!("{:.3}%", (flex.area_mm2 / conv.area_mm2 - 1.0) * 100.0),
+            format!("{:.3}", conv.power_mw),
+            format!("{:.3}", flex.power_mw),
+            format!("{:.3}%", (flex.power_mw / conv.power_mw - 1.0) * 100.0),
+            format!("{:.2}", conv.critical_path_ns),
+            format!("{:.2}", flex.critical_path_ns),
+            format!("{:.2}%", (flex.critical_path_ns / conv.critical_path_ns - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_rows() {
+        assert_eq!(table2().num_rows(), 3);
+    }
+
+    #[test]
+    fn rendered_contains_sizes() {
+        let s = table2().render();
+        for n in ["8x8", "16x16", "32x32"] {
+            assert!(s.contains(n), "missing {n}");
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! The PJRT client wrapper: compile HLO-text artifacts once, execute many.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+use super::manifest::Manifest;
+
+/// A loaded runtime: PJRT CPU client + compiled executables per artifact.
+///
+/// Compilation happens once at load; `execute_*` calls are the request
+/// path.  One executable per exported model variant (flex/os/ws/is) and
+/// per standalone GEMM.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    models: HashMap<String, xla::PjRtLoadedExecutable>,
+    gemms: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut models = HashMap::new();
+        for (name, art) in &manifest.models {
+            models.insert(name.clone(), Self::compile(&client, &dir.join(&art.path))?);
+        }
+        let mut gemms = HashMap::new();
+        for (name, art) in &manifest.gemms {
+            gemms.insert(name.clone(), Self::compile(&client, &dir.join(&art.path))?);
+        }
+        Ok(Self {
+            client,
+            manifest,
+            models,
+            gemms,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Model variant names available (`flex`, `os`, `ws`, `is`).
+    pub fn model_variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn run_f32(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+
+    /// Run one model variant on a full input batch
+    /// (`batch * hw * hw * channels` f32s) -> `batch * num_classes` logits.
+    pub fn execute_model(&self, variant: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .models
+            .get(variant)
+            .ok_or_else(|| Error::Runtime(format!("unknown model variant {variant:?}")))?;
+        let m = &self.manifest;
+        if input.len() != m.input_len() {
+            return Err(Error::Runtime(format!(
+                "input has {} elements, model expects {}",
+                input.len(),
+                m.input_len()
+            )));
+        }
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[
+                m.batch as i64,
+                m.input_hw as i64,
+                m.input_hw as i64,
+                m.input_channels as i64,
+            ])
+            .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+        let out = Self::run_f32(exe, &[lit])?;
+        if out.len() != m.output_len() {
+            return Err(Error::Runtime(format!(
+                "model produced {} elements, expected {}",
+                out.len(),
+                m.output_len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Run a standalone GEMM artifact: `a @ b` with both `dim x dim` f32.
+    pub fn execute_gemm(&self, dataflow: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .gemms
+            .get(dataflow)
+            .ok_or_else(|| Error::Runtime(format!("unknown gemm artifact {dataflow:?}")))?;
+        let d = self.manifest.gemm_dim as usize;
+        if a.len() != d * d || b.len() != d * d {
+            return Err(Error::Runtime(format!(
+                "gemm expects {d}x{d} operands, got {} and {}",
+                a.len(),
+                b.len()
+            )));
+        }
+        let la = xla::Literal::vec1(a)
+            .reshape(&[d as i64, d as i64])
+            .map_err(|e| Error::Runtime(format!("reshape a: {e}")))?;
+        let lb = xla::Literal::vec1(b)
+            .reshape(&[d as i64, d as i64])
+            .map_err(|e| Error::Runtime(format!("reshape b: {e}")))?;
+        Self::run_f32(exe, &[la, lb])
+    }
+}

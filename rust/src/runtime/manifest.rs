@@ -1,0 +1,263 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::topology::{Layer, Topology};
+use crate::util::json::{self, Value};
+
+/// One conv layer of the exported model (mirrors `model.CONV_LAYERS`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayerSpec {
+    pub name: String,
+    pub kh: u32,
+    pub kw: u32,
+    pub cin: u32,
+    pub cout: u32,
+    pub stride: u32,
+    pub padding: u32,
+}
+
+/// One exported model variant (a dataflow assignment baked at AOT time).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelArtifact {
+    pub path: String,
+    pub dataflows: Vec<String>,
+}
+
+/// One exported standalone GEMM executable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmArtifact {
+    pub path: String,
+    pub dim: u32,
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub batch: u32,
+    pub input_hw: u32,
+    pub input_channels: u32,
+    pub num_classes: u32,
+    pub seed: u64,
+    pub gemm_dim: u32,
+    pub models: BTreeMap<String, ModelArtifact>,
+    pub gemms: BTreeMap<String, GemmArtifact>,
+    pub conv_layers: Vec<ConvLayerSpec>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "{} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let m = Self::from_json(&text)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Parse from JSON text (the exact format aot.py emits).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let str_field = |obj: &Value, key: &str| -> Result<String> {
+            Ok(obj.req_str(key)?.to_string())
+        };
+        let mut models = BTreeMap::new();
+        if let Some(fields) = v.req("models")?.as_object_sorted() {
+            for (name, m) in fields {
+                let dataflows = m
+                    .req("dataflows")?
+                    .as_array()
+                    .ok_or_else(|| Error::Artifact("dataflows must be an array".into()))?
+                    .iter()
+                    .map(|d| {
+                        d.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| Error::Artifact("dataflow must be a string".into()))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                models.insert(
+                    name.to_string(),
+                    ModelArtifact {
+                        path: str_field(m, "path")?,
+                        dataflows,
+                    },
+                );
+            }
+        }
+        let mut gemms = BTreeMap::new();
+        if let Some(g) = v.get("gemms").and_then(|g| g.as_object_sorted()) {
+            for (name, m) in g {
+                gemms.insert(
+                    name.to_string(),
+                    GemmArtifact {
+                        path: str_field(m, "path")?,
+                        dim: m.req_u64("dim")? as u32,
+                    },
+                );
+            }
+        }
+        let conv_layers = v
+            .req("conv_layers")?
+            .as_array()
+            .ok_or_else(|| Error::Artifact("conv_layers must be an array".into()))?
+            .iter()
+            .map(|l| {
+                Ok(ConvLayerSpec {
+                    name: str_field(l, "name")?,
+                    kh: l.req_u64("kh")? as u32,
+                    kw: l.req_u64("kw")? as u32,
+                    cin: l.req_u64("cin")? as u32,
+                    cout: l.req_u64("cout")? as u32,
+                    stride: l.req_u64("stride")? as u32,
+                    padding: l.req_u64("padding")? as u32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            batch: v.req_u64("batch")? as u32,
+            input_hw: v.req_u64("input_hw")? as u32,
+            input_channels: v.req_u64("input_channels")? as u32,
+            num_classes: v.req_u64("num_classes")? as u32,
+            seed: v.req_u64("seed")?,
+            gemm_dim: v.req_u64("gemm_dim")? as u32,
+            models,
+            gemms,
+            conv_layers,
+        })
+    }
+
+    /// Sanity checks on the manifest contents.
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 || self.input_hw == 0 || self.num_classes == 0 {
+            return Err(Error::Artifact("manifest has zero-sized fields".into()));
+        }
+        if self.models.is_empty() {
+            return Err(Error::Artifact("manifest lists no models".into()));
+        }
+        for (name, m) in &self.models {
+            if m.dataflows.len() != self.conv_layers.len() + 1 {
+                return Err(Error::Artifact(format!(
+                    "model {name}: {} dataflows for {} layers",
+                    m.dataflows.len(),
+                    self.conv_layers.len() + 1
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Elements in one input batch (`B * H * W * C`).
+    pub fn input_len(&self) -> usize {
+        (self.batch * self.input_hw * self.input_hw * self.input_channels) as usize
+    }
+
+    /// Elements in one output batch (`B * num_classes`).
+    pub fn output_len(&self) -> usize {
+        (self.batch * self.num_classes) as usize
+    }
+
+    /// The exported CNN as a [`Topology`], so the simulator can time the
+    /// very network the runtime executes.  Padding is folded into the
+    /// ifmap dims (ScaleSim convention); pooling halves spatial dims
+    /// between conv layers (matches `model.forward_single`).
+    pub fn topology(&self) -> Topology {
+        let mut layers = Vec::new();
+        let mut hw = self.input_hw;
+        for spec in &self.conv_layers {
+            layers.push(Layer::conv(
+                &spec.name,
+                hw + 2 * spec.padding,
+                hw + 2 * spec.padding,
+                spec.kh,
+                spec.kw,
+                spec.cin,
+                spec.cout,
+                spec.stride,
+            ));
+            // conv keeps spatial dims (stride 1, same padding), pool halves.
+            hw = (hw + 2 * spec.padding - spec.kh) / spec.stride + 1;
+            hw /= 2;
+        }
+        let fan_in = hw * hw * self.conv_layers.last().map(|l| l.cout).unwrap_or(1);
+        layers.push(Layer::fc("fc", fan_in, self.num_classes));
+        Topology::new("flexnet_tiny", layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut models = BTreeMap::new();
+        models.insert(
+            "flex".to_string(),
+            ModelArtifact {
+                path: "model_flex.hlo.txt".into(),
+                dataflows: vec!["ws".into(), "os".into(), "is".into()],
+            },
+        );
+        Manifest {
+            batch: 8,
+            input_hw: 16,
+            input_channels: 3,
+            num_classes: 10,
+            seed: 0,
+            gemm_dim: 64,
+            models,
+            gemms: BTreeMap::new(),
+            conv_layers: vec![
+                ConvLayerSpec {
+                    name: "conv1".into(),
+                    kh: 3,
+                    kw: 3,
+                    cin: 3,
+                    cout: 8,
+                    stride: 1,
+                    padding: 1,
+                },
+                ConvLayerSpec {
+                    name: "conv2".into(),
+                    kh: 3,
+                    kw: 3,
+                    cin: 8,
+                    cout: 16,
+                    stride: 1,
+                    padding: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn validate_and_sizes() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.input_len(), 8 * 16 * 16 * 3);
+        assert_eq!(m.output_len(), 80);
+    }
+
+    #[test]
+    fn topology_matches_flexnet() {
+        let t = sample().topology();
+        assert_eq!(t.layers.len(), 3);
+        assert_eq!(t.layers[0].out_h(), 16); // same-padded conv
+        assert_eq!(t.layers[1].ifmap_h, 10); // 8 + 2*pad
+        assert_eq!(t.layers[2].channels, 4 * 4 * 16); // fc fan-in
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_dataflow_count_rejected() {
+        let mut m = sample();
+        m.models.get_mut("flex").unwrap().dataflows.pop();
+        assert!(m.validate().is_err());
+    }
+}

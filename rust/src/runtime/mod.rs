@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the *values* half of the stack: python lowered the L2 model (and
+//! its L1 Pallas kernels) to HLO text at build time (`make artifacts`), and
+//! this module loads that text, compiles it on the PJRT CPU client, and
+//! executes it from rust — python never runs on the request path.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits 64-bit instruction ids the crate's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+mod artifact;
+mod manifest;
+
+pub use artifact::Runtime;
+pub use manifest::{ConvLayerSpec, GemmArtifact, Manifest, ModelArtifact};

@@ -1,0 +1,189 @@
+//! Dataflow timing models: fold schedules and closed-form cycle counts.
+//!
+//! Terminology (ScaleSim-compatible): a **fold** is one pass of the systolic
+//! array over a tile of the GEMM; when an operand matrix exceeds the array,
+//! the computation "folds" into multiple passes.  Every fold pays the
+//! systolic wavefront **skew** (`R + C − 2`), any **preload** of the
+//! stationary operand, the operand **stream**, and (OS only) the output
+//! **drain**.  Edge tiles are padded to full tiles — exactly the bubble
+//! behaviour of the real array, and what ScaleSim's padded demand matrices
+//! model.
+//!
+//! Per-dataflow closed forms (array `R x C`, GEMM `M x K x N`), derived in
+//! DESIGN.md §5 and validated cycle-for-cycle against the functional
+//! PE-level array in [`crate::arch`]:
+//!
+//! | dataflow | fold grid                  | cycles per fold       |
+//! |----------|----------------------------|-----------------------|
+//! | OS       | `⌈M/R⌉ x ⌈N/C⌉`            | `K + 2R + C − 2`      |
+//! | WS       | `⌈K/R⌉ x ⌈N/C⌉`            | `M + 2R + C − 2`      |
+//! | IS       | `⌈M/R⌉ x ⌈K/C⌉`            | `N + 2R + C − 2`      |
+//!
+//! (OS: no preload but an `R`-cycle drain; WS/IS: an `R`-cycle preload and
+//! outputs that drain through the skew window.)
+
+mod is;
+mod os;
+mod ws;
+
+
+use crate::config::ArchConfig;
+use crate::sim::{Dataflow, Gemm};
+
+/// SRAM-level operand traffic of one layer under one dataflow (elements,
+/// not bytes; multiply by `MemoryConfig::bytes_per_element`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OperandTraffic {
+    /// IFMap operand-matrix elements read into the array.
+    pub ifmap_reads: u64,
+    /// Filter operand-matrix elements read into the array.
+    pub filter_reads: u64,
+    /// OFMap elements written (includes partial-sum writebacks).
+    pub ofmap_writes: u64,
+    /// OFMap partial sums re-read for accumulation (WS/IS with >1 K-fold).
+    pub ofmap_reads: u64,
+}
+
+impl OperandTraffic {
+    /// Total SRAM accesses.
+    pub fn total(&self) -> u64 {
+        self.ifmap_reads + self.filter_reads + self.ofmap_writes + self.ofmap_reads
+    }
+}
+
+/// The fold schedule for one GEMM on one dataflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FoldPlan {
+    pub dataflow: Dataflow,
+    /// Fold-grid extent along the first folded dimension (see table above).
+    pub folds_a: u64,
+    /// Fold-grid extent along the second folded dimension.
+    pub folds_b: u64,
+    /// Cycles to preload the stationary operand, per fold (0 for OS).
+    pub preload_cycles: u64,
+    /// Cycles streaming the moving operand through the array, per fold.
+    pub stream_cycles: u64,
+    /// Wavefront fill+flush skew, per fold.
+    pub skew_cycles: u64,
+    /// Output drain, per fold (OS only; WS/IS outputs leave within skew).
+    pub drain_cycles: u64,
+    /// SRAM traffic for the whole GEMM.
+    pub traffic: OperandTraffic,
+}
+
+impl FoldPlan {
+    /// Total number of folds.
+    pub fn folds(&self) -> u64 {
+        self.folds_a * self.folds_b
+    }
+
+    /// Cycles for one fold.
+    pub fn cycles_per_fold(&self) -> u64 {
+        self.preload_cycles + self.stream_cycles + self.skew_cycles + self.drain_cycles
+    }
+
+    /// Total compute cycles for the GEMM (no memory stalls).
+    pub fn compute_cycles(&self) -> u64 {
+        self.folds() * self.cycles_per_fold()
+    }
+
+    /// PE-seconds actually used vs available: `MACs / (cycles * R * C)`.
+    pub fn utilization(&self, gemm: &Gemm, arch: &ArchConfig) -> f64 {
+        let denom = (self.compute_cycles() * arch.num_pes()) as f64;
+        if denom == 0.0 {
+            return 0.0;
+        }
+        gemm.macs() as f64 / denom
+    }
+}
+
+/// Build the fold plan for `gemm` under `dataflow` on `arch`.
+pub fn plan(gemm: &Gemm, arch: &ArchConfig, dataflow: Dataflow) -> FoldPlan {
+    match dataflow {
+        Dataflow::Os => os::plan(gemm, arch),
+        Dataflow::Ws => ws::plan(gemm, arch),
+        Dataflow::Is => is::plan(gemm, arch),
+    }
+}
+
+pub(crate) fn div_ceil(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::square(32)
+    }
+
+    #[test]
+    fn fold_plan_cycle_decomposition() {
+        let g = Gemm::new(100, 300, 70);
+        for df in Dataflow::ALL {
+            let p = plan(&g, &arch(), df);
+            assert_eq!(
+                p.compute_cycles(),
+                p.folds() * p.cycles_per_fold(),
+                "{df}"
+            );
+            assert!(p.folds() > 0, "{df}");
+        }
+    }
+
+    #[test]
+    fn single_tile_gemm_uses_one_fold() {
+        // GEMM that fits the array exactly in every folded dimension.
+        let g = Gemm::new(32, 32, 32);
+        for df in Dataflow::ALL {
+            let p = plan(&g, &arch(), df);
+            assert_eq!(p.folds(), 1, "{df}");
+        }
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let g = Gemm::new(3136, 576, 64);
+        for df in Dataflow::ALL {
+            let p = plan(&g, &arch(), df);
+            let u = p.utilization(&g, &arch());
+            assert!(u > 0.0 && u <= 1.0, "{df}: {u}");
+        }
+    }
+
+    #[test]
+    fn table_orderings_early_conv_prefers_ws() {
+        // ResNet-18 conv1 shape: WS must beat OS must beat IS (paper Fig 1).
+        let g = Gemm::new(12544, 147, 64);
+        let a = arch();
+        let os = plan(&g, &a, Dataflow::Os).compute_cycles();
+        let ws = plan(&g, &a, Dataflow::Ws).compute_cycles();
+        let is = plan(&g, &a, Dataflow::Is).compute_cycles();
+        assert!(ws < os, "ws={ws} os={os}");
+        assert!(os < is, "os={os} is={is}");
+    }
+
+    #[test]
+    fn fc_layer_prefers_is() {
+        // ResNet-18 FC shape (M=1): IS must beat OS and WS (paper Fig 1).
+        let g = Gemm::new(1, 512, 1000);
+        let a = arch();
+        let os = plan(&g, &a, Dataflow::Os).compute_cycles();
+        let ws = plan(&g, &a, Dataflow::Ws).compute_cycles();
+        let is = plan(&g, &a, Dataflow::Is).compute_cycles();
+        assert!(is < os, "is={is} os={os}");
+        assert!(is < ws, "is={is} ws={ws}");
+    }
+
+    #[test]
+    fn late_conv_prefers_os() {
+        // ResNet-18 conv5 shape: OS wins (paper Fig 1 intermediate/deep).
+        let g = Gemm::new(49, 4608, 512);
+        let a = arch();
+        let os = plan(&g, &a, Dataflow::Os).compute_cycles();
+        let ws = plan(&g, &a, Dataflow::Ws).compute_cycles();
+        let is = plan(&g, &a, Dataflow::Is).compute_cycles();
+        assert!(os < ws && os < is, "os={os} ws={ws} is={is}");
+    }
+}

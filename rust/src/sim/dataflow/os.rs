@@ -1,0 +1,77 @@
+//! Output-stationary fold plan.
+//!
+//! Each fold pins an `R x C` tile of the `M x N` output matrix into the PE
+//! accumulators (paper Fig. 4b: mux select = 1).  IFMap rows enter from the
+//! west, filter columns from the north, both skewed; after `K` MACs per PE
+//! the accumulated outputs drain column-parallel / row-sequential through
+//! the south edge (`R` extra cycles).
+//!
+//! * fold grid: `⌈M/R⌉ x ⌈N/C⌉`
+//! * per fold:  stream `K` + skew `(R + C − 2)` + drain `R`
+//!
+//! Traffic per fold: `R*K` ifmap reads, `C*K` filter reads, `R*C` output
+//! writes; outputs are written exactly once (no partial-sum re-reads) — the
+//! OS hallmark the paper leans on for deep layers.
+
+use crate::config::ArchConfig;
+use crate::sim::{Dataflow, Gemm};
+
+use super::{div_ceil, FoldPlan, OperandTraffic};
+
+pub fn plan(gemm: &Gemm, arch: &ArchConfig) -> FoldPlan {
+    let r = arch.array_rows as u64;
+    let c = arch.array_cols as u64;
+    let folds_a = div_ceil(gemm.m, r);
+    let folds_b = div_ceil(gemm.n, c);
+    let folds = folds_a * folds_b;
+    FoldPlan {
+        dataflow: Dataflow::Os,
+        folds_a,
+        folds_b,
+        preload_cycles: 0,
+        stream_cycles: gemm.k,
+        skew_cycles: arch.skew(),
+        drain_cycles: r,
+        traffic: OperandTraffic {
+            ifmap_reads: folds * r * gemm.k,
+            filter_reads: folds * c * gemm.k,
+            ofmap_writes: folds * r * c,
+            ofmap_reads: 0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form() {
+        let arch = ArchConfig::square(32);
+        let g = Gemm::new(100, 200, 50);
+        let p = plan(&g, &arch);
+        assert_eq!(p.folds_a, 4); // ceil(100/32)
+        assert_eq!(p.folds_b, 2); // ceil(50/32)
+        assert_eq!(p.cycles_per_fold(), 200 + 2 * 32 + 32 - 2);
+        assert_eq!(p.compute_cycles(), 8 * (200 + 94));
+    }
+
+    #[test]
+    fn outputs_written_once() {
+        let arch = ArchConfig::square(8);
+        let g = Gemm::new(64, 128, 64);
+        let p = plan(&g, &arch);
+        assert_eq!(p.traffic.ofmap_reads, 0);
+        assert_eq!(p.traffic.ofmap_writes, p.folds() * 64);
+    }
+
+    #[test]
+    fn k_does_not_fold() {
+        // OS streams the whole reduction through each fold: K never folds.
+        let arch = ArchConfig::square(8);
+        let small_k = plan(&Gemm::new(8, 8, 8), &arch);
+        let big_k = plan(&Gemm::new(8, 80000, 8), &arch);
+        assert_eq!(small_k.folds(), big_k.folds());
+        assert_eq!(big_k.stream_cycles, 80000);
+    }
+}

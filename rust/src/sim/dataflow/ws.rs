@@ -1,0 +1,76 @@
+//! Weight-stationary fold plan.
+//!
+//! Each fold pins an `R x C` tile of the `K x N` filter matrix into the PE
+//! register files (paper Fig. 4c: mux select = 0, Main Controller pins the
+//! weight).  Preloading the tile takes `R` cycles (column-parallel).  The
+//! `M` ifmap operand rows then stream west-to-east; partial sums flow down
+//! the columns and exit south within the skew window.  When `K` folds
+//! (`⌈K/R⌉ > 1`), partial outputs are accumulated in the OFMap scratchpad:
+//! each later K-fold re-reads `M*C` partials (the WS/IS memory tax the
+//! paper's OS-favoring results reflect).
+//!
+//! * fold grid: `⌈K/R⌉ x ⌈N/C⌉`
+//! * per fold:  preload `R` + stream `M` + skew `(R + C − 2)`
+
+use crate::config::ArchConfig;
+use crate::sim::{Dataflow, Gemm};
+
+use super::{div_ceil, FoldPlan, OperandTraffic};
+
+pub fn plan(gemm: &Gemm, arch: &ArchConfig) -> FoldPlan {
+    let r = arch.array_rows as u64;
+    let c = arch.array_cols as u64;
+    let folds_a = div_ceil(gemm.k, r);
+    let folds_b = div_ceil(gemm.n, c);
+    let folds = folds_a * folds_b;
+    // K-folds beyond the first re-read their partial sums for accumulation.
+    let accum_folds = folds_a.saturating_sub(1) * folds_b;
+    FoldPlan {
+        dataflow: Dataflow::Ws,
+        folds_a,
+        folds_b,
+        preload_cycles: r,
+        stream_cycles: gemm.m,
+        skew_cycles: arch.skew(),
+        drain_cycles: 0,
+        traffic: OperandTraffic {
+            ifmap_reads: folds * gemm.m * r,
+            filter_reads: folds * r * c,
+            ofmap_writes: folds * gemm.m * c,
+            ofmap_reads: accum_folds * gemm.m * c,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form() {
+        let arch = ArchConfig::square(32);
+        let g = Gemm::new(3136, 576, 64);
+        let p = plan(&g, &arch);
+        assert_eq!(p.folds_a, 18); // ceil(576/32)
+        assert_eq!(p.folds_b, 2);
+        assert_eq!(p.cycles_per_fold(), 32 + 3136 + 62);
+        assert_eq!(p.compute_cycles(), 36 * 3230);
+    }
+
+    #[test]
+    fn partial_sum_rereads_scale_with_k_folds() {
+        let arch = ArchConfig::square(8);
+        let one_kfold = plan(&Gemm::new(16, 8, 8), &arch);
+        assert_eq!(one_kfold.traffic.ofmap_reads, 0);
+        let three_kfolds = plan(&Gemm::new(16, 24, 8), &arch);
+        assert_eq!(three_kfolds.traffic.ofmap_reads, 2 * 16 * 8);
+    }
+
+    #[test]
+    fn m_does_not_fold() {
+        let arch = ArchConfig::square(8);
+        let p = plan(&Gemm::new(100_000, 8, 8), &arch);
+        assert_eq!(p.folds(), 1);
+        assert_eq!(p.stream_cycles, 100_000);
+    }
+}

@@ -1,0 +1,39 @@
+//! DRAM interface bandwidth model.
+
+/// Fixed-bandwidth DRAM interface (bytes per TPU clock cycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramModel {
+    bytes_per_cycle: u64,
+}
+
+impl DramModel {
+    pub fn new(bytes_per_cycle: u64) -> Self {
+        assert!(bytes_per_cycle > 0, "dram bandwidth must be positive");
+        Self { bytes_per_cycle }
+    }
+
+    /// Cycles to transfer `bytes` (ceiling).
+    pub fn transfer_cycles(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.bytes_per_cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceiling_transfer() {
+        let d = DramModel::new(64);
+        assert_eq!(d.transfer_cycles(0), 0);
+        assert_eq!(d.transfer_cycles(1), 1);
+        assert_eq!(d.transfer_cycles(64), 1);
+        assert_eq!(d.transfer_cycles(65), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_panics() {
+        DramModel::new(0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Double-buffered SRAM scratchpad model.
+
+/// One on-chip operand scratchpad (IFMap, Filter, or OFMap SRAM in the
+/// paper's Fig. 2), operated in double-buffered halves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scratchpad {
+    size_bytes: u64,
+}
+
+impl Scratchpad {
+    /// Build from a size in KiB (ScaleSim cfg convention).
+    pub fn new(size_kib: u64) -> Self {
+        Self {
+            size_bytes: size_kib * 1024,
+        }
+    }
+
+    /// Total capacity in bytes.
+    pub fn size_bytes(&self) -> u64 {
+        self.size_bytes
+    }
+
+    /// Capacity of one double-buffer half.
+    pub fn half_bytes(&self) -> u64 {
+        self.size_bytes / 2
+    }
+
+    /// Can `working_set` bytes live in one half (so the other half can
+    /// prefetch the next fold)?
+    pub fn fits_double_buffered(&self, working_set: u64) -> bool {
+        working_set <= self.half_bytes()
+    }
+
+    /// Can `working_set` fit at all (single-buffered)?
+    pub fn fits(&self, working_set: u64) -> bool {
+        working_set <= self.size_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halves() {
+        let s = Scratchpad::new(1024); // 1 MiB
+        assert_eq!(s.size_bytes(), 1 << 20);
+        assert_eq!(s.half_bytes(), 1 << 19);
+        assert!(s.fits_double_buffered(1 << 19));
+        assert!(!s.fits_double_buffered((1 << 19) + 1));
+        assert!(s.fits(1 << 20));
+        assert!(!s.fits((1 << 20) + 1));
+    }
+}

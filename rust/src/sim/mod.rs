@@ -1,0 +1,105 @@
+//! Cycle-accurate systolic-array simulator (ScaleSim-V2 equivalent).
+//!
+//! The pipeline per layer is:
+//!
+//! 1. [`gemm`] lowers the layer to GEMM operand dimensions (im2col).
+//! 2. [`dataflow`] produces the fold schedule and closed-form compute-cycle
+//!    count for the chosen dataflow (IS/OS/WS), together with per-fold
+//!    operand traffic.
+//! 3. [`memory`] overlays the double-buffered scratchpad + DRAM model to
+//!    produce stall cycles (zero in the paper's compute-bound setting).
+//! 4. [`engine`] combines the above into [`engine::LayerStats`] /
+//!    [`engine::NetworkStats`].
+//!
+//! The closed forms in [`dataflow`] are validated cycle-for-cycle against
+//! the functional PE-level array in [`crate::arch`] (see
+//! `rust/tests/functional_array.rs`), which is the "is the analytical model
+//! telling the truth" check ScaleSim itself lacks.
+
+pub mod dataflow;
+pub mod engine;
+pub mod gemm;
+pub mod memory;
+pub mod roofline;
+pub mod trace;
+
+pub use dataflow::{FoldPlan, OperandTraffic};
+pub use engine::{simulate_layer, simulate_network, LayerStats, NetworkStats};
+pub use gemm::{layer_gemms, layer_gemms_batched, DwMapping, Gemm};
+
+
+/// The three systolic dataflows of the paper (and the CMU's alphabet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Input stationary: ifmap pinned in the PE register file.
+    Is,
+    /// Output stationary: partial sums pinned in the PE accumulators.
+    Os,
+    /// Weight stationary: weights pinned in the PE register file.
+    Ws,
+}
+
+impl Dataflow {
+    /// All dataflows, in the paper's IS/OS/WS listing order.
+    pub const ALL: [Dataflow; 3] = [Dataflow::Is, Dataflow::Os, Dataflow::Ws];
+
+    /// Short lowercase name used in CLI args, artifacts and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::Is => "is",
+            Dataflow::Os => "os",
+            Dataflow::Ws => "ws",
+        }
+    }
+
+    /// Parse from the short name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s.to_ascii_lowercase().as_str() {
+            "is" => Some(Dataflow::Is),
+            "os" => Some(Dataflow::Os),
+            "ws" => Some(Dataflow::Ws),
+            _ => None,
+        }
+    }
+
+    /// The mux select the CMU drives into every PE (paper Fig. 4): OS mode
+    /// is select=1 (accumulator pinned), IS/WS are select=0 (register
+    /// pinned, with the Main Controller choosing *what* gets pinned).
+    pub fn mux_select(&self) -> u8 {
+        match self {
+            Dataflow::Os => 1,
+            Dataflow::Is | Dataflow::Ws => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Dataflow::Is => "IS",
+            Dataflow::Os => "OS",
+            Dataflow::Ws => "WS",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for df in Dataflow::ALL {
+            assert_eq!(Dataflow::parse(df.name()), Some(df));
+        }
+        assert_eq!(Dataflow::parse("OS"), Some(Dataflow::Os));
+        assert_eq!(Dataflow::parse("nope"), None);
+    }
+
+    #[test]
+    fn mux_select_matches_fig4() {
+        assert_eq!(Dataflow::Os.mux_select(), 1);
+        assert_eq!(Dataflow::Is.mux_select(), 0);
+        assert_eq!(Dataflow::Ws.mux_select(), 0);
+    }
+}

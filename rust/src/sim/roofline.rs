@@ -1,0 +1,157 @@
+//! Roofline analysis: compute-bound vs memory-bound classification.
+//!
+//! Reports each layer's **arithmetic intensity** (MACs per DRAM byte
+//! moved, fold-refetch traffic included) against the machine balance point
+//! (peak MACs/cycle over DRAM bytes/cycle), plus the achieved-vs-attainable
+//! efficiency.  Note that systolic fold traffic is engineered to sit almost
+//! exactly *at* the balance point (an `R x C` OS fold moves `(R+C)·K`
+//! operand bytes for `R·C·K` MACs — intensity `R·C/(R+C)`), so the
+//! memory/compute classification is taken from the stall model's verdict
+//! (did DRAM actually fail to keep up?) rather than the knife-edge
+//! intensity comparison.  This backs the paper's (implicit) compute-bound
+//! operating assumption and the `memory_ablation` bench's crossovers.
+
+use crate::config::ArchConfig;
+use crate::sim::engine::LayerStats;
+
+/// Roofline classification of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// Arithmetic intensity above machine balance: PEs are the limit.
+    Compute,
+    /// Below machine balance: DRAM is the limit.
+    Memory,
+}
+
+/// Roofline numbers for one simulated layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Roofline {
+    /// MACs per DRAM byte (f64::INFINITY when no DRAM traffic was modeled).
+    pub arithmetic_intensity: f64,
+    /// Machine balance: peak MACs/cycle / DRAM bytes/cycle.
+    pub machine_balance: f64,
+    /// Attainable MACs/cycle at this intensity (the roofline itself).
+    pub attainable_macs_per_cycle: f64,
+    /// Achieved MACs/cycle from the simulation.
+    pub achieved_macs_per_cycle: f64,
+    pub bound: Bound,
+}
+
+impl Roofline {
+    /// Achieved / attainable — how close the dataflow drives the array to
+    /// its roofline (the paper's "compute units utilization efficiency").
+    pub fn efficiency(&self) -> f64 {
+        if self.attainable_macs_per_cycle == 0.0 {
+            0.0
+        } else {
+            (self.achieved_macs_per_cycle / self.attainable_macs_per_cycle).min(1.0)
+        }
+    }
+}
+
+/// Analyze one layer's stats against the arch's roofline.
+pub fn analyze(arch: &ArchConfig, stats: &LayerStats) -> Roofline {
+    let peak = arch.num_pes() as f64; // MACs per cycle
+    let bw = arch.memory.dram_bytes_per_cycle as f64;
+    let machine_balance = peak / bw;
+    let dram_bytes = (stats.dram.fetch_bytes + stats.dram.writeback_bytes) as f64;
+    let intensity = if dram_bytes == 0.0 {
+        f64::INFINITY
+    } else {
+        stats.macs as f64 / dram_bytes
+    };
+    let attainable = peak.min(bw * intensity);
+    let achieved = if stats.total_cycles() == 0 {
+        0.0
+    } else {
+        stats.macs as f64 / stats.total_cycles() as f64
+    };
+    // Memory-bound iff the stall model charged meaningful stalls (>10% of
+    // compute — the one-off cold-start fetch of few-fold layers can reach
+    // a few percent on its own and doesn't make a layer bandwidth-bound).
+    let bound = if stats.stall_cycles * 10 > stats.compute_cycles {
+        Bound::Memory
+    } else {
+        Bound::Compute
+    };
+    Roofline {
+        arithmetic_intensity: intensity,
+        machine_balance,
+        attainable_macs_per_cycle: attainable,
+        achieved_macs_per_cycle: achieved,
+        bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimFidelity;
+    use crate::sim::engine::{simulate_layer, SimOptions};
+    use crate::sim::Dataflow;
+    use crate::topology::zoo;
+
+    fn mem_opts() -> SimOptions {
+        SimOptions {
+            fidelity: SimFidelity::WithMemory,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn conv_layers_compute_bound_at_defaults() {
+        // The paper's operating point: every ResNet-18 conv layer is
+        // stall-free at the default bandwidth, even though systolic fold
+        // traffic sits within a whisker of the balance point (intensity
+        // ~= R*C/(R+C) = 16 at 32x32 with 64 B/cycle).
+        let arch = crate::config::ArchConfig::square(32);
+        let topo = zoo::resnet18();
+        for layer in topo.layers.iter().take(20) {
+            let stats = simulate_layer(&arch, layer, Dataflow::Os, mem_opts());
+            let r = analyze(&arch, &stats);
+            assert_eq!(r.bound, Bound::Compute, "{}", layer.name);
+            assert!(r.efficiency() > 0.0 && r.efficiency() <= 1.0, "{}", layer.name);
+            assert_eq!(r.machine_balance, 16.0);
+            assert!(
+                (10.0..=16.5).contains(&r.arithmetic_intensity),
+                "{}: {}",
+                layer.name,
+                r.arithmetic_intensity
+            );
+        }
+    }
+
+    #[test]
+    fn starved_bandwidth_flips_to_memory_bound() {
+        let mut arch = crate::config::ArchConfig::square(32);
+        arch.memory.dram_bytes_per_cycle = 1;
+        let topo = zoo::resnet18();
+        let deep = topo.layers.iter().find(|l| l.name == "Conv5_1b").unwrap();
+        let stats = simulate_layer(&arch, deep, Dataflow::Ws, mem_opts());
+        let r = analyze(&arch, &stats);
+        // Machine balance at 1 B/cycle is 1024 MACs/byte; WS re-reads
+        // partials so intensity is low.
+        assert_eq!(r.bound, Bound::Memory);
+        assert!(r.achieved_macs_per_cycle < r.machine_balance);
+    }
+
+    #[test]
+    fn analytical_fidelity_reports_infinite_intensity() {
+        // Without the memory model there is no DRAM traffic to divide by.
+        let arch = crate::config::ArchConfig::square(16);
+        let topo = zoo::alexnet();
+        let stats = simulate_layer(&arch, &topo.layers[0], Dataflow::Os, SimOptions::default());
+        let r = analyze(&arch, &stats);
+        assert!(r.arithmetic_intensity.is_infinite());
+        assert_eq!(r.bound, Bound::Compute);
+    }
+
+    #[test]
+    fn efficiency_capped_at_one() {
+        let arch = crate::config::ArchConfig::square(8);
+        let topo = zoo::alexnet();
+        let stats = simulate_layer(&arch, &topo.layers[1], Dataflow::Os, mem_opts());
+        let r = analyze(&arch, &stats);
+        assert!(r.efficiency() <= 1.0);
+    }
+}

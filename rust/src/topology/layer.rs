@@ -1,0 +1,235 @@
+//! Layer and topology types.
+
+
+use crate::error::{Error, Result};
+
+/// Kind of compute layer as mapped onto the systolic array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Standard convolution (includes 1x1 pointwise).
+    Conv,
+    /// Depthwise convolution: each input channel convolved with its own
+    /// single filter; lowered as `channels` independent tiny GEMMs.
+    DepthwiseConv,
+    /// Fully connected: a degenerate conv with 1x1 ifmap/filter.
+    Fc,
+}
+
+/// One DNN layer in ScaleSim convention (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Padded ifmap height.
+    pub ifmap_h: u32,
+    /// Padded ifmap width.
+    pub ifmap_w: u32,
+    pub filt_h: u32,
+    pub filt_w: u32,
+    /// Input channels.
+    pub channels: u32,
+    /// Output channels (1 for depthwise rows; expanded by the GEMM mapper).
+    pub num_filters: u32,
+    pub stride: u32,
+}
+
+impl Layer {
+    /// Standard conv layer.
+    pub fn conv(
+        name: &str,
+        ifmap_h: u32,
+        ifmap_w: u32,
+        filt_h: u32,
+        filt_w: u32,
+        channels: u32,
+        num_filters: u32,
+        stride: u32,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            ifmap_h,
+            ifmap_w,
+            filt_h,
+            filt_w,
+            channels,
+            num_filters,
+            stride,
+        }
+    }
+
+    /// Depthwise conv layer (`channels` groups, one filter each).
+    pub fn dwconv(
+        name: &str,
+        ifmap_h: u32,
+        ifmap_w: u32,
+        filt_h: u32,
+        filt_w: u32,
+        channels: u32,
+        stride: u32,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: LayerKind::DepthwiseConv,
+            ifmap_h,
+            ifmap_w,
+            filt_h,
+            filt_w,
+            channels,
+            num_filters: 1,
+            stride,
+        }
+    }
+
+    /// Fully connected layer with `fan_in` inputs and `fan_out` outputs.
+    pub fn fc(name: &str, fan_in: u32, fan_out: u32) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            ifmap_h: 1,
+            ifmap_w: 1,
+            filt_h: 1,
+            filt_w: 1,
+            channels: fan_in,
+            num_filters: fan_out,
+            stride: 1,
+        }
+    }
+
+    /// Output feature-map height (`(ifmap - filter) / stride + 1`).
+    pub fn out_h(&self) -> u32 {
+        (self.ifmap_h - self.filt_h) / self.stride + 1
+    }
+
+    /// Output feature-map width.
+    pub fn out_w(&self) -> u32 {
+        (self.ifmap_w - self.filt_w) / self.stride + 1
+    }
+
+    /// Number of output channels actually produced (depthwise produces
+    /// `channels`, everything else `num_filters`).
+    pub fn out_channels(&self) -> u32 {
+        match self.kind {
+            LayerKind::DepthwiseConv => self.channels,
+            _ => self.num_filters,
+        }
+    }
+
+    /// Total MAC operations in this layer.
+    pub fn macs(&self) -> u64 {
+        let out_px = self.out_h() as u64 * self.out_w() as u64;
+        let per_px = self.filt_h as u64 * self.filt_w as u64;
+        match self.kind {
+            LayerKind::DepthwiseConv => out_px * per_px * self.channels as u64,
+            _ => out_px * per_px * self.channels as u64 * self.num_filters as u64,
+        }
+    }
+
+    /// Validate geometry invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.stride == 0 {
+            return Err(Error::InvalidLayer(format!("{}: stride 0", self.name)));
+        }
+        if self.filt_h == 0 || self.filt_w == 0 || self.channels == 0 || self.num_filters == 0
+        {
+            return Err(Error::InvalidLayer(format!(
+                "{}: zero-sized filter/channels",
+                self.name
+            )));
+        }
+        if self.filt_h > self.ifmap_h || self.filt_w > self.ifmap_w {
+            return Err(Error::InvalidLayer(format!(
+                "{}: filter {}x{} larger than padded ifmap {}x{}",
+                self.name, self.filt_h, self.filt_w, self.ifmap_h, self.ifmap_w
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A whole network: an ordered list of compute layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Topology {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Self {
+        Self {
+            name: name.to_string(),
+            layers,
+        }
+    }
+
+    /// Validate every layer.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(Error::InvalidLayer(format!("{}: empty topology", self.name)));
+        }
+        for l in &self.layers {
+            l.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Total MACs across the network.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_dims() {
+        // ResNet-18 conv1: 230x230 padded, 7x7, stride 2 -> 112x112.
+        let l = Layer::conv("conv1", 230, 230, 7, 7, 3, 64, 2);
+        assert_eq!(l.out_h(), 112);
+        assert_eq!(l.out_w(), 112);
+        assert_eq!(l.out_channels(), 64);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn fc_is_degenerate_conv() {
+        let l = Layer::fc("fc", 512, 1000);
+        assert_eq!(l.out_h(), 1);
+        assert_eq!(l.out_w(), 1);
+        assert_eq!(l.macs(), 512_000);
+        assert_eq!(l.kind, LayerKind::Fc);
+    }
+
+    #[test]
+    fn dwconv_macs_scale_with_channels_not_square() {
+        let dw = Layer::dwconv("dw", 114, 114, 3, 3, 32, 1);
+        // 112*112 out pixels * 9 taps * 32 channels
+        assert_eq!(dw.macs(), 112 * 112 * 9 * 32);
+        assert_eq!(dw.out_channels(), 32);
+    }
+
+    #[test]
+    fn invalid_layers_rejected() {
+        let mut l = Layer::conv("x", 8, 8, 3, 3, 4, 4, 1);
+        l.stride = 0;
+        assert!(l.validate().is_err());
+        let l = Layer::conv("y", 2, 2, 3, 3, 4, 4, 1);
+        assert!(l.validate().is_err());
+        let t = Topology::new("empty", vec![]);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn alexnet_conv1_macs() {
+        // 227x227 unpadded, 11x11 stride 4 -> 55x55; 55*55*121*3*96 MACs.
+        let l = Layer::conv("conv1", 227, 227, 11, 11, 3, 96, 4);
+        assert_eq!(l.out_h(), 55);
+        assert_eq!(l.macs(), 55 * 55 * 121 * 3 * 96);
+    }
+}

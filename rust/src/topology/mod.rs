@@ -1,0 +1,17 @@
+//! DNN workload descriptions.
+//!
+//! Layers follow the ScaleSim topology convention: ifmap dimensions are the
+//! *padded* input dimensions (padding is baked into the CSV numbers), output
+//! dims are `(ifmap - filter) / stride + 1`, and fully-connected layers are
+//! encoded as `1x1` ifmap/filter with `channels = fan-in`,
+//! `num_filters = fan-out`.  Depthwise convolutions are marked explicitly
+//! (the parser infers them from `_dw` / `/dw` name suffixes for stock
+//! ScaleSim CSVs).
+
+mod layer;
+mod parser;
+pub mod synth;
+pub mod zoo;
+
+pub use layer::{Layer, LayerKind, Topology};
+pub use parser::{parse_csv, parse_csv_str};

@@ -1,0 +1,154 @@
+//! ScaleSim-format topology CSV parser.
+//!
+//! Format (one header line, then one row per layer, trailing comma allowed —
+//! exactly what ScaleSim V2 ships):
+//!
+//! ```csv
+//! Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width, Channels, Num Filter, Strides,
+//! Conv1, 230, 230, 7, 7, 3, 64, 2,
+//! ```
+//!
+//! Depthwise layers are recognized by a `dw` token in the layer name
+//! (`conv2_dw`, `conv2/dw`, `dw_conv3` ...), matching the naming used by
+//! ScaleSim's MobileNet topology.  FC layers are recognized by a 1x1 ifmap
+//! with 1x1 filter.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::layer::{Layer, LayerKind, Topology};
+
+fn is_dw_name(name: &str) -> bool {
+    let lower = name.to_ascii_lowercase();
+    lower
+        .split(|c: char| !c.is_ascii_alphanumeric())
+        .any(|tok| tok == "dw" || tok == "depthwise")
+}
+
+fn parse_field(row: usize, field: &str, what: &str) -> Result<u32> {
+    field.trim().parse::<u32>().map_err(|_| {
+        Error::TopologyParse(format!("row {row}: bad {what}: {field:?}"))
+    })
+}
+
+/// Parse a topology from CSV text. `name` labels the resulting topology.
+pub fn parse_csv_str(name: &str, text: &str) -> Result<Topology> {
+    let mut layers = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if i == 0 && line.to_ascii_lowercase().contains("layer") {
+            continue; // header
+        }
+        let fields: Vec<&str> = line
+            .split(',')
+            .map(str::trim)
+            .take_while(|f| !f.is_empty())
+            .collect();
+        if fields.len() < 8 {
+            return Err(Error::TopologyParse(format!(
+                "row {i}: expected 8 fields, got {}: {line:?}",
+                fields.len()
+            )));
+        }
+        let lname = fields[0].to_string();
+        let ifmap_h = parse_field(i, fields[1], "ifmap height")?;
+        let ifmap_w = parse_field(i, fields[2], "ifmap width")?;
+        let filt_h = parse_field(i, fields[3], "filter height")?;
+        let filt_w = parse_field(i, fields[4], "filter width")?;
+        let channels = parse_field(i, fields[5], "channels")?;
+        let num_filters = parse_field(i, fields[6], "num filters")?;
+        let stride = parse_field(i, fields[7], "stride")?;
+
+        let kind = if is_dw_name(&lname) {
+            LayerKind::DepthwiseConv
+        } else if ifmap_h == 1 && ifmap_w == 1 && filt_h == 1 && filt_w == 1 {
+            LayerKind::Fc
+        } else {
+            LayerKind::Conv
+        };
+        let layer = Layer {
+            name: lname,
+            kind,
+            ifmap_h,
+            ifmap_w,
+            filt_h,
+            filt_w,
+            channels,
+            // ScaleSim encodes depthwise rows with num_filters == 1; keep
+            // whatever the row says but the GEMM mapper uses `channels`.
+            num_filters,
+            stride,
+        };
+        layer.validate()?;
+        layers.push(layer);
+    }
+    let topo = Topology::new(name, layers);
+    topo.validate()?;
+    Ok(topo)
+}
+
+/// Parse a topology CSV from disk; the file stem becomes the model name.
+pub fn parse_csv(path: &Path) -> Result<Topology> {
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("model")
+        .to_string();
+    let text = std::fs::read_to_string(path)?;
+    parse_csv_str(&name, &text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width, Channels, Num Filter, Strides,
+Conv1, 230, 230, 7, 7, 3, 64, 2,
+Conv2_dw, 114, 114, 3, 3, 32, 1, 1,
+FC, 1, 1, 1, 1, 512, 1000, 1,
+";
+
+    #[test]
+    fn parses_kinds() {
+        let t = parse_csv_str("sample", SAMPLE).unwrap();
+        assert_eq!(t.layers.len(), 3);
+        assert_eq!(t.layers[0].kind, LayerKind::Conv);
+        assert_eq!(t.layers[1].kind, LayerKind::DepthwiseConv);
+        assert_eq!(t.layers[2].kind, LayerKind::Fc);
+        assert_eq!(t.layers[0].out_h(), 112);
+    }
+
+    #[test]
+    fn dw_name_detection() {
+        assert!(is_dw_name("conv2_dw"));
+        assert!(is_dw_name("conv2/dw"));
+        assert!(is_dw_name("DW_conv"));
+        assert!(is_dw_name("block1_depthwise"));
+        assert!(!is_dw_name("conv_dwx")); // 'dwx' token, not 'dw'
+        assert!(!is_dw_name("sandwich"));
+    }
+
+    #[test]
+    fn rejects_short_rows() {
+        let bad = "Layer, h, w, fh, fw, c, n, s,\nConv1, 10, 10, 3,\n";
+        assert!(parse_csv_str("bad", bad).is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric() {
+        let bad = "Layer, h, w, fh, fw, c, n, s,\nConv1, ten, 10, 3, 3, 1, 1, 1,\n";
+        assert!(parse_csv_str("bad", bad).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = "# comment\n\nConv1, 10, 10, 3, 3, 1, 4, 1,\n";
+        let t = parse_csv_str("c", text).unwrap();
+        assert_eq!(t.layers.len(), 1);
+    }
+}

@@ -1,0 +1,169 @@
+//! Synthetic workload generator.
+//!
+//! Generates random-but-realistic conv-net topologies (spatial pyramid with
+//! widening channels, occasional pointwise/depthwise/downsample layers,
+//! optional FC head) for selector robustness sweeps, property tests and the
+//! `workload_sweep` ablation bench — the "workload generator" half of the
+//! benchmark harness that the fixed zoo can't provide.
+
+use crate::topology::{Layer, Topology};
+use crate::util::rng::Rng;
+
+/// Knobs for the generator.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthConfig {
+    /// Input spatial resolution (square).
+    pub input_hw: u32,
+    /// Input channels.
+    pub input_channels: u32,
+    /// Number of conv layers to generate.
+    pub conv_layers: u32,
+    /// Probability (x1000) of a pointwise (1x1) layer.
+    pub pointwise_permille: u32,
+    /// Probability (x1000) of a depthwise layer.
+    pub depthwise_permille: u32,
+    /// Append a classifier FC head.
+    pub fc_head: bool,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            input_hw: 64,
+            input_channels: 3,
+            conv_layers: 10,
+            pointwise_permille: 250,
+            depthwise_permille: 150,
+            fc_head: true,
+        }
+    }
+}
+
+/// Generate a random topology. Deterministic in `seed`.
+pub fn generate(name: &str, cfg: &SynthConfig, seed: u64) -> Topology {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut hw = cfg.input_hw.max(8);
+    let mut channels = cfg.input_channels.max(1);
+
+    for i in 0..cfg.conv_layers {
+        let roll = rng.range_u64(0, 999) as u32;
+        // Downsample roughly every third layer while spatial room remains.
+        let stride = if hw >= 16 && rng.range_u64(0, 2) == 0 { 2 } else { 1 };
+        if roll < cfg.depthwise_permille && channels > 1 {
+            // Depthwise 3x3 (padded): channels preserved.
+            layers.push(Layer::dwconv(
+                &format!("conv{i}_dw"),
+                hw + 2,
+                hw + 2,
+                3,
+                3,
+                channels,
+                stride,
+            ));
+            hw = (hw + 2 - 3) / stride + 1;
+        } else if roll < cfg.depthwise_permille + cfg.pointwise_permille {
+            // Pointwise 1x1: channel mixing, possibly widening.
+            let out = (channels * rng.range_u64(1, 2) as u32).min(1024);
+            layers.push(Layer::conv(
+                &format!("conv{i}_pw"),
+                hw,
+                hw,
+                1,
+                1,
+                channels,
+                out,
+                stride,
+            ));
+            hw = (hw - 1) / stride + 1;
+            channels = out;
+        } else {
+            // Standard 3x3 (padded), widening channels toward the tail.
+            let out = (channels * if rng.range_u64(0, 1) == 0 { 1 } else { 2 }).min(1024);
+            layers.push(Layer::conv(
+                &format!("conv{i}"),
+                hw + 2,
+                hw + 2,
+                3,
+                3,
+                channels,
+                out,
+                stride,
+            ));
+            hw = (hw + 2 - 3) / stride + 1;
+            channels = out;
+        }
+        if hw < 4 {
+            break; // spatial dims exhausted
+        }
+    }
+    if cfg.fc_head {
+        let fan_in = hw * hw * channels;
+        layers.push(Layer::fc("fc", fan_in, 10 + rng.range_u64(0, 990) as u32));
+    }
+    let topo = Topology::new(name, layers);
+    topo.validate().expect("generator must produce valid topologies");
+    topo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::coordinator::FlexPipeline;
+    use crate::sim::Dataflow;
+    use crate::util::rng::property;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = SynthConfig::default();
+        let a = generate("a", &cfg, 7);
+        let b = generate("b", &cfg, 7);
+        assert_eq!(a.layers, b.layers);
+        let c = generate("c", &cfg, 8);
+        assert_ne!(a.layers, c.layers);
+    }
+
+    #[test]
+    fn generated_topologies_always_validate_and_deploy() {
+        // The flex >= best-static invariant must hold on arbitrary nets,
+        // not just the seven curated zoo models.
+        let arch = ArchConfig::square(16);
+        property("synth-deploy", 0x5E7, 12, |rng| {
+            let cfg = SynthConfig {
+                input_hw: 16 + 8 * rng.range_u64(0, 6) as u32,
+                input_channels: 1 + rng.range_u64(0, 15) as u32,
+                conv_layers: 3 + rng.range_u64(0, 9) as u32,
+                fc_head: rng.range_u64(0, 1) == 1,
+                ..Default::default()
+            };
+            let topo = generate("synth", &cfg, rng.next_u64());
+            topo.validate().unwrap();
+            let d = FlexPipeline::new(arch).deploy(&topo);
+            for df in Dataflow::ALL {
+                assert!(d.speedup_vs(df) >= 1.0, "{df} on seeded net");
+            }
+        });
+    }
+
+    #[test]
+    fn respects_layer_budget_and_head() {
+        let cfg = SynthConfig {
+            conv_layers: 6,
+            fc_head: true,
+            ..Default::default()
+        };
+        let t = generate("t", &cfg, 3);
+        assert!(t.layers.len() <= 7);
+        assert_eq!(t.layers.last().unwrap().name, "fc");
+        let no_head = generate(
+            "t2",
+            &SynthConfig {
+                fc_head: false,
+                ..cfg
+            },
+            3,
+        );
+        assert!(no_head.layers.iter().all(|l| l.name != "fc"));
+    }
+}

@@ -1,0 +1,137 @@
+//! The built-in model zoo: the seven workloads of the paper's Table I.
+//!
+//! Topologies live as ScaleSim-format CSVs under `topologies/` (embedded at
+//! compile time so the binary is self-contained) and describe the standard
+//! ImageNet-resolution variants of each network.  Layer geometry — not
+//! weight values — is all the cycle model depends on (DESIGN.md §6).
+
+use crate::error::{Error, Result};
+
+use super::layer::Topology;
+use super::parser::parse_csv_str;
+
+macro_rules! zoo_model {
+    ($fn_name:ident, $key:literal, $csv:literal, $doc:literal) => {
+        #[doc = $doc]
+        pub fn $fn_name() -> Topology {
+            parse_csv_str($key, include_str!(concat!("../../../topologies/", $csv)))
+                .expect(concat!("embedded topology ", $csv, " must parse"))
+        }
+    };
+}
+
+zoo_model!(alexnet, "alexnet", "alexnet.csv", "AlexNet (Krizhevsky 2012): 5 conv + 3 FC.");
+zoo_model!(
+    faster_rcnn,
+    "faster_rcnn",
+    "faster_rcnn.csv",
+    "Faster R-CNN (Ren 2016): VGG-16 backbone + RPN heads."
+);
+zoo_model!(
+    googlenet,
+    "googlenet",
+    "googlenet.csv",
+    "GoogLeNet (Szegedy 2014): stem + 9 inception modules + FC."
+);
+zoo_model!(
+    mobilenet,
+    "mobilenet",
+    "mobilenet.csv",
+    "MobileNetV1 (Howard 2017): depthwise-separable trunk + FC."
+);
+zoo_model!(resnet18, "resnet18", "resnet18.csv", "ResNet-18 (He 2015): 20 conv + FC.");
+zoo_model!(vgg13, "vgg13", "vgg13.csv", "VGG-13 (Simonyan 2015): 10 conv + 3 FC.");
+zoo_model!(
+    yolo_tiny,
+    "yolo_tiny",
+    "yolo_tiny.csv",
+    "YOLO-Tiny (tiny YOLOv2-style detector): 9 conv layers at 416x416."
+);
+
+/// Zoo keys in the order the paper's Table I lists them.
+pub const MODEL_NAMES: [&str; 7] = [
+    "alexnet",
+    "faster_rcnn",
+    "googlenet",
+    "mobilenet",
+    "resnet18",
+    "vgg13",
+    "yolo_tiny",
+];
+
+/// Look a model up by zoo key.
+pub fn by_name(name: &str) -> Result<Topology> {
+    match name {
+        "alexnet" => Ok(alexnet()),
+        "faster_rcnn" => Ok(faster_rcnn()),
+        "googlenet" => Ok(googlenet()),
+        "mobilenet" => Ok(mobilenet()),
+        "resnet18" => Ok(resnet18()),
+        "vgg13" => Ok(vgg13()),
+        "yolo_tiny" => Ok(yolo_tiny()),
+        other => Err(Error::TopologyParse(format!("unknown zoo model {other:?}"))),
+    }
+}
+
+/// All zoo models in Table I order.
+pub fn all_models() -> Vec<Topology> {
+    MODEL_NAMES.iter().map(|n| by_name(n).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::LayerKind;
+
+    #[test]
+    fn all_models_parse_and_validate() {
+        for t in all_models() {
+            t.validate().unwrap();
+            assert!(t.num_layers() >= 6, "{} too small", t.name);
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("lenet").is_err());
+    }
+
+    #[test]
+    fn resnet18_shape() {
+        let t = resnet18();
+        assert_eq!(t.num_layers(), 21);
+        assert_eq!(t.layers[0].out_h(), 112);
+        // ~1.8 GMACs for ImageNet ResNet-18 (ours counts conv+ds+fc only).
+        let gmacs = t.total_macs() as f64 / 1e9;
+        assert!((1.5..2.2).contains(&gmacs), "resnet18 gmacs = {gmacs}");
+    }
+
+    #[test]
+    fn vgg13_is_the_biggest() {
+        let vgg = vgg13().total_macs();
+        for t in all_models() {
+            assert!(vgg >= t.total_macs(), "{} larger than vgg13", t.name);
+        }
+        // ~11.3 GMACs for VGG-13.
+        let gmacs = vgg as f64 / 1e9;
+        assert!((10.0..13.0).contains(&gmacs), "vgg13 gmacs = {gmacs}");
+    }
+
+    #[test]
+    fn mobilenet_has_depthwise() {
+        let t = mobilenet();
+        let dw = t
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::DepthwiseConv)
+            .count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn googlenet_inception_count() {
+        let t = googlenet();
+        // stem (3) + 9 inceptions x 6 + FC = 58
+        assert_eq!(t.num_layers(), 58);
+    }
+}

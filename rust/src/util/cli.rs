@@ -1,0 +1,234 @@
+//! Tiny declarative CLI flag parser (clap substitute).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`.  Just enough for the leader
+//! binary and the examples.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declared flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A declarative argument parser.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(String, String)>,
+}
+
+/// Parsed argument values.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare a value flag with an optional default.
+    pub fn flag(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Declare a boolean switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Declare a positional argument (for help text only).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [flags]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        s.push_str("\nFLAGS:\n");
+        for f in &self.flags {
+            let v = if f.takes_value { " <value>" } else { "" };
+            let d = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{v}  {}{d}\n", f.name, f.help));
+        }
+        s.push_str("  --help  print this help\n");
+        s
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
+        let mut p = Parsed::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                p.values.insert(f.name.clone(), d.clone());
+            }
+            if !f.takes_value {
+                p.bools.insert(f.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::InvalidConfig(self.usage()));
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| Error::InvalidConfig(format!("unknown flag --{name}")))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    Error::InvalidConfig(format!("--{name} needs a value"))
+                                })?
+                        }
+                    };
+                    p.values.insert(name.to_string(), val);
+                } else {
+                    if inline.is_some() {
+                        return Err(Error::InvalidConfig(format!(
+                            "--{name} does not take a value"
+                        )));
+                    }
+                    p.bools.insert(name.to_string(), true);
+                }
+            } else {
+                p.positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(p)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::InvalidConfig(format!("missing required --{name}")))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| Error::InvalidConfig(format!("--{name} must be an integer")))
+    }
+
+    pub fn u32(&self, name: &str) -> Result<u32> {
+        Ok(self.u64(name)? as u32)
+    }
+
+    pub fn is_set(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .flag("model", Some("resnet18"), "model name")
+            .flag("size", Some("32"), "array size")
+            .switch("memory", "enable memory model")
+            .positional("cmd", "subcommand")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = spec().parse(&argv(&["run", "--size", "8"])).unwrap();
+        assert_eq!(p.get("model"), Some("resnet18"));
+        assert_eq!(p.u32("size").unwrap(), 8);
+        assert_eq!(p.positional(0), Some("run"));
+        assert!(!p.is_set("memory"));
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let p = spec().parse(&argv(&["--size=16", "--memory"])).unwrap();
+        assert_eq!(p.u32("size").unwrap(), 16);
+        assert!(p.is_set("memory"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(spec().parse(&argv(&["--bogus", "1"])).is_err());
+        assert!(spec().parse(&argv(&["--model"])).is_err());
+        assert!(spec().parse(&argv(&["--memory=1"])).is_err());
+        assert!(spec().parse(&argv(&["--help"])).is_err());
+        let bad = spec().parse(&argv(&["--size", "abc"])).unwrap();
+        assert!(bad.u32("size").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = spec().usage();
+        assert!(u.contains("--model") && u.contains("default: resnet18"));
+    }
+}

@@ -1,0 +1,220 @@
+//! TOML-subset config reader (toml-crate substitute).
+//!
+//! Supports exactly what `configs/*.toml` needs: comments (`#`), flat
+//! `key = value` pairs, one level of `[table]` sections, and scalar values
+//! (integers, floats, booleans, quoted strings).  Keys inside a section are
+//! addressed as `section.key`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Scalar {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Scalar::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Scalar::Float(f) => Some(*f),
+            Scalar::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Scalar::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Scalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A flat view of a TOML-subset document (`section.key -> scalar`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvConf {
+    values: BTreeMap<String, Scalar>,
+}
+
+impl KvConf {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(Error::InvalidConfig(format!(
+                        "line {}: bad section header {line:?}",
+                        lineno + 1
+                    )));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                Error::InvalidConfig(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::InvalidConfig(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, parse_scalar(val.trim(), lineno + 1)?);
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Scalar> {
+        self.values.get(key)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .as_u64()
+                .ok_or_else(|| Error::InvalidConfig(format!("{key} is not a u64"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .as_f64()
+                .ok_or_else(|| Error::InvalidConfig(format!("{key} is not a float"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_scalar(text: &str, lineno: usize) -> Result<Scalar> {
+    if let Some(stripped) = text.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"').ok_or_else(|| {
+            Error::InvalidConfig(format!("line {lineno}: unterminated string"))
+        })?;
+        return Ok(Scalar::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(Scalar::Bool(true)),
+        "false" => return Ok(Scalar::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Scalar::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Scalar::Float(f));
+    }
+    Err(Error::InvalidConfig(format!(
+        "line {lineno}: cannot parse value {text:?}"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# edge config
+array_rows = 8
+array_cols = 8
+clock_ns = 10.0
+reconfig_cycles = 1
+
+[memory]
+ifmap_sram_kib = 1_024
+dram_bytes_per_cycle = 64
+label = "edge #1"
+"#;
+
+    #[test]
+    fn parse_sections_and_scalars() {
+        let c = KvConf::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("array_rows").unwrap().as_u64(), Some(8));
+        assert_eq!(c.get("clock_ns").unwrap().as_f64(), Some(10.0));
+        assert_eq!(c.get("memory.ifmap_sram_kib").unwrap().as_u64(), Some(1024));
+        // '#' inside the quoted string is not a comment.
+        assert_eq!(c.get("memory.label").unwrap().as_str(), Some("edge #1"));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = KvConf::parse("a = 1").unwrap();
+        assert_eq!(c.u64_or("a", 9).unwrap(), 1);
+        assert_eq!(c.u64_or("b", 9).unwrap(), 9);
+        assert!(c.u64_or("a", 0).is_ok());
+        let c2 = KvConf::parse("a = \"x\"").unwrap();
+        assert!(c2.u64_or("a", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(KvConf::parse("novalue").is_err());
+        assert!(KvConf::parse("[bad").is_err());
+        assert!(KvConf::parse("k = \"open").is_err());
+        assert!(KvConf::parse("k = what").is_err());
+    }
+
+    #[test]
+    fn ints_vs_floats() {
+        let c = KvConf::parse("i = 3\nf = 3.5\nneg = -2").unwrap();
+        assert_eq!(c.get("i").unwrap().as_u64(), Some(3));
+        assert_eq!(c.get("f").unwrap().as_u64(), None);
+        assert_eq!(c.get("f").unwrap().as_f64(), Some(3.5));
+        assert_eq!(c.get("neg").unwrap().as_u64(), None);
+        assert_eq!(c.get("i").unwrap().as_f64(), Some(3.0));
+    }
+}

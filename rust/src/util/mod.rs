@@ -1,0 +1,20 @@
+//! In-tree substrates for facilities the offline registry lacks.
+//!
+//! The build environment mirrors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde_json, toml, clap, proptest, ...)
+//! are unavailable.  Rather than stub functionality out, this module
+//! implements the needed subsets from scratch (DESIGN.md §6):
+//!
+//! * [`json`] — a complete small JSON parser + writer (manifest, CMU
+//!   images, report emission).
+//! * [`kvconf`] — a TOML-subset config reader (flat keys + one-level
+//!   tables) for `configs/*.toml`.
+//! * [`cli`] — a tiny declarative flag parser for the leader binary and
+//!   examples.
+//! * [`rng`] — a splitmix/xorshift PRNG powering the in-tree
+//!   property-testing loops (proptest substitute).
+
+pub mod cli;
+pub mod json;
+pub mod kvconf;
+pub mod rng;

@@ -1,0 +1,126 @@
+//! Deterministic PRNG for the in-tree property-testing loops.
+//!
+//! splitmix64-seeded xoshiro-style generator; no external dependency and
+//! reproducible across platforms, which keeps property-test failures
+//! replayable from the printed seed.
+
+/// Deterministic 64-bit PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 scramble so small seeds diverge immediately.
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        Self {
+            state: (z ^ (z >> 31)) | 1,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.next_u64() % (hi - lo + 1)
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform i32 in `[-128, 127]` (INT8 operand range).
+    pub fn i8val(&mut self) -> i32 {
+        (self.next_u64() % 256) as i32 - 128
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` property checks with per-case seeds derived from `seed`,
+/// printing the failing seed before panicking (proptest-style shrinking is
+/// replaced by replayability).
+pub fn property(name: &str, seed: u64, cases: u64, mut check: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed at case {case} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn ranges_in_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.range_u64(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+            let i = r.i8val();
+            assert!((-128..=127).contains(&i));
+        }
+    }
+
+    #[test]
+    fn range_single_value() {
+        let mut r = Rng::new(2);
+        assert_eq!(r.range_u64(5, 5), 5);
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("counter", 42, 16, |_| count += 1);
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failure() {
+        property("fails", 42, 4, |rng| {
+            assert!(rng.f64() < -1.0); // always fails
+        });
+    }
+}

@@ -1,0 +1,187 @@
+//! Paper-shape regression tests: the qualitative claims of every table and
+//! figure, asserted against the regenerated data (DESIGN.md §4 expectation:
+//! absolute cycles may differ from the authors' ScaleSim binary; orderings,
+//! winners and trends must hold).
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::selector::select_exhaustive;
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::cost::synth::{critical_path_ns, synthesize, SynthConstraints};
+use flex_tpu::cost::{PeVariant, TpuCost};
+use flex_tpu::metrics::mean;
+use flex_tpu::report;
+use flex_tpu::sim::engine::SimOptions;
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+/// Paper Table I rows (S=32x32): model -> (flex, [IS, OS, WS]) cycles.
+const PAPER_TABLE1: [(&str, f64, [f64; 3]); 7] = [
+    ("alexnet", 8.598e5, [1.176e6, 8.852e5, 1.188e6]),
+    ("faster_rcnn", 3.922e6, [5.640e6, 4.368e6, 4.710e6]),
+    ("googlenet", 1.566e6, [2.525e6, 1.660e6, 1.988e6]),
+    ("mobilenet", 1.206e6, [2.349e6, 1.373e6, 1.531e6]),
+    ("resnet18", 1.636e6, [2.839e6, 1.718e6, 2.520e6]),
+    ("vgg13", 2.172e7, [2.971e7, 2.231e7, 3.046e7]),
+    ("yolo_tiny", 2.131e6, [3.729e6, 2.550e6, 3.337e6]),
+];
+
+#[test]
+fn table1_magnitudes_within_3x_of_paper() {
+    // From-scratch simulator vs the authors' ScaleSim binary: we require
+    // every absolute cycle count to land within 3x (most are much closer;
+    // see EXPERIMENTS.md for the measured ratios).
+    let rows = report::table1_rows(32, SimOptions::default());
+    for (name, paper_flex, paper_static) in PAPER_TABLE1 {
+        let row = rows.iter().find(|r| r.model == name).unwrap_or_else(|| {
+            panic!("missing model {name}");
+        });
+        let check = |got: u64, want: f64, what: &str| {
+            let ratio = got as f64 / want;
+            assert!(
+                (1.0 / 3.0..3.0).contains(&ratio),
+                "{name} {what}: got {got}, paper {want:.3e} (ratio {ratio:.2})"
+            );
+        };
+        check(row.flex_cycles, paper_flex, "flex");
+        for (i, df) in ["is", "os", "ws"].iter().enumerate() {
+            check(row.static_cycles[i], paper_static[i], df);
+        }
+    }
+}
+
+#[test]
+fn table1_per_model_best_static_is_os_for_most_models() {
+    // Paper: "most of the models perform close to optimally employing the
+    // OS dataflow".
+    let rows = report::table1_rows(32, SimOptions::default());
+    let os_best = rows
+        .iter()
+        .filter(|r| r.static_cycles[1] == *r.static_cycles.iter().min().unwrap())
+        .count();
+    assert!(os_best >= 5, "OS best on only {os_best}/7 models");
+}
+
+#[test]
+fn table1_speedup_ranges_overlap_paper() {
+    // Paper speedups span 1.027-1.949 at S=32. Ours must stay in a
+    // compatible band: every speedup in [1.0, 2.6], max speedup >= 1.3.
+    let rows = report::table1_rows(32, SimOptions::default());
+    let mut max_speedup: f64 = 0.0;
+    for r in &rows {
+        for s in r.speedups {
+            assert!((1.0..2.6).contains(&s), "{}: speedup {s}", r.model);
+            max_speedup = max_speedup.max(s);
+        }
+    }
+    assert!(max_speedup >= 1.3, "max speedup only {max_speedup}");
+}
+
+#[test]
+fn fig1_resnet_layerwise_winners() {
+    // Paper Fig. 1: early ResNet-18 layers favor WS; the FC favors IS; the
+    // optimal dataflow differs across layers.
+    let sel = select_exhaustive(
+        &ArchConfig::square(32),
+        &zoo::resnet18(),
+        SimOptions::default(),
+    );
+    for i in 0..5 {
+        assert_eq!(sel.per_layer[i], Dataflow::Ws, "layer {i} should be WS");
+    }
+    assert_eq!(*sel.per_layer.last().unwrap(), Dataflow::Is, "FC should be IS");
+    let wins = sel.wins();
+    assert!(wins.iter().all(|&w| w > 0), "heterogeneity missing: {wins:?}");
+}
+
+#[test]
+fn table2_overheads_match_paper_bands() {
+    // Paper Table II: area overhead 10.05-13.61 %, power 7.59-10.65 %,
+    // CPD <= 2.07 %; absolute conventional area/power anchored at 32x32.
+    let cons = SynthConstraints::default();
+    for s in [8u32, 16, 32] {
+        let conv = synthesize(s, PeVariant::Conventional, &cons);
+        let flex = synthesize(s, PeVariant::Flex, &cons);
+        let area = (flex.area_mm2 / conv.area_mm2 - 1.0) * 100.0;
+        let power = (flex.power_mw / conv.power_mw - 1.0) * 100.0;
+        let cpd = (flex.critical_path_ns / conv.critical_path_ns - 1.0) * 100.0;
+        assert!((8.0..16.0).contains(&area), "S={s}: area overhead {area}%");
+        assert!((6.0..14.0).contains(&power), "S={s}: power overhead {power}%");
+        assert!((0.0..3.0).contains(&cpd), "S={s}: cpd overhead {cpd}%");
+    }
+    let conv32 = synthesize(32, PeVariant::Conventional, &cons);
+    assert!((conv32.area_mm2 - 1.192).abs() / 1.192 < 0.02);
+    assert!((conv32.power_mw - 55.621).abs() / 55.621 < 0.02);
+}
+
+#[test]
+fn fig5_array_dominates_area_and_power() {
+    for s in [8u32, 16, 32] {
+        let b = TpuCost::square(s, PeVariant::Conventional).breakdown();
+        assert!(
+            (0.77..=0.85).contains(&b.array_area_share()),
+            "S={s}: area share {}",
+            b.array_area_share()
+        );
+        assert!(
+            (0.50..=0.89).contains(&b.array_power_share()),
+            "S={s}: power share {}",
+            b.array_power_share()
+        );
+    }
+}
+
+#[test]
+fn fig6_flex_is_fastest_wall_clock_everywhere() {
+    // Fig. 6 claim: "Across all models, the Flex-TPU is the best
+    // architecture in terms of execution time" — despite its slightly
+    // longer critical path.
+    let arch = ArchConfig::square(32);
+    let cpd_conv = critical_path_ns(32, PeVariant::Conventional);
+    let cpd_flex = critical_path_ns(32, PeVariant::Flex);
+    assert!(cpd_flex > cpd_conv);
+    let pipeline = FlexPipeline::new(arch);
+    for topo in zoo::all_models() {
+        let d = pipeline.deploy(&topo);
+        let flex_ms = d.total_cycles() as f64 * cpd_flex * 1e-6;
+        for df in Dataflow::ALL {
+            let static_ms = d.static_cycles(df) as f64 * cpd_conv * 1e-6;
+            assert!(
+                flex_ms <= static_ms,
+                "{}: flex {flex_ms:.3} ms > {df} {static_ms:.3} ms",
+                topo.name
+            );
+        }
+    }
+}
+
+#[test]
+fn fig7_scalability_trend() {
+    // Paper: avg Flex-vs-OS speedup 1.090 (32) -> 1.238 (128) -> 1.349 (256).
+    let avg = |s: u32| {
+        let p = FlexPipeline::new(ArchConfig::square(s));
+        mean(
+            &zoo::all_models()
+                .iter()
+                .map(|t| p.deploy(t).speedup_vs(Dataflow::Os))
+                .collect::<Vec<_>>(),
+        )
+    };
+    let (a32, a128, a256) = (avg(32), avg(128), avg(256));
+    assert!(a128 > a32, "128 avg {a128} <= 32 avg {a32}");
+    assert!(a256 > a128, "256 avg {a256} <= 128 avg {a128}");
+    // Magnitude bands around the paper's numbers (generous: different sim).
+    assert!((1.02..1.45).contains(&a32), "a32={a32}");
+    assert!((1.08..1.85).contains(&a128), "a128={a128}");
+    assert!((1.12..2.2).contains(&a256), "a256={a256}");
+}
+
+#[test]
+fn avg_speedups_ordering_section3a() {
+    // Paper §III-A: average speedups 1.612 (IS) > 1.400 (WS) > 1.090 (OS).
+    // Measured here: 1.560 / 1.230 / 1.096 (EXPERIMENTS.md E7) — same
+    // ordering, same strongest-baseline conclusion.
+    let rows = report::table1_rows(32, SimOptions::default());
+    let avg = |i: usize| mean(&rows.iter().map(|r| r.speedups[i]).collect::<Vec<_>>());
+    let (is, os, ws) = (avg(0), avg(1), avg(2));
+    assert!(is > ws && ws > os, "expected IS > WS > OS, got {is}/{ws}/{os}");
+}

@@ -1,0 +1,139 @@
+//! End-to-end runtime tests: load the AOT artifacts (HLO text produced by
+//! python/compile/aot.py), execute them on the PJRT CPU client, and check
+//! the functional claims (dataflow variants agree; GEMM artifacts match an
+//! in-rust oracle; the batched server works).
+//!
+//! These tests require `make artifacts` to have run; they are skipped (not
+//! failed) when artifacts/ is missing so `cargo test` works in a fresh
+//! checkout.
+
+use std::path::PathBuf;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::inference::{InferenceRequest, InferenceServer};
+use flex_tpu::runtime::Runtime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_topology_is_valid() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    let m = rt.manifest();
+    assert_eq!(m.batch, 8);
+    assert!(m.models.contains_key("flex"));
+    assert!(m.models.contains_key("os"));
+    let topo = m.topology();
+    topo.validate().unwrap();
+    assert_eq!(topo.layers.len(), m.conv_layers.len() + 1);
+}
+
+#[test]
+fn model_variants_agree_on_logits() {
+    // The paper's functional claim end-to-end: per-layer dataflow choice
+    // (baked into each artifact) changes time, never values.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    let n = rt.manifest().input_len();
+    let input: Vec<f32> = (0..n).map(|i| ((i % 23) as f32 - 11.0) / 11.0).collect();
+    let base = rt.execute_model("flex", &input).expect("flex runs");
+    assert_eq!(base.len(), rt.manifest().output_len());
+    assert!(base.iter().all(|v| v.is_finite()));
+    for variant in ["os", "ws", "is"] {
+        let out = rt.execute_model(variant, &input).expect("variant runs");
+        for (i, (a, b)) in base.iter().zip(&out).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                "{variant}[{i}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_artifacts_match_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    let d = rt.manifest().gemm_dim as usize;
+    let a: Vec<f32> = (0..d * d).map(|i| ((i % 7) as f32 - 3.0) * 0.25).collect();
+    let b: Vec<f32> = (0..d * d).map(|i| ((i % 5) as f32 - 2.0) * 0.5).collect();
+    // f64 oracle in-rust.
+    let mut want = vec![0f64; d * d];
+    for i in 0..d {
+        for k in 0..d {
+            let av = a[i * d + k] as f64;
+            for j in 0..d {
+                want[i * d + j] += av * b[k * d + j] as f64;
+            }
+        }
+    }
+    for df in ["os", "ws", "is"] {
+        let got = rt.execute_gemm(df, &a, &b).expect("gemm runs");
+        assert_eq!(got.len(), d * d);
+        for i in 0..d * d {
+            assert!(
+                (got[i] as f64 - want[i]).abs() < 1e-3,
+                "{df}[{i}]: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn bad_inputs_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    assert!(rt.execute_model("flex", &[0.0; 3]).is_err());
+    assert!(rt.execute_model("nonexistent", &vec![0.0; rt.manifest().input_len()]).is_err());
+    assert!(rt.execute_gemm("os", &[0.0; 3], &[0.0; 3]).is_err());
+}
+
+#[test]
+fn batched_server_serves_all_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads");
+    let img = {
+        let m = rt.manifest();
+        (m.input_hw * m.input_hw * m.input_channels) as usize
+    };
+    let server = InferenceServer::new(rt, ArchConfig::square(8)).expect("deploys");
+    assert!(server.timing().speedup_vs_best_static >= 1.0);
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    // 13 requests: exercises one full batch of 8 + a padded tail of 5.
+    let producer = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for id in 0..13u64 {
+            let (otx, orx) = std::sync::mpsc::channel();
+            let pixels = vec![0.1f32 * (id as f32 + 1.0); img];
+            tx.send((InferenceRequest { id, pixels }, otx)).unwrap();
+            rxs.push((id, orx));
+        }
+        drop(tx);
+        rxs.into_iter()
+            .map(|(id, orx)| {
+                let resp: flex_tpu::inference::InferenceResponse =
+                    orx.recv().expect("response");
+                assert_eq!(resp.id, id);
+                assert!(resp.logits.iter().all(|v| v.is_finite()));
+                resp
+            })
+            .count()
+    });
+    let stats = server.serve(rx).expect("serve ok");
+    let served = producer.join().unwrap();
+    assert_eq!(served, 13);
+    assert_eq!(stats.requests, 13);
+    assert!(stats.batches >= 2);
+    assert!(stats.sim_flex_latency_ns > 0.0);
+}
