@@ -1,0 +1,57 @@
+"""Environment and cross-layer consistency checks that run with or without
+JAX installed (the rest of the suite auto-skips via the root conftest)."""
+
+import importlib.util
+import os
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def test_compile_package_importable():
+    """conftest puts python/ on sys.path; the compile package must resolve."""
+    assert importlib.util.find_spec("compile.kernels") is not None
+    assert importlib.util.find_spec("compile.kernels.ref") is not None
+
+
+def test_zoo_topologies_present_and_well_formed():
+    """The rust zoo embeds topologies/*.csv at compile time; keep the file
+    set and the ScaleSim 8-field row format in sync from the python side."""
+    topo_dir = os.path.join(REPO_ROOT, "topologies")
+    expected = {
+        "alexnet",
+        "faster_rcnn",
+        "googlenet",
+        "mobilenet",
+        "resnet18",
+        "vgg13",
+        "yolo_tiny",
+    }
+    have = {
+        os.path.splitext(f)[0] for f in os.listdir(topo_dir) if f.endswith(".csv")
+    }
+    assert expected <= have, f"missing topologies: {expected - have}"
+    for name in sorted(expected):
+        with open(os.path.join(topo_dir, name + ".csv")) as f:
+            lines = [l.strip() for l in f if l.strip()]
+        assert "layer" in lines[0].lower(), f"{name}: missing header"
+        for row in lines[1:]:
+            fields = [x.strip() for x in row.split(",") if x.strip()]
+            assert len(fields) == 8, f"{name}: bad row {row!r}"
+            ih, iw, fh, fw, c, n, s = map(int, fields[1:8])
+            assert s >= 1 and fh <= ih and fw <= iw, f"{name}: bad geometry {row!r}"
+
+
+def test_jax_skip_guard_is_honest():
+    """The root conftest must skip the JAX suites exactly when jax or
+    hypothesis is missing — never when both are importable."""
+    import conftest
+
+    missing = [
+        m for m in ("jax", "hypothesis") if importlib.util.find_spec(m) is None
+    ]
+    expected = (
+        ["python/tests/test_kernel.py", "python/tests/test_model.py"]
+        if missing
+        else []
+    )
+    assert conftest.collect_ignore == expected

@@ -1,0 +1,60 @@
+//! Bench for the parallel zoo-sweep engine: full-zoo exhaustive selection
+//! at 1/2/4/8 threads, the multi-size grid, and the ShapeCache hit-rate —
+//! the scaling story behind every table/figure regeneration.
+//!
+//! Run: `cargo bench --bench sweep` (FLEX_TPU_BENCH_QUICK=1 for a fast pass).
+
+mod harness;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::sweep::{sweep_zoo, sweep_zoo_sizes};
+use flex_tpu::sim::engine::SimOptions;
+
+fn main() {
+    let mut b = harness::Bench::new("sweep");
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+
+    for threads in [1usize, 2, 4, 8] {
+        b.bench(&format!("zoo/32x32/{threads}t"), || {
+            sweep_zoo(&arch, threads, opts)
+        });
+    }
+    b.bench("zoo/sizes-8-16-32-64/auto", || {
+        sweep_zoo_sizes(&[8, 16, 32, 64], 0, opts)
+    });
+
+    // Acceptance: multi-threaded sweeps are byte-identical to the serial
+    // one, and the cache sees real reuse across the zoo.
+    let serial = sweep_zoo(&arch, 1, opts);
+    let parallel = sweep_zoo(&arch, 4, opts);
+    assert_eq!(serial.models.len(), parallel.models.len());
+    for (s, p) in serial.models.iter().zip(&parallel.models) {
+        assert_eq!(s, p, "{} diverged across thread counts", s.model);
+    }
+    assert!(
+        parallel.cache.hit_rate() > 0.0,
+        "zoo sweep must hit the shape cache: {:?}",
+        parallel.cache
+    );
+    b.metric(
+        "zoo/32x32",
+        "shape-cache hit rate",
+        format!(
+            "{:.1}% ({} hits / {} lookups, {} entries)",
+            parallel.cache.hit_rate() * 100.0,
+            parallel.cache.hits,
+            parallel.cache.hits + parallel.cache.misses,
+            parallel.cache.entries
+        ),
+    );
+
+    let (grid, cache) = sweep_zoo_sizes(&[8, 16, 32, 64], 0, opts);
+    assert_eq!(grid.len(), 4);
+    b.metric(
+        "zoo/sizes-8-16-32-64",
+        "grid shape-cache hit rate",
+        format!("{:.1}%", cache.stats().hit_rate() * 100.0),
+    );
+    b.finish();
+}

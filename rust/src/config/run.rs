@@ -2,7 +2,7 @@
 
 
 /// Simulation fidelity selector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum SimFidelity {
     /// Closed-form fold-level model only (compute cycles; memory assumed to
     /// keep up). This reproduces the paper's compute-bound setting and is

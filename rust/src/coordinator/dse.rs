@@ -7,11 +7,14 @@
 //! ("which array do I tape out for this model?").  Exposed via
 //! `flex-tpu dse` and `examples/datacenter_scale.rs`-style studies.
 
+use std::sync::Arc;
+
 use crate::config::ArchConfig;
 use crate::cost::energy::{self, EnergyBreakdown};
 use crate::cost::synth::critical_path_ns;
 use crate::cost::{PeVariant, TpuCost};
-use crate::sim::engine::{simulate_network, SimOptions};
+use crate::sim::engine::SimOptions;
+use crate::sim::parallel::{parallel_map, ShapeCache};
 use crate::sim::Dataflow;
 use crate::topology::Topology;
 
@@ -50,42 +53,76 @@ pub struct DsePoint {
     pub edp: f64,
 }
 
-/// Evaluate every (size, variant) combination for `topo`.
-pub fn sweep(topo: &Topology, sizes: &[u32], opts: SimOptions) -> Vec<DsePoint> {
-    let mut points = Vec::new();
-    for &s in sizes {
-        let arch = ArchConfig::square(s);
-        // Flex point (deploy once, reuse baselines for the static points).
-        let d = FlexPipeline::new(arch).with_options(opts).deploy(topo);
-        let flex_cpd = critical_path_ns(s, PeVariant::Flex);
-        let conv_cpd = critical_path_ns(s, PeVariant::Conventional);
-        let flex_energy = energy::network_energy(&arch, PeVariant::Flex, &d.flex);
+/// The four design points (flex + 3 statics) of one array size.
+fn points_for_size(
+    topo: &Topology,
+    s: u32,
+    opts: SimOptions,
+    cache: Option<&Arc<ShapeCache>>,
+) -> Vec<DsePoint> {
+    let arch = ArchConfig::square(s);
+    let mut points = Vec::with_capacity(1 + Dataflow::ALL.len());
+    // Flex point (deploy once, reuse baselines for the static points).
+    let mut pipeline = FlexPipeline::new(arch).with_options(opts);
+    if let Some(cache) = cache {
+        pipeline = pipeline.with_cache(Arc::clone(cache));
+    }
+    let d = pipeline.deploy(topo);
+    let flex_cpd = critical_path_ns(s, PeVariant::Flex);
+    let conv_cpd = critical_path_ns(s, PeVariant::Conventional);
+    let flex_energy = energy::network_energy(&arch, PeVariant::Flex, &d.flex);
+    points.push(DsePoint {
+        size: s,
+        variant: DseVariant::Flex,
+        cycles: d.total_cycles(),
+        latency_ms: d.total_cycles() as f64 * flex_cpd * 1e-6,
+        area_mm2: TpuCost::square(s, PeVariant::Flex).area_mm2(),
+        power_mw: TpuCost::square(s, PeVariant::Flex).power_mw(),
+        energy: flex_energy,
+        edp: flex_energy.total_pj() * d.total_cycles() as f64,
+    });
+    // The deploy above already simulated every static baseline; reuse them.
+    for (i, df) in Dataflow::ALL.into_iter().enumerate() {
+        let stats = &d.static_runs[i];
+        let e = energy::network_energy(&arch, PeVariant::Conventional, stats);
         points.push(DsePoint {
             size: s,
-            variant: DseVariant::Flex,
-            cycles: d.total_cycles(),
-            latency_ms: d.total_cycles() as f64 * flex_cpd * 1e-6,
-            area_mm2: TpuCost::square(s, PeVariant::Flex).area_mm2(),
-            power_mw: TpuCost::square(s, PeVariant::Flex).power_mw(),
-            energy: flex_energy,
-            edp: flex_energy.total_pj() * d.total_cycles() as f64,
+            variant: DseVariant::Static(df),
+            cycles: stats.total_cycles(),
+            latency_ms: stats.total_cycles() as f64 * conv_cpd * 1e-6,
+            area_mm2: TpuCost::square(s, PeVariant::Conventional).area_mm2(),
+            power_mw: TpuCost::square(s, PeVariant::Conventional).power_mw(),
+            energy: e,
+            edp: e.total_pj() * stats.total_cycles() as f64,
         });
-        for df in Dataflow::ALL {
-            let stats = simulate_network(&arch, topo, df, opts);
-            let e = energy::network_energy(&arch, PeVariant::Conventional, &stats);
-            points.push(DsePoint {
-                size: s,
-                variant: DseVariant::Static(df),
-                cycles: stats.total_cycles(),
-                latency_ms: stats.total_cycles() as f64 * conv_cpd * 1e-6,
-                area_mm2: TpuCost::square(s, PeVariant::Conventional).area_mm2(),
-                power_mw: TpuCost::square(s, PeVariant::Conventional).power_mw(),
-                energy: e,
-                edp: e.total_pj() * stats.total_cycles() as f64,
-            });
-        }
     }
     points
+}
+
+/// Evaluate every (size, variant) combination for `topo`.
+pub fn sweep(topo: &Topology, sizes: &[u32], opts: SimOptions) -> Vec<DsePoint> {
+    sizes
+        .iter()
+        .flat_map(|&s| points_for_size(topo, s, opts, None))
+        .collect()
+}
+
+/// [`sweep`] with the sizes fanned across `threads` workers (0 = all
+/// cores) and a shared [`ShapeCache`].  Point order — and every number in
+/// every point — is identical to the serial [`sweep`].
+pub fn sweep_parallel(
+    topo: &Topology,
+    sizes: &[u32],
+    opts: SimOptions,
+    threads: usize,
+) -> Vec<DsePoint> {
+    let cache = Arc::new(ShapeCache::new());
+    parallel_map(threads, sizes, |_, &s| {
+        points_for_size(topo, s, opts, Some(&cache))
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Indices of the Pareto-optimal points under (latency, area) minimization.
@@ -185,5 +222,13 @@ mod tests {
         let p = points();
         let best = best_edp(&p).unwrap();
         assert!(p.iter().all(|x| best.edp <= x.edp));
+    }
+
+    #[test]
+    fn parallel_sweep_identical_to_serial() {
+        let topo = zoo::yolo_tiny();
+        let serial = sweep(&topo, &[8, 16, 32], SimOptions::default());
+        let parallel = sweep_parallel(&topo, &[8, 16, 32], SimOptions::default(), 3);
+        assert_eq!(serial, parallel);
     }
 }

@@ -24,8 +24,13 @@ pub mod dataflow_gen;
 pub mod dse;
 pub mod pipeline;
 pub mod selector;
+pub mod sweep;
 
 pub use cmu::Cmu;
 pub use controller::MainController;
 pub use pipeline::{Deployment, FlexPipeline};
-pub use selector::{select_exhaustive, select_heuristic, Selection};
+pub use selector::{
+    select_exhaustive, select_exhaustive_cached, select_exhaustive_parallel, select_heuristic,
+    Selection,
+};
+pub use sweep::{sweep_models, sweep_zoo, sweep_zoo_sizes, ModelSweep, SweepResult};

@@ -12,8 +12,14 @@
 //! Table I row for its model.
 
 
+use std::sync::Arc;
+
 use crate::config::ArchConfig;
-use crate::sim::engine::{simulate_network, NetworkStats, SimOptions};
+use crate::sim::engine::{
+    simulate_network, simulate_network_cached, simulate_network_per_layer_cached, NetworkStats,
+    SimOptions,
+};
+use crate::sim::parallel::ShapeCache;
 use crate::sim::Dataflow;
 use crate::topology::Topology;
 
@@ -37,6 +43,10 @@ pub struct FlexPipeline {
     arch: ArchConfig,
     opts: SimOptions,
     selector: SelectorKind,
+    /// Optional shared layer-shape memo table; when set, every profiling
+    /// and baseline simulation goes through it (identical results, shared
+    /// work across models/sizes in a sweep).
+    cache: Option<Arc<ShapeCache>>,
 }
 
 /// A deployed model: CMU image + flex run + the three static baselines.
@@ -55,6 +65,7 @@ impl FlexPipeline {
             arch,
             opts: SimOptions::default(),
             selector: SelectorKind::default(),
+            cache: None,
         }
     }
 
@@ -68,20 +79,46 @@ impl FlexPipeline {
         self
     }
 
+    /// Route every simulation of this pipeline through a shared
+    /// [`ShapeCache`] (results are unchanged; repeated layer shapes are
+    /// simulated once across all deploys sharing the cache).
+    pub fn with_cache(mut self, cache: Arc<ShapeCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
     /// Run the full pre-deployment flow for `topo`.
     pub fn deploy(&self, topo: &Topology) -> Deployment {
-        let selection = match self.selector {
-            SelectorKind::Exhaustive => selector::select_exhaustive(&self.arch, topo, self.opts),
-            SelectorKind::Heuristic => selector::select_heuristic(&self.arch, topo, self.opts),
+        let selection = match (self.selector, &self.cache) {
+            (SelectorKind::Exhaustive, None) => {
+                selector::select_exhaustive(&self.arch, topo, self.opts)
+            }
+            (SelectorKind::Exhaustive, Some(cache)) => {
+                selector::select_exhaustive_cached(&self.arch, topo, self.opts, cache)
+            }
+            (SelectorKind::Heuristic, _) => {
+                selector::select_heuristic(&self.arch, topo, self.opts)
+            }
         };
         let cmu = Cmu::program(&topo.name, selection.per_layer.clone())
             .expect("non-empty topology yields non-empty CMU table");
         let controller = MainController::new(self.arch, cmu);
-        let flex = controller
-            .run_timing(topo, self.opts)
-            .expect("CMU table length matches topology");
-        let static_runs = Dataflow::ALL
-            .map(|df| simulate_network(&self.arch, topo, df, self.opts));
+        let flex = match &self.cache {
+            None => controller
+                .run_timing(topo, self.opts)
+                .expect("CMU table length matches topology"),
+            Some(cache) => simulate_network_per_layer_cached(
+                &self.arch,
+                topo,
+                controller.cmu().table(),
+                self.opts,
+                cache,
+            ),
+        };
+        let static_runs = Dataflow::ALL.map(|df| match &self.cache {
+            None => simulate_network(&self.arch, topo, df, self.opts),
+            Some(cache) => simulate_network_cached(&self.arch, topo, df, self.opts, cache),
+        });
         Deployment {
             arch: self.arch,
             selection,

@@ -17,6 +17,7 @@
 use crate::config::ArchConfig;
 use crate::sim::engine::{simulate_layer, SimOptions};
 use crate::sim::gemm::layer_gemms;
+use crate::sim::parallel::{parallel_map, ShapeCache};
 use crate::sim::Dataflow;
 use crate::topology::Topology;
 
@@ -64,30 +65,88 @@ pub(crate) fn df_index(df: Dataflow) -> usize {
     }
 }
 
+/// Deterministic per-layer argmin: ties break toward the `Dataflow::ALL`
+/// listing order (IS before OS before WS), shared by every selector path so
+/// serial, cached and parallel selections are byte-identical.
+fn argmin_row(row: &[u64; 3]) -> Dataflow {
+    Dataflow::ALL
+        .into_iter()
+        .min_by_key(|&df| row[df_index(df)])
+        .unwrap()
+}
+
+fn selection_from_rows(model: &str, cycles: Vec<[u64; 3]>) -> Selection {
+    let per_layer = cycles.iter().map(argmin_row).collect();
+    Selection {
+        model: model.to_string(),
+        per_layer,
+        cycles,
+    }
+}
+
 /// The paper's exhaustive selector: three full simulation passes, per-layer
 /// argmin over total (compute + stall) cycles.  Ties break toward the
 /// ordering IS < OS < WS only after comparing cycles, so results are
 /// deterministic.
 pub fn select_exhaustive(arch: &ArchConfig, topo: &Topology, opts: SimOptions) -> Selection {
-    let mut per_layer = Vec::with_capacity(topo.layers.len());
-    let mut cycles = Vec::with_capacity(topo.layers.len());
-    for layer in &topo.layers {
+    let cycles = topo
+        .layers
+        .iter()
+        .map(|layer| {
+            let mut row = [0u64; 3];
+            for df in Dataflow::ALL {
+                row[df_index(df)] = simulate_layer(arch, layer, df, opts).total_cycles();
+            }
+            row
+        })
+        .collect();
+    selection_from_rows(&topo.name, cycles)
+}
+
+/// [`select_exhaustive`] through a [`ShapeCache`]: identical selection,
+/// repeated layer shapes (within and across models) profiled once.
+pub fn select_exhaustive_cached(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> Selection {
+    let cycles = topo
+        .layers
+        .iter()
+        .map(|layer| {
+            let mut row = [0u64; 3];
+            for df in Dataflow::ALL {
+                row[df_index(df)] = cache.simulate_layer(arch, layer, df, opts).total_cycles();
+            }
+            row
+        })
+        .collect();
+    selection_from_rows(&topo.name, cycles)
+}
+
+/// [`select_exhaustive`] with the per-layer profiling runs fanned across
+/// `threads` workers (0 = all cores) and memoized through `cache`.
+///
+/// Rows are assembled back in layer order and the argmin tie-break is
+/// shared with the serial path, so the returned [`Selection`] is
+/// byte-identical to [`select_exhaustive`]'s for any thread count — the
+/// property `rust/tests/parallel_sweep.rs` locks in.
+pub fn select_exhaustive_parallel(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    threads: usize,
+    cache: &ShapeCache,
+) -> Selection {
+    let cycles = parallel_map(threads, &topo.layers, |_, layer| {
         let mut row = [0u64; 3];
         for df in Dataflow::ALL {
-            row[df_index(df)] = simulate_layer(arch, layer, df, opts).total_cycles();
+            row[df_index(df)] = cache.simulate_layer(arch, layer, df, opts).total_cycles();
         }
-        let best = Dataflow::ALL
-            .into_iter()
-            .min_by_key(|&df| row[df_index(df)])
-            .unwrap();
-        per_layer.push(best);
-        cycles.push(row);
-    }
-    Selection {
-        model: topo.name.clone(),
-        per_layer,
-        cycles,
-    }
+        row
+    });
+    selection_from_rows(&topo.name, cycles)
 }
 
 /// Shape-only heuristic selector (no profiling runs; future-work method).

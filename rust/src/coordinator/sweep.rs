@@ -1,0 +1,229 @@
+//! The parallel zoo-sweep engine.
+//!
+//! The paper's whole evaluation is one loop repeated everywhere: for every
+//! model, simulate every layer under all three dataflows, take per-layer
+//! argmins, compare against the static baselines.  That grid —
+//! 7 models x 3 dataflows x N array configs — is embarrassingly parallel
+//! and full of repeated layer shapes, so this module runs it on the
+//! work-stealing pool of [`crate::sim::parallel`] with one shared
+//! [`ShapeCache`]:
+//!
+//! * models fan out across workers ([`sweep_zoo`]);
+//! * within a model the per-layer profiling runs can fan out too
+//!   ([`selector::select_exhaustive_parallel`]);
+//! * every `(arch, layer shape, dataflow, options)` is simulated exactly
+//!   once across the entire sweep, whatever the thread count.
+//!
+//! Determinism: results are assembled by index, and the argmin tie-break is
+//! shared with the serial selector, so a sweep at any thread count is
+//! byte-identical to the single-threaded run (`rust/tests/parallel_sweep.rs`
+//! asserts this, and the `sweep` bench reports the cache hit-rate).
+
+use std::sync::Arc;
+
+use crate::config::ArchConfig;
+use crate::sim::engine::SimOptions;
+use crate::sim::parallel::{effective_threads, parallel_map, CacheStats, ShapeCache};
+use crate::sim::Dataflow;
+use crate::topology::{zoo, Topology};
+
+use super::selector::{self, Selection};
+
+/// One model's sweep outcome (the content of a paper Table I row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSweep {
+    pub model: String,
+    pub selection: Selection,
+    /// Flex total: per-layer winners plus reconfiguration charges.
+    pub flex_cycles: u64,
+    /// Static baselines in `Dataflow::ALL` order (IS, OS, WS).
+    pub static_cycles: [u64; 3],
+}
+
+impl ModelSweep {
+    /// Paper Table I speedup against one static dataflow.
+    pub fn speedup_vs(&self, df: Dataflow) -> f64 {
+        self.static_cycles[selector::df_index(df)] as f64 / self.flex_cycles as f64
+    }
+
+    /// The best static dataflow and its cycle count.
+    pub fn best_static(&self) -> (Dataflow, u64) {
+        Dataflow::ALL
+            .into_iter()
+            .map(|df| (df, self.static_cycles[selector::df_index(df)]))
+            .min_by_key(|&(_, c)| c)
+            .unwrap()
+    }
+}
+
+/// Result of sweeping a set of models on one architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepResult {
+    pub arch: ArchConfig,
+    /// Per-model outcomes in input order.
+    pub models: Vec<ModelSweep>,
+    /// Cache counters measured over this sweep (cumulative when the caller
+    /// shares one cache across several sweeps).
+    pub cache: CacheStats,
+    /// Worker threads the sweep actually used.
+    pub threads: usize,
+}
+
+fn sweep_model(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    layer_threads: usize,
+    cache: &ShapeCache,
+) -> ModelSweep {
+    let selection = if layer_threads > 1 {
+        selector::select_exhaustive_parallel(arch, topo, opts, layer_threads, cache)
+    } else {
+        selector::select_exhaustive_cached(arch, topo, opts, cache)
+    };
+    let transitions = selection
+        .per_layer
+        .windows(2)
+        .filter(|w| w[0] != w[1])
+        .count() as u64;
+    let flex_cycles = selection.flex_compute_cycles() + transitions * arch.reconfig_cycles;
+    let static_cycles = [
+        selection.static_cycles(Dataflow::Is),
+        selection.static_cycles(Dataflow::Os),
+        selection.static_cycles(Dataflow::Ws),
+    ];
+    ModelSweep {
+        model: topo.name.clone(),
+        selection,
+        flex_cycles,
+        static_cycles,
+    }
+}
+
+/// Sweep arbitrary models through the exhaustive selector on `threads`
+/// workers (0 = all cores) with a shared cache.
+///
+/// Models fan out across workers; when there are fewer models than workers
+/// the remaining parallelism is spent inside each model's per-layer
+/// profiling loop instead, so small sweeps still scale.
+pub fn sweep_models(
+    arch: &ArchConfig,
+    models: &[Topology],
+    threads: usize,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> SweepResult {
+    let threads = effective_threads(threads);
+    // Split parallelism between the model level and the layer level.
+    let layer_threads = if models.len() >= threads {
+        1
+    } else {
+        threads.div_ceil(models.len().max(1))
+    };
+    let models = parallel_map(threads, models, |_, topo| {
+        sweep_model(arch, topo, opts, layer_threads, cache)
+    });
+    SweepResult {
+        arch: *arch,
+        models,
+        cache: cache.stats(),
+        threads,
+    }
+}
+
+/// Sweep the full seven-model zoo (paper Table I) on `threads` workers.
+pub fn sweep_zoo(arch: &ArchConfig, threads: usize, opts: SimOptions) -> SweepResult {
+    let cache = ShapeCache::new();
+    sweep_models(arch, &zoo::all_models(), threads, opts, &cache)
+}
+
+/// Sweep the zoo across several array sizes with one cache shared by the
+/// whole grid (the `7 models x 3 dataflows x sizes` plane).  Returns one
+/// [`SweepResult`] per size, in input order; each carries the cumulative
+/// cache counters at the time it finished.
+pub fn sweep_zoo_sizes(
+    sizes: &[u32],
+    threads: usize,
+    opts: SimOptions,
+) -> (Vec<SweepResult>, Arc<ShapeCache>) {
+    let cache = Arc::new(ShapeCache::new());
+    let models = zoo::all_models();
+    let results = sizes
+        .iter()
+        .map(|&s| sweep_models(&ArchConfig::square(s), &models, threads, opts, &cache))
+        .collect();
+    (results, cache)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_sweep_covers_all_models_and_beats_statics() {
+        let sweep = sweep_zoo(&ArchConfig::square(32), 2, SimOptions::default());
+        assert_eq!(sweep.models.len(), 7);
+        for m in &sweep.models {
+            let (_, best) = m.best_static();
+            assert!(m.flex_cycles <= best, "{}", m.model);
+            for df in Dataflow::ALL {
+                assert!(m.speedup_vs(df) >= 1.0, "{} {df}", m.model);
+            }
+        }
+    }
+
+    #[test]
+    fn zoo_sweep_reuses_shapes() {
+        let sweep = sweep_zoo(&ArchConfig::square(32), 2, SimOptions::default());
+        // The zoo repeats layer shapes heavily (identical residual blocks,
+        // repeated inception branches, repeated dw/pw pairs) — the cache
+        // must see real traffic and real reuse.
+        assert!(sweep.cache.hits > 0, "{:?}", sweep.cache);
+        assert!(sweep.cache.hit_rate() > 0.0);
+        assert!(sweep.cache.entries < sweep.cache.hits + sweep.cache.misses);
+    }
+
+    #[test]
+    fn sweep_matches_pipeline_deploy() {
+        use crate::coordinator::FlexPipeline;
+        let arch = ArchConfig::square(16);
+        let sweep = sweep_zoo(&arch, 2, SimOptions::default());
+        let d = FlexPipeline::new(arch).deploy(&zoo::resnet18());
+        let m = sweep
+            .models
+            .iter()
+            .find(|m| m.model == "resnet18")
+            .unwrap();
+        assert_eq!(m.flex_cycles, d.total_cycles());
+        for df in Dataflow::ALL {
+            assert_eq!(
+                m.static_cycles[selector::df_index(df)],
+                d.static_cycles(df),
+                "{df}"
+            );
+        }
+    }
+
+    #[test]
+    fn size_grid_shares_one_cache() {
+        let (results, cache) = sweep_zoo_sizes(&[8, 16], 2, SimOptions::default());
+        assert_eq!(results.len(), 2);
+        // Distinct sizes cannot share entries, but the second sweep of the
+        // same size set reuses everything.
+        let before = cache.stats();
+        let models = zoo::all_models();
+        let again = sweep_models(
+            &ArchConfig::square(8),
+            &models,
+            2,
+            SimOptions::default(),
+            &cache,
+        );
+        assert_eq!(again.cache.entries, before.entries, "no new shapes");
+        assert_eq!(
+            again.models,
+            results[0].models,
+            "re-sweep is byte-identical"
+        );
+    }
+}

@@ -8,12 +8,13 @@
 //!
 //! Threading: the offline registry has no async runtime, so the server uses
 //! `std::thread` + `std::sync::mpsc` (documented substitution, DESIGN.md
-//! §6).  PJRT execution is synchronous anyway, so the serving loop *is* the
-//! worker; callers run it on a dedicated thread (see
-//! `examples/e2e_inference.rs`).
+//! §6).  PJRT execution is synchronous, so serving loops *are* the workers:
+//! [`InferenceServer::serve`] runs one loop on the caller's thread, and
+//! [`InferenceServer::serve_concurrent`] runs several loops draining one
+//! shared bounded queue (`flex-tpu infer --workers N`).
 
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::config::ArchConfig;
@@ -96,14 +97,61 @@ impl InferenceServer {
         &self.timing
     }
 
-    /// Serve requests arriving on `rx` until the channel closes, sending
-    /// each response back through its envelope.  Returns aggregate stats.
-    pub fn serve(&self, rx: Receiver<Envelope>) -> Result<ServerStats> {
+    /// Execute one formed batch: pad, run the PJRT executable, fan the
+    /// responses back out.  Returns `(live requests, host micros)`.
+    fn process_batch(&self, pending: &mut Vec<Envelope>) -> Result<(u64, f64)> {
         let m = self.runtime.manifest();
         let batch = m.batch as usize;
         let img = (m.input_hw * m.input_hw * m.input_channels) as usize;
         let classes = m.num_classes as usize;
 
+        // Pad the tail with zero images (the compiled batch is static).
+        let live = pending.len() as u64;
+        let mut input = vec![0f32; batch * img];
+        for (i, (req, _)) in pending.iter().enumerate() {
+            if req.pixels.len() != img {
+                return Err(Error::Runtime(format!(
+                    "request {} has {} pixels, expected {img}",
+                    req.id,
+                    req.pixels.len()
+                )));
+            }
+            input[i * img..(i + 1) * img].copy_from_slice(&req.pixels);
+        }
+
+        let batch_start = Instant::now();
+        let logits = self.runtime.execute_model(&self.variant, &input)?;
+        let batch_us = batch_start.elapsed().as_micros() as f64;
+
+        for (i, (req, tx)) in pending.drain(..).enumerate() {
+            let out = logits[i * classes..(i + 1) * classes].to_vec();
+            let resp = InferenceResponse::new(req.id, out, self.timing);
+            let _ = tx.send(resp);
+        }
+        Ok((live, batch_us))
+    }
+
+    fn finalize_stats(
+        &self,
+        mut stats: ServerStats,
+        latency_sum_us: f64,
+        wall: std::time::Duration,
+    ) -> ServerStats {
+        stats.wall_us = wall.as_micros() as u64;
+        if stats.requests > 0 {
+            stats.mean_host_latency_us = latency_sum_us / stats.requests as f64;
+            stats.host_throughput_rps = stats.requests as f64 / wall.as_secs_f64();
+            stats.sim_flex_latency_ns = self.timing.flex_ns;
+            stats.sim_flex_throughput_ips = 1e9 / self.timing.flex_ns;
+            stats.sim_speedup_vs_best_static = self.timing.speedup_vs_best_static;
+        }
+        stats
+    }
+
+    /// Serve requests arriving on `rx` until the channel closes, sending
+    /// each response back through its envelope.  Returns aggregate stats.
+    pub fn serve(&self, rx: Receiver<Envelope>) -> Result<ServerStats> {
+        let batch = self.runtime.manifest().batch as usize;
         let start = Instant::now();
         let mut stats = ServerStats::default();
         let mut pending: Vec<Envelope> = Vec::with_capacity(batch);
@@ -123,43 +171,78 @@ impl InferenceServer {
                 }
             }
 
-            // Pad the tail with zero images (the compiled batch is static).
-            let live = pending.len();
-            let mut input = vec![0f32; batch * img];
-            for (i, (req, _)) in pending.iter().enumerate() {
-                if req.pixels.len() != img {
-                    return Err(Error::Runtime(format!(
-                        "request {} has {} pixels, expected {img}",
-                        req.id,
-                        req.pixels.len()
-                    )));
-                }
-                input[i * img..(i + 1) * img].copy_from_slice(&req.pixels);
-            }
-
-            let batch_start = Instant::now();
-            let logits = self.runtime.execute_model(&self.variant, &input)?;
-            let batch_us = batch_start.elapsed().as_micros() as f64;
-
-            for (i, (req, tx)) in pending.drain(..).enumerate() {
-                let out = logits[i * classes..(i + 1) * classes].to_vec();
-                let resp = InferenceResponse::new(req.id, out, self.timing);
-                let _ = tx.send(resp);
-                latency_sum_us += batch_us;
-            }
-            stats.requests += live as u64;
+            let (live, batch_us) = self.process_batch(&mut pending)?;
+            latency_sum_us += batch_us * live as f64;
+            stats.requests += live;
             stats.batches += 1;
         }
 
-        let wall = start.elapsed();
-        stats.wall_us = wall.as_micros() as u64;
-        if stats.requests > 0 {
-            stats.mean_host_latency_us = latency_sum_us / stats.requests as f64;
-            stats.host_throughput_rps = stats.requests as f64 / wall.as_secs_f64();
-            stats.sim_flex_latency_ns = self.timing.flex_ns;
-            stats.sim_flex_throughput_ips = 1e9 / self.timing.flex_ns;
-            stats.sim_speedup_vs_best_static = self.timing.speedup_vs_best_static;
+        Ok(self.finalize_stats(stats, latency_sum_us, start.elapsed()))
+    }
+
+    /// Serve with `workers` threads draining one shared (bounded) queue.
+    ///
+    /// Each worker takes the queue lock just long enough to form a batch
+    /// (blocking `recv` for the batch head, non-blocking drain for the
+    /// rest), then releases it and executes the batch concurrently with the
+    /// other workers — PJRT executables are immutable once compiled, so
+    /// concurrent `execute` calls only contend inside the backend.  Workers
+    /// exit when the channel closes and drains; the first error wins.
+    pub fn serve_concurrent(
+        &self,
+        rx: Receiver<Envelope>,
+        workers: usize,
+    ) -> Result<ServerStats> {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return self.serve(rx);
         }
-        Ok(stats)
+        let batch = self.runtime.manifest().batch as usize;
+        let start = Instant::now();
+        let queue = Mutex::new(rx);
+        // (requests, batches, latency_sum_us) across workers.
+        let agg = Mutex::new((0u64, 0u64, 0f64));
+
+        let run: Result<()> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                handles.push(scope.spawn(|| -> Result<()> {
+                    loop {
+                        let mut pending: Vec<Envelope> = Vec::with_capacity(batch);
+                        {
+                            let guard = queue.lock().expect("queue lock");
+                            match guard.recv() {
+                                Ok(env) => pending.push(env),
+                                Err(_) => return Ok(()), // producers gone
+                            }
+                            while pending.len() < batch {
+                                match guard.try_recv() {
+                                    Ok(env) => pending.push(env),
+                                    Err(_) => break,
+                                }
+                            }
+                        }
+                        let (live, batch_us) = self.process_batch(&mut pending)?;
+                        let mut a = agg.lock().expect("stats lock");
+                        a.0 += live;
+                        a.1 += 1;
+                        a.2 += batch_us * live as f64;
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("server worker panicked")?;
+            }
+            Ok(())
+        });
+        run?;
+
+        let (requests, batches, latency_sum_us) = *agg.lock().expect("stats lock");
+        let stats = ServerStats {
+            requests,
+            batches,
+            ..Default::default()
+        };
+        Ok(self.finalize_stats(stats, latency_sum_us, start.elapsed()))
     }
 }

@@ -3,9 +3,11 @@
 //! ```text
 //! flex-tpu simulate --model resnet18 --size 32 --dataflow os [--memory] [--per-layer]
 //! flex-tpu deploy   --model resnet18 --size 32 [--cmu-out cmu.json] [--heuristic]
-//! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|all> [--size 32] [--csv DIR]
-//! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8]
+//! flex-tpu sweep    [--size 32] [--threads 0]
+//! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|paper|all> [--size 32] [--csv DIR]
+//! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2]
 //! flex-tpu validate [--array 4] [--cases 20]
+//! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0]
 //! ```
 
 use std::path::PathBuf;
@@ -13,7 +15,7 @@ use std::path::PathBuf;
 use flex_tpu::config::{ArchConfig, SimFidelity};
 use flex_tpu::coordinator::cmu::Cmu;
 use flex_tpu::coordinator::pipeline::SelectorKind;
-use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::coordinator::{sweep, FlexPipeline};
 use flex_tpu::inference::{InferenceRequest, InferenceServer};
 use flex_tpu::metrics::Table;
 use flex_tpu::report;
@@ -23,9 +25,12 @@ use flex_tpu::sim::{Dataflow, DwMapping};
 use flex_tpu::topology::{parse_csv, zoo, Topology};
 use flex_tpu::util::cli::{Args, Parsed};
 
-const SUBCOMMANDS: &str = "simulate | deploy | report | infer | validate | dse";
+/// CLI-level result: any error type boxes into the exit diagnostic.
+type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
-fn load_model(name: &str) -> anyhow::Result<Topology> {
+const SUBCOMMANDS: &str = "simulate | deploy | sweep | report | infer | validate | dse";
+
+fn load_model(name: &str) -> CliResult<Topology> {
     if name.ends_with(".csv") {
         Ok(parse_csv(name.as_ref())?)
     } else {
@@ -45,7 +50,7 @@ fn opts(memory: bool, batch: u32) -> SimOptions {
     }
 }
 
-fn emit(name: &str, table: &Table, csv: Option<&str>) -> anyhow::Result<()> {
+fn emit(name: &str, table: &Table, csv: Option<&str>) -> CliResult<()> {
     println!("== {name} ==");
     println!("{}", table.render());
     if let Some(dir) = csv {
@@ -57,7 +62,7 @@ fn emit(name: &str, table: &Table, csv: Option<&str>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn arch_from(p: &Parsed) -> anyhow::Result<ArchConfig> {
+fn arch_from(p: &Parsed) -> CliResult<ArchConfig> {
     let arch = match p.get("config") {
         Some(path) => ArchConfig::from_toml_file(path.as_ref())?,
         None => ArchConfig::square(p.u32("size")?),
@@ -66,10 +71,9 @@ fn arch_from(p: &Parsed) -> anyhow::Result<ArchConfig> {
     Ok(arch)
 }
 
-fn cmd_simulate(p: &Parsed) -> anyhow::Result<()> {
+fn cmd_simulate(p: &Parsed) -> CliResult<()> {
     let topo = load_model(p.req("model")?)?;
-    let df = Dataflow::parse(p.req("dataflow")?)
-        .ok_or_else(|| anyhow::anyhow!("bad --dataflow (use is/os/ws)"))?;
+    let df = Dataflow::parse(p.req("dataflow")?).ok_or("bad --dataflow (use is/os/ws)")?;
     let arch = arch_from(p)?;
     let size = arch.array_rows;
     let stats = simulate_network(
@@ -100,7 +104,7 @@ fn cmd_simulate(p: &Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_deploy(p: &Parsed) -> anyhow::Result<()> {
+fn cmd_deploy(p: &Parsed) -> CliResult<()> {
     let topo = load_model(p.req("model")?)?;
     let selector = if p.is_set("heuristic") {
         SelectorKind::Heuristic
@@ -138,10 +142,54 @@ fn cmd_deploy(p: &Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_report(p: &Parsed) -> anyhow::Result<()> {
+fn cmd_sweep(p: &Parsed) -> CliResult<()> {
+    let arch = arch_from(p)?;
+    let threads = p.u64("threads")? as usize;
+    let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let result = sweep::sweep_zoo(&arch, threads, sim);
+    let mut t = Table::new(&[
+        "Model",
+        "Flex Cycles",
+        "IS",
+        "OS",
+        "WS",
+        "Best Static",
+        "Speedup",
+    ]);
+    for m in &result.models {
+        let (best_df, best) = m.best_static();
+        t.row(vec![
+            m.model.clone(),
+            m.flex_cycles.to_string(),
+            m.static_cycles[0].to_string(),
+            m.static_cycles[1].to_string(),
+            m.static_cycles[2].to_string(),
+            format!("{best_df} ({best})"),
+            format!("{:.3}x", best as f64 / m.flex_cycles as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "swept {} models on {} threads ({}x{} array)",
+        result.models.len(),
+        result.threads,
+        arch.array_rows,
+        arch.array_cols
+    );
+    println!(
+        "shape cache: {} entries, {} hits / {} lookups ({:.1}% hit rate)",
+        result.cache.entries,
+        result.cache.hits,
+        result.cache.hits + result.cache.misses,
+        result.cache.hit_rate() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_report(p: &Parsed) -> CliResult<()> {
     let what = p
         .positional(1)
-        .ok_or_else(|| anyhow::anyhow!("report needs an artifact name (table1/table2/fig1/fig5/fig6/fig7/all)"))?;
+        .ok_or("report needs an artifact name (table1/table2/fig1/fig5/fig6/fig7/paper/all)")?;
     let size = p.u32("size")?;
     let csv = p.get("csv");
     match what {
@@ -161,21 +209,25 @@ fn cmd_report(p: &Parsed) -> anyhow::Result<()> {
             emit("fig7", &report::fig7(), csv)?;
             emit("paper_comparison", &report::paper_comparison(), csv)?;
         }
-        other => anyhow::bail!("unknown report {other:?}"),
+        other => return Err(format!("unknown report {other:?}").into()),
     }
     Ok(())
 }
 
-fn cmd_infer(p: &Parsed) -> anyhow::Result<()> {
+fn cmd_infer(p: &Parsed) -> CliResult<()> {
     let artifacts = PathBuf::from(p.req("artifacts")?);
     let requests = p.u64("requests")?;
     let size = p.u32("size")?;
+    let workers = (p.u64("workers")? as usize).max(1);
     let rt = Runtime::load(&artifacts)?;
     println!("platform: {}", rt.platform());
     let manifest = rt.manifest().clone();
     let server = InferenceServer::new(rt, ArchConfig::square(size))?;
 
-    let (tx, rx) = std::sync::mpsc::channel();
+    // Bounded front door: producers block once the queue holds 4 compiled
+    // batches, which is the back-pressure a real serving door applies.
+    let depth = (manifest.batch as usize * 4).max(1);
+    let (tx, rx) = std::sync::mpsc::sync_channel(depth);
     let img = (manifest.input_hw * manifest.input_hw * manifest.input_channels) as usize;
     let producer = std::thread::spawn(move || {
         let mut response_rxs = Vec::new();
@@ -197,11 +249,11 @@ fn cmd_infer(p: &Parsed) -> anyhow::Result<()> {
         }
         classes
     });
-    let stats = server.serve(rx)?;
+    let stats = server.serve_concurrent(rx, workers)?;
     let classes = producer.join().expect("producer join");
     println!("class histogram: {classes:?}");
     println!(
-        "served {} requests in {} batches; host: {:.1} req/s, {:.0} us/req",
+        "served {} requests in {} batches on {workers} workers; host: {:.1} req/s, {:.0} us/req",
         stats.requests, stats.batches, stats.host_throughput_rps, stats.mean_host_latency_us
     );
     println!(
@@ -213,7 +265,7 @@ fn cmd_infer(p: &Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_validate(p: &Parsed) -> anyhow::Result<()> {
+fn cmd_validate(p: &Parsed) -> CliResult<()> {
     use flex_tpu::arch::{FlexArray, Mat};
     use flex_tpu::sim::{dataflow, Gemm};
     use flex_tpu::util::rng::Rng;
@@ -233,13 +285,17 @@ fn cmd_validate(p: &Parsed) -> anyhow::Result<()> {
             arr.configure(df);
             let run = arr.run_gemm(&a, &b);
             let plan = dataflow::plan(&Gemm::new(m as u64, k as u64, n as u64), &arch, df);
-            anyhow::ensure!(run.out == want, "case {case}: values diverge ({df} {m}x{k}x{n})");
-            anyhow::ensure!(
-                run.cycles == plan.compute_cycles(),
-                "case {case}: cycles diverge ({df} {m}x{k}x{n}): functional {} vs analytical {}",
-                run.cycles,
-                plan.compute_cycles()
-            );
+            if run.out != want {
+                return Err(format!("case {case}: values diverge ({df} {m}x{k}x{n})").into());
+            }
+            if run.cycles != plan.compute_cycles() {
+                return Err(format!(
+                    "case {case}: cycles diverge ({df} {m}x{k}x{n}): functional {} vs analytical {}",
+                    run.cycles,
+                    plan.compute_cycles()
+                )
+                .into());
+            }
         }
     }
     println!(
@@ -248,16 +304,17 @@ fn cmd_validate(p: &Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_dse(p: &Parsed) -> anyhow::Result<()> {
+fn cmd_dse(p: &Parsed) -> CliResult<()> {
     use flex_tpu::coordinator::dse;
     let topo = load_model(p.req("model")?)?;
+    let threads = p.u64("threads")? as usize;
     let sizes: Vec<u32> = p
         .req("sizes")?
         .split(',')
         .map(|s| s.trim().parse::<u32>())
         .collect::<Result<_, _>>()
-        .map_err(|_| anyhow::anyhow!("--sizes must be comma-separated integers"))?;
-    let points = dse::sweep(&topo, &sizes, SimOptions::default());
+        .map_err(|_| "--sizes must be comma-separated integers")?;
+    let points = dse::sweep_parallel(&topo, &sizes, SimOptions::default(), threads);
     let front = dse::pareto_latency_area(&points);
     let mut t = Table::new(&[
         "Size",
@@ -282,6 +339,7 @@ fn cmd_dse(p: &Parsed) -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    println!("evaluated {} design points", points.len());
     if let Some(best) = dse::best_edp(&points) {
         println!(
             "minimum-EDP design: {}x{} {} ({:.3} ms, {:.3} mm2)",
@@ -291,7 +349,7 @@ fn cmd_dse(p: &Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let spec = Args::new(
         "flex-tpu",
@@ -310,6 +368,8 @@ fn main() -> anyhow::Result<()> {
     .flag("batch", Some("1"), "inference batch size (simulate)")
     .flag("config", None, "TOML arch config file (overrides --size)")
     .flag("sizes", Some("8,16,32,64,128"), "comma-separated sizes for dse")
+    .flag("threads", Some("0"), "worker threads for sweep/dse (0 = all cores)")
+    .flag("workers", Some("2"), "serving threads for infer")
     .switch("memory", "enable the SRAM/DRAM stall model")
     .switch("per-layer", "print per-layer detail")
     .switch("heuristic", "use the shape-heuristic selector (future-work mode)");
@@ -324,6 +384,7 @@ fn main() -> anyhow::Result<()> {
     match parsed.positional(0) {
         Some("simulate") => cmd_simulate(&parsed),
         Some("deploy") => cmd_deploy(&parsed),
+        Some("sweep") => cmd_sweep(&parsed),
         Some("report") => cmd_report(&parsed),
         Some("infer") => cmd_infer(&parsed),
         Some("validate") => cmd_validate(&parsed),

@@ -1,10 +1,13 @@
 //! Table I: Flex-TPU vs conventional static-dataflow TPU clock cycles.
 
 
+use std::sync::Arc;
+
 use crate::config::ArchConfig;
 use crate::coordinator::FlexPipeline;
 use crate::metrics::{mean, sci, Table};
 use crate::sim::engine::SimOptions;
+use crate::sim::parallel::{parallel_map, ShapeCache};
 use crate::sim::Dataflow;
 use crate::topology::zoo;
 
@@ -21,28 +24,34 @@ pub struct Table1Row {
 
 /// Compute Table I for all zoo models on an `S x S` array.
 pub fn table1_rows(s: u32, opts: SimOptions) -> Vec<Table1Row> {
+    table1_rows_with(s, opts, 1)
+}
+
+/// [`table1_rows`] with the per-model deployments fanned across `threads`
+/// workers (0 = all cores) and a sweep-wide [`ShapeCache`].  Row order and
+/// every number are identical to the serial path.
+pub fn table1_rows_with(s: u32, opts: SimOptions, threads: usize) -> Vec<Table1Row> {
     let arch = ArchConfig::square(s);
-    let pipeline = FlexPipeline::new(arch).with_options(opts);
-    zoo::all_models()
-        .iter()
-        .map(|topo| {
-            let d = pipeline.deploy(topo);
-            let flex = d.total_cycles();
-            let static_cycles = Dataflow::ALL.map(|df| d.static_cycles(df));
-            let speedups = Dataflow::ALL.map(|df| d.speedup_vs(df));
-            Table1Row {
-                model: topo.name.clone(),
-                flex_cycles: flex,
-                static_cycles,
-                speedups,
-            }
-        })
-        .collect()
+    let cache = Arc::new(ShapeCache::new());
+    let pipeline = FlexPipeline::new(arch).with_options(opts).with_cache(cache);
+    let models = zoo::all_models();
+    parallel_map(threads, &models, |_, topo| {
+        let d = pipeline.deploy(topo);
+        let flex = d.total_cycles();
+        let static_cycles = Dataflow::ALL.map(|df| d.static_cycles(df));
+        let speedups = Dataflow::ALL.map(|df| d.speedup_vs(df));
+        Table1Row {
+            model: topo.name.clone(),
+            flex_cycles: flex,
+            static_cycles,
+            speedups,
+        }
+    })
 }
 
 /// Render Table I in the paper's layout (one row per model x dataflow).
 pub fn table1(s: u32) -> Table {
-    let rows = table1_rows(s, SimOptions::default());
+    let rows = table1_rows_with(s, SimOptions::default(), 0);
     let mut t = Table::new(&[
         "Model",
         "Flex-TPU Cycles",

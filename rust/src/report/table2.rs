@@ -7,7 +7,8 @@ use crate::metrics::Table;
 /// The paper's three synthesized sizes.
 pub const SIZES: [u32; 3] = [8, 16, 32];
 
-/// Render Table II (same columns as the paper).
+/// Render Table II (same columns as the paper).  The three synthesis runs
+/// are independent, so they fan out on the shared worker pool.
 pub fn table2() -> Table {
     let cons = SynthConstraints::default();
     let mut t = Table::new(&[
@@ -22,10 +23,10 @@ pub fn table2() -> Table {
         "Flex CPD (ns)",
         "CPD Ovh",
     ]);
-    for s in SIZES {
+    let rows = crate::sim::parallel::parallel_map(0, &SIZES, |_, &s| {
         let conv = synthesize(s, PeVariant::Conventional, &cons);
         let flex = synthesize(s, PeVariant::Flex, &cons);
-        t.row(vec![
+        vec![
             format!("{s}x{s}"),
             format!("{:.3}", conv.area_mm2),
             format!("{:.3}", flex.area_mm2),
@@ -35,8 +36,14 @@ pub fn table2() -> Table {
             format!("{:.3}%", (flex.power_mw / conv.power_mw - 1.0) * 100.0),
             format!("{:.2}", conv.critical_path_ns),
             format!("{:.2}", flex.critical_path_ns),
-            format!("{:.2}%", (flex.critical_path_ns / conv.critical_path_ns - 1.0) * 100.0),
-        ]);
+            format!(
+                "{:.2}%",
+                (flex.critical_path_ns / conv.critical_path_ns - 1.0) * 100.0
+            ),
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t
 }

@@ -10,6 +10,7 @@ use crate::config::{ArchConfig, SimFidelity};
 use crate::sim::dataflow::{self, OperandTraffic};
 use crate::sim::gemm::{layer_gemms_batched, DwMapping};
 use crate::sim::memory::{self, DramTraffic};
+use crate::sim::parallel::ShapeCache;
 use crate::sim::Dataflow;
 use crate::topology::{Layer, Topology};
 
@@ -182,6 +183,52 @@ pub fn simulate_network(
 ) -> NetworkStats {
     let dataflows = vec![df; topo.layers.len()];
     let mut stats = simulate_network_per_layer(arch, topo, &dataflows, opts);
+    stats.reconfig_cycles = 0; // static hardware never reconfigures
+    stats
+}
+
+/// [`simulate_network_per_layer`] through a [`ShapeCache`]: identical
+/// output, repeated layer shapes simulated once.
+pub fn simulate_network_per_layer_cached(
+    arch: &ArchConfig,
+    topo: &Topology,
+    dataflows: &[Dataflow],
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> NetworkStats {
+    assert_eq!(
+        dataflows.len(),
+        topo.layers.len(),
+        "one dataflow per layer required"
+    );
+    let layers: Vec<LayerStats> = topo
+        .layers
+        .iter()
+        .zip(dataflows)
+        .map(|(l, &df)| cache.simulate_layer(arch, l, df, opts))
+        .collect();
+    let reconfig_cycles = dataflows
+        .windows(2)
+        .filter(|w| w[0] != w[1])
+        .count() as u64
+        * arch.reconfig_cycles;
+    NetworkStats {
+        model: topo.name.clone(),
+        layers,
+        reconfig_cycles,
+    }
+}
+
+/// [`simulate_network`] through a [`ShapeCache`].
+pub fn simulate_network_cached(
+    arch: &ArchConfig,
+    topo: &Topology,
+    df: Dataflow,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> NetworkStats {
+    let dataflows = vec![df; topo.layers.len()];
+    let mut stats = simulate_network_per_layer_cached(arch, topo, &dataflows, opts, cache);
     stats.reconfig_cycles = 0; // static hardware never reconfigures
     stats
 }

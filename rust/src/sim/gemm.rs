@@ -36,7 +36,7 @@ impl Gemm {
 }
 
 /// How depthwise convolutions are lowered onto the array.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum DwMapping {
     /// ScaleSim-literal: simulate the topology row exactly as written —
     /// `K = fh*fw*C`, `N = num_filters` (1 in stock MobileNet CSVs).

@@ -20,12 +20,14 @@ pub mod dataflow;
 pub mod engine;
 pub mod gemm;
 pub mod memory;
+pub mod parallel;
 pub mod roofline;
 pub mod trace;
 
 pub use dataflow::{FoldPlan, OperandTraffic};
 pub use engine::{simulate_layer, simulate_network, LayerStats, NetworkStats};
 pub use gemm::{layer_gemms, layer_gemms_batched, DwMapping, Gemm};
+pub use parallel::{parallel_map, CacheStats, ShapeCache};
 
 
 /// The three systolic dataflows of the paper (and the CMU's alphabet).

@@ -1,0 +1,362 @@
+//! Parallel execution substrate + layer-shape memoization.
+//!
+//! Two pieces, both std-only (the offline registry has no rayon/dashmap —
+//! DESIGN.md §6):
+//!
+//! * [`parallel_map`] — a scoped work-stealing thread pool.  Each worker
+//!   owns a deque of item indices (dealt round-robin), pops its own front,
+//!   and steals from the back of a victim when it runs dry, so skewed item
+//!   costs (VGG-13 vs AlexNet; deep layers vs shortcut convs) balance out.
+//!   Results land in input order, which keeps every caller byte-identical
+//!   to the serial path.
+//! * [`ShapeCache`] — memoizes [`simulate_layer`] on the *shape* of the
+//!   work: `(array geometry + memory config, layer geometry, dataflow,
+//!   SimOptions)`.  Conv nets repeat layer shapes relentlessly (ResNet-18's
+//!   four `Conv2_*` rows are identical; MobileNet's five mid `_dw`/`_pw`
+//!   pairs too), and the zoo sweep re-simulates every shape under three
+//!   dataflows across seven models and many array sizes — the cache
+//!   collapses all repeats to one simulation each.
+//!
+//! The cache key deliberately excludes [`ArchConfig::clock_ns`] and
+//! [`ArchConfig::reconfig_cycles`]: neither influences per-layer cycle
+//! counts (clock converts cycles to wall time downstream; reconfiguration
+//! is charged between layers by the network roll-up).
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{ArchConfig, SimFidelity};
+use crate::sim::engine::{simulate_layer, LayerStats, SimOptions};
+use crate::sim::gemm::DwMapping;
+use crate::sim::Dataflow;
+use crate::topology::{Layer, LayerKind};
+
+/// Resolve a thread-count request: `0` means "all available cores".
+pub fn effective_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Map `f` over `items` on `threads` workers (0 = auto), preserving input
+/// order in the result.  Falls back to a plain serial loop for one worker
+/// or one item, so single-threaded callers pay nothing.
+///
+/// Scheduling: indices are dealt round-robin into per-worker deques; a
+/// worker pops its own queue front-first and steals back-first from the
+/// first non-empty victim once it runs dry.  Every index is executed
+/// exactly once; panics in `f` propagate (the scope joins all workers).
+pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = effective_threads(threads).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| Mutex::new((w..items.len()).step_by(threads).collect()))
+        .collect();
+    let results: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let queues = &queues;
+            let results = &results;
+            let f = &f;
+            scope.spawn(move || loop {
+                let next = {
+                    let popped = queues[w].lock().expect("queue lock").pop_front();
+                    match popped {
+                        Some(i) => Some(i),
+                        None => queues
+                            .iter()
+                            .enumerate()
+                            .filter(|&(v, _)| v != w)
+                            .find_map(|(_, q)| q.lock().expect("queue lock").pop_back()),
+                    }
+                };
+                match next {
+                    Some(i) => {
+                        let r = f(i, &items[i]);
+                        *results[i].lock().expect("result lock") = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("result lock")
+                .expect("every index executed exactly once")
+        })
+        .collect()
+}
+
+/// Everything [`simulate_layer`]'s result depends on, with `Hash`/`Eq`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ShapeKey {
+    rows: u32,
+    cols: u32,
+    ifmap_sram_kib: u64,
+    filter_sram_kib: u64,
+    ofmap_sram_kib: u64,
+    dram_bytes_per_cycle: u64,
+    bytes_per_element: u64,
+    kind: LayerKind,
+    ifmap_h: u32,
+    ifmap_w: u32,
+    filt_h: u32,
+    filt_w: u32,
+    channels: u32,
+    num_filters: u32,
+    stride: u32,
+    dataflow: Dataflow,
+    fidelity: SimFidelity,
+    dw_mapping: DwMapping,
+    batch: u32,
+}
+
+impl ShapeKey {
+    fn new(arch: &ArchConfig, layer: &Layer, df: Dataflow, opts: SimOptions) -> Self {
+        Self {
+            rows: arch.array_rows,
+            cols: arch.array_cols,
+            ifmap_sram_kib: arch.memory.ifmap_sram_kib,
+            filter_sram_kib: arch.memory.filter_sram_kib,
+            ofmap_sram_kib: arch.memory.ofmap_sram_kib,
+            dram_bytes_per_cycle: arch.memory.dram_bytes_per_cycle,
+            bytes_per_element: arch.memory.bytes_per_element,
+            kind: layer.kind,
+            ifmap_h: layer.ifmap_h,
+            ifmap_w: layer.ifmap_w,
+            filt_h: layer.filt_h,
+            filt_w: layer.filt_w,
+            channels: layer.channels,
+            num_filters: layer.num_filters,
+            stride: layer.stride,
+            dataflow: df,
+            fidelity: opts.fidelity,
+            dw_mapping: opts.dw_mapping,
+            batch: opts.batch,
+        }
+    }
+
+    fn shard(&self) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() as usize) % SHARD_COUNT
+    }
+}
+
+const SHARD_COUNT: usize = 16;
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Distinct `(arch, shape, dataflow, options)` entries resident.
+    pub entries: u64,
+}
+
+impl CacheStats {
+    /// Hits over total lookups (0.0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe memo table for [`simulate_layer`] results.
+///
+/// Sharded `Mutex<HashMap>` (16 shards keyed by the shape hash) so parallel
+/// sweep workers rarely contend.  Values are stored with an empty layer
+/// name; [`ShapeCache::simulate_layer`] stamps the caller's layer name back
+/// on, so cached and uncached paths return identical `LayerStats`.
+#[derive(Debug)]
+pub struct ShapeCache {
+    shards: Vec<Mutex<HashMap<ShapeKey, LayerStats>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ShapeCache {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARD_COUNT)
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Memoized [`simulate_layer`]: identical output, one simulation per
+    /// distinct shape.  The (rare, benign) race where two threads miss the
+    /// same key simultaneously just computes it twice; both results are
+    /// equal, and the second insert overwrites the first.
+    pub fn simulate_layer(
+        &self,
+        arch: &ArchConfig,
+        layer: &Layer,
+        df: Dataflow,
+        opts: SimOptions,
+    ) -> LayerStats {
+        let key = ShapeKey::new(arch, layer, df, opts);
+        let shard = &self.shards[key.shard()];
+        if let Some(cached) = shard.lock().expect("cache lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            let mut stats = cached.clone();
+            stats.name = layer.name.clone();
+            return stats;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let stats = simulate_layer(arch, layer, df, opts);
+        let mut to_cache = stats.clone();
+        to_cache.name = String::new();
+        shard.lock().expect("cache lock").insert(key, to_cache);
+        stats
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self
+                .shards
+                .iter()
+                .map(|s| s.lock().expect("cache lock").len() as u64)
+                .sum(),
+        }
+    }
+}
+
+impl Default for ShapeCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::zoo;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        for threads in [1, 2, 4, 7] {
+            let out = parallel_map(threads, &items, |i, &x| {
+                assert_eq!(i as u64, x);
+                x * x
+            });
+            let want: Vec<u64> = items.iter().map(|x| x * x).collect();
+            assert_eq!(out, want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_map_edge_cases() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(4, &empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(4, &[7u32], |_, &x| x + 1), vec![8]);
+        // More threads than items.
+        assert_eq!(parallel_map(16, &[1u32, 2], |_, &x| x), vec![1, 2]);
+        // threads = 0 resolves to available cores.
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+
+    #[test]
+    fn parallel_map_runs_every_item_once() {
+        let counter = AtomicU64::new(0);
+        let items: Vec<u32> = (0..257).collect();
+        let out = parallel_map(8, &items, |_, &x| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 257);
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_shapes() {
+        let cache = ShapeCache::new();
+        let arch = ArchConfig::square(32);
+        let topo = zoo::resnet18();
+        // The four Conv2_* rows share one shape: 1 miss + 3 hits per df.
+        let conv2: Vec<&Layer> = topo
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("Conv2_"))
+            .collect();
+        assert_eq!(conv2.len(), 4);
+        for layer in &conv2 {
+            for df in Dataflow::ALL {
+                cache.simulate_layer(&arch, layer, df, SimOptions::default());
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 3, "one miss per dataflow");
+        assert_eq!(s.hits, 9, "three repeats per dataflow");
+        assert_eq!(s.entries, 3);
+        assert!(s.hit_rate() > 0.7);
+    }
+
+    #[test]
+    fn cached_result_identical_to_uncached() {
+        let cache = ShapeCache::new();
+        let arch = ArchConfig::square(16);
+        for topo in [zoo::alexnet(), zoo::mobilenet()] {
+            for layer in &topo.layers {
+                for df in Dataflow::ALL {
+                    let direct = simulate_layer(&arch, layer, df, SimOptions::default());
+                    // Twice: once filling, once hitting.
+                    let miss = cache.simulate_layer(&arch, layer, df, SimOptions::default());
+                    let hit = cache.simulate_layer(&arch, layer, df, SimOptions::default());
+                    assert_eq!(direct, miss, "{} {df}", layer.name);
+                    assert_eq!(direct, hit, "{} {df}", layer.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_distinguishes_options_and_arch() {
+        let cache = ShapeCache::new();
+        let layer = zoo::alexnet().layers[0].clone();
+        let base = SimOptions::default();
+        let batched = SimOptions { batch: 8, ..base };
+        cache.simulate_layer(&ArchConfig::square(8), &layer, Dataflow::Os, base);
+        cache.simulate_layer(&ArchConfig::square(16), &layer, Dataflow::Os, base);
+        cache.simulate_layer(&ArchConfig::square(8), &layer, Dataflow::Os, batched);
+        cache.simulate_layer(&ArchConfig::square(8), &layer, Dataflow::Ws, base);
+        let s = cache.stats();
+        assert_eq!(s.misses, 4);
+        assert_eq!(s.hits, 0);
+        // clock_ns is deliberately not part of the key.
+        let mut arch = ArchConfig::square(8);
+        arch.clock_ns = 5.0;
+        cache.simulate_layer(&arch, &layer, Dataflow::Os, base);
+        assert_eq!(cache.stats().hits, 1);
+    }
+}

@@ -20,7 +20,7 @@ macro_rules! zoo_model {
     };
 }
 
-zoo_model!(alexnet, "alexnet", "alexnet.csv", "AlexNet (Krizhevsky 2012): 5 conv + 3 FC.");
+zoo_model!(alexnet, "alexnet", "alexnet.csv", "AlexNet (Krizhevsky 2012): 5 conv + classifier FC.");
 zoo_model!(
     faster_rcnn,
     "faster_rcnn",

@@ -1,0 +1,147 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment does not ship the real `xla` crate
+//! (`xla_extension` bindings), so this crate provides the exact API surface
+//! `flex_tpu::runtime` compiles against.  Every entry point that would need
+//! the native PJRT library returns [`Error::Unavailable`] instead, which the
+//! runtime surfaces as a normal `flex_tpu::Error::Runtime` — callers (and
+//! `rust/tests/runtime_e2e.rs`, which skips when `artifacts/` is absent)
+//! degrade gracefully.
+//!
+//! To run real artifacts, point the `xla` dependency of the `flex-tpu`
+//! package at the actual bindings; no `flex_tpu` source changes are needed.
+
+use std::fmt;
+
+/// Error type mirroring the shape of the real bindings' error.
+#[derive(Debug)]
+pub enum Error {
+    /// The native PJRT backend is not linked into this build.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT backend not available in this build \
+                 (the workspace links the offline xla stub; see rust/xla-stub)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A PJRT client handle (stub: carries no state).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// In the real bindings this initializes the CPU PJRT plugin; the stub
+    /// has nothing to initialize and reports the backend as unavailable.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructed).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+/// A compiled executable (stub: never constructed).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Generic over the input literal type like the real bindings.
+    pub fn execute<L>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer returned by execution (stub: never constructed).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal value.  Construction works (it is pure host data in
+/// the real bindings too); anything that would touch PJRT fails.
+#[derive(Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Self { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub has no backend");
+        assert!(err.to_string().contains("PJRT backend not available"));
+    }
+
+    #[test]
+    fn literal_host_ops_work() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[2, 2]).is_ok());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
