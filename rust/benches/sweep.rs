@@ -1,13 +1,14 @@
 //! Bench for the parallel zoo-sweep engine: full-zoo exhaustive selection
-//! at 1/2/4/8 threads, the multi-size grid, and the ShapeCache hit-rate —
-//! the scaling story behind every table/figure regeneration.
+//! at 1/2/4/8 threads, the multi-size grid, the multi-chip shard sweep,
+//! and the ShapeCache hit-rate — the scaling story behind every
+//! table/figure regeneration.
 //!
 //! Run: `cargo bench --bench sweep` (FLEX_TPU_BENCH_QUICK=1 for a fast pass).
 
 mod harness;
 
 use flex_tpu::config::ArchConfig;
-use flex_tpu::coordinator::sweep::{sweep_zoo, sweep_zoo_sizes};
+use flex_tpu::coordinator::sweep::{sweep_zoo, sweep_zoo_sharded, sweep_zoo_sizes};
 use flex_tpu::sim::engine::SimOptions;
 
 fn main() {
@@ -55,6 +56,25 @@ fn main() {
         "zoo/sizes-8-16-32-64",
         "grid shape-cache hit rate",
         format!("{:.1}%", cache.stats().hit_rate() * 100.0),
+    );
+
+    // Multi-chip shard sweep: the 3x3 (dataflow x strategy) grid per layer.
+    for chips in [2u32, 4] {
+        b.bench(&format!("zoo/32x32/{chips}chips/4t"), || {
+            sweep_zoo_sharded(&arch, chips, 4, opts)
+        });
+    }
+    let sharded = sweep_zoo_sharded(&arch, 4, 4, opts);
+    let serial_sharded = sweep_zoo_sharded(&arch, 4, 1, opts);
+    assert_eq!(
+        sharded.models, serial_sharded.models,
+        "sharded sweep diverged across thread counts"
+    );
+    let total: f64 = sharded.models.iter().map(|m| m.speedup_vs_single_chip()).sum();
+    b.metric(
+        "zoo/32x32/4chips",
+        "mean speedup vs 1 chip",
+        format!("{:.3}x", total / sharded.models.len() as f64),
     );
     b.finish();
 }

@@ -29,8 +29,11 @@ use super::pe::{FlexPe, PeConfig};
 /// Result of running one GEMM through the functional array.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GemmRun {
+    /// The computed output matrix.
     pub out: Mat,
+    /// Cycles the functional array took (compute only).
     pub cycles: u64,
+    /// Folds executed.
     pub folds: u64,
 }
 
@@ -52,6 +55,7 @@ pub struct FlexArray {
 }
 
 impl FlexArray {
+    /// Build an idle `rows x cols` array in the OS configuration.
     pub fn new(rows: usize, cols: usize) -> Self {
         assert!(rows > 0 && cols > 0, "array must be non-empty");
         Self {
@@ -67,18 +71,22 @@ impl FlexArray {
         }
     }
 
+    /// Array rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Array columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Current PE configuration (what the CMU last broadcast).
     pub fn config(&self) -> PeConfig {
         self.config
     }
 
+    /// Configuration changes performed so far.
     pub fn reconfig_count(&self) -> u64 {
         self.reconfig_count
     }

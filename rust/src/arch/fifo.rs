@@ -24,6 +24,7 @@ pub struct Fifo {
 }
 
 impl Fifo {
+    /// FIFO with a fixed `capacity` (> 0).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "FIFO capacity must be positive");
         Self {
@@ -34,22 +35,27 @@ impl Fifo {
         }
     }
 
+    /// Configured capacity.
     pub fn capacity(&self) -> usize {
         self.buf.len()
     }
 
+    /// Entries currently queued.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// True when at capacity (a push would stall the producer).
     pub fn is_full(&self) -> bool {
         self.len == self.buf.len()
     }
 
+    /// Deepest occupancy observed (sizes the hardware FIFO).
     pub fn high_water(&self) -> usize {
         self.high_water
     }

@@ -3,7 +3,9 @@
 /// Row-major `i32` matrix.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Mat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
     data: Vec<i32>,
 }
@@ -42,6 +44,7 @@ impl Mat {
         Self { rows, cols, data }
     }
 
+    /// Element at `(r, c)` (panics out of bounds).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> i32 {
         self.data[r * self.cols + c]
@@ -58,11 +61,13 @@ impl Mat {
         }
     }
 
+    /// Overwrite element `(r, c)`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: i32) {
         self.data[r * self.cols + c] = v;
     }
 
+    /// Accumulate `v` into element `(r, c)`.
     #[inline]
     pub fn add(&mut self, r: usize, c: usize, v: i32) {
         self.data[r * self.cols + c] += v;

@@ -37,6 +37,32 @@ impl Default for MemoryConfig {
     }
 }
 
+/// Inter-chip interconnect model for multi-chip sharding.
+///
+/// [`crate::sim::shard`] composes per-shard cycle counts with a ring
+/// all-gather whose per-step cost is
+/// `link_latency_cycles + ceil(shard_bytes / link_bytes_per_cycle)`.
+/// Cycles here are cycles of the chip clock, so the link bandwidth is
+/// expressed relative to the same clock the arrays run at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InterconnectConfig {
+    /// Fixed cost of one inter-chip transfer step (serialization + hop
+    /// latency), in cycles.
+    pub link_latency_cycles: u64,
+    /// Per-link bandwidth in bytes per cycle.
+    pub link_bytes_per_cycle: u64,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        // ICI-class links: DRAM-like bandwidth with a real per-hop cost.
+        Self {
+            link_latency_cycles: 100,
+            link_bytes_per_cycle: 64,
+        }
+    }
+}
+
 /// One TPU instance: the systolic array plus its memory system and clock.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ArchConfig {
@@ -53,9 +79,19 @@ pub struct ArchConfig {
     /// Clock period in nanoseconds for wall-clock conversions (Fig. 6 uses
     /// the synthesized critical path instead; this is the constraint clock).
     pub clock_ns: f64,
+    /// Identical chips available for sharding a layer (1 = single chip,
+    /// the paper's setting).  Per-layer sharding lives in
+    /// [`crate::sim::shard`]; this is only the configured default.
+    pub chips: u32,
+    /// Inter-chip link model used when `chips > 1`.
+    pub interconnect: InterconnectConfig,
 }
 
 impl ArchConfig {
+    /// Largest chip count [`ArchConfig::validate`] accepts; sharding a
+    /// single layer further than this is outside the model's regime.
+    pub const MAX_CHIPS: u32 = 1024;
+
     /// Square `n x n` array with default memory — the paper's configurations.
     pub fn square(n: u32) -> Self {
         Self {
@@ -64,7 +100,15 @@ impl ArchConfig {
             memory: MemoryConfig::default(),
             reconfig_cycles: 1,
             clock_ns: 10.0,
+            chips: 1,
+            interconnect: InterconnectConfig::default(),
         }
+    }
+
+    /// Same architecture with a different configured chip count.
+    pub fn with_chips(mut self, chips: u32) -> Self {
+        self.chips = chips;
+        self
     }
 
     /// Total number of PEs.
@@ -97,12 +141,24 @@ impl ArchConfig {
                 self.clock_ns
             )));
         }
+        if self.chips == 0 || self.chips > Self::MAX_CHIPS {
+            return Err(Error::InvalidConfig(format!(
+                "chips must be in 1..={}, got {}",
+                Self::MAX_CHIPS,
+                self.chips
+            )));
+        }
+        if self.interconnect.link_bytes_per_cycle == 0 {
+            return Err(Error::InvalidConfig(
+                "interconnect link bandwidth must be > 0".into(),
+            ));
+        }
         Ok(())
     }
 
     /// Load from a TOML-subset file (see [`crate::util::kvconf`]); missing
-    /// keys fall back to the defaults of [`ArchConfig::square`] /
-    /// [`MemoryConfig::default`].
+    /// keys fall back to the defaults of [`ArchConfig::square`] and
+    /// [`MemoryConfig`] / [`InterconnectConfig`].
     pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
         Self::from_toml_str(&std::fs::read_to_string(path)?)
     }
@@ -111,6 +167,14 @@ impl ArchConfig {
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let kv = KvConf::parse(text)?;
         let default_mem = MemoryConfig::default();
+        let default_link = InterconnectConfig::default();
+        let chips = kv.u64_or("chips", 1)?;
+        if chips > u64::from(Self::MAX_CHIPS) {
+            return Err(Error::InvalidConfig(format!(
+                "chips must be in 1..={}, got {chips}",
+                Self::MAX_CHIPS
+            )));
+        }
         let cfg = ArchConfig {
             array_rows: kv.u64_or("array_rows", 32)? as u32,
             array_cols: kv.u64_or("array_cols", 32)? as u32,
@@ -126,6 +190,17 @@ impl ArchConfig {
             },
             reconfig_cycles: kv.u64_or("reconfig_cycles", 1)?,
             clock_ns: kv.f64_or("clock_ns", 10.0)?,
+            chips: chips as u32,
+            interconnect: InterconnectConfig {
+                link_latency_cycles: kv.u64_or(
+                    "interconnect.link_latency_cycles",
+                    default_link.link_latency_cycles,
+                )?,
+                link_bytes_per_cycle: kv.u64_or(
+                    "interconnect.link_bytes_per_cycle",
+                    default_link.link_bytes_per_cycle,
+                )?,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -182,7 +257,60 @@ mod tests {
         assert_eq!(a.memory.dram_bytes_per_cycle, 32);
         // defaults preserved
         assert_eq!(a.memory.ifmap_sram_kib, MemoryConfig::default().ifmap_sram_kib);
+        assert_eq!(a.chips, 1);
+        assert_eq!(a.interconnect, InterconnectConfig::default());
         // invalid configs rejected at parse time
         assert!(ArchConfig::from_toml_str("array_rows = 0").is_err());
+    }
+
+    #[test]
+    fn toml_chips_and_interconnect_section() {
+        let text = "array_rows = 32\narray_cols = 32\nchips = 4\n[interconnect]\nlink_latency_cycles = 50\nlink_bytes_per_cycle = 128\n";
+        let a = ArchConfig::from_toml_str(text).unwrap();
+        assert_eq!(a.chips, 4);
+        assert_eq!(a.interconnect.link_latency_cycles, 50);
+        assert_eq!(a.interconnect.link_bytes_per_cycle, 128);
+    }
+
+    #[test]
+    fn out_of_range_chips_rejected() {
+        let mut a = ArchConfig::square(8);
+        a.chips = 0;
+        assert!(a.validate().is_err());
+        a.chips = ArchConfig::MAX_CHIPS;
+        a.validate().unwrap();
+        a.chips = ArchConfig::MAX_CHIPS + 1;
+        assert!(a.validate().is_err());
+        // Same via the TOML path, including counts that exceed u32.
+        assert!(ArchConfig::from_toml_str("chips = 0").is_err());
+        assert!(ArchConfig::from_toml_str("chips = 2000").is_err());
+        assert!(ArchConfig::from_toml_str("chips = 4294967297").is_err());
+        assert_eq!(ArchConfig::from_toml_str("chips = 4").unwrap().chips, 4);
+    }
+
+    #[test]
+    fn zero_link_bandwidth_rejected() {
+        let mut a = ArchConfig::square(8);
+        a.interconnect.link_bytes_per_cycle = 0;
+        assert!(a.validate().is_err());
+        let text = "[interconnect]\nlink_bytes_per_cycle = 0\n";
+        assert!(ArchConfig::from_toml_str(text).is_err());
+    }
+
+    #[test]
+    fn malformed_interconnect_section_rejected() {
+        // A bad section header and a non-integer value must both fail.
+        assert!(ArchConfig::from_toml_str("[interconnect\nlink_latency_cycles = 1").is_err());
+        assert!(
+            ArchConfig::from_toml_str("[interconnect]\nlink_latency_cycles = \"fast\"").is_err()
+        );
+        assert!(ArchConfig::from_toml_str("[interconnect]\nlink_latency_cycles = -3").is_err());
+    }
+
+    #[test]
+    fn with_chips_builder() {
+        let a = ArchConfig::square(16).with_chips(8);
+        assert_eq!(a.chips, 8);
+        a.validate().unwrap();
     }
 }

@@ -8,5 +8,5 @@
 mod arch;
 mod run;
 
-pub use arch::{ArchConfig, MemoryConfig};
+pub use arch::{ArchConfig, InterconnectConfig, MemoryConfig};
 pub use run::{RunConfig, SimFidelity};

@@ -36,10 +36,12 @@ impl Cmu {
         })
     }
 
+    /// The model this CMU image was programmed for.
     pub fn model(&self) -> &str {
         &self.model
     }
 
+    /// Number of table entries (network layers).
     pub fn num_layers(&self) -> usize {
         self.table.len()
     }
@@ -80,6 +82,7 @@ impl Cmu {
         self.table.windows(2).filter(|w| w[0] != w[1]).count() as u64
     }
 
+    /// Broadcasts so far that actually changed the configuration.
     pub fn reconfigurations(&self) -> u64 {
         self.reconfigurations
     }

@@ -5,10 +5,10 @@
 //! units, and writes to the Weight/IFMap Register File".  Here it drives
 //! two execution backends:
 //!
-//! * **Timing** ([`run_timing`]): the analytical engine — per-layer cycles
-//!   under the CMU's dataflows plus reconfiguration charges.  This is the
-//!   backend every table/figure uses.
-//! * **Functional** ([`run_functional`]): the PE-level [`FlexArray`] with
+//! * **Timing** ([`MainController::run_timing`]): the analytical engine —
+//!   per-layer cycles under the CMU's dataflows plus reconfiguration
+//!   charges.  This is the backend every table/figure uses.
+//! * **Functional** ([`MainController::run_functional`]): the PE-level [`FlexArray`] with
 //!   real INT8 data — used by validation tests and small demos to prove
 //!   the CMU-driven reconfiguration preserves the math.
 
@@ -44,10 +44,12 @@ impl MainController {
         Self { arch, cmu }
     }
 
+    /// The programmed CMU.
     pub fn cmu(&self) -> &Cmu {
         &self.cmu
     }
 
+    /// The architecture this controller drives.
     pub fn arch(&self) -> &ArchConfig {
         &self.arch
     }

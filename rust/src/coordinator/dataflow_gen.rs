@@ -19,19 +19,25 @@ use crate::sim::{Dataflow, Gemm};
 /// One address-stream entry: cycle plus flat scratchpad address.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AddressEvent {
+    /// Cycle (within the fold) the access happens.
     pub cycle: u64,
+    /// Flat scratchpad address.
     pub address: u64,
 }
 
 /// Read/write address streams for one fold of one layer.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct AddressStreams {
+    /// IFMap scratchpad read addresses.
     pub ifmap_reads: Vec<AddressEvent>,
+    /// Filter scratchpad read addresses.
     pub filter_reads: Vec<AddressEvent>,
+    /// OFMap scratchpad write addresses.
     pub ofmap_writes: Vec<AddressEvent>,
 }
 
 impl AddressStreams {
+    /// Total events across the three streams.
     pub fn total_events(&self) -> usize {
         self.ifmap_reads.len() + self.filter_reads.len() + self.ofmap_writes.len()
     }

@@ -41,13 +41,19 @@ impl std::fmt::Display for DseVariant {
 /// One evaluated design point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DsePoint {
+    /// Square array size.
     pub size: u32,
+    /// Flex or one of the static baselines.
     pub variant: DseVariant,
+    /// Total cycles per inference.
     pub cycles: u64,
     /// Wall-clock latency per inference, milliseconds.
     pub latency_ms: f64,
+    /// Synthesized die area, mm².
     pub area_mm2: f64,
+    /// Synthesized power, mW.
     pub power_mw: f64,
+    /// Energy per inference, by component.
     pub energy: EnergyBreakdown,
     /// Energy-delay product, pJ·cycles.
     pub edp: f64,

@@ -17,20 +17,28 @@
 //!   paper's Table I reports.
 //! * [`dse`] — design-space exploration over (array size, variant):
 //!   latency/area/energy Pareto fronts (co-design extension).
+//! * [`partition`] — the selector extended to multi-chip systems: joint
+//!   per-layer (dataflow × shard strategy) argmin over the
+//!   [`crate::sim::shard`] grid.
 
 pub mod cmu;
 pub mod controller;
 pub mod dataflow_gen;
 pub mod dse;
+pub mod partition;
 pub mod pipeline;
 pub mod selector;
 pub mod sweep;
 
 pub use cmu::Cmu;
 pub use controller::MainController;
+pub use partition::{select_joint, select_joint_parallel, PartitionSelection, ShardChoice};
 pub use pipeline::{Deployment, FlexPipeline};
 pub use selector::{
     select_exhaustive, select_exhaustive_cached, select_exhaustive_parallel, select_heuristic,
     Selection,
 };
-pub use sweep::{sweep_models, sweep_zoo, sweep_zoo_sizes, ModelSweep, SweepResult};
+pub use sweep::{
+    sweep_models, sweep_models_sharded, sweep_zoo, sweep_zoo_chip_grid, sweep_zoo_sharded,
+    sweep_zoo_sizes, ModelShardSweep, ModelSweep, ShardSweepResult, SweepResult,
+};

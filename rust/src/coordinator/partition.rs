@@ -1,0 +1,305 @@
+//! Joint per-layer (dataflow × shard strategy) selection.
+//!
+//! The paper's offline optimization picks one *dataflow* per layer; on a
+//! multi-chip system there is a second independent axis — how the layer is
+//! *partitioned* across chips.  This module extends the exhaustive
+//! selector to the full `3 dataflows × 3 strategies` grid per layer and
+//! takes the per-layer argmin over end-to-end cycles (compute + stalls +
+//! interconnect), exactly the Flex idea applied twice.
+//!
+//! Determinism: every cell is simulated through the shared
+//! [`ShapeCache`]-backed engine, rows are assembled in layer order, and
+//! ties break toward the `Dataflow::ALL` then [`ShardStrategy::ALL`]
+//! listing orders, so selections are byte-identical at any thread count
+//! and — at one chip — identical to the single-chip exhaustive selector
+//! (`rust/tests/shard.rs` locks both in).
+
+use crate::config::ArchConfig;
+use crate::sim::engine::SimOptions;
+use crate::sim::parallel::{parallel_map, ShapeCache};
+use crate::sim::shard::{simulate_layer_sharded_cached, ShardStrategy};
+use crate::sim::Dataflow;
+use crate::topology::{Layer, Topology};
+
+use super::selector::df_index;
+
+/// One layer's joint pick: which dataflow to run and how to split it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardChoice {
+    /// Winning dataflow.
+    pub dataflow: Dataflow,
+    /// Winning shard strategy.
+    pub strategy: ShardStrategy,
+}
+
+impl std::fmt::Display for ShardChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}+{}", self.dataflow, self.strategy)
+    }
+}
+
+pub(crate) fn strategy_index(strategy: ShardStrategy) -> usize {
+    match strategy {
+        ShardStrategy::Rows => 0,
+        ShardStrategy::Cols => 1,
+        ShardStrategy::Batch => 2,
+    }
+}
+
+/// Result of the joint per-layer search on a fixed chip count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionSelection {
+    /// Model name.
+    pub model: String,
+    /// Chip count the grid was evaluated at.
+    pub chips: u32,
+    /// Winning (dataflow, strategy) per layer.
+    pub per_layer: Vec<ShardChoice>,
+    /// Total sharded cycles per layer, indexed
+    /// `[layer][Dataflow::ALL order][ShardStrategy::ALL order]`.
+    pub cycles: Vec<[[u64; 3]; 3]>,
+}
+
+impl PartitionSelection {
+    /// Cycles of one grid cell for a layer.
+    pub fn layer_cycles(&self, layer: usize, choice: ShardChoice) -> u64 {
+        self.cycles[layer][df_index(choice.dataflow)][strategy_index(choice.strategy)]
+    }
+
+    /// Total cycles of the per-layer winners (no reconfiguration charges).
+    pub fn flex_layer_cycles(&self) -> u64 {
+        self.per_layer
+            .iter()
+            .enumerate()
+            .map(|(i, &choice)| self.layer_cycles(i, choice))
+            .sum()
+    }
+
+    /// Total cycles had every layer used the same `(dataflow, strategy)`.
+    pub fn static_cycles(&self, choice: ShardChoice) -> u64 {
+        (0..self.per_layer.len()).map(|i| self.layer_cycles(i, choice)).sum()
+    }
+
+    /// How many layers each dataflow wins, in `Dataflow::ALL` order.
+    pub fn dataflow_wins(&self) -> [usize; 3] {
+        let mut wins = [0usize; 3];
+        for choice in &self.per_layer {
+            wins[df_index(choice.dataflow)] += 1;
+        }
+        wins
+    }
+
+    /// How many layers each strategy wins, in [`ShardStrategy::ALL`] order.
+    pub fn strategy_wins(&self) -> [usize; 3] {
+        let mut wins = [0usize; 3];
+        for choice in &self.per_layer {
+            wins[strategy_index(choice.strategy)] += 1;
+        }
+        wins
+    }
+
+    /// The most frequently chosen (dataflow, strategy) pair — the summary
+    /// a sweep table reports.  Ties break toward the grid listing order.
+    pub fn dominant_choice(&self) -> ShardChoice {
+        let mut counts = [[0usize; 3]; 3];
+        for choice in &self.per_layer {
+            counts[df_index(choice.dataflow)][strategy_index(choice.strategy)] += 1;
+        }
+        let mut best = ShardChoice {
+            dataflow: Dataflow::Is,
+            strategy: ShardStrategy::Rows,
+        };
+        let mut best_count = 0usize;
+        for df in Dataflow::ALL {
+            for strategy in ShardStrategy::ALL {
+                let count = counts[df_index(df)][strategy_index(strategy)];
+                if count > best_count {
+                    best_count = count;
+                    best = ShardChoice {
+                        dataflow: df,
+                        strategy,
+                    };
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Per-layer argmin over the 3×3 grid; ties break toward the dataflow
+/// listing order first, then the strategy listing order — shared with the
+/// single-chip selector so one-chip joint selection matches it exactly.
+fn argmin_cell(grid: &[[u64; 3]; 3]) -> ShardChoice {
+    let mut best = ShardChoice {
+        dataflow: Dataflow::Is,
+        strategy: ShardStrategy::Rows,
+    };
+    let mut best_cycles = u64::MAX;
+    for df in Dataflow::ALL {
+        for strategy in ShardStrategy::ALL {
+            let cycles = grid[df_index(df)][strategy_index(strategy)];
+            if cycles < best_cycles {
+                best_cycles = cycles;
+                best = ShardChoice {
+                    dataflow: df,
+                    strategy,
+                };
+            }
+        }
+    }
+    best
+}
+
+fn layer_grid(
+    arch: &ArchConfig,
+    layer: &Layer,
+    chips: u32,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> [[u64; 3]; 3] {
+    let mut grid = [[0u64; 3]; 3];
+    for df in Dataflow::ALL {
+        for strategy in ShardStrategy::ALL {
+            let stats =
+                simulate_layer_sharded_cached(arch, layer, df, strategy, chips, opts, cache);
+            grid[df_index(df)][strategy_index(strategy)] = stats.total_cycles();
+        }
+    }
+    grid
+}
+
+fn assemble(model: &str, chips: u32, cycles: Vec<[[u64; 3]; 3]>) -> PartitionSelection {
+    let per_layer = cycles.iter().map(argmin_cell).collect();
+    PartitionSelection {
+        model: model.to_string(),
+        chips,
+        per_layer,
+        cycles,
+    }
+}
+
+/// Exhaustive joint selection: simulate every layer under every
+/// `(dataflow, strategy)` pair at `chips` chips and take per-layer argmins.
+pub fn select_joint(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    cache: &ShapeCache,
+) -> PartitionSelection {
+    let cycles = topo
+        .layers
+        .iter()
+        .map(|layer| layer_grid(arch, layer, chips, opts, cache))
+        .collect();
+    assemble(&topo.name, chips, cycles)
+}
+
+/// [`select_joint`] with the per-layer grids fanned across `threads`
+/// workers (0 = all cores); byte-identical to the serial path.
+pub fn select_joint_parallel(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    threads: usize,
+    cache: &ShapeCache,
+) -> PartitionSelection {
+    let cycles = parallel_map(threads, &topo.layers, |_, layer| {
+        layer_grid(arch, layer, chips, opts, cache)
+    });
+    assemble(&topo.name, chips, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::selector::select_exhaustive;
+    use crate::topology::zoo;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::square(32)
+    }
+
+    #[test]
+    fn one_chip_joint_selection_matches_plain_selector() {
+        let topo = zoo::resnet18();
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let joint = select_joint(&arch(), &topo, opts, 1, &cache);
+        let plain = select_exhaustive(&arch(), &topo, opts);
+        assert_eq!(joint.per_layer.len(), plain.per_layer.len());
+        for (i, choice) in joint.per_layer.iter().enumerate() {
+            assert_eq!(choice.dataflow, plain.per_layer[i], "layer {i}");
+            // At one chip every strategy is the same simulation.
+            for df in Dataflow::ALL {
+                for strategy in ShardStrategy::ALL {
+                    let cell = joint.cycles[i][df_index(df)][strategy_index(strategy)];
+                    assert_eq!(cell, plain.cycles[i][df_index(df)], "layer {i} {df}");
+                }
+            }
+        }
+        assert_eq!(joint.flex_layer_cycles(), plain.flex_compute_cycles());
+    }
+
+    #[test]
+    fn joint_winners_pick_grid_minimum() {
+        let topo = zoo::alexnet();
+        let cache = ShapeCache::new();
+        let sel = select_joint(&arch(), &topo, SimOptions::default(), 4, &cache);
+        for (i, grid) in sel.cycles.iter().enumerate() {
+            let chosen = sel.layer_cycles(i, sel.per_layer[i]);
+            let min = grid.iter().flatten().min().copied().unwrap();
+            assert_eq!(chosen, min, "layer {i}");
+        }
+    }
+
+    #[test]
+    fn sharded_never_loses_to_single_chip_per_layer() {
+        // Batch sharding of a batch-1 layer degenerates to the unsharded
+        // run with zero communication, so the joint winner can never be
+        // slower than the single-chip winner.
+        let topo = zoo::yolo_tiny();
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let joint = select_joint(&arch(), &topo, opts, 4, &cache);
+        let plain = select_exhaustive(&arch(), &topo, opts);
+        for i in 0..topo.layers.len() {
+            let sharded = joint.layer_cycles(i, joint.per_layer[i]);
+            let single = plain.cycles[i][df_index(plain.per_layer[i])];
+            assert!(sharded <= single, "layer {i}: {sharded} > {single}");
+        }
+    }
+
+    #[test]
+    fn parallel_joint_selection_is_byte_identical() {
+        let topo = zoo::googlenet();
+        let opts = SimOptions::default();
+        let serial_cache = ShapeCache::new();
+        let want = select_joint(&arch(), &topo, opts, 4, &serial_cache);
+        for threads in [2usize, 4] {
+            let cache = ShapeCache::new();
+            let got = select_joint_parallel(&arch(), &topo, opts, 4, threads, &cache);
+            assert_eq!(want, got, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn dominant_choice_counts_majority() {
+        let topo = zoo::vgg13();
+        let cache = ShapeCache::new();
+        let sel = select_joint(&arch(), &topo, SimOptions::default(), 4, &cache);
+        let dom = sel.dominant_choice();
+        let dom_count = sel.per_layer.iter().filter(|c| **c == dom).count();
+        for df in Dataflow::ALL {
+            for strategy in ShardStrategy::ALL {
+                let choice = ShardChoice {
+                    dataflow: df,
+                    strategy,
+                };
+                let count = sel.per_layer.iter().filter(|c| **c == choice).count();
+                assert!(count <= dom_count, "{choice} beats dominant {dom}");
+            }
+        }
+    }
+}

@@ -52,14 +52,18 @@ pub struct FlexPipeline {
 /// A deployed model: CMU image + flex run + the three static baselines.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Deployment {
+    /// Architecture deployed onto.
     pub arch: ArchConfig,
+    /// The selector's per-layer dataflow decisions and profiling data.
     pub selection: Selection,
+    /// The Flex-TPU run (per-layer winners + reconfiguration charges).
     pub flex: NetworkStats,
     /// Static baselines in `Dataflow::ALL` order (IS, OS, WS).
     pub static_runs: [NetworkStats; 3],
 }
 
 impl FlexPipeline {
+    /// Pipeline with default options and the exhaustive selector.
     pub fn new(arch: ArchConfig) -> Self {
         Self {
             arch,
@@ -69,11 +73,13 @@ impl FlexPipeline {
         }
     }
 
+    /// Override the simulation options used for every profiling run.
     pub fn with_options(mut self, opts: SimOptions) -> Self {
         self.opts = opts;
         self
     }
 
+    /// Choose which selector the deploy flow runs.
     pub fn with_selector(mut self, selector: SelectorKind) -> Self {
         self.selector = selector;
         self

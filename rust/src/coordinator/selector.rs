@@ -24,6 +24,7 @@ use crate::topology::Topology;
 /// Result of the per-layer dataflow search.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Selection {
+    /// Model name.
     pub model: String,
     /// Winning dataflow per layer.
     pub per_layer: Vec<Dataflow>,

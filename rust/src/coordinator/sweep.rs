@@ -22,17 +22,20 @@
 use std::sync::Arc;
 
 use crate::config::ArchConfig;
-use crate::sim::engine::SimOptions;
+use crate::sim::engine::{reconfig_charges, SimOptions};
 use crate::sim::parallel::{effective_threads, parallel_map, CacheStats, ShapeCache};
 use crate::sim::Dataflow;
 use crate::topology::{zoo, Topology};
 
+use super::partition::{self, PartitionSelection};
 use super::selector::{self, Selection};
 
 /// One model's sweep outcome (the content of a paper Table I row).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSweep {
+    /// Model name.
     pub model: String,
+    /// The per-layer dataflow selection and profiling data.
     pub selection: Selection,
     /// Flex total: per-layer winners plus reconfiguration charges.
     pub flex_cycles: u64,
@@ -59,6 +62,7 @@ impl ModelSweep {
 /// Result of sweeping a set of models on one architecture.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepResult {
+    /// Architecture swept.
     pub arch: ArchConfig,
     /// Per-model outcomes in input order.
     pub models: Vec<ModelSweep>,
@@ -67,6 +71,21 @@ pub struct SweepResult {
     pub cache: CacheStats,
     /// Worker threads the sweep actually used.
     pub threads: usize,
+}
+
+/// Split a worker budget between the model level and the layer level:
+/// with at least as many models as workers, all parallelism goes to the
+/// model fan-out; otherwise the remainder fans out each model's per-layer
+/// profiling.  Shared by the plain and sharded sweeps so their scheduling
+/// never drifts apart.
+fn split_threads(threads: usize, num_models: usize) -> (usize, usize) {
+    let threads = effective_threads(threads);
+    let layer_threads = if num_models >= threads {
+        1
+    } else {
+        threads.div_ceil(num_models.max(1))
+    };
+    (threads, layer_threads)
 }
 
 fn sweep_model(
@@ -81,12 +100,8 @@ fn sweep_model(
     } else {
         selector::select_exhaustive_cached(arch, topo, opts, cache)
     };
-    let transitions = selection
-        .per_layer
-        .windows(2)
-        .filter(|w| w[0] != w[1])
-        .count() as u64;
-    let flex_cycles = selection.flex_compute_cycles() + transitions * arch.reconfig_cycles;
+    let flex_cycles = selection.flex_compute_cycles()
+        + reconfig_charges(&selection.per_layer, arch.reconfig_cycles);
     let static_cycles = [
         selection.static_cycles(Dataflow::Is),
         selection.static_cycles(Dataflow::Os),
@@ -113,13 +128,7 @@ pub fn sweep_models(
     opts: SimOptions,
     cache: &ShapeCache,
 ) -> SweepResult {
-    let threads = effective_threads(threads);
-    // Split parallelism between the model level and the layer level.
-    let layer_threads = if models.len() >= threads {
-        1
-    } else {
-        threads.div_ceil(models.len().max(1))
-    };
+    let (threads, layer_threads) = split_threads(threads, models.len());
     let models = parallel_map(threads, models, |_, topo| {
         sweep_model(arch, topo, opts, layer_threads, cache)
     });
@@ -132,6 +141,19 @@ pub fn sweep_models(
 }
 
 /// Sweep the full seven-model zoo (paper Table I) on `threads` workers.
+///
+/// ```
+/// use flex_tpu::config::ArchConfig;
+/// use flex_tpu::coordinator::sweep::sweep_zoo;
+/// use flex_tpu::sim::engine::SimOptions;
+///
+/// let result = sweep_zoo(&ArchConfig::square(16), 2, SimOptions::default());
+/// assert_eq!(result.models.len(), 7);
+/// for model in &result.models {
+///     let (_, best_static) = model.best_static();
+///     assert!(model.flex_cycles <= best_static); // the paper's claim
+/// }
+/// ```
 pub fn sweep_zoo(arch: &ArchConfig, threads: usize, opts: SimOptions) -> SweepResult {
     let cache = ShapeCache::new();
     sweep_models(arch, &zoo::all_models(), threads, opts, &cache)
@@ -151,6 +173,127 @@ pub fn sweep_zoo_sizes(
     let results = sizes
         .iter()
         .map(|&s| sweep_models(&ArchConfig::square(s), &models, threads, opts, &cache))
+        .collect();
+    (results, cache)
+}
+
+/// One model's multi-chip sweep outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelShardSweep {
+    /// Model name.
+    pub model: String,
+    /// The joint (dataflow × strategy) selection at the sweep's chip count.
+    pub selection: PartitionSelection,
+    /// Sharded flex total: per-layer joint winners plus reconfiguration
+    /// charges for dataflow changes between consecutive layers.
+    pub flex_cycles: u64,
+    /// The single-chip flex total from the plain sweep path (the PR-1
+    /// engine), for speedup accounting.
+    pub single_chip_cycles: u64,
+}
+
+impl ModelShardSweep {
+    /// End-to-end speedup of the sharded deployment over one chip.
+    pub fn speedup_vs_single_chip(&self) -> f64 {
+        self.single_chip_cycles as f64 / self.flex_cycles as f64
+    }
+}
+
+/// Result of sweeping a set of models at one chip count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSweepResult {
+    /// Architecture swept (per chip).
+    pub arch: ArchConfig,
+    /// Chips each layer could shard across.
+    pub chips: u32,
+    /// Per-model outcomes in input order.
+    pub models: Vec<ModelShardSweep>,
+    /// Cache counters at the time the sweep finished (cumulative when the
+    /// caller shares one cache across sweeps).
+    pub cache: CacheStats,
+    /// Worker threads the sweep actually used.
+    pub threads: usize,
+}
+
+fn sweep_model_sharded(
+    arch: &ArchConfig,
+    topo: &Topology,
+    chips: u32,
+    opts: SimOptions,
+    layer_threads: usize,
+    cache: &ShapeCache,
+) -> ModelShardSweep {
+    let selection = if layer_threads > 1 {
+        partition::select_joint_parallel(arch, topo, opts, chips, layer_threads, cache)
+    } else {
+        partition::select_joint(arch, topo, opts, chips, cache)
+    };
+    let dataflows: Vec<_> = selection.per_layer.iter().map(|c| c.dataflow).collect();
+    let flex_cycles =
+        selection.flex_layer_cycles() + reconfig_charges(&dataflows, arch.reconfig_cycles);
+    let single_chip_cycles = sweep_model(arch, topo, opts, layer_threads, cache).flex_cycles;
+    ModelShardSweep {
+        model: topo.name.clone(),
+        selection,
+        flex_cycles,
+        single_chip_cycles,
+    }
+}
+
+/// Sweep arbitrary models through the joint (dataflow × shard strategy)
+/// selector at `chips` chips on `threads` workers, with a shared cache.
+///
+/// Parallelism splits between the model and layer levels exactly like
+/// [`sweep_models`]; single-chip baselines are computed through the same
+/// cache, so they are byte-identical to the plain sweep's numbers.
+pub fn sweep_models_sharded(
+    arch: &ArchConfig,
+    models: &[Topology],
+    chips: u32,
+    threads: usize,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> ShardSweepResult {
+    let (threads, layer_threads) = split_threads(threads, models.len());
+    let models = parallel_map(threads, models, |_, topo| {
+        sweep_model_sharded(arch, topo, chips, opts, layer_threads, cache)
+    });
+    ShardSweepResult {
+        arch: *arch,
+        chips,
+        models,
+        cache: cache.stats(),
+        threads,
+    }
+}
+
+/// Sweep the full seven-model zoo at `chips` chips (`flex-tpu sweep
+/// --chips N`).
+pub fn sweep_zoo_sharded(
+    arch: &ArchConfig,
+    chips: u32,
+    threads: usize,
+    opts: SimOptions,
+) -> ShardSweepResult {
+    let cache = ShapeCache::new();
+    sweep_models_sharded(arch, &zoo::all_models(), chips, threads, opts, &cache)
+}
+
+/// Sweep the zoo across several chip counts with one cache shared by the
+/// whole grid (single-chip shards repeat shapes across counts, so the
+/// cache collapses most of the grid).  Returns one [`ShardSweepResult`]
+/// per count, in input order.
+pub fn sweep_zoo_chip_grid(
+    arch: &ArchConfig,
+    chip_counts: &[u32],
+    threads: usize,
+    opts: SimOptions,
+) -> (Vec<ShardSweepResult>, Arc<ShapeCache>) {
+    let cache = Arc::new(ShapeCache::new());
+    let models = zoo::all_models();
+    let results = chip_counts
+        .iter()
+        .map(|&chips| sweep_models_sharded(arch, &models, chips, threads, opts, &cache))
         .collect();
     (results, cache)
 }
@@ -202,6 +345,75 @@ mod tests {
                 "{df}"
             );
         }
+    }
+
+    #[test]
+    fn sharded_sweep_at_one_chip_matches_plain_sweep() {
+        let arch = ArchConfig::square(32);
+        let opts = SimOptions::default();
+        let plain = sweep_zoo(&arch, 2, opts);
+        let sharded = sweep_zoo_sharded(&arch, 1, 2, opts);
+        assert_eq!(plain.models.len(), sharded.models.len());
+        for (p, s) in plain.models.iter().zip(&sharded.models) {
+            assert_eq!(p.flex_cycles, s.flex_cycles, "{}", p.model);
+            assert_eq!(p.flex_cycles, s.single_chip_cycles, "{}", p.model);
+            let dataflows: Vec<_> = s.selection.per_layer.iter().map(|c| c.dataflow).collect();
+            assert_eq!(dataflows, p.selection.per_layer, "{}", p.model);
+        }
+    }
+
+    #[test]
+    fn four_chip_sweep_beats_single_chip() {
+        let arch = ArchConfig::square(32);
+        let sweep = sweep_zoo_sharded(&arch, 4, 2, SimOptions::default());
+        assert_eq!(sweep.models.len(), 7);
+        assert_eq!(sweep.chips, 4);
+        for m in &sweep.models {
+            // Batch sharding of batch-1 layers degenerates to the
+            // single-chip run, so the joint winner can lose at most the
+            // extra reconfiguration charges.
+            let slack = m.selection.per_layer.len() as u64 * arch.reconfig_cycles;
+            assert!(
+                m.flex_cycles <= m.single_chip_cycles + slack,
+                "{}: {} > {} + {slack}",
+                m.model,
+                m.flex_cycles,
+                m.single_chip_cycles
+            );
+        }
+        // With the default interconnect the conv-heavy zoo must see real
+        // multi-chip gains on average.
+        let total: f64 = sweep
+            .models
+            .iter()
+            .map(ModelShardSweep::speedup_vs_single_chip)
+            .sum();
+        let mean = total / sweep.models.len() as f64;
+        assert!(mean > 1.5, "mean 4-chip speedup only {mean:.3}");
+    }
+
+    #[test]
+    fn sharded_sweep_deterministic_across_threads() {
+        let arch = ArchConfig::square(16);
+        let opts = SimOptions::default();
+        let serial = sweep_zoo_sharded(&arch, 4, 1, opts);
+        let parallel = sweep_zoo_sharded(&arch, 4, 4, opts);
+        assert_eq!(serial.models, parallel.models);
+    }
+
+    #[test]
+    fn chip_grid_shares_one_cache() {
+        let arch = ArchConfig::square(16);
+        let opts = SimOptions::default();
+        let (results, cache) = sweep_zoo_chip_grid(&arch, &[1, 2, 4], 2, opts);
+        assert_eq!(results.len(), 3);
+        assert!(cache.stats().hits > 0);
+        // Re-running one point reuses every shape.
+        let before = cache.stats();
+        let models = zoo::all_models();
+        let again = sweep_models_sharded(&arch, &models, 2, 2, opts, &cache);
+        assert_eq!(again.cache.entries, before.entries, "no new shapes");
+        assert_eq!(again.models, results[1].models, "re-sweep is byte-identical");
     }
 
     #[test]

@@ -33,13 +33,18 @@ pub const LEAKAGE_FRACTION: f64 = 0.08;
 /// Energy breakdown of one layer (picojoules).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyBreakdown {
+    /// MAC (datapath) energy, pJ.
     pub mac_pj: f64,
+    /// Scratchpad access energy, pJ.
     pub sram_pj: f64,
+    /// DRAM transfer energy, pJ.
     pub dram_pj: f64,
+    /// Leakage over the run's duration, pJ.
     pub leakage_pj: f64,
 }
 
 impl EnergyBreakdown {
+    /// Total energy, pJ.
     pub fn total_pj(&self) -> f64 {
         self.mac_pj + self.sram_pj + self.dram_pj + self.leakage_pj
     }

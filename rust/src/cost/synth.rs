@@ -44,11 +44,17 @@ const WIRE_TAU: f64 = 6.0;
 /// One synthesized design's report — a Table II cell triple.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SynthReport {
+    /// Array rows.
     pub rows: u32,
+    /// Array columns.
     pub cols: u32,
+    /// True for the Flex-TPU variant, false for the conventional TPU.
     pub variant_flex: bool,
+    /// Placed area, mm².
     pub area_mm2: f64,
+    /// Power at the constraint clock, mW.
     pub power_mw: f64,
+    /// Post-synthesis critical path, ns.
     pub critical_path_ns: f64,
     /// Positive slack against the constraint clock?
     pub timing_met: bool,

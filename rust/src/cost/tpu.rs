@@ -28,19 +28,27 @@ pub const CMU_POWER_UW: f64 = 20.0;
 /// Area/power breakdown of one TPU (Fig. 5 content).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TpuBreakdown {
+    /// Systolic-array area, mm².
     pub array_area_mm2: f64,
+    /// FIFO/periphery area, mm².
     pub periphery_area_mm2: f64,
+    /// CMU area, mm² (0 for the conventional TPU).
     pub cmu_area_mm2: f64,
+    /// Systolic-array power, mW.
     pub array_power_mw: f64,
+    /// FIFO/periphery power, mW.
     pub periphery_power_mw: f64,
+    /// CMU power, mW (0 for the conventional TPU).
     pub cmu_power_mw: f64,
 }
 
 impl TpuBreakdown {
+    /// Whole-chip area.
     pub fn total_area_mm2(&self) -> f64 {
         self.array_area_mm2 + self.periphery_area_mm2 + self.cmu_area_mm2
     }
 
+    /// Whole-chip power.
     pub fn total_power_mw(&self) -> f64 {
         self.array_power_mw + self.periphery_power_mw + self.cmu_power_mw
     }
@@ -59,16 +67,21 @@ impl TpuBreakdown {
 /// Cost model for one TPU instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TpuCost {
+    /// Array rows.
     pub rows: u32,
+    /// Array columns.
     pub cols: u32,
+    /// PE micro-architecture.
     pub variant: PeVariant,
 }
 
 impl TpuCost {
+    /// Cost model for an `rows x cols` array of `variant` PEs.
     pub fn new(rows: u32, cols: u32, variant: PeVariant) -> Self {
         Self { rows, cols, variant }
     }
 
+    /// Cost model for a square `n x n` array.
     pub fn square(n: u32, variant: PeVariant) -> Self {
         Self::new(n, n, variant)
     }

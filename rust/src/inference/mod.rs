@@ -1,11 +1,15 @@
 //! Batched inference driver: functional PJRT execution + Flex-TPU timing.
 //!
-//! The e2e serving demo (DESIGN.md E8): requests arrive on a tokio channel,
-//! a batcher groups them into the artifact's batch size, the PJRT runtime
-//! computes the logits (*values*), and the deployed Flex-TPU simulation
-//! supplies the per-inference latency the hardware would deliver (*time*).
-//! Responses report both, plus the would-be latency under each static
-//! dataflow, so one serving run exhibits the paper's speedup end-to-end.
+//! The e2e serving demo (DESIGN.md E8): requests arrive on a bounded mpsc
+//! channel, a batcher groups them into the artifact's batch size, the PJRT
+//! runtime computes the logits (*values*), and the deployed Flex-TPU
+//! simulation supplies the per-inference latency the hardware would
+//! deliver (*time*).  Responses report both, plus the would-be latency
+//! under each static dataflow, so one serving run exhibits the paper's
+//! speedup end-to-end.  On a multi-chip deployment
+//! ([`InferenceServer::new_sharded`]) each formed batch is additionally
+//! split across chips — batch-level parallelism with no interconnect
+//! traffic on the request path.
 
 mod request;
 mod server;

@@ -4,7 +4,9 @@
 /// One inference request: a single image, row-major `H*W*C` f32.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferenceRequest {
+    /// Caller-chosen request id, echoed in the response.
     pub id: u64,
+    /// Input image, row-major `H*W*C` f32.
     pub pixels: Vec<f32>,
 }
 
@@ -24,14 +26,18 @@ pub struct TimingEstimate {
 /// One inference response.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferenceResponse {
+    /// The request's id.
     pub id: u64,
+    /// Class logits from the PJRT executable.
     pub logits: Vec<f32>,
     /// Predicted class (argmax of logits).
     pub class: usize,
+    /// Simulated Flex-TPU timing of this inference.
     pub timing: TimingEstimate,
 }
 
 impl InferenceResponse {
+    /// Build a response (computes the argmax class).
     pub fn new(id: u64, logits: Vec<f32>, timing: TimingEstimate) -> Self {
         let class = logits
             .iter()

@@ -23,6 +23,8 @@ use crate::cost::synth::critical_path_ns;
 use crate::cost::PeVariant;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
+use crate::sim::engine::{reconfig_charges, simulate_network, SimOptions};
+use crate::sim::shard::{simulate_layer_sharded, ShardStrategy};
 use crate::sim::Dataflow;
 
 use super::request::{InferenceRequest, InferenceResponse, TimingEstimate};
@@ -33,7 +35,11 @@ pub type Envelope = (InferenceRequest, Sender<InferenceResponse>);
 /// Aggregate statistics of one serving run.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ServerStats {
+    /// Requests served.
     pub requests: u64,
+    /// Batches formed by the serving loops (a batch is the scheduling
+    /// unit; with `chips > 1` each one executes as several per-chip
+    /// sub-batches).
     pub batches: u64,
     /// Host wall-clock of the whole run, microseconds.
     pub wall_us: u64,
@@ -55,12 +61,28 @@ pub struct InferenceServer {
     deployment: Deployment,
     timing: TimingEstimate,
     variant: String,
+    /// Chips one batch is split across (batch-level parallelism).
+    chips: u32,
 }
 
 impl InferenceServer {
     /// Deploy: run the paper's pre-deployment flow for the artifact's
     /// network on `arch` and bind the matching compiled model variant.
     pub fn new(runtime: Runtime, arch: ArchConfig) -> Result<Self> {
+        Self::new_sharded(runtime, arch, 1)
+    }
+
+    /// [`InferenceServer::new`] on a `chips`-chip system: each formed batch
+    /// is split across the chips ([`ShardStrategy::Batch`] — one request
+    /// never spans chips, so there is no interconnect traffic on the
+    /// request path) and executed concurrently.  For `chips > 1` the
+    /// [`TimingEstimate`] is recomputed per inference at the artifact's
+    /// compiled batch on both sides (sharded flex vs same-batch one-chip
+    /// statics), so the reported speedup isolates the multi-chip gain
+    /// rather than conflating it with batch amortization.  `chips = 1` is
+    /// byte-identical to [`InferenceServer::new`].
+    pub fn new_sharded(runtime: Runtime, arch: ArchConfig, chips: u32) -> Result<Self> {
+        let chips = chips.max(1);
         let topo = runtime.manifest().topology();
         let deployment = FlexPipeline::new(arch).deploy(&topo);
         let variant = "flex".to_string();
@@ -75,38 +97,70 @@ impl InferenceServer {
             deployment.static_cycles(Dataflow::Ws),
         ];
         let (_, best) = deployment.best_static();
-        let timing = TimingEstimate {
+        let mut timing = TimingEstimate {
             flex_cycles,
             flex_ns: flex_cycles as f64 * cpd,
             static_cycles,
             speedup_vs_best_static: best as f64 / flex_cycles as f64,
         };
+        if chips > 1 {
+            // Multi-chip serving timing, per-inference at the compiled
+            // batch on BOTH sides: flex batch-sharded across the chips,
+            // statics on one chip at the same batch.  Batch amortization
+            // then cancels out of the speedup, leaving the sharding gain;
+            // every cycle field stays in one unit (cycles per inference).
+            let batch = runtime.manifest().batch.max(1);
+            let opts = SimOptions {
+                batch,
+                ..SimOptions::default()
+            };
+            let mut batch_cycles = 0u64;
+            for (i, layer) in topo.layers.iter().enumerate() {
+                let df = deployment.selection.per_layer[i];
+                let s =
+                    simulate_layer_sharded(&arch, layer, df, ShardStrategy::Batch, chips, opts);
+                batch_cycles += s.total_cycles();
+            }
+            batch_cycles +=
+                reconfig_charges(&deployment.selection.per_layer, arch.reconfig_cycles);
+            let per_inference = |total: u64| total.div_ceil(u64::from(batch));
+            let static_cycles = Dataflow::ALL
+                .map(|df| per_inference(simulate_network(&arch, &topo, df, opts).total_cycles()));
+            let best = static_cycles.iter().copied().min().expect("three dataflows");
+            timing.flex_cycles = per_inference(batch_cycles);
+            timing.flex_ns = batch_cycles as f64 * cpd / f64::from(batch);
+            timing.static_cycles = static_cycles;
+            timing.speedup_vs_best_static = best as f64 / timing.flex_cycles as f64;
+        }
         Ok(Self {
             runtime: Arc::new(runtime),
             deployment,
             timing,
             variant,
+            chips,
         })
     }
 
+    /// The deployed Flex-TPU model (selection + baselines).
     pub fn deployment(&self) -> &Deployment {
         &self.deployment
     }
 
+    /// The simulated per-inference timing attached to every response.
     pub fn timing(&self) -> &TimingEstimate {
         &self.timing
     }
 
-    /// Execute one formed batch: pad, run the PJRT executable, fan the
-    /// responses back out.  Returns `(live requests, host micros)`.
-    fn process_batch(&self, pending: &mut Vec<Envelope>) -> Result<(u64, f64)> {
+    /// Execute one chunk on one (simulated) chip: pad to the compiled
+    /// batch, run the PJRT executable, fan the responses back out.
+    /// Returns host micros spent in `execute`.
+    fn execute_chunk(&self, pending: &mut Vec<Envelope>) -> Result<f64> {
         let m = self.runtime.manifest();
         let batch = m.batch as usize;
         let img = (m.input_hw * m.input_hw * m.input_channels) as usize;
         let classes = m.num_classes as usize;
 
         // Pad the tail with zero images (the compiled batch is static).
-        let live = pending.len() as u64;
         let mut input = vec![0f32; batch * img];
         for (i, (req, _)) in pending.iter().enumerate() {
             if req.pixels.len() != img {
@@ -128,7 +182,39 @@ impl InferenceServer {
             let resp = InferenceResponse::new(req.id, out, self.timing);
             let _ = tx.send(resp);
         }
-        Ok((live, batch_us))
+        Ok(batch_us)
+    }
+
+    /// Execute one formed batch, split across chips when configured.
+    /// Returns `(live requests, host micros)`.
+    fn process_batch(&self, pending: &mut Vec<Envelope>) -> Result<(u64, f64)> {
+        let live = pending.len() as u64;
+        if self.chips <= 1 || pending.len() <= 1 {
+            let batch_us = self.execute_chunk(pending)?;
+            return Ok((live, batch_us));
+        }
+        // Batch-level parallelism: near-even contiguous slices, one per
+        // chip, executed concurrently (PJRT executables are immutable, so
+        // concurrent execute calls only contend inside the backend).
+        let chunk_size = pending.len().div_ceil(self.chips as usize);
+        let mut chunks: Vec<Vec<Envelope>> = Vec::new();
+        while !pending.is_empty() {
+            let tail = pending.split_off(pending.len().min(chunk_size));
+            chunks.push(std::mem::replace(pending, tail));
+        }
+        let start = Instant::now();
+        let run: Result<()> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(chunks.len());
+            for chunk in &mut chunks {
+                handles.push(scope.spawn(move || self.execute_chunk(chunk)));
+            }
+            for h in handles {
+                h.join().expect("chip worker panicked")?;
+            }
+            Ok(())
+        });
+        run?;
+        Ok((live, start.elapsed().as_micros() as f64))
     }
 
     fn finalize_stats(
@@ -188,6 +274,23 @@ impl InferenceServer {
     /// other workers — PJRT executables are immutable once compiled, so
     /// concurrent `execute` calls only contend inside the backend.  Workers
     /// exit when the channel closes and drains; the first error wins.
+    ///
+    /// ```no_run
+    /// use flex_tpu::config::ArchConfig;
+    /// use flex_tpu::inference::{InferenceRequest, InferenceServer};
+    /// use flex_tpu::runtime::Runtime;
+    ///
+    /// let runtime = Runtime::load("artifacts".as_ref())?;
+    /// let server = InferenceServer::new_sharded(runtime, ArchConfig::square(8), 2)?;
+    /// let (tx, rx) = std::sync::mpsc::sync_channel(64);
+    /// let (otx, orx) = std::sync::mpsc::channel();
+    /// tx.send((InferenceRequest { id: 0, pixels: vec![0.0; 28 * 28] }, otx))?;
+    /// drop(tx); // close the front door so the serving loops exit
+    /// let stats = server.serve_concurrent(rx, 4)?;
+    /// assert_eq!(stats.requests, 1);
+    /// println!("{}", orx.recv()?.class);
+    /// # Ok::<(), Box<dyn std::error::Error>>(())
+    /// ```
     pub fn serve_concurrent(
         &self,
         rx: Receiver<Envelope>,

@@ -13,7 +13,10 @@
 //! * [`sim`] — a cycle-accurate systolic-array simulator (ScaleSim-V2
 //!   equivalent): im2col GEMM mapping, the three dataflow timing models
 //!   (IS/OS/WS) with fold/skew/drain accounting, demand-trace generation,
-//!   and a double-buffered SRAM + DRAM memory model with stall accounting.
+//!   a double-buffered SRAM + DRAM memory model with stall accounting,
+//!   the [`sim::parallel`] work-stealing pool + [`sim::ShapeCache`]
+//!   layer-shape memoization, and [`sim::shard`] — multi-chip sharded
+//!   simulation with a ring all-gather interconnect model.
 //! * [`arch`] — a functional, PE-level model of the Flex-PE
 //!   micro-architecture (the paper's Fig. 3/4: one extra register + two
 //!   muxes) that moves real data through the array cycle-by-cycle in all
@@ -22,7 +25,10 @@
 //! * [`coordinator`] — the paper's contribution: the Configuration
 //!   Management Unit (CMU), the offline per-layer dataflow selector, the
 //!   dataflow (address) generator, and the main controller that sequences
-//!   layer execution with reconfiguration accounting.
+//!   layer execution with reconfiguration accounting.  The
+//!   [`coordinator::partition`] module extends the selector to multi-chip
+//!   systems (joint dataflow × shard-strategy argmin), and
+//!   [`coordinator::sweep`] runs zoo/size/chip-count grids in parallel.
 //! * [`cost`] — an area/power/critical-path model calibrated against the
 //!   paper's Nangate-45nm Synopsys DC results (Table II, Fig. 5).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
@@ -45,6 +51,8 @@
 //! let deployment = FlexPipeline::new(arch).deploy(&model);
 //! println!("flex cycles: {}", deployment.total_cycles());
 //! ```
+
+#![deny(missing_docs)]
 
 pub mod arch;
 pub mod config;

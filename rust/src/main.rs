@@ -3,9 +3,10 @@
 //! ```text
 //! flex-tpu simulate --model resnet18 --size 32 --dataflow os [--memory] [--per-layer]
 //! flex-tpu deploy   --model resnet18 --size 32 [--cmu-out cmu.json] [--heuristic]
-//! flex-tpu sweep    [--size 32] [--threads 0]
+//! flex-tpu sweep    [--size 32] [--threads 0] [--chips 4]
+//! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer]
 //! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|paper|all> [--size 32] [--csv DIR]
-//! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2]
+//! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2] [--chips 2]
 //! flex-tpu validate [--array 4] [--cases 20]
 //! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0]
 //! ```
@@ -15,12 +16,14 @@ use std::path::PathBuf;
 use flex_tpu::config::{ArchConfig, SimFidelity};
 use flex_tpu::coordinator::cmu::Cmu;
 use flex_tpu::coordinator::pipeline::SelectorKind;
-use flex_tpu::coordinator::{sweep, FlexPipeline};
+use flex_tpu::coordinator::{partition, select_exhaustive_cached, sweep, FlexPipeline};
 use flex_tpu::inference::{InferenceRequest, InferenceServer};
 use flex_tpu::metrics::Table;
 use flex_tpu::report;
 use flex_tpu::runtime::Runtime;
-use flex_tpu::sim::engine::{simulate_network, SimOptions};
+use flex_tpu::sim::engine::{reconfig_charges, simulate_network, SimOptions};
+use flex_tpu::sim::parallel::ShapeCache;
+use flex_tpu::sim::shard::simulate_layer_sharded_cached;
 use flex_tpu::sim::{Dataflow, DwMapping};
 use flex_tpu::topology::{parse_csv, zoo, Topology};
 use flex_tpu::util::cli::{Args, Parsed};
@@ -28,7 +31,7 @@ use flex_tpu::util::cli::{Args, Parsed};
 /// CLI-level result: any error type boxes into the exit diagnostic.
 type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
-const SUBCOMMANDS: &str = "simulate | deploy | sweep | report | infer | validate | dse";
+const SUBCOMMANDS: &str = "simulate | deploy | sweep | shard | report | infer | validate | dse";
 
 fn load_model(name: &str) -> CliResult<Topology> {
     if name.ends_with(".csv") {
@@ -69,6 +72,19 @@ fn arch_from(p: &Parsed) -> CliResult<ArchConfig> {
     };
     arch.validate()?;
     Ok(arch)
+}
+
+/// Resolve `--chips`: 0 means "whatever the arch config says".
+fn effective_chips(p: &Parsed, arch: &ArchConfig) -> CliResult<u32> {
+    let flag = p.u64("chips")?;
+    if flag > u64::from(ArchConfig::MAX_CHIPS) {
+        return Err(format!("--chips must be in 1..={}", ArchConfig::MAX_CHIPS).into());
+    }
+    let chips = if flag == 0 { arch.chips } else { flag as u32 };
+    if chips == 0 || chips > ArchConfig::MAX_CHIPS {
+        return Err(format!("--chips must be in 1..={}", ArchConfig::MAX_CHIPS).into());
+    }
+    Ok(chips)
 }
 
 fn cmd_simulate(p: &Parsed) -> CliResult<()> {
@@ -144,8 +160,12 @@ fn cmd_deploy(p: &Parsed) -> CliResult<()> {
 
 fn cmd_sweep(p: &Parsed) -> CliResult<()> {
     let arch = arch_from(p)?;
+    let chips = effective_chips(p, &arch)?;
     let threads = p.u64("threads")? as usize;
     let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    if chips > 1 {
+        return sweep_sharded(&arch, chips, threads, sim);
+    }
     let result = sweep::sweep_zoo(&arch, threads, sim);
     let mut t = Table::new(&[
         "Model",
@@ -176,13 +196,127 @@ fn cmd_sweep(p: &Parsed) -> CliResult<()> {
         arch.array_rows,
         arch.array_cols
     );
+    print_cache_line(&result.cache);
+    Ok(())
+}
+
+fn print_cache_line(cache: &flex_tpu::sim::CacheStats) {
     println!(
         "shape cache: {} entries, {} hits / {} lookups ({:.1}% hit rate)",
-        result.cache.entries,
-        result.cache.hits,
-        result.cache.hits + result.cache.misses,
-        result.cache.hit_rate() * 100.0
+        cache.entries,
+        cache.hits,
+        cache.hits + cache.misses,
+        cache.hit_rate() * 100.0
     );
+}
+
+/// The multi-chip arm of `flex-tpu sweep`: zoo-wide joint (dataflow ×
+/// shard strategy) selection with per-model speedup vs one chip.
+fn sweep_sharded(arch: &ArchConfig, chips: u32, threads: usize, sim: SimOptions) -> CliResult<()> {
+    let result = sweep::sweep_zoo_sharded(arch, chips, threads, sim);
+    let sharded_col = format!("{chips}-chip Flex");
+    let mut t = Table::new(&[
+        "Model",
+        "1-chip Flex",
+        &sharded_col,
+        "Best (DF+Shard)",
+        "DF Wins (IS/OS/WS)",
+        "Shard Wins (R/C/B)",
+        "Speedup",
+    ]);
+    for m in &result.models {
+        let dw = m.selection.dataflow_wins();
+        let sw = m.selection.strategy_wins();
+        t.row(vec![
+            m.model.clone(),
+            m.single_chip_cycles.to_string(),
+            m.flex_cycles.to_string(),
+            m.selection.dominant_choice().to_string(),
+            format!("{}/{}/{}", dw[0], dw[1], dw[2]),
+            format!("{}/{}/{}", sw[0], sw[1], sw[2]),
+            format!("{:.3}x", m.speedup_vs_single_chip()),
+        ]);
+    }
+    println!("{}", t.render());
+    let total: f64 = result
+        .models
+        .iter()
+        .map(sweep::ModelShardSweep::speedup_vs_single_chip)
+        .sum();
+    let mean = total / result.models.len() as f64;
+    println!(
+        "swept {} models on {} threads ({}x{} array x {chips} chips, link {} B/cyc + {} cyc latency)",
+        result.models.len(),
+        result.threads,
+        arch.array_rows,
+        arch.array_cols,
+        arch.interconnect.link_bytes_per_cycle,
+        arch.interconnect.link_latency_cycles
+    );
+    println!("mean speedup vs 1 chip: {mean:.3}x");
+    print_cache_line(&result.cache);
+    Ok(())
+}
+
+/// `flex-tpu shard`: per-layer joint selection detail for one model.
+fn cmd_shard(p: &Parsed) -> CliResult<()> {
+    let topo = load_model(p.req("model")?)?;
+    let arch = arch_from(p)?;
+    let chips = effective_chips(p, &arch)?;
+    let threads = p.u64("threads")? as usize;
+    let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let cache = ShapeCache::new();
+    let joint = partition::select_joint_parallel(&arch, &topo, sim, chips, threads, &cache);
+    let plain = select_exhaustive_cached(&arch, &topo, sim, &cache);
+
+    let per_layer_detail = p.is_set("per-layer");
+    let mut comm_total = 0u64;
+    let mut t = Table::new(&[
+        "Layer",
+        "Choice",
+        "Chips",
+        "1-chip",
+        "Sharded",
+        "Comm",
+        "Speedup",
+    ]);
+    for (i, layer) in topo.layers.iter().enumerate() {
+        let choice = joint.per_layer[i];
+        let stats = simulate_layer_sharded_cached(
+            &arch,
+            layer,
+            choice.dataflow,
+            choice.strategy,
+            chips,
+            sim,
+            &cache,
+        );
+        comm_total += stats.comm_cycles;
+        if per_layer_detail {
+            let single = *plain.cycles[i].iter().min().expect("three dataflows");
+            t.row(vec![
+                layer.name.clone(),
+                choice.to_string(),
+                stats.chips.to_string(),
+                single.to_string(),
+                stats.total_cycles().to_string(),
+                stats.comm_cycles.to_string(),
+                format!("{:.3}x", single as f64 / stats.total_cycles() as f64),
+            ]);
+        }
+    }
+    if per_layer_detail {
+        println!("{}", t.render());
+    }
+    let joint_dfs: Vec<Dataflow> = joint.per_layer.iter().map(|c| c.dataflow).collect();
+    let flex = joint.flex_layer_cycles() + reconfig_charges(&joint_dfs, arch.reconfig_cycles);
+    let single =
+        plain.flex_compute_cycles() + reconfig_charges(&plain.per_layer, arch.reconfig_cycles);
+    println!(
+        "{} on {}x{} x {chips} chips: {flex} cycles ({comm_total} interconnect), 1 chip: {single}",
+        topo.name, arch.array_rows, arch.array_cols
+    );
+    println!("speedup vs 1 chip: {:.3}x", single as f64 / flex as f64);
     Ok(())
 }
 
@@ -217,12 +351,14 @@ fn cmd_report(p: &Parsed) -> CliResult<()> {
 fn cmd_infer(p: &Parsed) -> CliResult<()> {
     let artifacts = PathBuf::from(p.req("artifacts")?);
     let requests = p.u64("requests")?;
-    let size = p.u32("size")?;
     let workers = (p.u64("workers")? as usize).max(1);
+    let arch = arch_from(p)?;
+    let size = arch.array_rows;
+    let chips = effective_chips(p, &arch)?;
     let rt = Runtime::load(&artifacts)?;
     println!("platform: {}", rt.platform());
     let manifest = rt.manifest().clone();
-    let server = InferenceServer::new(rt, ArchConfig::square(size))?;
+    let server = InferenceServer::new_sharded(rt, arch, chips)?;
 
     // Bounded front door: producers block once the queue holds 4 compiled
     // batches, which is the back-pressure a real serving door applies.
@@ -257,7 +393,7 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
         stats.requests, stats.batches, stats.host_throughput_rps, stats.mean_host_latency_us
     );
     println!(
-        "simulated Flex-TPU ({size}x{size}): {:.2} us/inference, {:.0} inf/s, {:.3}x vs best static",
+        "simulated Flex-TPU ({size}x{size} x {chips} chips): {:.2} us/inference, {:.0} inf/s, {:.3}x vs best static",
         stats.sim_flex_latency_ns / 1000.0,
         stats.sim_flex_throughput_ips,
         stats.sim_speedup_vs_best_static
@@ -368,8 +504,9 @@ fn main() -> CliResult<()> {
     .flag("batch", Some("1"), "inference batch size (simulate)")
     .flag("config", None, "TOML arch config file (overrides --size)")
     .flag("sizes", Some("8,16,32,64,128"), "comma-separated sizes for dse")
-    .flag("threads", Some("0"), "worker threads for sweep/dse (0 = all cores)")
+    .flag("threads", Some("0"), "worker threads for sweep/shard/dse (0 = all cores)")
     .flag("workers", Some("2"), "serving threads for infer")
+    .flag("chips", Some("0"), "chips to shard layers across (0 = from arch config)")
     .switch("memory", "enable the SRAM/DRAM stall model")
     .switch("per-layer", "print per-layer detail")
     .switch("heuristic", "use the shape-heuristic selector (future-work mode)");
@@ -385,6 +522,7 @@ fn main() -> CliResult<()> {
         Some("simulate") => cmd_simulate(&parsed),
         Some("deploy") => cmd_deploy(&parsed),
         Some("sweep") => cmd_sweep(&parsed),
+        Some("shard") => cmd_shard(&parsed),
         Some("report") => cmd_report(&parsed),
         Some("infer") => cmd_infer(&parsed),
         Some("validate") => cmd_validate(&parsed),

@@ -14,7 +14,9 @@ use crate::topology::zoo;
 /// One model's Table I data.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Table1Row {
+    /// Model name.
     pub model: String,
+    /// Flex-TPU total cycles.
     pub flex_cycles: u64,
     /// Static cycles in `Dataflow::ALL` order (IS, OS, WS).
     pub static_cycles: [u64; 3],

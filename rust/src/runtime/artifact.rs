@@ -59,14 +59,17 @@ impl Runtime {
             .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))
     }
 
+    /// The loaded manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Directory the artifacts were loaded from.
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }
 
+    /// PJRT platform name (e.g. "cpu"; "stub" for the offline stand-in).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -10,40 +10,60 @@ use crate::util::json::{self, Value};
 /// One conv layer of the exported model (mirrors `model.CONV_LAYERS`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConvLayerSpec {
+    /// Layer name.
     pub name: String,
+    /// Kernel height.
     pub kh: u32,
+    /// Kernel width.
     pub kw: u32,
+    /// Input channels.
     pub cin: u32,
+    /// Output channels.
     pub cout: u32,
+    /// Stride.
     pub stride: u32,
+    /// Symmetric spatial padding.
     pub padding: u32,
 }
 
 /// One exported model variant (a dataflow assignment baked at AOT time).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelArtifact {
+    /// HLO text path, relative to the artifact directory.
     pub path: String,
+    /// Per-layer dataflow names baked into this variant.
     pub dataflows: Vec<String>,
 }
 
 /// One exported standalone GEMM executable.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GemmArtifact {
+    /// HLO text path, relative to the artifact directory.
     pub path: String,
+    /// Square operand dimension.
     pub dim: u32,
 }
 
 /// `artifacts/manifest.json`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Manifest {
+    /// Compiled batch size (executables are batch-static).
     pub batch: u32,
+    /// Input height = width, pixels.
     pub input_hw: u32,
+    /// Input channels.
     pub input_channels: u32,
+    /// Classifier output classes.
     pub num_classes: u32,
+    /// Weight-init seed the artifacts were exported with.
     pub seed: u64,
+    /// Operand dimension of the standalone GEMM artifacts.
     pub gemm_dim: u32,
+    /// Exported model variants by name (flex/os/ws/is).
     pub models: BTreeMap<String, ModelArtifact>,
+    /// Exported standalone GEMMs by dataflow name.
     pub gemms: BTreeMap<String, GemmArtifact>,
+    /// The exported network's conv layers, in order.
     pub conv_layers: Vec<ConvLayerSpec>,
 }
 

@@ -54,6 +54,7 @@ impl OperandTraffic {
 /// The fold schedule for one GEMM on one dataflow.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FoldPlan {
+    /// Dataflow the plan schedules.
     pub dataflow: Dataflow,
     /// Fold-grid extent along the first folded dimension (see table above).
     pub folds_a: u64,

@@ -18,6 +18,7 @@ use crate::sim::{Dataflow, Gemm};
 
 use super::{div_ceil, FoldPlan, OperandTraffic};
 
+/// Output-stationary fold plan for `gemm` on `arch` (see module docs).
 pub fn plan(gemm: &Gemm, arch: &ArchConfig) -> FoldPlan {
     let r = arch.array_rows as u64;
     let c = arch.array_cols as u64;

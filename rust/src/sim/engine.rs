@@ -17,7 +17,9 @@ use crate::topology::{Layer, Topology};
 /// Simulation options shared by all runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SimOptions {
+    /// Analytical-only or with the SRAM/DRAM stall model.
     pub fidelity: SimFidelity,
+    /// How depthwise convolutions are lowered.
     pub dw_mapping: DwMapping,
     /// Inference requests batched through each layer (M scales by batch;
     /// the paper simulates batch 1, TPU-v1-style serving batches more).
@@ -37,21 +39,28 @@ impl Default for SimOptions {
 /// Result of simulating one layer under one dataflow.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerStats {
+    /// Layer name.
     pub name: String,
+    /// Dataflow the layer was simulated under.
     pub dataflow: Dataflow,
     /// Number of GEMM launches (1 except grouped depthwise).
     pub launches: u64,
+    /// Cycles the array computes (folds × cycles-per-fold).
     pub compute_cycles: u64,
+    /// Cycles stalled on memory (0 at analytical fidelity).
     pub stall_cycles: u64,
     /// MACs as mapped (ScaleSim-literal dw counts the row as written).
     pub macs: u64,
+    /// SRAM-level operand traffic.
     pub traffic: OperandTraffic,
+    /// DRAM-side traffic (populated at `WithMemory` fidelity).
     pub dram: DramTraffic,
     /// MACs / (total cycles * PEs).
     pub utilization: f64,
 }
 
 impl LayerStats {
+    /// Compute plus stall cycles.
     pub fn total_cycles(&self) -> u64 {
         self.compute_cycles + self.stall_cycles
     }
@@ -60,7 +69,9 @@ impl LayerStats {
 /// Result of simulating a whole network under a per-layer dataflow list.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkStats {
+    /// Model name.
     pub model: String,
+    /// Per-layer results in execution order.
     pub layers: Vec<LayerStats>,
     /// Cycles spent reconfiguring the array between layers (Flex-TPU only).
     pub reconfig_cycles: u64,
@@ -142,6 +153,15 @@ pub fn simulate_layer(
     }
 }
 
+/// Reconfiguration cycles a per-layer dataflow schedule incurs: one
+/// `reconfig_cycles` charge per dataflow *change* between consecutive
+/// layers (the CMU's mux-select broadcast; the initial configuration is
+/// free, as it is for static TPUs too).  Shared by every path that rolls
+/// up network totals — engine, sweeps, the shard CLI and the server.
+pub fn reconfig_charges(dataflows: &[Dataflow], reconfig_cycles: u64) -> u64 {
+    dataflows.windows(2).filter(|w| w[0] != w[1]).count() as u64 * reconfig_cycles
+}
+
 /// Simulate a network with one dataflow per layer (`dataflows.len()` must
 /// equal the layer count). Reconfiguration cost is charged per dataflow
 /// *change* between consecutive layers.
@@ -162,11 +182,7 @@ pub fn simulate_network_per_layer(
         .zip(dataflows)
         .map(|(l, &df)| simulate_layer(arch, l, df, opts))
         .collect();
-    let reconfig_cycles = dataflows
-        .windows(2)
-        .filter(|w| w[0] != w[1])
-        .count() as u64
-        * arch.reconfig_cycles;
+    let reconfig_cycles = reconfig_charges(dataflows, arch.reconfig_cycles);
     NetworkStats {
         model: topo.name.clone(),
         layers,
@@ -207,11 +223,7 @@ pub fn simulate_network_per_layer_cached(
         .zip(dataflows)
         .map(|(l, &df)| cache.simulate_layer(arch, l, df, opts))
         .collect();
-    let reconfig_cycles = dataflows
-        .windows(2)
-        .filter(|w| w[0] != w[1])
-        .count() as u64
-        * arch.reconfig_cycles;
+    let reconfig_cycles = reconfig_charges(dataflows, arch.reconfig_cycles);
     NetworkStats {
         model: topo.name.clone(),
         layers,

@@ -25,6 +25,7 @@ pub struct Gemm {
 }
 
 impl Gemm {
+    /// GEMM of the given operand dimensions.
     pub fn new(m: u64, k: u64, n: u64) -> Self {
         Self { m, k, n }
     }

@@ -7,6 +7,7 @@ pub struct DramModel {
 }
 
 impl DramModel {
+    /// Interface with the given bandwidth (> 0).
     pub fn new(bytes_per_cycle: u64) -> Self {
         assert!(bytes_per_cycle > 0, "dram bandwidth must be positive");
         Self { bytes_per_cycle }

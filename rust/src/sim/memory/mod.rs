@@ -33,8 +33,11 @@ pub struct DramTraffic {
 /// Per-fold operand working set (elements).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FoldWorkingSet {
+    /// IFMap elements resident during one fold.
     pub ifmap: u64,
+    /// Filter elements resident during one fold.
     pub filter: u64,
+    /// OFMap elements produced by one fold.
     pub ofmap: u64,
 }
 

@@ -15,6 +15,12 @@
 //! the functional PE-level array in [`crate::arch`] (see
 //! `rust/tests/functional_array.rs`), which is the "is the analytical model
 //! telling the truth" check ScaleSim itself lacks.
+//!
+//! Above the single-chip pipeline, [`shard`] splits one layer across
+//! several chips (row / column / batch partitions) and composes per-shard
+//! results from this same engine with a ring all-gather interconnect
+//! model, and [`parallel`] provides the work-stealing pool + shape
+//! memoization every sweep runs on.
 
 pub mod dataflow;
 pub mod engine;
@@ -22,12 +28,14 @@ pub mod gemm;
 pub mod memory;
 pub mod parallel;
 pub mod roofline;
+pub mod shard;
 pub mod trace;
 
 pub use dataflow::{FoldPlan, OperandTraffic};
 pub use engine::{simulate_layer, simulate_network, LayerStats, NetworkStats};
 pub use gemm::{layer_gemms, layer_gemms_batched, DwMapping, Gemm};
 pub use parallel::{parallel_map, CacheStats, ShapeCache};
+pub use shard::{simulate_layer_sharded, ShardStrategy, ShardedLayerStats};
 
 
 /// The three systolic dataflows of the paper (and the CMU's alphabet).

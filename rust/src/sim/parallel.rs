@@ -17,10 +17,13 @@
 //!   dataflows across seven models and many array sizes — the cache
 //!   collapses all repeats to one simulation each.
 //!
-//! The cache key deliberately excludes [`ArchConfig::clock_ns`] and
-//! [`ArchConfig::reconfig_cycles`]: neither influences per-layer cycle
-//! counts (clock converts cycles to wall time downstream; reconfiguration
-//! is charged between layers by the network roll-up).
+//! The cache key deliberately excludes [`ArchConfig::clock_ns`],
+//! [`ArchConfig::reconfig_cycles`], and the multi-chip settings
+//! ([`ArchConfig::chips`] / [`ArchConfig::interconnect`]): none of them
+//! influences a single-chip per-layer cycle count (clock converts cycles
+//! to wall time downstream; reconfiguration is charged between layers by
+//! the network roll-up; sharding happens *above* this layer in
+//! [`crate::sim::shard`], whose sub-layers are ordinary cache entries).
 
 use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
@@ -52,6 +55,14 @@ pub fn effective_threads(threads: usize) -> usize {
 /// worker pops its own queue front-first and steals back-first from the
 /// first non-empty victim once it runs dry.  Every index is executed
 /// exactly once; panics in `f` propagate (the scope joins all workers).
+///
+/// ```
+/// use flex_tpu::sim::parallel_map;
+///
+/// let items: Vec<u64> = (0..100).collect();
+/// let squares = parallel_map(4, &items, |_, &x| x * x);
+/// assert_eq!(squares[9], 81); // results stay in input order
+/// ```
 pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -167,7 +178,9 @@ const SHARD_COUNT: usize = 16;
 /// Point-in-time cache counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups answered from the cache.
     pub hits: u64,
+    /// Lookups that had to simulate.
     pub misses: u64,
     /// Distinct `(arch, shape, dataflow, options)` entries resident.
     pub entries: u64,
@@ -191,6 +204,22 @@ impl CacheStats {
 /// sweep workers rarely contend.  Values are stored with an empty layer
 /// name; [`ShapeCache::simulate_layer`] stamps the caller's layer name back
 /// on, so cached and uncached paths return identical `LayerStats`.
+///
+/// ```
+/// use flex_tpu::config::ArchConfig;
+/// use flex_tpu::sim::engine::SimOptions;
+/// use flex_tpu::sim::{Dataflow, ShapeCache};
+/// use flex_tpu::topology::zoo;
+///
+/// let cache = ShapeCache::new();
+/// let arch = ArchConfig::square(16);
+/// let topo = zoo::alexnet();
+/// let layer = &topo.layers[0];
+/// let first = cache.simulate_layer(&arch, layer, Dataflow::Os, SimOptions::default());
+/// let second = cache.simulate_layer(&arch, layer, Dataflow::Os, SimOptions::default());
+/// assert_eq!(first, second);
+/// assert_eq!(cache.stats().hits, 1); // second call was served from cache
+/// ```
 #[derive(Debug)]
 pub struct ShapeCache {
     shards: Vec<Mutex<HashMap<ShapeKey, LayerStats>>>,
@@ -199,6 +228,7 @@ pub struct ShapeCache {
 }
 
 impl ShapeCache {
+    /// Empty cache.
     pub fn new() -> Self {
         Self {
             shards: (0..SHARD_COUNT)

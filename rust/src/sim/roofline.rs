@@ -34,6 +34,7 @@ pub struct Roofline {
     pub attainable_macs_per_cycle: f64,
     /// Achieved MACs/cycle from the simulation.
     pub achieved_macs_per_cycle: f64,
+    /// The stall model's compute/memory verdict.
     pub bound: Bound,
 }
 

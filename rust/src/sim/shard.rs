@@ -1,0 +1,461 @@
+//! Multi-chip sharded layer simulation.
+//!
+//! The paper evaluates one systolic array at a time; the production regime
+//! this repo grows toward runs one model across *several* chips (Jouppi et
+//! al.'s datacenter TPU deployments).  This module splits a single layer
+//! across `n` identical chips, simulates every shard through the existing
+//! [`simulate_layer`] / [`ShapeCache`] path, and composes the per-shard
+//! cycle counts with an inter-chip interconnect model:
+//!
+//! * **compute** — shards run concurrently, so the layer's compute time is
+//!   the *slowest* shard's time (shards are split as evenly as the geometry
+//!   allows);
+//! * **communication** — [`ShardStrategy::Rows`] and [`ShardStrategy::Cols`]
+//!   partition the *output* (disjoint row / channel blocks), so finishing a
+//!   layer requires a ring **all-gather** of the OFMap before every chip
+//!   holds the next layer's full input; [`ShardStrategy::Batch`] keeps each
+//!   request on one chip end-to-end and never communicates.
+//!
+//! No shard splits the GEMM reduction (`K`) dimension, so there is never a
+//! partial-sum all-reduce: every strategy here produces disjoint finished
+//! outputs, which keeps the composition exact rather than approximate.
+//!
+//! Invariants the `rust/tests/shard.rs` suite locks in:
+//!
+//! 1. `n = 1` is **byte-identical** to the unsharded simulator (the shard
+//!    path is bypassed entirely);
+//! 2. per-layer compute cycles are monotonically non-increasing in the chip
+//!    count for every strategy (communication is accounted separately);
+//! 3. results are independent of caller thread counts (pure functions over
+//!    the deterministic single-chip engine).
+//!
+//! ```
+//! use flex_tpu::config::ArchConfig;
+//! use flex_tpu::sim::shard::{simulate_layer_sharded, ShardStrategy};
+//! use flex_tpu::sim::engine::SimOptions;
+//! use flex_tpu::sim::Dataflow;
+//! use flex_tpu::topology::Layer;
+//!
+//! let arch = ArchConfig::square(32);
+//! let layer = Layer::conv("conv", 58, 58, 3, 3, 64, 64, 1);
+//! let opts = SimOptions::default();
+//! let one = simulate_layer_sharded(&arch, &layer, Dataflow::Os, ShardStrategy::Rows, 1, opts);
+//! let four = simulate_layer_sharded(&arch, &layer, Dataflow::Os, ShardStrategy::Rows, 4, opts);
+//! assert_eq!(four.per_chip.len(), 4);
+//! assert!(four.compute_cycles < one.compute_cycles);
+//! assert!(four.comm_cycles > 0); // the OFMap all-gather is not free
+//! ```
+
+use crate::config::{ArchConfig, InterconnectConfig};
+use crate::sim::engine::{simulate_layer, LayerStats, SimOptions};
+use crate::sim::gemm::layer_gemms_batched;
+use crate::sim::parallel::ShapeCache;
+use crate::sim::Dataflow;
+use crate::topology::{Layer, LayerKind};
+
+/// How one layer is partitioned across chips.
+///
+/// Every strategy partitions finished outputs (never the reduction), so the
+/// only inter-chip traffic is the gather of disjoint results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardStrategy {
+    /// Split output feature-map rows (the GEMM `M` dimension): each chip
+    /// computes a horizontal band of the OFMap.  Requires an OFMap
+    /// all-gather between layers.
+    Rows,
+    /// Split output channels (the GEMM `N` dimension): each chip holds a
+    /// slice of the filters.  Requires an OFMap all-gather between layers.
+    /// Depthwise layers are not split (their ScaleSim row has one output
+    /// channel), so `Cols` degenerates to a single shard there.
+    Cols,
+    /// Split the inference batch: each chip serves a slice of the requests
+    /// end-to-end, with no inter-chip communication.  Only helps when
+    /// `SimOptions::batch > 1`.
+    Batch,
+}
+
+impl ShardStrategy {
+    /// All strategies, in selector tie-break order.
+    pub const ALL: [ShardStrategy; 3] =
+        [ShardStrategy::Rows, ShardStrategy::Cols, ShardStrategy::Batch];
+
+    /// Short lowercase name used in CLI args and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardStrategy::Rows => "rows",
+            ShardStrategy::Cols => "cols",
+            ShardStrategy::Batch => "batch",
+        }
+    }
+
+    /// Parse from the short name (case-insensitive).
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rows" => Some(ShardStrategy::Rows),
+            "cols" => Some(ShardStrategy::Cols),
+            "batch" => Some(ShardStrategy::Batch),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ShardStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Result of simulating one layer sharded across chips.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedLayerStats {
+    /// Layer name (copied from the input layer).
+    pub name: String,
+    /// Dataflow every shard ran under.
+    pub dataflow: Dataflow,
+    /// Partitioning strategy used.
+    pub strategy: ShardStrategy,
+    /// Chips that received non-empty shards (≤ the requested count when the
+    /// split dimension is smaller than it).
+    pub chips: u32,
+    /// Compute cycles of the critical (slowest) shard.
+    pub compute_cycles: u64,
+    /// Memory stall cycles of the critical shard.
+    pub stall_cycles: u64,
+    /// Inter-chip cycles for the OFMap all-gather (0 for `Batch` and for a
+    /// single shard).
+    pub comm_cycles: u64,
+    /// MACs summed across all shards (equals the unsharded layer's MACs).
+    pub macs: u64,
+    /// Per-shard single-chip statistics, in chip order.
+    pub per_chip: Vec<LayerStats>,
+}
+
+impl ShardedLayerStats {
+    /// End-to-end layer cycles: critical shard plus interconnect time.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.stall_cycles + self.comm_cycles
+    }
+}
+
+/// Cycles of a ring all-gather of `total_bytes` spread over `chips` chips.
+///
+/// Each chip holds `ceil(total_bytes / chips)` and forwards its (growing)
+/// slice around the ring for `chips - 1` steps; a step costs the link
+/// latency plus the slice's serialization time.  Zero for one chip or zero
+/// bytes.
+pub fn all_gather_cycles(total_bytes: u64, chips: u64, link: &InterconnectConfig) -> u64 {
+    if chips <= 1 || total_bytes == 0 {
+        return 0;
+    }
+    let shard_bytes = total_bytes.div_ceil(chips);
+    let step = link.link_latency_cycles + shard_bytes.div_ceil(link.link_bytes_per_cycle.max(1));
+    (chips - 1) * step
+}
+
+/// Split `total` units into at most `parts` near-even non-empty spans
+/// (first `total % parts` spans get the extra unit).  Spans of zero size
+/// are dropped, so fewer than `parts` entries come back when
+/// `total < parts`.
+fn split_even(total: u32, parts: u32) -> Vec<u32> {
+    let parts = parts.max(1);
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts)
+        .map(|i| if i < rem { base + 1 } else { base })
+        .filter(|&span| span > 0)
+        .collect()
+}
+
+/// The per-chip work list for one layer: a (sub-)layer plus the options to
+/// simulate it with.  `chips <= 1` returns the input unchanged, which is
+/// what makes the single-chip path byte-identical to the unsharded one.
+fn shard_work(
+    layer: &Layer,
+    strategy: ShardStrategy,
+    chips: u32,
+    opts: SimOptions,
+) -> Vec<(Layer, SimOptions)> {
+    if chips <= 1 {
+        return vec![(layer.clone(), opts)];
+    }
+    match strategy {
+        ShardStrategy::Rows => split_even(layer.out_h(), chips)
+            .into_iter()
+            .map(|rows| {
+                let mut shard = layer.clone();
+                // Smallest padded input band producing exactly `rows`
+                // output rows: (rows - 1) * stride + filter height.
+                shard.ifmap_h = (rows - 1) * layer.stride + layer.filt_h;
+                (shard, opts)
+            })
+            .collect(),
+        ShardStrategy::Cols => match layer.kind {
+            LayerKind::DepthwiseConv => vec![(layer.clone(), opts)],
+            _ => split_even(layer.num_filters, chips)
+                .into_iter()
+                .map(|filters| {
+                    let mut shard = layer.clone();
+                    shard.num_filters = filters;
+                    (shard, opts)
+                })
+                .collect(),
+        },
+        ShardStrategy::Batch => split_even(opts.batch, chips)
+            .into_iter()
+            .map(|batch| (layer.clone(), SimOptions { batch, ..opts }))
+            .collect(),
+    }
+}
+
+/// Bytes the whole layer's OFMap occupies (the all-gather payload): summed
+/// `m * n` over the layer's batched GEMM launches, times the element size.
+fn ofmap_bytes(arch: &ArchConfig, layer: &Layer, opts: SimOptions) -> u64 {
+    layer_gemms_batched(layer, opts.dw_mapping, opts.batch)
+        .iter()
+        .map(|g| g.m * g.n * arch.memory.bytes_per_element)
+        .sum()
+}
+
+fn sharded_stats(
+    arch: &ArchConfig,
+    layer: &Layer,
+    df: Dataflow,
+    strategy: ShardStrategy,
+    chips: u32,
+    opts: SimOptions,
+    sim: &dyn Fn(&Layer, SimOptions) -> LayerStats,
+) -> ShardedLayerStats {
+    let work = shard_work(layer, strategy, chips, opts);
+    let per_chip: Vec<LayerStats> = work.iter().map(|(l, o)| sim(l, *o)).collect();
+    let used = per_chip.len() as u32;
+    // Critical shard: largest total, first index on ties (determinism).
+    let critical = per_chip
+        .iter()
+        .enumerate()
+        .max_by_key(|(i, s)| (s.total_cycles(), std::cmp::Reverse(*i)))
+        .map(|(i, _)| i)
+        .expect("at least one shard");
+    let comm_cycles = match strategy {
+        ShardStrategy::Batch => 0,
+        ShardStrategy::Rows | ShardStrategy::Cols => all_gather_cycles(
+            ofmap_bytes(arch, layer, opts),
+            u64::from(used),
+            &arch.interconnect,
+        ),
+    };
+    ShardedLayerStats {
+        name: layer.name.clone(),
+        dataflow: df,
+        strategy,
+        chips: used,
+        compute_cycles: per_chip[critical].compute_cycles,
+        stall_cycles: per_chip[critical].stall_cycles,
+        comm_cycles,
+        macs: per_chip.iter().map(|s| s.macs).sum(),
+        per_chip,
+    }
+}
+
+/// Simulate one layer split across `chips` chips under `strategy`.
+///
+/// Every shard goes through [`simulate_layer`], so sharded results inherit
+/// the single-chip engine's validation; the composition only adds the max
+/// over shards and the all-gather term.  `chips = 1` bypasses sharding and
+/// is byte-identical to [`simulate_layer`].
+pub fn simulate_layer_sharded(
+    arch: &ArchConfig,
+    layer: &Layer,
+    df: Dataflow,
+    strategy: ShardStrategy,
+    chips: u32,
+    opts: SimOptions,
+) -> ShardedLayerStats {
+    let sim = |l: &Layer, o: SimOptions| simulate_layer(arch, l, df, o);
+    sharded_stats(arch, layer, df, strategy, chips, opts, &sim)
+}
+
+/// [`simulate_layer_sharded`] with each shard memoized through a
+/// [`ShapeCache`] — identical output; even shards repeat shapes (near-even
+/// splits produce at most two distinct shard geometries per layer).
+pub fn simulate_layer_sharded_cached(
+    arch: &ArchConfig,
+    layer: &Layer,
+    df: Dataflow,
+    strategy: ShardStrategy,
+    chips: u32,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> ShardedLayerStats {
+    let sim = |l: &Layer, o: SimOptions| cache.simulate_layer(arch, l, df, o);
+    sharded_stats(arch, layer, df, strategy, chips, opts, &sim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::zoo;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::square(32)
+    }
+
+    #[test]
+    fn split_even_covers_and_balances() {
+        assert_eq!(split_even(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_even(2, 4), vec![1, 1]);
+        assert_eq!(split_even(7, 1), vec![7]);
+        assert_eq!(split_even(0, 3), Vec::<u32>::new());
+        for (total, parts) in [(112u32, 4u32), (55, 8), (1, 16), (1000, 7)] {
+            let spans = split_even(total, parts);
+            assert_eq!(spans.iter().sum::<u32>(), total);
+            let max = *spans.iter().max().unwrap();
+            let min = *spans.iter().min().unwrap();
+            assert!(max - min <= 1, "{total}/{parts}: {spans:?}");
+        }
+    }
+
+    #[test]
+    fn row_shards_cover_all_output_rows() {
+        let topo = zoo::resnet18();
+        let layer = &topo.layers[0];
+        for chips in [2u32, 3, 4, 7, 16] {
+            let work = shard_work(layer, ShardStrategy::Rows, chips, SimOptions::default());
+            let rows: u32 = work.iter().map(|(l, _)| l.out_h()).sum();
+            assert_eq!(rows, layer.out_h(), "{chips} chips");
+            for (shard, _) in &work {
+                shard.validate().unwrap();
+                assert_eq!(shard.out_w(), layer.out_w());
+            }
+        }
+    }
+
+    #[test]
+    fn col_shards_cover_all_filters() {
+        let topo = zoo::vgg13();
+        let layer = &topo.layers[3];
+        let work = shard_work(layer, ShardStrategy::Cols, 4, SimOptions::default());
+        let filters: u32 = work.iter().map(|(l, _)| l.num_filters).sum();
+        assert_eq!(filters, layer.num_filters);
+    }
+
+    #[test]
+    fn depthwise_cols_degenerates_to_one_shard() {
+        let topo = zoo::mobilenet();
+        let dw = topo
+            .layers
+            .iter()
+            .find(|l| l.kind == LayerKind::DepthwiseConv)
+            .expect("mobilenet has depthwise layers");
+        let s = simulate_layer_sharded(
+            &arch(),
+            dw,
+            Dataflow::Os,
+            ShardStrategy::Cols,
+            4,
+            SimOptions::default(),
+        );
+        assert_eq!(s.chips, 1);
+        assert_eq!(s.comm_cycles, 0);
+    }
+
+    #[test]
+    fn one_chip_is_byte_identical() {
+        let a = arch();
+        let opts = SimOptions::default();
+        for layer in &zoo::alexnet().layers {
+            for df in Dataflow::ALL {
+                let direct = simulate_layer(&a, layer, df, opts);
+                for strategy in ShardStrategy::ALL {
+                    let sharded = simulate_layer_sharded(&a, layer, df, strategy, 1, opts);
+                    assert_eq!(sharded.per_chip, vec![direct.clone()], "{df} {strategy}");
+                    assert_eq!(sharded.comm_cycles, 0);
+                    assert_eq!(sharded.total_cycles(), direct.total_cycles());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_sharding_never_communicates() {
+        let topo = zoo::alexnet();
+        let layer = &topo.layers[0];
+        let opts = SimOptions {
+            batch: 8,
+            ..SimOptions::default()
+        };
+        let a = arch();
+        let s = simulate_layer_sharded(&a, layer, Dataflow::Os, ShardStrategy::Batch, 4, opts);
+        assert_eq!(s.chips, 4);
+        assert_eq!(s.comm_cycles, 0);
+        let one = simulate_layer_sharded(&a, layer, Dataflow::Os, ShardStrategy::Batch, 1, opts);
+        assert!(s.compute_cycles < one.compute_cycles);
+    }
+
+    #[test]
+    fn all_gather_closed_form() {
+        let link = InterconnectConfig {
+            link_latency_cycles: 10,
+            link_bytes_per_cycle: 64,
+        };
+        assert_eq!(all_gather_cycles(1024, 1, &link), 0);
+        assert_eq!(all_gather_cycles(0, 4, &link), 0);
+        // 4 chips: 3 steps of (10 + ceil(256/64)) = 3 * 14.
+        assert_eq!(all_gather_cycles(1024, 4, &link), 42);
+        // More bytes can only cost more.
+        assert!(all_gather_cycles(2048, 4, &link) > all_gather_cycles(1024, 4, &link));
+    }
+
+    #[test]
+    fn compute_cycles_monotone_in_chip_count() {
+        let a = arch();
+        let opts = SimOptions::default();
+        for layer in &zoo::resnet18().layers {
+            for df in Dataflow::ALL {
+                for strategy in ShardStrategy::ALL {
+                    let mut prev = u64::MAX;
+                    for chips in [1u32, 2, 3, 4, 6, 8, 16] {
+                        let s = simulate_layer_sharded(&a, layer, df, strategy, chips, opts);
+                        assert!(
+                            s.compute_cycles <= prev,
+                            "{} {df} {strategy} at {chips} chips: {} > {prev}",
+                            layer.name,
+                            s.compute_cycles
+                        );
+                        prev = s.compute_cycles;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn macs_are_conserved_across_shards() {
+        let a = arch();
+        let opts = SimOptions::default();
+        for layer in zoo::resnet18().layers.iter().take(6) {
+            let direct = simulate_layer(&a, layer, Dataflow::Os, opts);
+            for strategy in [ShardStrategy::Rows, ShardStrategy::Cols] {
+                let s = simulate_layer_sharded(&a, layer, Dataflow::Os, strategy, 4, opts);
+                assert_eq!(s.macs, direct.macs, "{} {strategy}", layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn cached_sharding_identical_to_uncached() {
+        let a = arch();
+        let cache = ShapeCache::new();
+        let opts = SimOptions::default();
+        for layer in zoo::googlenet().layers.iter().take(8) {
+            for df in Dataflow::ALL {
+                for strategy in ShardStrategy::ALL {
+                    let direct = simulate_layer_sharded(&a, layer, df, strategy, 4, opts);
+                    let cached =
+                        simulate_layer_sharded_cached(&a, layer, df, strategy, 4, opts, &cache);
+                    assert_eq!(direct, cached, "{} {df} {strategy}", layer.name);
+                }
+            }
+        }
+        assert!(cache.stats().hits > 0, "{:?}", cache.stats());
+    }
+}

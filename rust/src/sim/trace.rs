@@ -17,9 +17,13 @@ use crate::sim::{Dataflow, Gemm};
 /// compute occupancy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FoldDemand {
+    /// Fold position in the plan's row-major fold grid.
     pub fold_index: u64,
+    /// Operand bytes to fetch before the fold can run.
     pub fetch_bytes: u64,
+    /// Output bytes the fold writes back.
     pub writeback_bytes: u64,
+    /// Cycles the fold occupies the array.
     pub compute_cycles: u64,
 }
 

@@ -18,18 +18,23 @@ pub enum LayerKind {
 /// One DNN layer in ScaleSim convention (see module docs).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
+    /// Layer name (unique within a topology CSV).
     pub name: String,
+    /// How the layer maps onto the array.
     pub kind: LayerKind,
     /// Padded ifmap height.
     pub ifmap_h: u32,
     /// Padded ifmap width.
     pub ifmap_w: u32,
+    /// Filter height.
     pub filt_h: u32,
+    /// Filter width.
     pub filt_w: u32,
     /// Input channels.
     pub channels: u32,
     /// Output channels (1 for depthwise rows; expanded by the GEMM mapper).
     pub num_filters: u32,
+    /// Convolution stride (both dimensions).
     pub stride: u32,
 }
 
@@ -150,11 +155,14 @@ impl Layer {
 /// A whole network: an ordered list of compute layers.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
+    /// Network name (zoo key or CSV stem).
     pub name: String,
+    /// Compute layers in execution order.
     pub layers: Vec<Layer>,
 }
 
 impl Topology {
+    /// Build a topology from a layer list.
     pub fn new(name: &str, layers: Vec<Layer>) -> Self {
         Self {
             name: name.to_string(),
@@ -178,6 +186,7 @@ impl Topology {
         self.layers.iter().map(Layer::macs).sum()
     }
 
+    /// Number of compute layers.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }

@@ -35,6 +35,7 @@ pub struct Parsed {
 }
 
 impl Args {
+    /// New parser for `program` with a one-line description.
     pub fn new(program: &str, about: &str) -> Self {
         Self {
             program: program.to_string(),
@@ -72,6 +73,7 @@ impl Args {
         self
     }
 
+    /// Render the `--help` text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
         for (p, _) in &self.positionals {
@@ -156,29 +158,35 @@ impl Args {
 }
 
 impl Parsed {
+    /// A flag's value (its default when not given on the command line).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
     }
 
+    /// A flag's value, erroring when absent and defaultless.
     pub fn req(&self, name: &str) -> Result<&str> {
         self.get(name)
             .ok_or_else(|| Error::InvalidConfig(format!("missing required --{name}")))
     }
 
+    /// A flag's value parsed as u64.
     pub fn u64(&self, name: &str) -> Result<u64> {
         self.req(name)?
             .parse()
             .map_err(|_| Error::InvalidConfig(format!("--{name} must be an integer")))
     }
 
+    /// A flag's value parsed as u32 (truncating).
     pub fn u32(&self, name: &str) -> Result<u32> {
         Ok(self.u64(name)? as u32)
     }
 
+    /// Whether a boolean switch was given.
     pub fn is_set(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
     }
 
+    /// The `idx`-th positional argument.
     pub fn positional(&self, idx: usize) -> Option<&str> {
         self.positionals.get(idx).map(String::as_str)
     }

@@ -13,15 +13,22 @@ use crate::error::{Error, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (all numbers parse as f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object, insertion-ordered.
     Obj(Vec<(String, Value)>),
 }
 
 impl Value {
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -29,6 +36,7 @@ impl Value {
         }
     }
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -36,6 +44,7 @@ impl Value {
         }
     }
 
+    /// The number as a non-negative integer, if it is one exactly.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -43,6 +52,7 @@ impl Value {
         }
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -50,6 +60,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -81,12 +92,14 @@ impl Value {
             .ok_or_else(|| Error::Artifact(format!("missing JSON field {key:?}")))
     }
 
+    /// Required integer field of an object.
     pub fn req_u64(&self, key: &str) -> Result<u64> {
         self.req(key)?
             .as_u64()
             .ok_or_else(|| Error::Artifact(format!("field {key:?} is not a u64")))
     }
 
+    /// Required string field of an object.
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.req(key)?
             .as_str()

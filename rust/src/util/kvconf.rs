@@ -13,13 +13,18 @@ use crate::error::{Error, Result};
 /// A parsed scalar.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Scalar {
+    /// Integer literal (underscore separators allowed).
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Double-quoted string.
     Str(String),
 }
 
 impl Scalar {
+    /// The value as a non-negative integer, if it is one.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Scalar::Int(i) if *i >= 0 => Some(*i as u64),
@@ -27,6 +32,7 @@ impl Scalar {
         }
     }
 
+    /// The value as a float (ints widen losslessly).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Scalar::Float(f) => Some(*f),
@@ -35,6 +41,7 @@ impl Scalar {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Scalar::Bool(b) => Some(*b),
@@ -42,6 +49,7 @@ impl Scalar {
         }
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Scalar::Str(s) => Some(s),
@@ -99,10 +107,12 @@ impl KvConf {
         Self::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// Look up a `section.key` (or bare `key`) entry.
     pub fn get(&self, key: &str) -> Option<&Scalar> {
         self.values.get(key)
     }
 
+    /// Integer value of `key`, or `default` when absent; type errors fail.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.values.get(key) {
             None => Ok(default),
@@ -112,6 +122,7 @@ impl KvConf {
         }
     }
 
+    /// Float value of `key`, or `default` when absent; type errors fail.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.values.get(key) {
             None => Ok(default),
@@ -121,6 +132,7 @@ impl KvConf {
         }
     }
 
+    /// All flattened keys, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(String::as_str)
     }
@@ -206,6 +218,46 @@ label = "edge #1"
         assert!(KvConf::parse("[bad").is_err());
         assert!(KvConf::parse("k = \"open").is_err());
         assert!(KvConf::parse("k = what").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_sections() {
+        // Empty and nested headers are both invalid.
+        assert!(KvConf::parse("[]").is_err());
+        assert!(KvConf::parse("[  ]").is_err());
+        assert!(KvConf::parse("[a[b]]").is_err());
+        // A bare `=` has an empty key.
+        assert!(KvConf::parse("[ok]\n = 3").is_err());
+        // Error messages carry the 1-based line number.
+        let err = KvConf::parse("a = 1\n[oops\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn later_keys_overwrite_and_sections_scope() {
+        let c = KvConf::parse("a = 1\na = 2\n[s]\na = 3").unwrap();
+        assert_eq!(c.get("a").unwrap().as_u64(), Some(2));
+        assert_eq!(c.get("s.a").unwrap().as_u64(), Some(3));
+        assert_eq!(c.keys().count(), 2);
+    }
+
+    #[test]
+    fn comment_and_whitespace_edge_cases() {
+        let c = KvConf::parse("# only a comment\n\n   \nk = 7 # trailing").unwrap();
+        assert_eq!(c.get("k").unwrap().as_u64(), Some(7));
+        // A '#' inside a quoted value is data, after it a comment.
+        let c2 = KvConf::parse("s = \"a#b\" # real comment").unwrap();
+        assert_eq!(c2.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn type_mismatches_error_with_key_name() {
+        let c = KvConf::parse("f = 1.5\nb = true").unwrap();
+        let err = c.u64_or("f", 0).unwrap_err();
+        assert!(err.to_string().contains('f'), "{err}");
+        assert!(c.f64_or("b", 0.0).is_err());
+        assert_eq!(c.f64_or("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(c.get("b").unwrap().as_bool(), Some(true));
     }
 
     #[test]

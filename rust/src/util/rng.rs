@@ -11,6 +11,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (any seed, including 0).
     pub fn new(seed: u64) -> Self {
         // splitmix64 scramble so small seeds diverge immediately.
         let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -21,6 +22,7 @@ impl Rng {
         }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         // xorshift64*
         let mut x = self.state;

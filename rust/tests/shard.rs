@@ -1,0 +1,238 @@
+//! Acceptance tests for the multi-chip sharding subsystem (ISSUE 2):
+//!
+//! 1. one-chip sharded simulation is **byte-identical** to the unsharded
+//!    engine, at the layer level and through the whole sweep path;
+//! 2. per-layer compute cycles are monotonically non-increasing in the
+//!    chip count for every (dataflow, strategy) on compute-bound layers;
+//! 3. joint (dataflow × shard strategy) selection is deterministic across
+//!    thread counts and never loses to the single-chip selector;
+//! 4. `sweep --chips 4` semantics: every zoo model reports a speedup vs
+//!    one chip, and the interconnect model behaves sanely.
+
+use flex_tpu::config::{ArchConfig, InterconnectConfig};
+use flex_tpu::coordinator::partition::{select_joint, select_joint_parallel};
+use flex_tpu::coordinator::sweep::{sweep_zoo, sweep_zoo_chip_grid, sweep_zoo_sharded};
+use flex_tpu::sim::engine::{simulate_layer, SimOptions};
+use flex_tpu::sim::parallel::ShapeCache;
+use flex_tpu::sim::shard::{
+    all_gather_cycles, simulate_layer_sharded, simulate_layer_sharded_cached, ShardStrategy,
+};
+use flex_tpu::sim::Dataflow;
+use flex_tpu::topology::zoo;
+
+#[test]
+fn one_chip_sharding_is_byte_identical_per_layer() {
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+    for topo in [zoo::resnet18(), zoo::mobilenet()] {
+        for layer in &topo.layers {
+            for df in Dataflow::ALL {
+                let direct = simulate_layer(&arch, layer, df, opts);
+                for strategy in ShardStrategy::ALL {
+                    let sharded = simulate_layer_sharded(&arch, layer, df, strategy, 1, opts);
+                    assert_eq!(sharded.chips, 1);
+                    assert_eq!(sharded.comm_cycles, 0);
+                    assert_eq!(sharded.per_chip, vec![direct.clone()]);
+                    assert_eq!(sharded.total_cycles(), direct.total_cycles());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_chip_sharded_sweep_matches_pre_shard_sweep() {
+    // `sweep --chips 1` must report exactly what the plain (PR-1) sweep
+    // engine reports, model by model.
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+    let plain = sweep_zoo(&arch, 1, opts);
+    let sharded = sweep_zoo_sharded(&arch, 1, 1, opts);
+    for (p, s) in plain.models.iter().zip(&sharded.models) {
+        assert_eq!(p.model, s.model);
+        assert_eq!(p.flex_cycles, s.flex_cycles, "{}", p.model);
+        assert_eq!(p.flex_cycles, s.single_chip_cycles, "{}", p.model);
+        let dataflows: Vec<Dataflow> = s.selection.per_layer.iter().map(|c| c.dataflow).collect();
+        assert_eq!(dataflows, p.selection.per_layer, "{}", p.model);
+    }
+}
+
+#[test]
+fn compute_cycles_monotone_for_compute_bound_layers() {
+    // The paper's configurations are compute-bound; splitting a layer over
+    // more chips can never make its critical shard slower (communication
+    // is accounted separately).
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+    for topo in zoo::all_models() {
+        for layer in &topo.layers {
+            for df in Dataflow::ALL {
+                for strategy in ShardStrategy::ALL {
+                    let mut prev = u64::MAX;
+                    for chips in [1u32, 2, 4, 8, 16] {
+                        let s = simulate_layer_sharded(&arch, layer, df, strategy, chips, opts);
+                        assert_eq!(s.stall_cycles, 0, "compute-bound setting");
+                        assert!(
+                            s.compute_cycles <= prev,
+                            "{}/{} {df} {strategy} at {chips} chips: {} > {prev}",
+                            topo.name,
+                            layer.name,
+                            s.compute_cycles
+                        );
+                        prev = s.compute_cycles;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn joint_selection_deterministic_across_thread_counts() {
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+    for topo in [zoo::alexnet(), zoo::googlenet()] {
+        let cache = ShapeCache::new();
+        let want = select_joint(&arch, &topo, opts, 4, &cache);
+        for threads in [2usize, 4, 8] {
+            let cache = ShapeCache::new();
+            let got = select_joint_parallel(&arch, &topo, opts, 4, threads, &cache);
+            assert_eq!(want, got, "{} at {threads} threads", topo.name);
+        }
+    }
+}
+
+#[test]
+fn four_chip_zoo_sweep_reports_speedups() {
+    // The acceptance criterion behind `flex-tpu sweep --chips 4`: every
+    // model gets a (dataflow, strategy) selection and a real speedup.
+    let arch = ArchConfig::square(32);
+    let sweep = sweep_zoo_sharded(&arch, 4, 2, SimOptions::default());
+    assert_eq!(sweep.models.len(), 7);
+    for m in &sweep.models {
+        let slack = m.selection.per_layer.len() as u64 * arch.reconfig_cycles;
+        assert!(
+            m.flex_cycles <= m.single_chip_cycles + slack,
+            "{} regressed: {} > {}",
+            m.model,
+            m.flex_cycles,
+            m.single_chip_cycles
+        );
+        assert!(
+            m.speedup_vs_single_chip() > 1.5,
+            "{}: only {:.3}x at 4 chips",
+            m.model,
+            m.speedup_vs_single_chip()
+        );
+    }
+    assert!(sweep.cache.hits > 0, "{:?}", sweep.cache);
+}
+
+#[test]
+fn chip_grid_speedup_grows_with_chip_count() {
+    let arch = ArchConfig::square(32);
+    let (results, _cache) = sweep_zoo_chip_grid(&arch, &[1, 2, 4], 2, SimOptions::default());
+    assert_eq!(results.len(), 3);
+    // Mean speedup over the zoo must not shrink as chips are added (the
+    // joint selector can always fall back to fewer effective shards).
+    let mut prev = 0.0f64;
+    for r in &results {
+        let total: f64 = r.models.iter().map(|m| m.speedup_vs_single_chip()).sum();
+        let mean = total / r.models.len() as f64;
+        assert!(
+            mean >= prev - 1e-9,
+            "mean speedup shrank at {} chips: {mean} < {prev}",
+            r.chips
+        );
+        prev = mean;
+    }
+    assert!(prev > 2.0, "4-chip mean speedup only {prev:.3}");
+}
+
+#[test]
+fn interconnect_cost_scales_with_bandwidth_and_latency() {
+    let fast = InterconnectConfig {
+        link_latency_cycles: 0,
+        link_bytes_per_cycle: 4096,
+    };
+    let slow = InterconnectConfig {
+        link_latency_cycles: 1000,
+        link_bytes_per_cycle: 1,
+    };
+    assert!(all_gather_cycles(1 << 20, 4, &fast) < all_gather_cycles(1 << 20, 4, &slow));
+    assert_eq!(all_gather_cycles(1 << 20, 1, &slow), 0);
+
+    // A slower link shifts the joint selector away from communicating
+    // strategies — flex cycles can only get worse, never better.
+    let mut arch_fast = ArchConfig::square(32);
+    arch_fast.interconnect = fast;
+    let mut arch_slow = ArchConfig::square(32);
+    arch_slow.interconnect = slow;
+    let topo = zoo::resnet18();
+    let opts = SimOptions::default();
+    let cache_fast = ShapeCache::new();
+    let cache_slow = ShapeCache::new();
+    let sel_fast = select_joint(&arch_fast, &topo, opts, 4, &cache_fast);
+    let sel_slow = select_joint(&arch_slow, &topo, opts, 4, &cache_slow);
+    assert!(sel_fast.flex_layer_cycles() <= sel_slow.flex_layer_cycles());
+}
+
+#[test]
+fn cached_and_uncached_sharding_agree_through_sweep_scale() {
+    let arch = ArchConfig::square(16);
+    let opts = SimOptions::default();
+    let cache = ShapeCache::new();
+    let topo = zoo::vgg13();
+    for layer in &topo.layers {
+        for df in Dataflow::ALL {
+            for strategy in ShardStrategy::ALL {
+                for chips in [2u32, 4] {
+                    let direct = simulate_layer_sharded(&arch, layer, df, strategy, chips, opts);
+                    let cached = simulate_layer_sharded_cached(
+                        &arch,
+                        layer,
+                        df,
+                        strategy,
+                        chips,
+                        opts,
+                        &cache,
+                    );
+                    assert_eq!(direct, cached, "{} {df} {strategy} {chips}", layer.name);
+                }
+            }
+        }
+    }
+    assert!(cache.stats().hit_rate() > 0.0, "{:?}", cache.stats());
+}
+
+#[test]
+fn batch_split_across_chips_speeds_up_serving_batches() {
+    // The serve_concurrent lever: a batch of 8 split over 4 chips.
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions {
+        batch: 8,
+        ..SimOptions::default()
+    };
+    let topo = zoo::alexnet();
+    let mut one = 0u64;
+    let mut four = 0u64;
+    for layer in &topo.layers {
+        one += simulate_layer_sharded(&arch, layer, Dataflow::Os, ShardStrategy::Batch, 1, opts)
+            .total_cycles();
+        four += simulate_layer_sharded(&arch, layer, Dataflow::Os, ShardStrategy::Batch, 4, opts)
+            .total_cycles();
+    }
+    assert!(four < one, "batch sharding did not help: {four} >= {one}");
+    // Each chip runs a batch-2 slice; the whole-batch latency must beat
+    // running the full batch on one chip but can never beat a lone batch-2
+    // run (the composition takes a max, it does not invent speed).
+    let batch2 = SimOptions {
+        batch: 2,
+        ..SimOptions::default()
+    };
+    let mut lone = 0u64;
+    for layer in &topo.layers {
+        lone += simulate_layer(&arch, layer, Dataflow::Os, batch2).total_cycles();
+    }
+    assert_eq!(four, lone, "4-way split of batch 8 is four batch-2 chips");
+}
