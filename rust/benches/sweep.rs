@@ -1,15 +1,18 @@
 //! Bench for the parallel zoo-sweep engine: full-zoo exhaustive selection
 //! at 1/2/4/8 threads, the multi-size grid, the multi-chip shard sweep,
-//! and the ShapeCache hit-rate — the scaling story behind every
-//! table/figure regeneration.
+//! the ShapeCache hit-rate, and the persisted-store warm start — the
+//! scaling story behind every table/figure regeneration.
 //!
 //! Run: `cargo bench --bench sweep` (FLEX_TPU_BENCH_QUICK=1 for a fast pass).
 
 mod harness;
 
 use flex_tpu::config::ArchConfig;
-use flex_tpu::coordinator::sweep::{sweep_zoo, sweep_zoo_sharded, sweep_zoo_sizes};
+use flex_tpu::coordinator::sweep::{
+    sweep_zoo, sweep_zoo_sharded, sweep_zoo_sizes, sweep_zoo_stored,
+};
 use flex_tpu::sim::engine::SimOptions;
+use flex_tpu::sim::PlanStore;
 
 fn main() {
     let mut b = harness::Bench::new("sweep");
@@ -76,5 +79,31 @@ fn main() {
         "mean speedup vs 1 chip",
         format!("{:.3}x", total / sharded.models.len() as f64),
     );
+
+    // Persisted-store warm start: the second sweep over one `--plan-cache`
+    // directory must preload every shape and answer every lookup from the
+    // store (zero simulate_layer calls), byte-identically.
+    let dir = std::env::temp_dir().join(format!("flex-tpu-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = PlanStore::open(&dir).expect("bench store open");
+    let (cold, loaded_cold) = sweep_zoo_stored(&arch, 0, opts, Some(&store)).expect("cold sweep");
+    assert_eq!(loaded_cold, 0, "store must start cold");
+    b.bench("zoo/32x32/warm-start/auto", || {
+        sweep_zoo_stored(&arch, 0, opts, Some(&store)).expect("warm sweep")
+    });
+    let (warm, loaded_warm) = sweep_zoo_stored(&arch, 0, opts, Some(&store)).expect("warm sweep");
+    assert!(loaded_warm > 0, "second run must load persisted shapes");
+    assert_eq!(cold.models, warm.models, "warm sweep must be byte-identical");
+    assert_eq!(warm.cache.misses, 0, "warm sweep must not simulate: {:?}", warm.cache);
+    b.metric(
+        "zoo/32x32/warm-start",
+        "second-run hit rate",
+        format!(
+            "{:.1}% ({} entries preloaded)",
+            warm.cache.hit_rate() * 100.0,
+            loaded_warm
+        ),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
     b.finish();
 }

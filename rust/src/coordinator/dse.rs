@@ -68,24 +68,29 @@ fn points_for_size(
 ) -> Vec<DsePoint> {
     let arch = ArchConfig::square(s);
     let mut points = Vec::with_capacity(1 + Dataflow::ALL.len());
-    // Flex point (deploy once, reuse baselines for the static points).
+    // Flex point: compile once, execute the plan, reuse its baselines for
+    // the static points.  Cycle totals are read off the plan IR.
     let mut pipeline = FlexPipeline::new(arch).with_options(opts);
     if let Some(cache) = cache {
         pipeline = pipeline.with_cache(Arc::clone(cache));
     }
-    let d = pipeline.deploy(topo);
+    let plan = pipeline.compile(topo);
+    let d = pipeline
+        .deploy_plan(topo, &plan)
+        .expect("plan compiled from this topology");
+    let flex_cycles = plan.flex_cycles();
     let flex_cpd = critical_path_ns(s, PeVariant::Flex);
     let conv_cpd = critical_path_ns(s, PeVariant::Conventional);
     let flex_energy = energy::network_energy(&arch, PeVariant::Flex, &d.flex);
     points.push(DsePoint {
         size: s,
         variant: DseVariant::Flex,
-        cycles: d.total_cycles(),
-        latency_ms: d.total_cycles() as f64 * flex_cpd * 1e-6,
+        cycles: flex_cycles,
+        latency_ms: flex_cycles as f64 * flex_cpd * 1e-6,
         area_mm2: TpuCost::square(s, PeVariant::Flex).area_mm2(),
         power_mw: TpuCost::square(s, PeVariant::Flex).power_mw(),
         energy: flex_energy,
-        edp: flex_energy.total_pj() * d.total_cycles() as f64,
+        edp: flex_energy.total_pj() * flex_cycles as f64,
     });
     // The deploy above already simulated every static baseline; reuse them.
     for (i, df) in Dataflow::ALL.into_iter().enumerate() {

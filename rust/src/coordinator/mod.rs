@@ -20,6 +20,10 @@
 //! * [`partition`] — the selector extended to multi-chip systems: joint
 //!   per-layer (dataflow × shard strategy) argmin over the
 //!   [`crate::sim::shard`] grid.
+//! * [`plan`] — the compile-once [`plan::ExecutionPlan`] IR every selection
+//!   path above compiles into: per-layer choices + forecasts + candidate
+//!   grids, provenance-hashed and persistable in a
+//!   [`crate::sim::store::PlanStore`] for cross-run warm starts.
 
 pub mod cmu;
 pub mod controller;
@@ -27,6 +31,7 @@ pub mod dataflow_gen;
 pub mod dse;
 pub mod partition;
 pub mod pipeline;
+pub mod plan;
 pub mod selector;
 pub mod sweep;
 
@@ -34,11 +39,13 @@ pub use cmu::Cmu;
 pub use controller::MainController;
 pub use partition::{select_joint, select_joint_parallel, PartitionSelection, ShardChoice};
 pub use pipeline::{Deployment, FlexPipeline};
+pub use plan::{compile_plan, compile_plan_parallel, provenance_key, ExecutionPlan, PlanLayer};
 pub use selector::{
     select_exhaustive, select_exhaustive_cached, select_exhaustive_parallel, select_heuristic,
-    Selection,
+    select_heuristic_cached, Selection,
 };
 pub use sweep::{
     sweep_models, sweep_models_sharded, sweep_zoo, sweep_zoo_chip_grid, sweep_zoo_sharded,
-    sweep_zoo_sizes, ModelShardSweep, ModelSweep, ShardSweepResult, SweepResult,
+    sweep_zoo_sharded_stored, sweep_zoo_sizes, sweep_zoo_stored, ModelShardSweep, ModelSweep,
+    ShardSweepResult, SweepResult,
 };

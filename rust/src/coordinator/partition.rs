@@ -16,11 +16,12 @@
 
 use crate::config::ArchConfig;
 use crate::sim::engine::SimOptions;
-use crate::sim::parallel::{parallel_map, ShapeCache};
-use crate::sim::shard::{simulate_layer_sharded_cached, ShardStrategy};
+use crate::sim::parallel::ShapeCache;
+use crate::sim::shard::ShardStrategy;
 use crate::sim::Dataflow;
-use crate::topology::{Layer, Topology};
+use crate::topology::Topology;
 
+use super::plan;
 use super::selector::df_index;
 
 /// One layer's joint pick: which dataflow to run and how to split it.
@@ -126,60 +127,12 @@ impl PartitionSelection {
     }
 }
 
-/// Per-layer argmin over the 3×3 grid; ties break toward the dataflow
-/// listing order first, then the strategy listing order — shared with the
-/// single-chip selector so one-chip joint selection matches it exactly.
-fn argmin_cell(grid: &[[u64; 3]; 3]) -> ShardChoice {
-    let mut best = ShardChoice {
-        dataflow: Dataflow::Is,
-        strategy: ShardStrategy::Rows,
-    };
-    let mut best_cycles = u64::MAX;
-    for df in Dataflow::ALL {
-        for strategy in ShardStrategy::ALL {
-            let cycles = grid[df_index(df)][strategy_index(strategy)];
-            if cycles < best_cycles {
-                best_cycles = cycles;
-                best = ShardChoice {
-                    dataflow: df,
-                    strategy,
-                };
-            }
-        }
-    }
-    best
-}
-
-fn layer_grid(
-    arch: &ArchConfig,
-    layer: &Layer,
-    chips: u32,
-    opts: SimOptions,
-    cache: &ShapeCache,
-) -> [[u64; 3]; 3] {
-    let mut grid = [[0u64; 3]; 3];
-    for df in Dataflow::ALL {
-        for strategy in ShardStrategy::ALL {
-            let stats =
-                simulate_layer_sharded_cached(arch, layer, df, strategy, chips, opts, cache);
-            grid[df_index(df)][strategy_index(strategy)] = stats.total_cycles();
-        }
-    }
-    grid
-}
-
-fn assemble(model: &str, chips: u32, cycles: Vec<[[u64; 3]; 3]>) -> PartitionSelection {
-    let per_layer = cycles.iter().map(argmin_cell).collect();
-    PartitionSelection {
-        model: model.to_string(),
-        chips,
-        per_layer,
-        cycles,
-    }
-}
-
 /// Exhaustive joint selection: simulate every layer under every
 /// `(dataflow, strategy)` pair at `chips` chips and take per-layer argmins.
+/// Implemented as a plan compiler — the returned selection is the
+/// multi-chip view of the [`plan::ExecutionPlan`] the grid compiles into,
+/// so the tie-break is the one shared by every selection path
+/// (`plan::argmin_choice`).
 pub fn select_joint(
     arch: &ArchConfig,
     topo: &Topology,
@@ -187,12 +140,7 @@ pub fn select_joint(
     chips: u32,
     cache: &ShapeCache,
 ) -> PartitionSelection {
-    let cycles = topo
-        .layers
-        .iter()
-        .map(|layer| layer_grid(arch, layer, chips, opts, cache))
-        .collect();
-    assemble(&topo.name, chips, cycles)
+    plan::compile_plan(arch, topo, opts, chips, cache).partition_selection()
 }
 
 /// [`select_joint`] with the per-layer grids fanned across `threads`
@@ -205,10 +153,7 @@ pub fn select_joint_parallel(
     threads: usize,
     cache: &ShapeCache,
 ) -> PartitionSelection {
-    let cycles = parallel_map(threads, &topo.layers, |_, layer| {
-        layer_grid(arch, layer, chips, opts, cache)
-    });
-    assemble(&topo.name, chips, cycles)
+    plan::compile_plan_parallel(arch, topo, opts, chips, threads, cache).partition_selection()
 }
 
 #[cfg(test)]

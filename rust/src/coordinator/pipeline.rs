@@ -6,15 +6,20 @@
 //! … This process only needs to be performed once per DNN model prior to
 //! deployment."*
 //!
-//! [`FlexPipeline::deploy`] is that flow: profile (selector) → program
-//! (CMU) → run (Main Controller timing backend), and it also runs the
-//! three static baselines so a [`Deployment`] carries the paper's whole
-//! Table I row for its model.
+//! [`FlexPipeline::deploy`] is that flow, split into its two real phases:
+//! [`FlexPipeline::compile`] profiles the model into a reusable
+//! [`ExecutionPlan`] (the once-per-model part), and
+//! [`FlexPipeline::deploy_plan`] programs the CMU from a plan and runs the
+//! Main Controller timing backend plus the three static baselines, so a
+//! [`Deployment`] carries the paper's whole Table I row for its model.
+//! Precompiled plans (e.g. loaded from a
+//! [`crate::sim::store::PlanStore`]) skip the profiling phase entirely.
 
 
 use std::sync::Arc;
 
 use crate::config::ArchConfig;
+use crate::error::{Error, Result};
 use crate::sim::engine::{
     simulate_network, simulate_network_cached, simulate_network_per_layer_cached, NetworkStats,
     SimOptions,
@@ -25,6 +30,7 @@ use crate::topology::Topology;
 
 use super::cmu::Cmu;
 use super::controller::MainController;
+use super::plan::{self, ExecutionPlan};
 use super::selector::{self, Selection};
 
 /// Which selector the pipeline uses.
@@ -54,7 +60,11 @@ pub struct FlexPipeline {
 pub struct Deployment {
     /// Architecture deployed onto.
     pub arch: ArchConfig,
-    /// The selector's per-layer dataflow decisions and profiling data.
+    /// The compiled plan the deployment executed (choices, forecasts,
+    /// provenance key).
+    pub plan: ExecutionPlan,
+    /// The selector's per-layer dataflow decisions and profiling data
+    /// (the single-chip view of `plan`).
     pub selection: Selection,
     /// The Flex-TPU run (per-layer winners + reconfiguration charges).
     pub flex: NetworkStats,
@@ -93,19 +103,67 @@ impl FlexPipeline {
         self
     }
 
-    /// Run the full pre-deployment flow for `topo`.
-    pub fn deploy(&self, topo: &Topology) -> Deployment {
-        let selection = match (self.selector, &self.cache) {
-            (SelectorKind::Exhaustive, None) => {
-                selector::select_exhaustive(&self.arch, topo, self.opts)
-            }
-            (SelectorKind::Exhaustive, Some(cache)) => {
-                selector::select_exhaustive_cached(&self.arch, topo, self.opts, cache)
-            }
-            (SelectorKind::Heuristic, _) => {
-                selector::select_heuristic(&self.arch, topo, self.opts)
+    /// Compile `topo` into a single-chip [`ExecutionPlan`] with this
+    /// pipeline's selector and options — the once-per-model phase.  The
+    /// heuristic selector's plans carry a `-heuristic` provenance suffix so
+    /// they can never warm-start an exhaustive deployment (or vice versa).
+    pub fn compile(&self, topo: &Topology) -> ExecutionPlan {
+        let fresh;
+        let cache = match &self.cache {
+            Some(cache) => cache.as_ref(),
+            None => {
+                fresh = ShapeCache::new();
+                &fresh
             }
         };
+        match self.selector {
+            SelectorKind::Exhaustive => plan::compile_plan(&self.arch, topo, self.opts, 1, cache),
+            SelectorKind::Heuristic => {
+                let selection =
+                    selector::select_heuristic_cached(&self.arch, topo, self.opts, cache);
+                let mut plan =
+                    plan::plan_from_selection(&self.arch, topo, self.opts, &selection, cache);
+                plan.provenance.push_str("-heuristic");
+                plan
+            }
+        }
+    }
+
+    /// Run the full pre-deployment flow for `topo`: compile, then execute
+    /// the plan.
+    pub fn deploy(&self, topo: &Topology) -> Deployment {
+        self.deploy_plan(topo, &self.compile(topo))
+            .expect("a plan compiled from this topology always matches it")
+    }
+
+    /// Execute a precompiled plan for `topo`: program the CMU with the
+    /// plan's per-layer schedule, run the Main Controller timing backend
+    /// and the three static baselines.  The plan supplies the *decisions*;
+    /// every cycle count is (re)simulated — through this pipeline's
+    /// [`ShapeCache`] when one is attached, so a cache warmed from a
+    /// [`crate::sim::store::PlanStore`] deploys without any fresh
+    /// `simulate_layer` work.  Errors when the plan was compiled for a
+    /// different model, layer count, or a multi-chip system (this pipeline
+    /// deploys onto one chip, and a multi-chip plan's candidate grids are
+    /// sharded cycle counts, not the single-chip profiling rows a
+    /// [`Deployment`]'s selection advertises).
+    pub fn deploy_plan(&self, topo: &Topology, plan: &ExecutionPlan) -> Result<Deployment> {
+        if plan.model != topo.name || plan.layers.len() != topo.layers.len() {
+            return Err(Error::InvalidConfig(format!(
+                "plan for {:?} ({} layers) does not match topology {:?} ({} layers)",
+                plan.model,
+                plan.layers.len(),
+                topo.name,
+                topo.layers.len()
+            )));
+        }
+        if plan.chips != 1 {
+            return Err(Error::InvalidConfig(format!(
+                "plan was compiled for {} chips; the deployment pipeline executes single-chip plans",
+                plan.chips
+            )));
+        }
+        let selection = plan.selection();
         let cmu = Cmu::program(&topo.name, selection.per_layer.clone())
             .expect("non-empty topology yields non-empty CMU table");
         let controller = MainController::new(self.arch, cmu);
@@ -125,12 +183,13 @@ impl FlexPipeline {
             None => simulate_network(&self.arch, topo, df, self.opts),
             Some(cache) => simulate_network_cached(&self.arch, topo, df, self.opts, cache),
         });
-        Deployment {
+        Ok(Deployment {
             arch: self.arch,
+            plan: plan.clone(),
             selection,
             flex,
             static_runs,
-        }
+        })
     }
 }
 

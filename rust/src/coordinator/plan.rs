@@ -1,0 +1,608 @@
+//! The compile-once `ExecutionPlan` IR.
+//!
+//! The paper's premise is that per-layer dataflow reconfiguration pays for
+//! itself because the decision is made **ahead of time** and replayed
+//! cheaply at run time (TPU-v1-style ahead-of-time deployment, Jouppi et
+//! al. 2017; FlexNN's per-layer descriptors, Raha et al. 2024).  Before
+//! this module the repo made that decision in three disconnected shapes —
+//! [`Selection`], the sharded argmin of [`super::partition`], and
+//! [`super::pipeline::Deployment`] — and recomputed it from scratch every
+//! process start.
+//!
+//! [`ExecutionPlan`] unifies them: one serializable compile→execute IR
+//! capturing, per layer, the chosen dataflow, shard strategy,
+//! reconfiguration charge and predicted cycle components, plus the full
+//! candidate grid the decision was taken over and a **provenance key** (a
+//! content hash of the architecture, topology, simulation options, chip
+//! count and schema version).  Every selection path compiles into it:
+//!
+//! * [`compile_plan`] / [`compile_plan_parallel`] are the only argmin
+//!   implementations left — the single-chip selector and the multi-chip
+//!   partitioner are views over the same grid ([`ExecutionPlan::selection`]
+//!   and [`ExecutionPlan::partition_selection`]);
+//! * `argmin_choice` (crate-internal) is the one tie-break shared by every
+//!   path (`Dataflow::ALL`-major, [`ShardStrategy::ALL`]-minor, first
+//!   strict minimum), so serial, cached, parallel and sharded selections
+//!   stay byte-identical;
+//! * plans serialize through [`crate::util::json`] and persist in a
+//!   [`PlanStore`] keyed by their provenance, enabling cross-run warm
+//!   starts (`flex-tpu plan compile|show|check`, `--plan-cache`).
+//!
+//! ```
+//! use flex_tpu::config::ArchConfig;
+//! use flex_tpu::coordinator::plan::compile_plan;
+//! use flex_tpu::sim::engine::SimOptions;
+//! use flex_tpu::sim::ShapeCache;
+//! use flex_tpu::topology::zoo;
+//!
+//! let cache = ShapeCache::new();
+//! let plan = compile_plan(
+//!     &ArchConfig::square(8),
+//!     &zoo::alexnet(),
+//!     SimOptions::default(),
+//!     1,
+//!     &cache,
+//! );
+//! assert_eq!(plan.layers.len(), zoo::alexnet().layers.len());
+//! let roundtrip = flex_tpu::coordinator::plan::ExecutionPlan::from_json(&plan.to_json()).unwrap();
+//! assert_eq!(plan, roundtrip);
+//! ```
+
+use crate::config::ArchConfig;
+use crate::error::{Error, Result};
+use crate::sim::engine::{LayerStats, SimOptions};
+use crate::sim::parallel::{parallel_map, ShapeCache};
+use crate::sim::shard::{simulate_layer_sharded_cached, ShardStrategy};
+use crate::sim::store::PlanStore;
+use crate::sim::Dataflow;
+use crate::topology::{Layer, Topology};
+use crate::util::json::{obj, Value};
+
+use super::partition::{strategy_index, PartitionSelection, ShardChoice};
+use super::selector::{df_index, Selection};
+
+/// Version of the plan/store layout.  Part of every provenance hash, so
+/// bumping it invalidates persisted plans and shape entries wholesale.
+pub const PLAN_SCHEMA_VERSION: u32 = 1;
+
+/// The one per-layer tie-break every selection path shares: first strict
+/// minimum of the grid in `Dataflow::ALL`-major, [`ShardStrategy::ALL`]-minor
+/// order (IS < OS < WS, then Rows < Cols < Batch).  Single-chip selection is
+/// the degenerate case where all strategy columns of a row are equal, which
+/// makes its dataflow pick identical to the historical per-row argmin.
+pub(crate) fn argmin_choice(grid: &[[u64; 3]; 3]) -> ShardChoice {
+    let mut best = ShardChoice {
+        dataflow: Dataflow::Is,
+        strategy: ShardStrategy::Rows,
+    };
+    let mut best_cycles = u64::MAX;
+    for df in Dataflow::ALL {
+        for strategy in ShardStrategy::ALL {
+            let cycles = grid[df_index(df)][strategy_index(strategy)];
+            if cycles < best_cycles {
+                best_cycles = cycles;
+                best = ShardChoice { dataflow: df, strategy };
+            }
+        }
+    }
+    best
+}
+
+/// Replicate a per-dataflow cycle row across the strategy axis — the
+/// degenerate grid single-chip selection feeds to [`argmin_choice`].
+pub(crate) fn row_grid(row: &[u64; 3]) -> [[u64; 3]; 3] {
+    let mut grid = [[0u64; 3]; 3];
+    for df in Dataflow::ALL {
+        for strategy in ShardStrategy::ALL {
+            grid[df_index(df)][strategy_index(strategy)] = row[df_index(df)];
+        }
+    }
+    grid
+}
+
+/// One layer's compiled decision and forecast.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanLayer {
+    /// Layer name (copied from the topology).
+    pub name: String,
+    /// The chosen dataflow and shard strategy (strategy is `Rows` — the
+    /// tie-break default — on single-chip plans where it is irrelevant).
+    pub choice: ShardChoice,
+    /// Reconfiguration cycles charged *entering* this layer (non-zero only
+    /// when the dataflow changed from the previous layer).
+    pub reconfig_cycles: u64,
+    /// Predicted compute cycles of the chosen configuration (critical shard
+    /// on multi-chip plans).
+    pub compute_cycles: u64,
+    /// Predicted memory stall cycles of the chosen configuration.
+    pub stall_cycles: u64,
+    /// Predicted inter-chip cycles (0 on single-chip plans).
+    pub comm_cycles: u64,
+    /// The full candidate grid the decision was taken over, indexed
+    /// `[Dataflow::ALL order][ShardStrategy::ALL order]`; on single-chip
+    /// plans every strategy column of a row holds the same value.
+    pub candidates: [[u64; 3]; 3],
+}
+
+impl PlanLayer {
+    /// Predicted end-to-end cycles of this layer, excluding reconfiguration.
+    pub fn layer_cycles(&self) -> u64 {
+        self.compute_cycles + self.stall_cycles + self.comm_cycles
+    }
+
+    /// Predicted cycles including the reconfiguration charge.
+    pub fn total_cycles(&self) -> u64 {
+        self.layer_cycles() + self.reconfig_cycles
+    }
+}
+
+/// A compiled, serializable deployment decision for one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Model the plan was compiled for.
+    pub model: String,
+    /// Chip count the candidate grids were evaluated at.
+    pub chips: u32,
+    /// Content hash of everything the plan depends on (see
+    /// [`provenance_key`]); the key plans persist and reload under.
+    pub provenance: String,
+    /// Per-layer decisions in execution order.
+    pub layers: Vec<PlanLayer>,
+}
+
+impl ExecutionPlan {
+    /// Total predicted Flex cycles: per-layer winners plus reconfiguration
+    /// charges — the number every sweep/table reports.
+    pub fn flex_cycles(&self) -> u64 {
+        self.layers.iter().map(PlanLayer::total_cycles).sum()
+    }
+
+    /// Total reconfiguration cycles charged across the plan.
+    pub fn reconfig_total(&self) -> u64 {
+        self.layers.iter().map(|l| l.reconfig_cycles).sum()
+    }
+
+    /// The per-layer dataflow schedule (what the CMU gets programmed with).
+    pub fn dataflows(&self) -> Vec<Dataflow> {
+        self.layers.iter().map(|l| l.choice.dataflow).collect()
+    }
+
+    /// Total cycles had every layer run statically under `df` (first
+    /// strategy column of the candidate grid — exact on single-chip plans,
+    /// where all strategy columns are equal).
+    pub fn static_dataflow_cycles(&self, df: Dataflow) -> u64 {
+        self.layers.iter().map(|l| l.candidates[df_index(df)][0]).sum()
+    }
+
+    /// View the plan as the single-chip selector's [`Selection`].
+    pub fn selection(&self) -> Selection {
+        Selection {
+            model: self.model.clone(),
+            per_layer: self.layers.iter().map(|l| l.choice.dataflow).collect(),
+            cycles: self
+                .layers
+                .iter()
+                .map(|l| [l.candidates[0][0], l.candidates[1][0], l.candidates[2][0]])
+                .collect(),
+        }
+    }
+
+    /// View the plan as the multi-chip partitioner's [`PartitionSelection`].
+    pub fn partition_selection(&self) -> PartitionSelection {
+        PartitionSelection {
+            model: self.model.clone(),
+            chips: self.chips,
+            per_layer: self.layers.iter().map(|l| l.choice).collect(),
+            cycles: self.layers.iter().map(|l| l.candidates).collect(),
+        }
+    }
+
+    /// Serialize to the store's JSON layout.
+    pub fn to_json(&self) -> Value {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let candidates = Value::Arr(
+                    l.candidates
+                        .iter()
+                        .map(|row| {
+                            Value::Arr(row.iter().map(|&c| Value::Num(c as f64)).collect())
+                        })
+                        .collect(),
+                );
+                obj(vec![
+                    ("name", Value::Str(l.name.clone())),
+                    ("dataflow", Value::Str(l.choice.dataflow.name().to_string())),
+                    ("strategy", Value::Str(l.choice.strategy.name().to_string())),
+                    ("reconfig_cycles", Value::Num(l.reconfig_cycles as f64)),
+                    ("compute_cycles", Value::Num(l.compute_cycles as f64)),
+                    ("stall_cycles", Value::Num(l.stall_cycles as f64)),
+                    ("comm_cycles", Value::Num(l.comm_cycles as f64)),
+                    ("candidates", candidates),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("model", Value::Str(self.model.clone())),
+            ("chips", Value::Num(f64::from(self.chips))),
+            ("provenance", Value::Str(self.provenance.clone())),
+            ("layers", Value::Arr(layers)),
+        ])
+    }
+
+    /// Deserialize from the store's JSON layout.
+    pub fn from_json(v: &Value) -> Result<ExecutionPlan> {
+        let bad = |msg: &str| Error::Artifact(format!("execution plan: {msg}"));
+        let layers_json = v
+            .req("layers")?
+            .as_array()
+            .ok_or_else(|| bad("layers is not an array"))?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for l in layers_json {
+            let dataflow = Dataflow::parse(l.req_str("dataflow")?)
+                .ok_or_else(|| bad("unknown dataflow"))?;
+            let strategy = ShardStrategy::parse(l.req_str("strategy")?)
+                .ok_or_else(|| bad("unknown strategy"))?;
+            let rows = l
+                .req("candidates")?
+                .as_array()
+                .ok_or_else(|| bad("candidates is not an array"))?;
+            if rows.len() != 3 {
+                return Err(bad("candidate grid must have 3 rows"));
+            }
+            let mut candidates = [[0u64; 3]; 3];
+            for (i, row) in rows.iter().enumerate() {
+                let cells = row
+                    .as_array()
+                    .ok_or_else(|| bad("candidate row is not an array"))?;
+                if cells.len() != 3 {
+                    return Err(bad("candidate row must have 3 cells"));
+                }
+                for (j, cell) in cells.iter().enumerate() {
+                    candidates[i][j] =
+                        cell.as_u64().ok_or_else(|| bad("candidate cell is not a u64"))?;
+                }
+            }
+            layers.push(PlanLayer {
+                name: l.req_str("name")?.to_string(),
+                choice: ShardChoice { dataflow, strategy },
+                reconfig_cycles: l.req_u64("reconfig_cycles")?,
+                compute_cycles: l.req_u64("compute_cycles")?,
+                stall_cycles: l.req_u64("stall_cycles")?,
+                comm_cycles: l.req_u64("comm_cycles")?,
+                candidates,
+            });
+        }
+        let chips = v.req_u64("chips")?;
+        if chips == 0 || chips > u64::from(ArchConfig::MAX_CHIPS) {
+            return Err(bad("chip count out of range"));
+        }
+        Ok(ExecutionPlan {
+            model: v.req_str("model")?.to_string(),
+            chips: chips as u32,
+            provenance: v.req_str("provenance")?.to_string(),
+            layers,
+        })
+    }
+
+    /// Persist the plan in `store` under its provenance key (atomic
+    /// rewrite; any previous file for the key is replaced).
+    pub fn save(&self, store: &PlanStore) -> Result<()> {
+        store.save_document("plan", &self.provenance, self.to_json())
+    }
+
+    /// Load the plan persisted under `provenance`, or `None` when the store
+    /// holds no (valid, schema-current, provenance-matching) file for it —
+    /// the caller then compiles cold and saves.
+    pub fn load(store: &PlanStore, provenance: &str) -> Option<ExecutionPlan> {
+        let payload = store.load_document("plan", provenance)?;
+        let plan = ExecutionPlan::from_json(&payload).ok()?;
+        if plan.provenance != provenance {
+            return None;
+        }
+        Some(plan)
+    }
+}
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Content hash keying compiled plans and persisted shape entries: covers
+/// the schema version, the full [`ArchConfig`] (geometry, memory,
+/// reconfiguration cost, clock, interconnect), every layer of every
+/// topology in `models`, the [`SimOptions`], and the chip count.  Worker
+/// thread counts are deliberately excluded — selection is byte-identical at
+/// any thread count, so warm starts must be too.
+pub fn provenance_key(
+    arch: &ArchConfig,
+    models: &[Topology],
+    opts: SimOptions,
+    chips: u32,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "schema={PLAN_SCHEMA_VERSION};arch={}x{};mem={}/{}/{}/{}/{};reconfig={};clock={:016x};\
+         link={}/{};chips={};opts={:?}/{:?}/{}",
+        arch.array_rows,
+        arch.array_cols,
+        arch.memory.ifmap_sram_kib,
+        arch.memory.filter_sram_kib,
+        arch.memory.ofmap_sram_kib,
+        arch.memory.dram_bytes_per_cycle,
+        arch.memory.bytes_per_element,
+        arch.reconfig_cycles,
+        arch.clock_ns.to_bits(),
+        arch.interconnect.link_latency_cycles,
+        arch.interconnect.link_bytes_per_cycle,
+        chips.max(1),
+        opts.fidelity,
+        opts.dw_mapping,
+        opts.batch,
+    );
+    for topo in models {
+        let _ = write!(s, ";model={}", topo.name);
+        for l in &topo.layers {
+            let _ = write!(
+                s,
+                ";{}:{:?}/{}x{}/{}x{}/{}/{}/{}",
+                l.name,
+                l.kind,
+                l.ifmap_h,
+                l.ifmap_w,
+                l.filt_h,
+                l.filt_w,
+                l.channels,
+                l.num_filters,
+                l.stride,
+            );
+        }
+    }
+    format!("{:016x}", fnv1a(0xcbf2_9ce4_8422_2325, s.as_bytes()))
+}
+
+/// Compile one layer: evaluate the candidate grid through the shared cache,
+/// apply the one tie-break, and record the chosen configuration's forecast.
+fn plan_layer(
+    arch: &ArchConfig,
+    layer: &Layer,
+    chips: u32,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> PlanLayer {
+    if chips <= 1 {
+        let row_stats: Vec<LayerStats> = Dataflow::ALL
+            .iter()
+            .map(|&df| cache.simulate_layer(arch, layer, df, opts))
+            .collect();
+        let mut row = [0u64; 3];
+        for (i, stats) in row_stats.iter().enumerate() {
+            row[i] = stats.total_cycles();
+        }
+        let candidates = row_grid(&row);
+        let choice = argmin_choice(&candidates);
+        let chosen = &row_stats[df_index(choice.dataflow)];
+        PlanLayer {
+            name: layer.name.clone(),
+            choice,
+            reconfig_cycles: 0,
+            compute_cycles: chosen.compute_cycles,
+            stall_cycles: chosen.stall_cycles,
+            comm_cycles: 0,
+            candidates,
+        }
+    } else {
+        let mut candidates = [[0u64; 3]; 3];
+        let mut cells = Vec::with_capacity(9);
+        for df in Dataflow::ALL {
+            for strategy in ShardStrategy::ALL {
+                let stats =
+                    simulate_layer_sharded_cached(arch, layer, df, strategy, chips, opts, cache);
+                candidates[df_index(df)][strategy_index(strategy)] = stats.total_cycles();
+                cells.push(stats);
+            }
+        }
+        let choice = argmin_choice(&candidates);
+        let chosen =
+            &cells[df_index(choice.dataflow) * 3 + strategy_index(choice.strategy)];
+        PlanLayer {
+            name: layer.name.clone(),
+            choice,
+            reconfig_cycles: 0,
+            compute_cycles: chosen.compute_cycles,
+            stall_cycles: chosen.stall_cycles,
+            comm_cycles: chosen.comm_cycles,
+            candidates,
+        }
+    }
+}
+
+/// Charge reconfiguration cycles per dataflow *change* between consecutive
+/// layers (the initial configuration is free, as on static TPUs) and stamp
+/// the provenance — shared tail of every compile path.
+fn assemble_plan(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    mut layers: Vec<PlanLayer>,
+) -> ExecutionPlan {
+    for i in 1..layers.len() {
+        if layers[i].choice.dataflow != layers[i - 1].choice.dataflow {
+            layers[i].reconfig_cycles = arch.reconfig_cycles;
+        }
+    }
+    ExecutionPlan {
+        model: topo.name.clone(),
+        chips: chips.max(1),
+        provenance: provenance_key(arch, std::slice::from_ref(topo), opts, chips),
+        layers,
+    }
+}
+
+/// Compile `topo` into an [`ExecutionPlan`] at `chips` chips, serially.
+///
+/// At one chip this is the paper's exhaustive selector (three profiling
+/// passes per layer); at more it is the joint (dataflow × shard strategy)
+/// grid search.  Every simulation flows through `cache`, so a warm cache
+/// (e.g. preloaded from a [`PlanStore`]) compiles without any
+/// `simulate_layer` calls.
+pub fn compile_plan(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    cache: &ShapeCache,
+) -> ExecutionPlan {
+    let layers = topo
+        .layers
+        .iter()
+        .map(|layer| plan_layer(arch, layer, chips, opts, cache))
+        .collect();
+    assemble_plan(arch, topo, opts, chips, layers)
+}
+
+/// [`compile_plan`] with the per-layer grids fanned across `threads`
+/// workers (0 = all cores); byte-identical to the serial compile.
+pub fn compile_plan_parallel(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    threads: usize,
+    cache: &ShapeCache,
+) -> ExecutionPlan {
+    let layers = parallel_map(threads, &topo.layers, |_, layer| {
+        plan_layer(arch, layer, chips, opts, cache)
+    });
+    assemble_plan(arch, topo, opts, chips, layers)
+}
+
+/// Adopt an externally produced [`Selection`] (e.g. the heuristic
+/// selector's) into plan form: choices and candidate rows come from the
+/// selection, forecasts from the cache, reconfiguration charges and
+/// provenance from the shared assembly.
+pub fn plan_from_selection(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    selection: &Selection,
+    cache: &ShapeCache,
+) -> ExecutionPlan {
+    assert_eq!(
+        selection.per_layer.len(),
+        topo.layers.len(),
+        "selection must cover the topology"
+    );
+    let layers = topo
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, layer)| {
+            let df = selection.per_layer[i];
+            let stats = cache.simulate_layer(arch, layer, df, opts);
+            PlanLayer {
+                name: layer.name.clone(),
+                choice: ShardChoice {
+                    dataflow: df,
+                    strategy: ShardStrategy::Rows,
+                },
+                reconfig_cycles: 0,
+                compute_cycles: stats.compute_cycles,
+                stall_cycles: stats.stall_cycles,
+                comm_cycles: 0,
+                candidates: row_grid(&selection.cycles[i]),
+            }
+        })
+        .collect();
+    assemble_plan(arch, topo, opts, 1, layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::reconfig_charges;
+    use crate::topology::zoo;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::square(32)
+    }
+
+    #[test]
+    fn plan_matches_selector_views() {
+        let topo = zoo::resnet18();
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let plan = compile_plan(&arch(), &topo, opts, 1, &cache);
+        let sel = plan.selection();
+        assert_eq!(sel.per_layer.len(), topo.layers.len());
+        // Flex total = per-layer winners + reconfiguration charges.
+        assert_eq!(
+            plan.flex_cycles(),
+            sel.flex_compute_cycles() + reconfig_charges(&sel.per_layer, arch().reconfig_cycles)
+        );
+        for df in Dataflow::ALL {
+            assert_eq!(plan.static_dataflow_cycles(df), sel.static_cycles(df), "{df}");
+        }
+    }
+
+    #[test]
+    fn parallel_compile_is_byte_identical() {
+        let topo = zoo::googlenet();
+        let opts = SimOptions::default();
+        let serial_cache = ShapeCache::new();
+        let want = compile_plan(&arch(), &topo, opts, 4, &serial_cache);
+        for threads in [2usize, 4] {
+            let cache = ShapeCache::new();
+            let got = compile_plan_parallel(&arch(), &topo, opts, 4, threads, &cache);
+            assert_eq!(want, got, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn provenance_is_stable_and_sensitive() {
+        let topo = zoo::alexnet();
+        let opts = SimOptions::default();
+        let a = provenance_key(&arch(), std::slice::from_ref(&topo), opts, 1);
+        let b = provenance_key(&arch(), std::slice::from_ref(&topo), opts, 1);
+        assert_eq!(a, b, "same inputs must hash identically");
+        let c = provenance_key(&ArchConfig::square(16), std::slice::from_ref(&topo), opts, 1);
+        assert_ne!(a, c, "array size must change the key");
+        let d = provenance_key(&arch(), std::slice::from_ref(&topo), opts, 4);
+        assert_ne!(a, d, "chip count must change the key");
+        let batched = SimOptions { batch: 8, ..opts };
+        let e = provenance_key(&arch(), std::slice::from_ref(&topo), batched, 1);
+        assert_ne!(a, e, "batch must change the key");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_plans() {
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        for chips in [1u32, 4] {
+            let plan = compile_plan(&arch(), &zoo::mobilenet(), opts, chips, &cache);
+            let back = ExecutionPlan::from_json(&plan.to_json()).unwrap();
+            assert_eq!(plan, back, "{chips} chips");
+        }
+    }
+
+    #[test]
+    fn malformed_plan_json_rejected() {
+        use crate::util::json::parse;
+        for bad in [
+            "{}",
+            r#"{"model": "m", "chips": 0, "provenance": "x", "layers": []}"#,
+            r#"{"model": "m", "chips": 1, "provenance": "x", "layers": [{"name": "l"}]}"#,
+        ] {
+            let v = parse(bad).unwrap();
+            assert!(ExecutionPlan::from_json(&v).is_err(), "{bad}");
+        }
+    }
+}

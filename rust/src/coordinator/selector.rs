@@ -17,9 +17,11 @@
 use crate::config::ArchConfig;
 use crate::sim::engine::{simulate_layer, SimOptions};
 use crate::sim::gemm::layer_gemms;
-use crate::sim::parallel::{parallel_map, ShapeCache};
+use crate::sim::parallel::ShapeCache;
 use crate::sim::Dataflow;
-use crate::topology::Topology;
+use crate::topology::{Layer, Topology};
+
+use super::plan;
 
 /// Result of the per-layer dataflow search.
 #[derive(Debug, Clone, PartialEq)]
@@ -67,13 +69,11 @@ pub(crate) fn df_index(df: Dataflow) -> usize {
 }
 
 /// Deterministic per-layer argmin: ties break toward the `Dataflow::ALL`
-/// listing order (IS before OS before WS), shared by every selector path so
-/// serial, cached and parallel selections are byte-identical.
+/// listing order (IS before OS before WS).  Delegates to the one shared
+/// tie-break in [`plan`] (over a strategy-degenerate grid), so every
+/// selector, partitioner and plan compiler picks identically.
 fn argmin_row(row: &[u64; 3]) -> Dataflow {
-    Dataflow::ALL
-        .into_iter()
-        .min_by_key(|&df| row[df_index(df)])
-        .unwrap()
+    plan::argmin_choice(&plan::row_grid(row)).dataflow
 }
 
 fn selection_from_rows(model: &str, cycles: Vec<[u64; 3]>) -> Selection {
@@ -106,24 +106,15 @@ pub fn select_exhaustive(arch: &ArchConfig, topo: &Topology, opts: SimOptions) -
 
 /// [`select_exhaustive`] through a [`ShapeCache`]: identical selection,
 /// repeated layer shapes (within and across models) profiled once.
+/// Implemented as a plan compiler — the selection is the single-chip view
+/// of the [`plan::ExecutionPlan`] the layers compile into.
 pub fn select_exhaustive_cached(
     arch: &ArchConfig,
     topo: &Topology,
     opts: SimOptions,
     cache: &ShapeCache,
 ) -> Selection {
-    let cycles = topo
-        .layers
-        .iter()
-        .map(|layer| {
-            let mut row = [0u64; 3];
-            for df in Dataflow::ALL {
-                row[df_index(df)] = cache.simulate_layer(arch, layer, df, opts).total_cycles();
-            }
-            row
-        })
-        .collect();
-    selection_from_rows(&topo.name, cycles)
+    plan::compile_plan(arch, topo, opts, 1, cache).selection()
 }
 
 /// [`select_exhaustive`] with the per-layer profiling runs fanned across
@@ -140,18 +131,17 @@ pub fn select_exhaustive_parallel(
     threads: usize,
     cache: &ShapeCache,
 ) -> Selection {
-    let cycles = parallel_map(threads, &topo.layers, |_, layer| {
-        let mut row = [0u64; 3];
-        for df in Dataflow::ALL {
-            row[df_index(df)] = cache.simulate_layer(arch, layer, df, opts).total_cycles();
-        }
-        row
-    });
-    selection_from_rows(&topo.name, cycles)
+    plan::compile_plan_parallel(arch, topo, opts, 1, threads, cache).selection()
 }
 
-/// Shape-only heuristic selector (no profiling runs; future-work method).
-pub fn select_heuristic(arch: &ArchConfig, topo: &Topology, opts: SimOptions) -> Selection {
+/// Shared body of the heuristic selector: picks come from the shape-only
+/// volume model, honest cycle rows from `profile` (raw or cache-memoized).
+fn select_heuristic_with(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    profile: &dyn Fn(&Layer, Dataflow) -> u64,
+) -> Selection {
     let r = arch.array_rows as f64;
     let c = arch.array_cols as f64;
     let mut per_layer = Vec::with_capacity(topo.layers.len());
@@ -176,7 +166,7 @@ pub fn select_heuristic(arch: &ArchConfig, topo: &Topology, opts: SimOptions) ->
         // stays honest (heuristic picks, simulator judges).
         let mut row = [0u64; 3];
         for df in Dataflow::ALL {
-            row[df_index(df)] = simulate_layer(arch, layer, df, opts).total_cycles();
+            row[df_index(df)] = profile(layer, df);
         }
         cycles.push(row);
     }
@@ -185,6 +175,27 @@ pub fn select_heuristic(arch: &ArchConfig, topo: &Topology, opts: SimOptions) ->
         per_layer,
         cycles,
     }
+}
+
+/// Shape-only heuristic selector (no profiling runs; future-work method).
+pub fn select_heuristic(arch: &ArchConfig, topo: &Topology, opts: SimOptions) -> Selection {
+    select_heuristic_with(arch, topo, opts, &|layer, df| {
+        simulate_layer(arch, layer, df, opts).total_cycles()
+    })
+}
+
+/// [`select_heuristic`] with the honest-cycles profiling loop memoized
+/// through a [`ShapeCache`] — identical selection, repeated shapes (and any
+/// follow-up lookup of the rows, e.g. by the plan compiler) simulated once.
+pub fn select_heuristic_cached(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    cache: &ShapeCache,
+) -> Selection {
+    select_heuristic_with(arch, topo, opts, &|layer, df| {
+        cache.simulate_layer(arch, layer, df, opts).total_cycles()
+    })
 }
 
 /// Agreement rate between two selections (fraction of layers where both

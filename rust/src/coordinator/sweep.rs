@@ -22,12 +22,15 @@
 use std::sync::Arc;
 
 use crate::config::ArchConfig;
-use crate::sim::engine::{reconfig_charges, SimOptions};
+use crate::error::Result;
+use crate::sim::engine::SimOptions;
 use crate::sim::parallel::{effective_threads, parallel_map, CacheStats, ShapeCache};
+use crate::sim::store::PlanStore;
 use crate::sim::Dataflow;
 use crate::topology::{zoo, Topology};
 
-use super::partition::{self, PartitionSelection};
+use super::partition::PartitionSelection;
+use super::plan;
 use super::selector::{self, Selection};
 
 /// One model's sweep outcome (the content of a paper Table I row).
@@ -95,21 +98,22 @@ fn sweep_model(
     layer_threads: usize,
     cache: &ShapeCache,
 ) -> ModelSweep {
-    let selection = if layer_threads > 1 {
-        selector::select_exhaustive_parallel(arch, topo, opts, layer_threads, cache)
+    let plan = if layer_threads > 1 {
+        plan::compile_plan_parallel(arch, topo, opts, 1, layer_threads, cache)
     } else {
-        selector::select_exhaustive_cached(arch, topo, opts, cache)
+        plan::compile_plan(arch, topo, opts, 1, cache)
     };
-    let flex_cycles = selection.flex_compute_cycles()
-        + reconfig_charges(&selection.per_layer, arch.reconfig_cycles);
+    // Totals are read off the compiled plan rather than re-derived from the
+    // selection — the plan IR is the single source of truth for roll-ups.
+    let flex_cycles = plan.flex_cycles();
     let static_cycles = [
-        selection.static_cycles(Dataflow::Is),
-        selection.static_cycles(Dataflow::Os),
-        selection.static_cycles(Dataflow::Ws),
+        plan.static_dataflow_cycles(Dataflow::Is),
+        plan.static_dataflow_cycles(Dataflow::Os),
+        plan.static_dataflow_cycles(Dataflow::Ws),
     ];
     ModelSweep {
         model: topo.name.clone(),
-        selection,
+        selection: plan.selection(),
         flex_cycles,
         static_cycles,
     }
@@ -223,18 +227,16 @@ fn sweep_model_sharded(
     layer_threads: usize,
     cache: &ShapeCache,
 ) -> ModelShardSweep {
-    let selection = if layer_threads > 1 {
-        partition::select_joint_parallel(arch, topo, opts, chips, layer_threads, cache)
+    let plan = if layer_threads > 1 {
+        plan::compile_plan_parallel(arch, topo, opts, chips, layer_threads, cache)
     } else {
-        partition::select_joint(arch, topo, opts, chips, cache)
+        plan::compile_plan(arch, topo, opts, chips, cache)
     };
-    let dataflows: Vec<_> = selection.per_layer.iter().map(|c| c.dataflow).collect();
-    let flex_cycles =
-        selection.flex_layer_cycles() + reconfig_charges(&dataflows, arch.reconfig_cycles);
+    let flex_cycles = plan.flex_cycles();
     let single_chip_cycles = sweep_model(arch, topo, opts, layer_threads, cache).flex_cycles;
     ModelShardSweep {
         model: topo.name.clone(),
-        selection,
+        selection: plan.partition_selection(),
         flex_cycles,
         single_chip_cycles,
     }
@@ -296,6 +298,67 @@ pub fn sweep_zoo_chip_grid(
         .map(|&chips| sweep_models_sharded(arch, &models, chips, threads, opts, &cache))
         .collect();
     (results, cache)
+}
+
+/// The one load → run → save choreography both stored sweeps share: preload
+/// every shape entry persisted under `provenance`, run the sweep against
+/// the warmed cache, persist the (possibly grown) cache back.  Returns the
+/// sweep result plus the number of preloaded entries.
+fn stored_sweep<R>(
+    models: &[Topology],
+    opts: SimOptions,
+    arch: &ArchConfig,
+    chips: u32,
+    store: Option<&PlanStore>,
+    run: impl FnOnce(&[Topology], &ShapeCache) -> R,
+) -> Result<(R, usize)> {
+    let provenance = plan::provenance_key(arch, models, opts, chips);
+    let cache = ShapeCache::new();
+    let loaded = match store {
+        Some(store) => store.load_shapes(&provenance, &cache),
+        None => 0,
+    };
+    let result = run(models, &cache);
+    if let Some(store) = store {
+        store.save_shapes(&provenance, &cache)?;
+    }
+    Ok((result, loaded))
+}
+
+/// [`sweep_zoo`] with a cross-run warm start through a [`PlanStore`]
+/// (`flex-tpu sweep --plan-cache <dir>`): every shape entry persisted for
+/// this sweep's provenance key is preloaded before the sweep, and the
+/// (possibly grown) cache is persisted back afterwards.  Returns the sweep
+/// result plus the number of preloaded entries.
+///
+/// On a fully warm start (a prior run of the identical sweep) every lookup
+/// hits — the result's [`CacheStats`] report `misses == 0` (zero
+/// `simulate_layer` calls) and a hit rate of exactly 1.0 — and the sweep
+/// output is byte-identical to the cold run's, at any thread count.
+pub fn sweep_zoo_stored(
+    arch: &ArchConfig,
+    threads: usize,
+    opts: SimOptions,
+    store: Option<&PlanStore>,
+) -> Result<(SweepResult, usize)> {
+    stored_sweep(&zoo::all_models(), opts, arch, 1, store, |models, cache| {
+        sweep_models(arch, models, threads, opts, cache)
+    })
+}
+
+/// [`sweep_zoo_sharded`] with the same [`PlanStore`] warm start as
+/// [`sweep_zoo_stored`]; the provenance key additionally covers the chip
+/// count, since sharded sub-layer shapes differ per count.
+pub fn sweep_zoo_sharded_stored(
+    arch: &ArchConfig,
+    chips: u32,
+    threads: usize,
+    opts: SimOptions,
+    store: Option<&PlanStore>,
+) -> Result<(ShardSweepResult, usize)> {
+    stored_sweep(&zoo::all_models(), opts, arch, chips, store, |models, cache| {
+        sweep_models_sharded(arch, models, chips, threads, opts, cache)
+    })
 }
 
 #[cfg(test)]

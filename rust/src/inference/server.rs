@@ -19,12 +19,14 @@ use std::time::Instant;
 
 use crate::config::ArchConfig;
 use crate::coordinator::pipeline::{Deployment, FlexPipeline};
+use crate::coordinator::plan::ExecutionPlan;
 use crate::cost::synth::critical_path_ns;
 use crate::cost::PeVariant;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
-use crate::sim::engine::{reconfig_charges, simulate_network, SimOptions};
-use crate::sim::shard::{simulate_layer_sharded, ShardStrategy};
+use crate::sim::engine::{reconfig_charges, simulate_network_cached, SimOptions};
+use crate::sim::parallel::ShapeCache;
+use crate::sim::shard::{simulate_layer_sharded_cached, ShardStrategy};
 use crate::sim::Dataflow;
 
 use super::request::{InferenceRequest, InferenceResponse, TimingEstimate};
@@ -82,9 +84,46 @@ impl InferenceServer {
     /// rather than conflating it with batch amortization.  `chips = 1` is
     /// byte-identical to [`InferenceServer::new`].
     pub fn new_sharded(runtime: Runtime, arch: ArchConfig, chips: u32) -> Result<Self> {
+        let cache = Arc::new(ShapeCache::new());
+        let topo = runtime.manifest().topology();
+        let plan = FlexPipeline::new(arch)
+            .with_cache(Arc::clone(&cache))
+            .compile(&topo);
+        Self::with_plan(runtime, arch, chips, &plan, cache)
+    }
+
+    /// [`InferenceServer::new_sharded`] from a **precompiled**
+    /// [`ExecutionPlan`] (e.g. loaded from a
+    /// [`crate::sim::store::PlanStore`]), skipping the profiling phase:
+    /// the plan supplies the per-layer schedule, `cache` memoizes every
+    /// (re)simulation — preload it from the same store and a warm start
+    /// deploys with zero `simulate_layer` calls.  Errors when the plan was
+    /// compiled for a different model, architecture or option set (the
+    /// provenance key is checked).
+    pub fn with_plan(
+        runtime: Runtime,
+        arch: ArchConfig,
+        chips: u32,
+        plan: &ExecutionPlan,
+        cache: Arc<ShapeCache>,
+    ) -> Result<Self> {
         let chips = chips.max(1);
         let topo = runtime.manifest().topology();
-        let deployment = FlexPipeline::new(arch).deploy(&topo);
+        let expected = crate::coordinator::plan::provenance_key(
+            &arch,
+            std::slice::from_ref(&topo),
+            SimOptions::default(),
+            1,
+        );
+        if plan.provenance != expected {
+            return Err(Error::InvalidConfig(format!(
+                "plan provenance {} does not match this deployment (expected {expected})",
+                plan.provenance
+            )));
+        }
+        let deployment = FlexPipeline::new(arch)
+            .with_cache(Arc::clone(&cache))
+            .deploy_plan(&topo, plan)?;
         let variant = "flex".to_string();
         if !runtime.model_variants().contains(&variant) {
             return Err(Error::Artifact("no 'flex' model artifact".into()));
@@ -117,15 +156,24 @@ impl InferenceServer {
             let mut batch_cycles = 0u64;
             for (i, layer) in topo.layers.iter().enumerate() {
                 let df = deployment.selection.per_layer[i];
-                let s =
-                    simulate_layer_sharded(&arch, layer, df, ShardStrategy::Batch, chips, opts);
+                let s = simulate_layer_sharded_cached(
+                    &arch,
+                    layer,
+                    df,
+                    ShardStrategy::Batch,
+                    chips,
+                    opts,
+                    &cache,
+                );
                 batch_cycles += s.total_cycles();
             }
             batch_cycles +=
                 reconfig_charges(&deployment.selection.per_layer, arch.reconfig_cycles);
             let per_inference = |total: u64| total.div_ceil(u64::from(batch));
-            let static_cycles = Dataflow::ALL
-                .map(|df| per_inference(simulate_network(&arch, &topo, df, opts).total_cycles()));
+            let static_cycles = Dataflow::ALL.map(|df| {
+                let total = simulate_network_cached(&arch, &topo, df, opts, &cache).total_cycles();
+                per_inference(total)
+            });
             let best = static_cycles.iter().copied().min().expect("three dataflows");
             timing.flex_cycles = per_inference(batch_cycles);
             timing.flex_ns = batch_cycles as f64 * cpd / f64::from(batch);

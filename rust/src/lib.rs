@@ -29,6 +29,10 @@
 //!   [`coordinator::partition`] module extends the selector to multi-chip
 //!   systems (joint dataflow × shard-strategy argmin), and
 //!   [`coordinator::sweep`] runs zoo/size/chip-count grids in parallel.
+//!   Every selection path compiles into the serializable
+//!   [`coordinator::plan::ExecutionPlan`] IR, which — together with the
+//!   layer-shape memo table — persists on disk through
+//!   [`sim::store::PlanStore`] for cross-run warm starts.
 //! * [`cost`] — an area/power/critical-path model calibrated against the
 //!   paper's Nangate-45nm Synopsys DC results (Table II, Fig. 5).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas

@@ -3,20 +3,23 @@
 //! ```text
 //! flex-tpu simulate --model resnet18 --size 32 --dataflow os [--memory] [--per-layer]
 //! flex-tpu deploy   --model resnet18 --size 32 [--cmu-out cmu.json] [--heuristic]
-//! flex-tpu sweep    [--size 32] [--threads 0] [--chips 4]
-//! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer]
+//! flex-tpu sweep    [--size 32] [--threads 0] [--chips 4] [--plan-cache DIR]
+//! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer] [--plan-cache DIR]
+//! flex-tpu plan     <compile|show|check> --model resnet18 [--chips 4] [--plan-cache DIR]
 //! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|paper|all> [--size 32] [--csv DIR]
-//! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2] [--chips 2]
+//! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2]
+//!                   [--chips 2] [--plan-cache DIR]
 //! flex-tpu validate [--array 4] [--cases 20]
 //! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0]
 //! ```
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use flex_tpu::config::{ArchConfig, SimFidelity};
 use flex_tpu::coordinator::cmu::Cmu;
 use flex_tpu::coordinator::pipeline::SelectorKind;
-use flex_tpu::coordinator::{partition, select_exhaustive_cached, sweep, FlexPipeline};
+use flex_tpu::coordinator::{partition, plan, select_exhaustive_cached, sweep, FlexPipeline};
 use flex_tpu::inference::{InferenceRequest, InferenceServer};
 use flex_tpu::metrics::Table;
 use flex_tpu::report;
@@ -24,14 +27,15 @@ use flex_tpu::runtime::Runtime;
 use flex_tpu::sim::engine::{reconfig_charges, simulate_network, SimOptions};
 use flex_tpu::sim::parallel::ShapeCache;
 use flex_tpu::sim::shard::simulate_layer_sharded_cached;
-use flex_tpu::sim::{Dataflow, DwMapping};
+use flex_tpu::sim::{Dataflow, DwMapping, PlanStore};
 use flex_tpu::topology::{parse_csv, zoo, Topology};
 use flex_tpu::util::cli::{Args, Parsed};
 
 /// CLI-level result: any error type boxes into the exit diagnostic.
 type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
-const SUBCOMMANDS: &str = "simulate | deploy | sweep | shard | report | infer | validate | dse";
+const SUBCOMMANDS: &str =
+    "simulate | deploy | sweep | shard | plan | report | infer | validate | dse";
 
 fn load_model(name: &str) -> CliResult<Topology> {
     if name.ends_with(".csv") {
@@ -72,6 +76,24 @@ fn arch_from(p: &Parsed) -> CliResult<ArchConfig> {
     };
     arch.validate()?;
     Ok(arch)
+}
+
+/// Open the `--plan-cache` store when the flag was given.
+fn open_store(p: &Parsed) -> CliResult<Option<PlanStore>> {
+    Ok(match p.get("plan-cache") {
+        Some(dir) => Some(PlanStore::open(dir)?),
+        None => None,
+    })
+}
+
+/// One-line summary of what the `--plan-cache` store contributed.
+fn print_store_line(store: Option<&PlanStore>, loaded: usize) {
+    if let Some(store) = store {
+        println!(
+            "plan cache: loaded {loaded} shape entries from {}",
+            store.dir().display()
+        );
+    }
 }
 
 /// Resolve `--chips`: 0 means "whatever the arch config says".
@@ -161,12 +183,13 @@ fn cmd_deploy(p: &Parsed) -> CliResult<()> {
 fn cmd_sweep(p: &Parsed) -> CliResult<()> {
     let arch = arch_from(p)?;
     let chips = effective_chips(p, &arch)?;
-    let threads = p.u64("threads")? as usize;
+    let threads = p.threads("threads")?;
     let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let store = open_store(p)?;
     if chips > 1 {
-        return sweep_sharded(&arch, chips, threads, sim);
+        return sweep_sharded(&arch, chips, threads, sim, store.as_ref());
     }
-    let result = sweep::sweep_zoo(&arch, threads, sim);
+    let (result, loaded) = sweep::sweep_zoo_stored(&arch, threads, sim, store.as_ref())?;
     let mut t = Table::new(&[
         "Model",
         "Flex Cycles",
@@ -196,6 +219,7 @@ fn cmd_sweep(p: &Parsed) -> CliResult<()> {
         arch.array_rows,
         arch.array_cols
     );
+    print_store_line(store.as_ref(), loaded);
     print_cache_line(&result.cache);
     Ok(())
 }
@@ -212,8 +236,14 @@ fn print_cache_line(cache: &flex_tpu::sim::CacheStats) {
 
 /// The multi-chip arm of `flex-tpu sweep`: zoo-wide joint (dataflow ×
 /// shard strategy) selection with per-model speedup vs one chip.
-fn sweep_sharded(arch: &ArchConfig, chips: u32, threads: usize, sim: SimOptions) -> CliResult<()> {
-    let result = sweep::sweep_zoo_sharded(arch, chips, threads, sim);
+fn sweep_sharded(
+    arch: &ArchConfig,
+    chips: u32,
+    threads: usize,
+    sim: SimOptions,
+    store: Option<&PlanStore>,
+) -> CliResult<()> {
+    let (result, loaded) = sweep::sweep_zoo_sharded_stored(arch, chips, threads, sim, store)?;
     let sharded_col = format!("{chips}-chip Flex");
     let mut t = Table::new(&[
         "Model",
@@ -254,6 +284,7 @@ fn sweep_sharded(arch: &ArchConfig, chips: u32, threads: usize, sim: SimOptions)
         arch.interconnect.link_latency_cycles
     );
     println!("mean speedup vs 1 chip: {mean:.3}x");
+    print_store_line(store, loaded);
     print_cache_line(&result.cache);
     Ok(())
 }
@@ -263,9 +294,14 @@ fn cmd_shard(p: &Parsed) -> CliResult<()> {
     let topo = load_model(p.req("model")?)?;
     let arch = arch_from(p)?;
     let chips = effective_chips(p, &arch)?;
-    let threads = p.u64("threads")? as usize;
+    let threads = p.threads("threads")?;
     let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let store = open_store(p)?;
+    let provenance = plan::provenance_key(&arch, std::slice::from_ref(&topo), sim, chips);
     let cache = ShapeCache::new();
+    let loaded = store
+        .as_ref()
+        .map_or(0, |s| s.load_shapes(&provenance, &cache));
     let joint = partition::select_joint_parallel(&arch, &topo, sim, chips, threads, &cache);
     let plain = select_exhaustive_cached(&arch, &topo, sim, &cache);
 
@@ -317,7 +353,112 @@ fn cmd_shard(p: &Parsed) -> CliResult<()> {
         topo.name, arch.array_rows, arch.array_cols
     );
     println!("speedup vs 1 chip: {:.3}x", single as f64 / flex as f64);
+    if let Some(store) = &store {
+        store.save_shapes(&provenance, &cache)?;
+    }
+    print_store_line(store.as_ref(), loaded);
     Ok(())
+}
+
+/// `flex-tpu plan <compile|show|check>`: manage persisted execution plans.
+fn cmd_plan(p: &Parsed) -> CliResult<()> {
+    let action = p
+        .positional(1)
+        .ok_or("plan needs an action (compile/show/check)")?;
+    if p.is_set("heuristic") {
+        // Heuristic plans carry a distinct provenance suffix and are only
+        // produced by the deploy flow; silently compiling the exhaustive
+        // plan here would persist something `deploy --heuristic` never
+        // reads.
+        return Err("flex-tpu plan manages exhaustive plans; --heuristic is not supported".into());
+    }
+    let topo = load_model(p.req("model")?)?;
+    let arch = arch_from(p)?;
+    let chips = effective_chips(p, &arch)?;
+    let threads = p.threads("threads")?;
+    let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let store = open_store(p)?;
+    let provenance = plan::provenance_key(&arch, std::slice::from_ref(&topo), sim, chips);
+    let compile = |cache: &ShapeCache| {
+        plan::compile_plan_parallel(&arch, &topo, sim, chips, threads, cache)
+    };
+    match action {
+        "compile" => {
+            let cache = ShapeCache::new();
+            let loaded = store
+                .as_ref()
+                .map_or(0, |s| s.load_shapes(&provenance, &cache));
+            let compiled = compile(&cache);
+            if let Some(store) = &store {
+                compiled.save(store)?;
+                store.save_shapes(&provenance, &cache)?;
+                println!(
+                    "plan cache: saved plan {} to {} ({loaded} shape entries preloaded)",
+                    compiled.provenance,
+                    store.dir().display()
+                );
+            }
+            print_plan(&compiled);
+        }
+        "show" => {
+            let store = store.ok_or("plan show needs --plan-cache <dir>")?;
+            let stored = plan::ExecutionPlan::load(&store, &provenance).ok_or_else(|| {
+                format!(
+                    "no stored plan for provenance {provenance} in {} \
+                     (run `flex-tpu plan compile` with the same flags first)",
+                    store.dir().display()
+                )
+            })?;
+            print_plan(&stored);
+        }
+        "check" => {
+            let store = store.ok_or("plan check needs --plan-cache <dir>")?;
+            let stored = plan::ExecutionPlan::load(&store, &provenance)
+                .ok_or_else(|| format!("no stored plan for provenance {provenance}"))?;
+            let cache = ShapeCache::new();
+            let fresh = compile(&cache);
+            if stored != fresh {
+                return Err(format!(
+                    "plan {provenance}: STALE (recompile with `flex-tpu plan compile`)"
+                )
+                .into());
+            }
+            println!(
+                "plan {provenance}: up to date ({} layers, {} flex cycles)",
+                stored.layers.len(),
+                stored.flex_cycles()
+            );
+        }
+        other => return Err(format!("unknown plan action {other:?} (compile/show/check)").into()),
+    }
+    Ok(())
+}
+
+/// Render a plan's per-layer schedule and totals.
+fn print_plan(compiled: &plan::ExecutionPlan) {
+    let mut t = Table::new(&["Layer", "Choice", "Cycles", "Comm", "Reconfig"]);
+    for l in &compiled.layers {
+        t.row(vec![
+            l.name.clone(),
+            if compiled.chips > 1 {
+                l.choice.to_string()
+            } else {
+                l.choice.dataflow.to_string()
+            },
+            l.layer_cycles().to_string(),
+            l.comm_cycles.to_string(),
+            l.reconfig_cycles.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} at {} chip(s): {} flex cycles ({} reconfiguration), provenance {}",
+        compiled.model,
+        compiled.chips,
+        compiled.flex_cycles(),
+        compiled.reconfig_total(),
+        compiled.provenance
+    );
 }
 
 fn cmd_report(p: &Parsed) -> CliResult<()> {
@@ -351,14 +492,51 @@ fn cmd_report(p: &Parsed) -> CliResult<()> {
 fn cmd_infer(p: &Parsed) -> CliResult<()> {
     let artifacts = PathBuf::from(p.req("artifacts")?);
     let requests = p.u64("requests")?;
-    let workers = (p.u64("workers")? as usize).max(1);
+    let workers = p.threads("workers")?;
     let arch = arch_from(p)?;
     let size = arch.array_rows;
     let chips = effective_chips(p, &arch)?;
     let rt = Runtime::load(&artifacts)?;
     println!("platform: {}", rt.platform());
     let manifest = rt.manifest().clone();
-    let server = InferenceServer::new_sharded(rt, arch, chips)?;
+    let server = match open_store(p)? {
+        None => InferenceServer::new_sharded(rt, arch, chips)?,
+        Some(store) => {
+            // Warm-start serving: reload the persisted plan + shape entries
+            // for this exact deployment, compile only what is missing, and
+            // persist whatever this run added.
+            let topo = manifest.topology();
+            let cache = Arc::new(ShapeCache::new());
+            let provenance = plan::provenance_key(
+                &arch,
+                std::slice::from_ref(&topo),
+                SimOptions::default(),
+                1,
+            );
+            let loaded = store.load_shapes(&provenance, &cache);
+            let (deploy_plan, plan_state) = match plan::ExecutionPlan::load(&store, &provenance) {
+                Some(stored) => (stored, "loaded"),
+                None => {
+                    let compiled = FlexPipeline::new(arch)
+                        .with_cache(Arc::clone(&cache))
+                        .compile(&topo);
+                    compiled.save(&store)?;
+                    (compiled, "compiled")
+                }
+            };
+            println!(
+                "plan cache: {plan_state} plan {} ({loaded} shape entries preloaded)",
+                deploy_plan.provenance
+            );
+            let server =
+                InferenceServer::with_plan(rt, arch, chips, &deploy_plan, Arc::clone(&cache))?;
+            // Persist only after the server is up: its timing estimate
+            // simulates the batch-sharded layers and static baselines into
+            // the cache, and those entries must warm the next run too.
+            store.save_shapes(&provenance, &cache)?;
+            server
+        }
+    };
 
     // Bounded front door: producers block once the queue holds 4 compiled
     // batches, which is the back-pressure a real serving door applies.
@@ -443,7 +621,7 @@ fn cmd_validate(p: &Parsed) -> CliResult<()> {
 fn cmd_dse(p: &Parsed) -> CliResult<()> {
     use flex_tpu::coordinator::dse;
     let topo = load_model(p.req("model")?)?;
-    let threads = p.u64("threads")? as usize;
+    let threads = p.threads("threads")?;
     let sizes: Vec<u32> = p
         .req("sizes")?
         .split(',')
@@ -504,9 +682,14 @@ fn main() -> CliResult<()> {
     .flag("batch", Some("1"), "inference batch size (simulate)")
     .flag("config", None, "TOML arch config file (overrides --size)")
     .flag("sizes", Some("8,16,32,64,128"), "comma-separated sizes for dse")
-    .flag("threads", Some("0"), "worker threads for sweep/shard/dse (0 = all cores)")
-    .flag("workers", Some("2"), "serving threads for infer")
+    .flag("threads", Some("0"), "worker threads for sweep/shard/plan/dse (0 = all cores)")
+    .flag("workers", Some("2"), "serving threads for infer (0 = all cores)")
     .flag("chips", Some("0"), "chips to shard layers across (0 = from arch config)")
+    .flag(
+        "plan-cache",
+        None,
+        "persist compiled plans + shape cache in this directory (cross-run warm starts)",
+    )
     .switch("memory", "enable the SRAM/DRAM stall model")
     .switch("per-layer", "print per-layer detail")
     .switch("heuristic", "use the shape-heuristic selector (future-work mode)");
@@ -523,6 +706,7 @@ fn main() -> CliResult<()> {
         Some("deploy") => cmd_deploy(&parsed),
         Some("sweep") => cmd_sweep(&parsed),
         Some("shard") => cmd_shard(&parsed),
+        Some("plan") => cmd_plan(&parsed),
         Some("report") => cmd_report(&parsed),
         Some("infer") => cmd_infer(&parsed),
         Some("validate") => cmd_validate(&parsed),

@@ -29,19 +29,24 @@ pub fn table1_rows(s: u32, opts: SimOptions) -> Vec<Table1Row> {
     table1_rows_with(s, opts, 1)
 }
 
-/// [`table1_rows`] with the per-model deployments fanned across `threads`
+/// [`table1_rows`] with the per-model compilations fanned across `threads`
 /// workers (0 = all cores) and a sweep-wide [`ShapeCache`].  Row order and
 /// every number are identical to the serial path.
+///
+/// Totals are read off each model's compiled
+/// [`crate::coordinator::plan::ExecutionPlan`] rather than re-derived from
+/// full network re-simulations — same numbers (the plan's candidate rows
+/// *are* the profiling runs), fewer cache lookups per model.
 pub fn table1_rows_with(s: u32, opts: SimOptions, threads: usize) -> Vec<Table1Row> {
     let arch = ArchConfig::square(s);
     let cache = Arc::new(ShapeCache::new());
     let pipeline = FlexPipeline::new(arch).with_options(opts).with_cache(cache);
     let models = zoo::all_models();
     parallel_map(threads, &models, |_, topo| {
-        let d = pipeline.deploy(topo);
-        let flex = d.total_cycles();
-        let static_cycles = Dataflow::ALL.map(|df| d.static_cycles(df));
-        let speedups = Dataflow::ALL.map(|df| d.speedup_vs(df));
+        let plan = pipeline.compile(topo);
+        let flex = plan.flex_cycles();
+        let static_cycles = Dataflow::ALL.map(|df| plan.static_dataflow_cycles(df));
+        let speedups = static_cycles.map(|c| c as f64 / flex as f64);
         Table1Row {
             model: topo.name.clone(),
             flex_cycles: flex,

@@ -19,8 +19,10 @@
 //! Above the single-chip pipeline, [`shard`] splits one layer across
 //! several chips (row / column / batch partitions) and composes per-shard
 //! results from this same engine with a ring all-gather interconnect
-//! model, and [`parallel`] provides the work-stealing pool + shape
-//! memoization every sweep runs on.
+//! model, [`parallel`] provides the work-stealing pool + shape
+//! memoization every sweep runs on, and [`store`] persists that memo
+//! table (plus compiled execution plans) on disk for cross-run warm
+//! starts.
 
 pub mod dataflow;
 pub mod engine;
@@ -29,6 +31,7 @@ pub mod memory;
 pub mod parallel;
 pub mod roofline;
 pub mod shard;
+pub mod store;
 pub mod trace;
 
 pub use dataflow::{FoldPlan, OperandTraffic};
@@ -36,6 +39,7 @@ pub use engine::{simulate_layer, simulate_network, LayerStats, NetworkStats};
 pub use gemm::{layer_gemms, layer_gemms_batched, DwMapping, Gemm};
 pub use parallel::{parallel_map, CacheStats, ShapeCache};
 pub use shard::{simulate_layer_sharded, ShardStrategy, ShardedLayerStats};
+pub use store::PlanStore;
 
 
 /// The three systolic dataflows of the paper (and the CMU's alphabet).

@@ -118,27 +118,29 @@ where
 }
 
 /// Everything [`simulate_layer`]'s result depends on, with `Hash`/`Eq`.
+/// `pub(crate)` (fields included) so [`crate::sim::store`] can persist and
+/// reconstruct entries without widening the public API.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct ShapeKey {
-    rows: u32,
-    cols: u32,
-    ifmap_sram_kib: u64,
-    filter_sram_kib: u64,
-    ofmap_sram_kib: u64,
-    dram_bytes_per_cycle: u64,
-    bytes_per_element: u64,
-    kind: LayerKind,
-    ifmap_h: u32,
-    ifmap_w: u32,
-    filt_h: u32,
-    filt_w: u32,
-    channels: u32,
-    num_filters: u32,
-    stride: u32,
-    dataflow: Dataflow,
-    fidelity: SimFidelity,
-    dw_mapping: DwMapping,
-    batch: u32,
+pub(crate) struct ShapeKey {
+    pub(crate) rows: u32,
+    pub(crate) cols: u32,
+    pub(crate) ifmap_sram_kib: u64,
+    pub(crate) filter_sram_kib: u64,
+    pub(crate) ofmap_sram_kib: u64,
+    pub(crate) dram_bytes_per_cycle: u64,
+    pub(crate) bytes_per_element: u64,
+    pub(crate) kind: LayerKind,
+    pub(crate) ifmap_h: u32,
+    pub(crate) ifmap_w: u32,
+    pub(crate) filt_h: u32,
+    pub(crate) filt_w: u32,
+    pub(crate) channels: u32,
+    pub(crate) num_filters: u32,
+    pub(crate) stride: u32,
+    pub(crate) dataflow: Dataflow,
+    pub(crate) fidelity: SimFidelity,
+    pub(crate) dw_mapping: DwMapping,
+    pub(crate) batch: u32,
 }
 
 impl ShapeKey {
@@ -264,6 +266,32 @@ impl ShapeCache {
         to_cache.name = String::new();
         shard.lock().expect("cache lock").insert(key, to_cache);
         stats
+    }
+
+    /// Point-in-time copy of every resident entry, for persistence
+    /// ([`crate::sim::store`]).  Order is unspecified; the store sorts
+    /// entries before writing so file bytes are deterministic.
+    pub(crate) fn snapshot(&self) -> Vec<(ShapeKey, LayerStats)> {
+        let mut entries = Vec::new();
+        for shard in &self.shards {
+            for (key, stats) in shard.lock().expect("cache lock").iter() {
+                entries.push((*key, stats.clone()));
+            }
+        }
+        entries
+    }
+
+    /// Insert entries without touching the hit/miss counters — the warm
+    /// start path ([`crate::sim::store::PlanStore::load_shapes`]).  Every
+    /// subsequent lookup of a preloaded shape counts as a plain hit, so a
+    /// fully warm run reports a hit rate of exactly 1.0.
+    pub(crate) fn preload(&self, entries: Vec<(ShapeKey, LayerStats)>) {
+        for (key, stats) in entries {
+            self.shards[key.shard()]
+                .lock()
+                .expect("cache lock")
+                .insert(key, stats);
+        }
     }
 
     /// Current counters.

@@ -1,0 +1,409 @@
+//! Persisted on-disk plan/shape store for cross-run warm starts.
+//!
+//! The ROADMAP's remaining PR-1 lever: every process start used to
+//! recompute every `simulate_layer` result from scratch.  [`PlanStore`]
+//! persists the two compile-once artifacts under one directory
+//! (`--plan-cache <dir>` on the CLI):
+//!
+//! * **shape entries** — the [`ShapeCache`]'s memo table, so a second run
+//!   of the same sweep answers every lookup from disk (hit rate 1.0, zero
+//!   `simulate_layer` calls);
+//! * **execution plans** — serialized
+//!   [`crate::coordinator::plan::ExecutionPlan`]s, saved/loaded through
+//!   [`PlanStore::save_document`] / [`PlanStore::load_document`] by
+//!   `ExecutionPlan::save`/`load`.
+//!
+//! Every file is a JSON document (written with the in-tree
+//! [`crate::util::json`] — no new dependencies) wrapped in a versioned
+//! envelope `{schema, kind, provenance, payload}` and named
+//! `<kind>-<provenance>.json`, where the provenance is the content hash of
+//! everything the payload depends on
+//! ([`crate::coordinator::plan::provenance_key`]).  Robustness contract:
+//!
+//! * loads **never fail the caller** — a missing, truncated, corrupt,
+//!   wrong-schema or wrong-provenance file reads as a cold start
+//!   (`None` / 0 entries), never a panic;
+//! * writes are **atomic** (temp file + rename), so a crashed or
+//!   concurrent run can leave a stale file but never a torn one, and the
+//!   next successful save repairs any damage.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::SimFidelity;
+use crate::error::Result;
+use crate::sim::dataflow::OperandTraffic;
+use crate::sim::engine::LayerStats;
+use crate::sim::gemm::DwMapping;
+use crate::sim::memory::DramTraffic;
+use crate::sim::parallel::{ShapeCache, ShapeKey};
+use crate::sim::Dataflow;
+use crate::topology::LayerKind;
+use crate::util::json::{obj, parse, Value};
+
+/// Version stamped into every store envelope; a mismatch (older or newer)
+/// makes the file read as cold, so layout changes only ever cost a
+/// recompute, never a misparse.
+pub const STORE_SCHEMA_VERSION: u64 = 1;
+
+/// A directory of versioned, provenance-keyed JSON documents.
+///
+/// ```no_run
+/// use flex_tpu::config::ArchConfig;
+/// use flex_tpu::coordinator::plan::{compile_plan, provenance_key, ExecutionPlan};
+/// use flex_tpu::sim::engine::SimOptions;
+/// use flex_tpu::sim::{PlanStore, ShapeCache};
+/// use flex_tpu::topology::zoo;
+///
+/// let store = PlanStore::open("plan-cache")?;
+/// let arch = ArchConfig::square(32);
+/// let topo = zoo::resnet18();
+/// let opts = SimOptions::default();
+/// let prov = provenance_key(&arch, std::slice::from_ref(&topo), opts, 1);
+/// let cache = ShapeCache::new();
+/// store.load_shapes(&prov, &cache); // warm the memo table (0 on cold start)
+/// let plan = ExecutionPlan::load(&store, &prov)
+///     .unwrap_or_else(|| compile_plan(&arch, &topo, opts, 1, &cache));
+/// plan.save(&store)?;
+/// store.save_shapes(&prov, &cache)?;
+/// # Ok::<(), flex_tpu::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct PlanStore {
+    dir: PathBuf,
+}
+
+impl PlanStore {
+    /// Open (creating if needed) the store directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(Self {
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// The directory backing this store.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, kind: &str, provenance: &str) -> PathBuf {
+        self.dir.join(format!("{kind}-{provenance}.json"))
+    }
+
+    /// Load a document's payload, or `None` when the file is missing,
+    /// unparseable, schema-stale, or stamped with a different kind or
+    /// provenance than requested — all of which read as a cold start.
+    pub fn load_document(&self, kind: &str, provenance: &str) -> Option<Value> {
+        let text = std::fs::read_to_string(self.path_for(kind, provenance)).ok()?;
+        let doc = parse(&text).ok()?;
+        if doc.req_u64("schema").ok()? != STORE_SCHEMA_VERSION {
+            return None;
+        }
+        if doc.req_str("kind").ok()? != kind {
+            return None;
+        }
+        if doc.req_str("provenance").ok()? != provenance {
+            return None;
+        }
+        doc.get("payload").cloned()
+    }
+
+    /// Atomically write a document (payload wrapped in the versioned
+    /// envelope): the bytes land in a temp file first and are renamed into
+    /// place, so readers only ever see complete documents and a previously
+    /// corrupted file is repaired wholesale.
+    pub fn save_document(&self, kind: &str, provenance: &str, payload: Value) -> Result<()> {
+        let doc = obj(vec![
+            ("schema", Value::Num(STORE_SCHEMA_VERSION as f64)),
+            ("kind", Value::Str(kind.to_string())),
+            ("provenance", Value::Str(provenance.to_string())),
+            ("payload", payload),
+        ]);
+        let path = self.path_for(kind, provenance);
+        let tmp = self
+            .dir
+            .join(format!(".{kind}-{provenance}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, doc.to_string())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Preload every persisted shape entry for `provenance` into `cache`
+    /// and return how many were loaded (0 on any cold-start condition,
+    /// including a single malformed entry — a partially trusted file is
+    /// not trusted at all).  Preloading bypasses the hit/miss counters, so
+    /// a fully warm run reports a hit rate of 1.0.
+    pub fn load_shapes(&self, provenance: &str, cache: &ShapeCache) -> usize {
+        let Some(payload) = self.load_document("shapes", provenance) else {
+            return 0;
+        };
+        let Some(items) = payload.as_array() else {
+            return 0;
+        };
+        let mut entries = Vec::with_capacity(items.len());
+        for item in items {
+            match shape_entry_from_json(item) {
+                Some(entry) => entries.push(entry),
+                None => return 0,
+            }
+        }
+        let n = entries.len();
+        cache.preload(entries);
+        n
+    }
+
+    /// Persist every entry currently resident in `cache` under
+    /// `provenance`, sorted by key so file bytes are deterministic whatever
+    /// the thread count (or shard traversal order) that filled the cache.
+    pub fn save_shapes(&self, provenance: &str, cache: &ShapeCache) -> Result<()> {
+        let mut entries = cache.snapshot();
+        // The Debug form renders every key field, so it is a total order
+        // over distinct keys — and far cheaper than serializing whole
+        // entries just to sort them.
+        entries.sort_by_cached_key(|(key, _)| format!("{key:?}"));
+        let items: Vec<Value> = entries
+            .into_iter()
+            .map(|(key, stats)| shape_entry_to_json(&key, &stats))
+            .collect();
+        self.save_document("shapes", provenance, Value::Arr(items))
+    }
+}
+
+fn layer_kind_name(kind: LayerKind) -> &'static str {
+    match kind {
+        LayerKind::Conv => "conv",
+        LayerKind::DepthwiseConv => "dwconv",
+        LayerKind::Fc => "fc",
+    }
+}
+
+fn layer_kind_parse(s: &str) -> Option<LayerKind> {
+    match s {
+        "conv" => Some(LayerKind::Conv),
+        "dwconv" => Some(LayerKind::DepthwiseConv),
+        "fc" => Some(LayerKind::Fc),
+        _ => None,
+    }
+}
+
+fn fidelity_name(f: SimFidelity) -> &'static str {
+    match f {
+        SimFidelity::Analytical => "analytical",
+        SimFidelity::WithMemory => "with_memory",
+    }
+}
+
+fn fidelity_parse(s: &str) -> Option<SimFidelity> {
+    match s {
+        "analytical" => Some(SimFidelity::Analytical),
+        "with_memory" => Some(SimFidelity::WithMemory),
+        _ => None,
+    }
+}
+
+fn dw_mapping_name(dw: DwMapping) -> &'static str {
+    match dw {
+        DwMapping::ScaleSim => "scalesim",
+        DwMapping::Grouped => "grouped",
+    }
+}
+
+fn dw_mapping_parse(s: &str) -> Option<DwMapping> {
+    match s {
+        "scalesim" => Some(DwMapping::ScaleSim),
+        "grouped" => Some(DwMapping::Grouped),
+        _ => None,
+    }
+}
+
+fn num(n: u64) -> Value {
+    Value::Num(n as f64)
+}
+
+fn shape_entry_to_json(key: &ShapeKey, stats: &LayerStats) -> Value {
+    obj(vec![
+        ("rows", num(u64::from(key.rows))),
+        ("cols", num(u64::from(key.cols))),
+        ("ifmap_sram_kib", num(key.ifmap_sram_kib)),
+        ("filter_sram_kib", num(key.filter_sram_kib)),
+        ("ofmap_sram_kib", num(key.ofmap_sram_kib)),
+        ("dram_bytes_per_cycle", num(key.dram_bytes_per_cycle)),
+        ("bytes_per_element", num(key.bytes_per_element)),
+        ("kind", Value::Str(layer_kind_name(key.kind).to_string())),
+        ("ifmap_h", num(u64::from(key.ifmap_h))),
+        ("ifmap_w", num(u64::from(key.ifmap_w))),
+        ("filt_h", num(u64::from(key.filt_h))),
+        ("filt_w", num(u64::from(key.filt_w))),
+        ("channels", num(u64::from(key.channels))),
+        ("num_filters", num(u64::from(key.num_filters))),
+        ("stride", num(u64::from(key.stride))),
+        ("dataflow", Value::Str(key.dataflow.name().to_string())),
+        ("fidelity", Value::Str(fidelity_name(key.fidelity).to_string())),
+        ("dw_mapping", Value::Str(dw_mapping_name(key.dw_mapping).to_string())),
+        ("batch", num(u64::from(key.batch))),
+        ("launches", num(stats.launches)),
+        ("compute_cycles", num(stats.compute_cycles)),
+        ("stall_cycles", num(stats.stall_cycles)),
+        ("macs", num(stats.macs)),
+        ("ifmap_reads", num(stats.traffic.ifmap_reads)),
+        ("filter_reads", num(stats.traffic.filter_reads)),
+        ("ofmap_writes", num(stats.traffic.ofmap_writes)),
+        ("ofmap_reads", num(stats.traffic.ofmap_reads)),
+        ("dram_fetch_bytes", num(stats.dram.fetch_bytes)),
+        ("dram_writeback_bytes", num(stats.dram.writeback_bytes)),
+    ])
+}
+
+fn u32_field(v: &Value, key: &str) -> Option<u32> {
+    let n = v.req_u64(key).ok()?;
+    u32::try_from(n).ok()
+}
+
+fn shape_entry_from_json(v: &Value) -> Option<(ShapeKey, LayerStats)> {
+    let key = ShapeKey {
+        rows: u32_field(v, "rows")?,
+        cols: u32_field(v, "cols")?,
+        ifmap_sram_kib: v.req_u64("ifmap_sram_kib").ok()?,
+        filter_sram_kib: v.req_u64("filter_sram_kib").ok()?,
+        ofmap_sram_kib: v.req_u64("ofmap_sram_kib").ok()?,
+        dram_bytes_per_cycle: v.req_u64("dram_bytes_per_cycle").ok()?,
+        bytes_per_element: v.req_u64("bytes_per_element").ok()?,
+        kind: layer_kind_parse(v.req_str("kind").ok()?)?,
+        ifmap_h: u32_field(v, "ifmap_h")?,
+        ifmap_w: u32_field(v, "ifmap_w")?,
+        filt_h: u32_field(v, "filt_h")?,
+        filt_w: u32_field(v, "filt_w")?,
+        channels: u32_field(v, "channels")?,
+        num_filters: u32_field(v, "num_filters")?,
+        stride: u32_field(v, "stride")?,
+        dataflow: Dataflow::parse(v.req_str("dataflow").ok()?)?,
+        fidelity: fidelity_parse(v.req_str("fidelity").ok()?)?,
+        dw_mapping: dw_mapping_parse(v.req_str("dw_mapping").ok()?)?,
+        batch: u32_field(v, "batch")?,
+    };
+    let compute_cycles = v.req_u64("compute_cycles").ok()?;
+    let stall_cycles = v.req_u64("stall_cycles").ok()?;
+    let macs = v.req_u64("macs").ok()?;
+    // Recomputed exactly as `simulate_layer` does, so persisted entries are
+    // bit-identical to freshly simulated ones without storing any float.
+    let total = compute_cycles + stall_cycles;
+    let pes = u64::from(key.rows) * u64::from(key.cols);
+    let utilization = if total == 0 {
+        0.0
+    } else {
+        macs as f64 / (total * pes) as f64
+    };
+    let stats = LayerStats {
+        name: String::new(),
+        dataflow: key.dataflow,
+        launches: v.req_u64("launches").ok()?,
+        compute_cycles,
+        stall_cycles,
+        macs,
+        traffic: OperandTraffic {
+            ifmap_reads: v.req_u64("ifmap_reads").ok()?,
+            filter_reads: v.req_u64("filter_reads").ok()?,
+            ofmap_writes: v.req_u64("ofmap_writes").ok()?,
+            ofmap_reads: v.req_u64("ofmap_reads").ok()?,
+        },
+        dram: DramTraffic {
+            fetch_bytes: v.req_u64("dram_fetch_bytes").ok()?,
+            writeback_bytes: v.req_u64("dram_writeback_bytes").ok()?,
+        },
+        utilization,
+    };
+    Some((key, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::sim::engine::{simulate_layer, SimOptions};
+    use crate::topology::zoo;
+
+    fn tmp_store(tag: &str) -> PlanStore {
+        let dir = std::env::temp_dir().join(format!(
+            "flex-tpu-store-unit-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        PlanStore::open(&dir).expect("store open")
+    }
+
+    #[test]
+    fn shapes_round_trip_bit_identical() {
+        let store = tmp_store("roundtrip");
+        let arch = ArchConfig::square(16);
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let topo = zoo::alexnet();
+        for layer in &topo.layers {
+            for df in Dataflow::ALL {
+                cache.simulate_layer(&arch, layer, df, opts);
+            }
+        }
+        store.save_shapes("abc123", &cache).unwrap();
+
+        let warm = ShapeCache::new();
+        let loaded = store.load_shapes("abc123", &warm);
+        assert_eq!(loaded as u64, cache.stats().entries);
+        assert_eq!(warm.stats().hits, 0, "preload must not count lookups");
+        assert_eq!(warm.stats().misses, 0);
+        // Every lookup is now a hit, bit-identical to the direct simulation
+        // (including the recomputed utilization float).
+        for layer in &topo.layers {
+            for df in Dataflow::ALL {
+                let direct = simulate_layer(&arch, layer, df, opts);
+                let cached = warm.simulate_layer(&arch, layer, df, opts);
+                assert_eq!(direct, cached, "{} {df}", layer.name);
+            }
+        }
+        assert_eq!(warm.stats().misses, 0, "warm cache must never simulate");
+        assert_eq!(warm.stats().hit_rate(), 1.0);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn wrong_provenance_reads_cold() {
+        let store = tmp_store("prov");
+        let cache = ShapeCache::new();
+        cache.simulate_layer(
+            &ArchConfig::square(8),
+            &zoo::alexnet().layers[0],
+            Dataflow::Os,
+            SimOptions::default(),
+        );
+        store.save_shapes("key-a", &cache).unwrap();
+        let warm = ShapeCache::new();
+        assert_eq!(store.load_shapes("key-b", &warm), 0);
+        assert_eq!(store.load_shapes("key-a", &warm), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn deterministic_file_bytes() {
+        let arch = ArchConfig::square(8);
+        let opts = SimOptions::default();
+        let topo = zoo::mobilenet();
+        let store = tmp_store("bytes");
+        let mut blobs = Vec::new();
+        // Fill two caches in opposite orders; the persisted bytes must match.
+        for rev in [false, true] {
+            let cache = ShapeCache::new();
+            let mut layers: Vec<_> = topo.layers.iter().collect();
+            if rev {
+                layers.reverse();
+            }
+            for layer in layers {
+                for df in Dataflow::ALL {
+                    cache.simulate_layer(&arch, layer, df, opts);
+                }
+            }
+            store.save_shapes("order", &cache).unwrap();
+            blobs.push(std::fs::read(store.dir().join("shapes-order.json")).unwrap());
+        }
+        assert_eq!(blobs[0], blobs[1]);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

@@ -181,6 +181,16 @@ impl Parsed {
         Ok(self.u64(name)? as u32)
     }
 
+    /// A worker-count flag: parses as an integer and resolves the `0`
+    /// ("auto") convention to all available cores through the one
+    /// definition in [`crate::sim::parallel::effective_threads`], so no
+    /// subcommand re-implements the default.
+    pub fn threads(&self, name: &str) -> Result<usize> {
+        Ok(crate::sim::parallel::effective_threads(
+            self.u64(name)? as usize
+        ))
+    }
+
     /// Whether a boolean switch was given.
     pub fn is_set(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
@@ -238,5 +248,17 @@ mod tests {
     fn usage_mentions_flags() {
         let u = spec().usage();
         assert!(u.contains("--model") && u.contains("default: resnet18"));
+    }
+
+    #[test]
+    fn threads_resolves_zero_to_auto() {
+        let s = Args::new("t", "test").flag("threads", Some("0"), "workers (0 = all cores)");
+        let auto = s.parse(&argv(&[])).unwrap();
+        // 0 defers to effective_threads, which never yields 0 workers.
+        assert!(auto.threads("threads").unwrap() >= 1);
+        let fixed = s.parse(&argv(&["--threads", "3"])).unwrap();
+        assert_eq!(fixed.threads("threads").unwrap(), 3);
+        let bad = s.parse(&argv(&["--threads", "many"])).unwrap();
+        assert!(bad.threads("threads").is_err());
     }
 }

@@ -1,0 +1,121 @@
+//! Round-trip property test for the in-tree JSON substrate (ISSUE 3):
+//! plan/shape persistence depends on `util::json`, so emitted documents
+//! must be a fixed point of `parse` — **serialize → parse → serialize is
+//! byte-identical** for arbitrarily nested objects/arrays, strings full of
+//! escape sequences, and numbers spanning the full u64 range.
+//!
+//! (The first serialization canonicalizes: numbers take their shortest
+//! round-trip form and key order is preserved.  From then on the text and
+//! the value must be mutual fixed points.)
+
+use flex_tpu::util::json::{parse, Value};
+use flex_tpu::util::rng::{property, Rng};
+
+/// Strings that exercise every escape path: quotes, backslashes, control
+/// characters, multi-byte UTF-8 and astral-plane codepoints.
+const STRING_POOL: &[&str] = &[
+    "",
+    "plain",
+    "with \"quotes\" and \\backslashes\\",
+    "line\nbreaks\tand\rreturns",
+    "control \u{0001}\u{001f} chars",
+    "unicode: héllo wörld",
+    "astral: \u{1F600}\u{10FFFF}",
+    "slash / and null-ish \u{0000}x",
+];
+
+fn gen_number(rng: &mut Rng) -> f64 {
+    match rng.range(0, 4) {
+        // Small signed integers (the common cycle-count shape).
+        0 => rng.range_u64(0, 2000) as f64 - 1000.0,
+        // Full-range u64s, including values far above 2^53 that must
+        // round-trip through the emitted shortest f64 form.
+        1 => rng.next_u64() as f64,
+        // Fractions.
+        2 => rng.f64() * 1000.0,
+        // Large magnitudes with exponents.
+        3 => rng.f64() * 1e300,
+        // Negative fractions.
+        _ => -rng.f64() * 1e9,
+    }
+}
+
+fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+    let pick = if depth >= 3 { rng.range(0, 3) } else { rng.range(0, 5) };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(rng.range(0, 1) == 1),
+        2 => Value::Num(gen_number(rng)),
+        3 => Value::Str((*rng.pick(STRING_POOL)).to_string()),
+        4 => {
+            let n = rng.range(0, 4);
+            Value::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.range(0, 4);
+            Value::Obj(
+                (0..n)
+                    .map(|i| {
+                        let key = format!("k{}_{}", i, rng.pick(STRING_POOL));
+                        (key, gen_value(rng, depth + 1))
+                    })
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn serialize_parse_serialize_is_byte_identical() {
+    property("json round trip", 0x15_5E3, 300, |rng| {
+        let value = gen_value(rng, 0);
+        let first = value.to_string();
+        let parsed = match parse(&first) {
+            Ok(v) => v,
+            Err(e) => panic!("emitted JSON must parse: {e}\n{first}"),
+        };
+        let second = parsed.to_string();
+        assert_eq!(first, second, "second serialization diverged");
+        // And the parsed value is itself a fixed point.
+        assert_eq!(parse(&second).unwrap(), parsed);
+    });
+}
+
+#[test]
+fn large_u64s_survive_the_emitted_form() {
+    // Values beyond 2^53 lose integer precision when they become f64s, but
+    // the *emitted text* must still round-trip exactly: parse(to_string(x))
+    // == x for every representable f64.
+    let mut rng = Rng::new(0xB16_B00);
+    for _ in 0..2000 {
+        let n = rng.next_u64();
+        let v = Value::Num(n as f64);
+        let text = v.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, v, "u64 {n} → {text}");
+        assert_eq!(back.to_string(), text);
+    }
+    // The exact 2^53 boundary and its neighbours.
+    for n in [(1u64 << 53) - 1, 1u64 << 53, (1u64 << 53) + 2, u64::MAX] {
+        let v = Value::Num(n as f64);
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap().to_string(), text, "u64 {n}");
+    }
+}
+
+#[test]
+fn escape_sequences_round_trip_through_text() {
+    for s in STRING_POOL {
+        let v = Value::Str((*s).to_string());
+        let text = v.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back.as_str(), Some(*s), "{text}");
+        assert_eq!(back.to_string(), text);
+    }
+    // Escaped input forms normalize to one canonical emitted form, which
+    // is then a fixed point.
+    let parsed = parse(r#""aA 😀 \/ \b\f""#).unwrap();
+    assert_eq!(parsed.as_str(), Some("aA \u{1F600} / \u{0008}\u{000C}"));
+    let text = parsed.to_string();
+    assert_eq!(parse(&text).unwrap().to_string(), text);
+}

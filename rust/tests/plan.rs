@@ -1,0 +1,209 @@
+//! Acceptance tests for the compile-once `ExecutionPlan` IR (ISSUE 3):
+//!
+//! 1. plan-backed selection is **byte-identical to the pre-refactor
+//!    paths**, proven against an in-test oracle that re-implements the
+//!    original argmin (raw `simulate_layer` / `simulate_layer_sharded`
+//!    with the historical tie-break) — on the zoo, at 1 chip and 4 chips,
+//!    at any thread count;
+//! 2. `FlexPipeline::deploy` is plan-backed: deploying a precompiled plan
+//!    equals compiling + deploying in one step;
+//! 3. plans serialize/deserialize losslessly and carry a provenance key
+//!    that is stable across thread counts and cache states.
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::plan::{compile_plan, compile_plan_parallel, ExecutionPlan};
+use flex_tpu::coordinator::FlexPipeline;
+use flex_tpu::sim::engine::{reconfig_charges, simulate_layer, SimOptions};
+use flex_tpu::sim::parallel::ShapeCache;
+use flex_tpu::sim::shard::simulate_layer_sharded;
+use flex_tpu::sim::{Dataflow, ShardStrategy};
+use flex_tpu::topology::{zoo, Topology};
+
+fn df_index(df: Dataflow) -> usize {
+    Dataflow::ALL.iter().position(|&d| d == df).unwrap()
+}
+
+fn strategy_index(s: ShardStrategy) -> usize {
+    ShardStrategy::ALL.iter().position(|&x| x == s).unwrap()
+}
+
+/// The pre-refactor single-chip selection: per-layer rows from raw
+/// `simulate_layer`, argmin with ties toward the `Dataflow::ALL` order.
+fn oracle_single_chip(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+) -> Vec<(Dataflow, [u64; 3])> {
+    topo.layers
+        .iter()
+        .map(|layer| {
+            let mut row = [0u64; 3];
+            for df in Dataflow::ALL {
+                row[df_index(df)] = simulate_layer(arch, layer, df, opts).total_cycles();
+            }
+            let best = Dataflow::ALL
+                .into_iter()
+                .min_by_key(|&df| row[df_index(df)])
+                .unwrap();
+            (best, row)
+        })
+        .collect()
+}
+
+#[test]
+fn plan_byte_identical_to_oracle_one_chip_any_threads() {
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+    for topo in zoo::all_models() {
+        let oracle = oracle_single_chip(&arch, &topo, opts);
+        for threads in [1usize, 2, 4] {
+            let cache = ShapeCache::new();
+            let plan = compile_plan_parallel(&arch, &topo, opts, 1, threads, &cache);
+            assert_eq!(plan.layers.len(), oracle.len(), "{}", topo.name);
+            for (i, (want_df, want_row)) in oracle.iter().enumerate() {
+                let l = &plan.layers[i];
+                assert_eq!(l.choice.dataflow, *want_df, "{} layer {i}", topo.name);
+                for df in Dataflow::ALL {
+                    assert_eq!(
+                        l.candidates[df_index(df)][0],
+                        want_row[df_index(df)],
+                        "{} layer {i} {df}",
+                        topo.name
+                    );
+                }
+                // Chosen forecast equals the chosen candidate cell.
+                assert_eq!(
+                    l.layer_cycles(),
+                    want_row[df_index(*want_df)],
+                    "{} layer {i}",
+                    topo.name
+                );
+            }
+            // Plan totals equal the historical roll-up formula.
+            let dataflows: Vec<Dataflow> = oracle.iter().map(|(df, _)| *df).collect();
+            let flex: u64 = oracle
+                .iter()
+                .map(|(df, row)| row[df_index(*df)])
+                .sum::<u64>()
+                + reconfig_charges(&dataflows, arch.reconfig_cycles);
+            assert_eq!(plan.flex_cycles(), flex, "{} at {threads} threads", topo.name);
+        }
+    }
+}
+
+#[test]
+fn plan_byte_identical_to_oracle_four_chips_any_threads() {
+    let arch = ArchConfig::square(32);
+    let opts = SimOptions::default();
+    let chips = 4u32;
+    for topo in [zoo::resnet18(), zoo::mobilenet(), zoo::alexnet()] {
+        // Pre-refactor joint selection: raw sharded grids, argmin with ties
+        // toward dataflow order first, then strategy order.
+        let oracle: Vec<((Dataflow, ShardStrategy), [[u64; 3]; 3])> = topo
+            .layers
+            .iter()
+            .map(|layer| {
+                let mut grid = [[0u64; 3]; 3];
+                for df in Dataflow::ALL {
+                    for st in ShardStrategy::ALL {
+                        grid[df_index(df)][strategy_index(st)] =
+                            simulate_layer_sharded(&arch, layer, df, st, chips, opts)
+                                .total_cycles();
+                    }
+                }
+                let mut best = (Dataflow::Is, ShardStrategy::Rows);
+                let mut best_cycles = u64::MAX;
+                for df in Dataflow::ALL {
+                    for st in ShardStrategy::ALL {
+                        let c = grid[df_index(df)][strategy_index(st)];
+                        if c < best_cycles {
+                            best_cycles = c;
+                            best = (df, st);
+                        }
+                    }
+                }
+                (best, grid)
+            })
+            .collect();
+        for threads in [1usize, 4] {
+            let cache = ShapeCache::new();
+            let plan = compile_plan_parallel(&arch, &topo, opts, chips, threads, &cache);
+            for (i, ((want_df, want_st), want_grid)) in oracle.iter().enumerate() {
+                let l = &plan.layers[i];
+                assert_eq!(l.choice.dataflow, *want_df, "{} layer {i}", topo.name);
+                assert_eq!(l.choice.strategy, *want_st, "{} layer {i}", topo.name);
+                assert_eq!(&l.candidates, want_grid, "{} layer {i}", topo.name);
+            }
+            // Totals match the historical sharded roll-up.
+            let dataflows: Vec<Dataflow> = oracle.iter().map(|((df, _), _)| *df).collect();
+            let flex: u64 = oracle
+                .iter()
+                .map(|((df, st), grid)| grid[df_index(*df)][strategy_index(*st)])
+                .sum::<u64>()
+                + reconfig_charges(&dataflows, arch.reconfig_cycles);
+            assert_eq!(plan.flex_cycles(), flex, "{} at {threads} threads", topo.name);
+        }
+    }
+}
+
+#[test]
+fn deploy_is_plan_backed() {
+    let arch = ArchConfig::square(16);
+    for topo in zoo::all_models() {
+        let pipeline = FlexPipeline::new(arch);
+        let plan = pipeline.compile(&topo);
+        let via_plan = pipeline.deploy_plan(&topo, &plan).unwrap();
+        let direct = pipeline.deploy(&topo);
+        assert_eq!(via_plan, direct, "{}", topo.name);
+        assert_eq!(direct.plan, plan, "{}", topo.name);
+        // The deployment's selection is exactly the plan's view.
+        assert_eq!(direct.selection, plan.selection(), "{}", topo.name);
+        // Plan totals equal the executed network roll-up.
+        assert_eq!(direct.total_cycles(), plan.flex_cycles(), "{}", topo.name);
+    }
+}
+
+#[test]
+fn deploy_plan_rejects_mismatched_topology() {
+    let arch = ArchConfig::square(16);
+    let pipeline = FlexPipeline::new(arch);
+    let plan = pipeline.compile(&zoo::alexnet());
+    assert!(pipeline.deploy_plan(&zoo::resnet18(), &plan).is_err());
+}
+
+#[test]
+fn deploy_plan_rejects_multi_chip_plans() {
+    // A multi-chip plan's candidate grids hold sharded cycle counts; the
+    // single-chip deployment pipeline must refuse to execute it.
+    let arch = ArchConfig::square(16);
+    let topo = zoo::alexnet();
+    let cache = ShapeCache::new();
+    let sharded = compile_plan(&arch, &topo, SimOptions::default(), 4, &cache);
+    assert!(FlexPipeline::new(arch).deploy_plan(&topo, &sharded).is_err());
+}
+
+#[test]
+fn plan_json_round_trip_is_lossless() {
+    let arch = ArchConfig::square(16);
+    let opts = SimOptions::default();
+    let cache = ShapeCache::new();
+    for chips in [1u32, 4] {
+        let plan = compile_plan(&arch, &zoo::googlenet(), opts, chips, &cache);
+        let back = ExecutionPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back, "{chips} chips");
+    }
+}
+
+#[test]
+fn provenance_stable_across_threads_and_caches() {
+    let arch = ArchConfig::square(16);
+    let opts = SimOptions::default();
+    let topo = zoo::vgg13();
+    let cold = ShapeCache::new();
+    let a = compile_plan(&arch, &topo, opts, 1, &cold);
+    let warm = ShapeCache::new();
+    // Pre-warm with an unrelated model: must not leak into the plan.
+    compile_plan(&arch, &zoo::alexnet(), opts, 1, &warm);
+    let b = compile_plan_parallel(&arch, &topo, opts, 1, 4, &warm);
+    assert_eq!(a, b, "plan (incl. provenance) must not depend on threads or cache state");
+}

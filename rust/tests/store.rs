@@ -1,0 +1,148 @@
+//! Acceptance tests for the persisted plan/shape store (ISSUE 3):
+//!
+//! 1. **warm start end-to-end** — a second sweep against the same store
+//!    preloads every shape entry, reports a hit rate of exactly 1.0 with
+//!    zero misses (i.e. zero `simulate_layer` calls for cached shapes),
+//!    and produces byte-identical results;
+//! 2. **robustness** — truncated, corrupt, wrong-schema-version and
+//!    wrong-provenance store files are silently ignored (cold start),
+//!    never panic, and are repaired by the next write;
+//! 3. plans round-trip through the store keyed by provenance.
+
+use std::path::PathBuf;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::plan::{compile_plan, provenance_key, ExecutionPlan};
+use flex_tpu::coordinator::sweep::{sweep_models, sweep_zoo_stored};
+use flex_tpu::sim::engine::SimOptions;
+use flex_tpu::sim::parallel::ShapeCache;
+use flex_tpu::sim::PlanStore;
+use flex_tpu::topology::zoo;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("flex-tpu-store-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn warm_start_hits_every_shape_and_is_byte_identical() {
+    let dir = tmpdir("warm");
+    let store = PlanStore::open(&dir).unwrap();
+    let arch = ArchConfig::square(16);
+    let opts = SimOptions::default();
+    let models = vec![zoo::alexnet(), zoo::mobilenet(), zoo::resnet18()];
+    let provenance = provenance_key(&arch, &models, opts, 1);
+
+    let cold_cache = ShapeCache::new();
+    assert_eq!(store.load_shapes(&provenance, &cold_cache), 0, "store starts empty");
+    let cold = sweep_models(&arch, &models, 2, opts, &cold_cache);
+    assert!(cold.cache.misses > 0, "cold run must simulate");
+    store.save_shapes(&provenance, &cold_cache).unwrap();
+
+    let warm_cache = ShapeCache::new();
+    let loaded = store.load_shapes(&provenance, &warm_cache);
+    assert_eq!(loaded as u64, cold_cache.stats().entries);
+    for threads in [1usize, 4] {
+        let warm = sweep_models(&arch, &models, threads, opts, &warm_cache);
+        assert_eq!(cold.models, warm.models, "warm sweep diverged at {threads} threads");
+    }
+    let stats = warm_cache.stats();
+    assert_eq!(stats.misses, 0, "warm start must do zero simulate_layer calls: {stats:?}");
+    assert!(stats.hits > 0);
+    assert_eq!(stats.hit_rate(), 1.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_zoo_stored_round_trip() {
+    let dir = tmpdir("zoo");
+    let store = PlanStore::open(&dir).unwrap();
+    let arch = ArchConfig::square(8);
+    let opts = SimOptions::default();
+    let (cold, loaded_cold) = sweep_zoo_stored(&arch, 2, opts, Some(&store)).unwrap();
+    assert_eq!(loaded_cold, 0);
+    let (warm, loaded_warm) = sweep_zoo_stored(&arch, 2, opts, Some(&store)).unwrap();
+    assert!(loaded_warm > 0, "second run must load persisted state");
+    assert_eq!(cold.models, warm.models, "warm zoo sweep must be byte-identical");
+    assert_eq!(warm.cache.misses, 0, "warm zoo sweep must not simulate: {:?}", warm.cache);
+    assert_eq!(warm.cache.hit_rate(), 1.0);
+    // Without a store the same call still works (cold every time).
+    let (plain, loaded_plain) = sweep_zoo_stored(&arch, 2, opts, None).unwrap();
+    assert_eq!(loaded_plain, 0);
+    assert_eq!(plain.models, cold.models);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_store_round_trip_keyed_by_provenance() {
+    let dir = tmpdir("plan");
+    let store = PlanStore::open(&dir).unwrap();
+    let arch = ArchConfig::square(16);
+    let opts = SimOptions::default();
+    let cache = ShapeCache::new();
+    let plan = compile_plan(&arch, &zoo::yolo_tiny(), opts, 4, &cache);
+    assert!(ExecutionPlan::load(&store, &plan.provenance).is_none(), "store starts cold");
+    plan.save(&store).unwrap();
+    let back = ExecutionPlan::load(&store, &plan.provenance).unwrap();
+    assert_eq!(plan, back);
+    assert!(ExecutionPlan::load(&store, "0000000000000000").is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_store_files_read_cold_and_are_repaired() {
+    let dir = tmpdir("corrupt");
+    let store = PlanStore::open(&dir).unwrap();
+    let arch = ArchConfig::square(8);
+    let opts = SimOptions::default();
+    let topo = zoo::alexnet();
+    let models = vec![topo.clone()];
+    let provenance = provenance_key(&arch, &models, opts, 1);
+
+    // Produce one good file so we can derive a truncated variant of it.
+    let cache = ShapeCache::new();
+    let plan = compile_plan(&arch, &topo, opts, 1, &cache);
+    store.save_shapes(&provenance, &cache).unwrap();
+    plan.save(&store).unwrap();
+    let shapes_path = dir.join(format!("shapes-{provenance}.json"));
+    let plan_path = dir.join(format!("plan-{}.json", plan.provenance));
+    let good_shapes = std::fs::read_to_string(&shapes_path).unwrap();
+    let good_plan = std::fs::read_to_string(&plan_path).unwrap();
+
+    let wrong_schema = good_shapes.replacen("\"schema\": 1", "\"schema\": 999", 1);
+    let wrong_prov = good_shapes.replacen(&provenance, "deadbeefdeadbeef", 2);
+    let cases: Vec<(&str, String)> = vec![
+        ("empty", String::new()),
+        ("truncated", good_shapes[..good_shapes.len() / 2].to_string()),
+        ("not json", "{{{ not json at all".to_string()),
+        ("wrong type", "[1, 2, 3]".to_string()),
+        ("wrong schema", wrong_schema),
+        ("wrong provenance", wrong_prov),
+    ];
+    for (what, bad) in &cases {
+        std::fs::write(&shapes_path, bad).unwrap();
+        let fresh = ShapeCache::new();
+        assert_eq!(
+            store.load_shapes(&provenance, &fresh),
+            0,
+            "{what} shapes file must read cold"
+        );
+        std::fs::write(&plan_path, bad).unwrap();
+        assert!(
+            ExecutionPlan::load(&store, &plan.provenance).is_none(),
+            "{what} plan file must read cold"
+        );
+    }
+
+    // The next write repairs both files wholesale.
+    store.save_shapes(&provenance, &cache).unwrap();
+    plan.save(&store).unwrap();
+    let fresh = ShapeCache::new();
+    assert!(store.load_shapes(&provenance, &fresh) > 0, "repaired shapes load");
+    assert_eq!(ExecutionPlan::load(&store, &plan.provenance).unwrap(), plan);
+    assert_eq!(std::fs::read_to_string(&shapes_path).unwrap(), good_shapes);
+    assert_eq!(std::fs::read_to_string(&plan_path).unwrap(), good_plan);
+    let _ = std::fs::remove_dir_all(&dir);
+}
