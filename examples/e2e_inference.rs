@@ -75,7 +75,12 @@ fn main() -> anyhow::Result<()> {
             let pixels: Vec<f32> = (0..img)
                 .map(|p| (((id as usize * 31 + p * 7) % 97) as f32 / 97.0) - 0.5)
                 .collect();
-            tx.send((InferenceRequest { id, pixels }, otx)).unwrap();
+            let req = InferenceRequest {
+                id,
+                model: "flexnet_tiny".to_string(),
+                pixels,
+            };
+            tx.send((req, otx)).unwrap();
             pending.push(orx);
         }
         drop(tx); // close the front door -> server drains and reports

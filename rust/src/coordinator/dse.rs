@@ -13,12 +13,16 @@ use crate::config::ArchConfig;
 use crate::cost::energy::{self, EnergyBreakdown};
 use crate::cost::synth::critical_path_ns;
 use crate::cost::{PeVariant, TpuCost};
+use crate::error::Result;
 use crate::sim::engine::SimOptions;
 use crate::sim::parallel::{parallel_map, ShapeCache};
+use crate::sim::store::{DocSource, PlanStore};
 use crate::sim::Dataflow;
 use crate::topology::Topology;
+use crate::util::json::{obj, Value};
 
 use super::pipeline::FlexPipeline;
+use super::plan::{combined_provenance, provenance_key};
 
 /// Which architecture a DSE point describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -136,6 +140,118 @@ pub fn sweep_parallel(
     .collect()
 }
 
+/// [`sweep_parallel`] through a [`PlanStore`] (`flex-tpu dse --plan-cache
+/// DIR`): the evaluated point list persists as a `report-dse` document
+/// keyed by the combined provenance of every (size, topology, options)
+/// configuration, so a repeat run loads it without any simulation.
+///
+/// Persisted floats (the four energy components) are written with Rust's
+/// shortest-round-trip formatting and parsed back exactly; every derived
+/// float (latency, area, power, EDP) is recomputed on load with the same
+/// expressions the compute path uses — a loaded sweep is byte-identical
+/// to a fresh one (asserted by the unit tests below).
+pub fn sweep_stored(
+    topo: &Topology,
+    sizes: &[u32],
+    opts: SimOptions,
+    threads: usize,
+    store: Option<&PlanStore>,
+) -> Result<(Vec<DsePoint>, DocSource)> {
+    let Some(store) = store else {
+        return Ok((sweep_parallel(topo, sizes, opts, threads), DocSource::Computed));
+    };
+    let parts: Vec<String> = sizes
+        .iter()
+        .map(|&s| {
+            provenance_key(
+                &ArchConfig::square(s),
+                std::slice::from_ref(topo),
+                opts,
+                1,
+            )
+        })
+        .collect();
+    let provenance = combined_provenance(&parts);
+    if let Some(payload) = store.load_document("report-dse", &provenance) {
+        if let Some(points) = points_from_json(&payload) {
+            return Ok((points, DocSource::Loaded));
+        }
+    }
+    let points = sweep_parallel(topo, sizes, opts, threads);
+    store.save_document("report-dse", &provenance, points_to_json(&points))?;
+    Ok((points, DocSource::Computed))
+}
+
+fn variant_name(v: DseVariant) -> String {
+    match v {
+        DseVariant::Flex => "flex".to_string(),
+        DseVariant::Static(df) => df.name().to_string(),
+    }
+}
+
+fn variant_parse(s: &str) -> Option<DseVariant> {
+    if s == "flex" {
+        return Some(DseVariant::Flex);
+    }
+    Dataflow::parse(s).map(DseVariant::Static)
+}
+
+fn points_to_json(points: &[DsePoint]) -> Value {
+    Value::Arr(
+        points
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("size", Value::Num(f64::from(p.size))),
+                    ("variant", Value::Str(variant_name(p.variant))),
+                    ("cycles", Value::Num(p.cycles as f64)),
+                    ("mac_pj", Value::Num(p.energy.mac_pj)),
+                    ("sram_pj", Value::Num(p.energy.sram_pj)),
+                    ("dram_pj", Value::Num(p.energy.dram_pj)),
+                    ("leakage_pj", Value::Num(p.energy.leakage_pj)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn points_from_json(v: &Value) -> Option<Vec<DsePoint>> {
+    let items = v.as_array()?;
+    let mut points = Vec::with_capacity(items.len());
+    for item in items {
+        let size = u32::try_from(item.req_u64("size").ok()?).ok()?;
+        if size == 0 {
+            return None;
+        }
+        let variant = variant_parse(item.req_str("variant").ok()?)?;
+        let cycles = item.req_u64("cycles").ok()?;
+        let energy = EnergyBreakdown {
+            mac_pj: item.req_f64("mac_pj").ok()?,
+            sram_pj: item.req_f64("sram_pj").ok()?,
+            dram_pj: item.req_f64("dram_pj").ok()?,
+            leakage_pj: item.req_f64("leakage_pj").ok()?,
+        };
+        // Derived floats recomputed exactly as `points_for_size` computes
+        // them, from the persisted integers/energy.
+        let pe = match variant {
+            DseVariant::Flex => PeVariant::Flex,
+            DseVariant::Static(_) => PeVariant::Conventional,
+        };
+        let cpd = critical_path_ns(size, pe);
+        points.push(DsePoint {
+            size,
+            variant,
+            cycles,
+            latency_ms: cycles as f64 * cpd * 1e-6,
+            area_mm2: TpuCost::square(size, pe).area_mm2(),
+            power_mw: TpuCost::square(size, pe).power_mw(),
+            energy,
+            edp: energy.total_pj() * cycles as f64,
+        });
+    }
+    Some(points)
+}
+
 /// Indices of the Pareto-optimal points under (latency, area) minimization.
 ///
 /// A point is dominated when another point is no worse on both axes and
@@ -241,5 +357,30 @@ mod tests {
         let serial = sweep(&topo, &[8, 16, 32], SimOptions::default());
         let parallel = sweep_parallel(&topo, &[8, 16, 32], SimOptions::default(), 3);
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn stored_sweep_round_trips_byte_identical() {
+        let dir = std::env::temp_dir().join(format!(
+            "flex-tpu-dse-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = PlanStore::open(&dir).unwrap();
+        let topo = zoo::alexnet();
+        let sizes = [8u32, 16];
+        let opts = SimOptions::default();
+        let (cold, src_cold) = sweep_stored(&topo, &sizes, opts, 2, Some(&store)).unwrap();
+        assert_eq!(src_cold, DocSource::Computed);
+        let (warm, src_warm) = sweep_stored(&topo, &sizes, opts, 2, Some(&store)).unwrap();
+        assert_eq!(src_warm, DocSource::Loaded);
+        // Every field — including the persisted energy floats and the
+        // recomputed latency/area/EDP — must match bit for bit.
+        assert_eq!(cold, warm);
+        // A different size grid gets its own document.
+        let (other, src_other) = sweep_stored(&topo, &[8], opts, 2, Some(&store)).unwrap();
+        assert_eq!(src_other, DocSource::Computed);
+        assert_eq!(other.len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

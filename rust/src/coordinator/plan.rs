@@ -303,6 +303,30 @@ impl ExecutionPlan {
         }
         Some(plan)
     }
+
+    /// Every valid plan persisted in `store`, sorted by model name then
+    /// provenance — the `flex-tpu fleet status` view of a shared store.
+    /// Invalid or stale files are skipped, per the store's robustness
+    /// contract.
+    pub fn list(store: &PlanStore) -> Vec<ExecutionPlan> {
+        let mut plans: Vec<ExecutionPlan> = store
+            .list_kind("plan")
+            .into_iter()
+            .filter_map(|(prov, payload)| {
+                let plan = ExecutionPlan::from_json(&payload).ok()?;
+                if plan.provenance != prov {
+                    return None;
+                }
+                Some(plan)
+            })
+            .collect();
+        plans.sort_by(|a, b| {
+            a.model
+                .cmp(&b.model)
+                .then_with(|| a.provenance.cmp(&b.provenance))
+        });
+        plans
+    }
 }
 
 fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
@@ -366,6 +390,18 @@ pub fn provenance_key(
         }
     }
     format!("{:016x}", fnv1a(0xcbf2_9ce4_8422_2325, s.as_bytes()))
+}
+
+/// Fold several provenance keys into one — e.g. a DSE sweep's per-size
+/// keys, so the persisted report is invalidated when *any* evaluated
+/// configuration changes.  Order-sensitive, like the sweep itself.
+pub fn combined_provenance(parts: &[String]) -> String {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for p in parts {
+        h = fnv1a(h, p.as_bytes());
+        h = fnv1a(h, b";");
+    }
+    format!("{h:016x}")
 }
 
 /// Compile one layer: evaluate the candidate grid through the shared cache,

@@ -1,0 +1,262 @@
+//! Execution backends: what actually computes a batch's logits.
+//!
+//! The server/fleet machinery cares about *scheduling* (batching, routing,
+//! worker pools) and *timing* (the deployed Flex-TPU simulation); the
+//! value computation behind a batch is abstracted as a [`ModelBackend`]:
+//!
+//! * [`PjrtBackend`] — the real thing: wraps a loaded
+//!   [`crate::runtime::Runtime`] and executes the AOT-compiled `flex`
+//!   model artifact through PJRT.  Requires artifacts on disk and real
+//!   PJRT bindings (the offline build ships an API stub).
+//! * [`SimBackend`] — a deterministic stand-in for any
+//!   [`Topology`] (e.g. the zoo models, which have layer geometry but no
+//!   trained weights or compiled executable).  Logits are a pure integer
+//!   hash of `(model name, request pixels, class index)` mapped to
+//!   `[0, 1)`: byte-reproducible across runs, platforms, batch
+//!   compositions and worker counts, so serving invariants (responses
+//!   never cross-routed, fleet output byte-identical to the single-model
+//!   server) are testable without artifacts.
+//!
+//! A backend also fixes the serving geometry: the scheduling batch size,
+//! the pixels expected per request, and the number of classes per
+//! response.
+
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::topology::{zoo, Topology};
+
+/// What the serving loops need from a model implementation.
+///
+/// Implementations must be deterministic per sample: a request's logits
+/// may not depend on which batch (or batch slot) the request was grouped
+/// into, which is what makes batched serving output byte-identical to
+/// serial serving.
+pub trait ModelBackend: Send + Sync {
+    /// The topology served; its name is the model id requests route on.
+    fn topology(&self) -> &Topology;
+
+    /// Scheduling batch size (requests grouped per array pass).
+    fn batch(&self) -> u32;
+
+    /// Pixels expected per request.
+    fn input_len(&self) -> usize;
+
+    /// Logits produced per request.
+    fn num_classes(&self) -> usize;
+
+    /// Execute one padded batch: `batch() * input_len()` input f32s in,
+    /// `batch() * num_classes()` logits out.
+    fn execute(&self, input: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// The PJRT-backed production backend (the artifact's compiled `flex`
+/// model variant).
+pub struct PjrtBackend {
+    runtime: Runtime,
+    topo: Topology,
+}
+
+impl PjrtBackend {
+    /// Wrap a loaded runtime.  Errors when the artifact set has no `flex`
+    /// model variant.
+    pub fn new(runtime: Runtime) -> Result<Self> {
+        if !runtime.model_variants().contains(&"flex".to_string()) {
+            return Err(Error::Artifact("no 'flex' model artifact".into()));
+        }
+        let topo = runtime.manifest().topology();
+        Ok(Self { runtime, topo })
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    fn batch(&self) -> u32 {
+        self.runtime.manifest().batch
+    }
+
+    fn input_len(&self) -> usize {
+        let m = self.runtime.manifest();
+        (m.input_hw * m.input_hw * m.input_channels) as usize
+    }
+
+    fn num_classes(&self) -> usize {
+        self.runtime.manifest().num_classes as usize
+    }
+
+    fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        self.runtime.execute_model("flex", input)
+    }
+}
+
+/// 64-bit FNV-1a over a byte stream (the same construction the plan
+/// provenance uses; duplicated here because the logit digest is not a
+/// provenance and must never be coupled to the plan schema).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64 finalizer: diffuses one 64-bit state into one output word.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic simulation backend for weight-less topologies.
+///
+/// Serves any [`Topology`] without artifacts: timing comes from the
+/// deployed Flex-TPU simulation exactly as with the PJRT backend, and the
+/// logits are a pure hash of the request payload (see module docs).  The
+/// input is a fixed-size pixel digest ([`SimBackend::DIGEST_PIXELS`])
+/// rather than a real image — the backend computes no convolutions, so
+/// requests stay small whatever the model's native resolution.
+///
+/// ```
+/// use flex_tpu::inference::{ModelBackend, SimBackend};
+///
+/// let backend = SimBackend::from_zoo("alexnet", 4).unwrap();
+/// let img = backend.input_len();
+/// let input = vec![0.5f32; img * backend.batch() as usize];
+/// let a = backend.execute(&input).unwrap();
+/// let b = backend.execute(&input).unwrap();
+/// assert_eq!(a, b); // byte-deterministic
+/// assert_eq!(a.len(), backend.num_classes() * backend.batch() as usize);
+/// ```
+pub struct SimBackend {
+    topo: Topology,
+    batch: u32,
+    num_classes: usize,
+}
+
+impl SimBackend {
+    /// Pixels per request: a fixed digest size, independent of the model's
+    /// native input resolution (the backend hashes, it does not convolve).
+    pub const DIGEST_PIXELS: usize = 64;
+
+    /// Backend for `topo` with the given scheduling batch (0 is clamped
+    /// to 1).  Classes = the last layer's output channels.
+    pub fn new(topo: Topology, batch: u32) -> Self {
+        let num_classes = topo
+            .layers
+            .last()
+            .map(|l| l.out_channels() as usize)
+            .unwrap_or(1)
+            .max(1);
+        Self {
+            topo,
+            batch: batch.max(1),
+            num_classes,
+        }
+    }
+
+    /// Backend for a zoo model by name.
+    pub fn from_zoo(name: &str, batch: u32) -> Result<Self> {
+        Ok(Self::new(zoo::by_name(name)?, batch))
+    }
+}
+
+impl ModelBackend for SimBackend {
+    fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    fn batch(&self) -> u32 {
+        self.batch
+    }
+
+    fn input_len(&self) -> usize {
+        Self::DIGEST_PIXELS
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let img = self.input_len();
+        let expected = img * self.batch as usize;
+        if input.len() != expected {
+            return Err(Error::Runtime(format!(
+                "sim backend {:?}: input has {} elements, expected {expected}",
+                self.topo.name,
+                input.len()
+            )));
+        }
+        let mut logits = Vec::with_capacity(self.batch as usize * self.num_classes);
+        for sample in input.chunks_exact(img) {
+            // Per-sample digest: model name + exact pixel bit patterns.
+            let mut h = fnv1a(0xcbf2_9ce4_8422_2325, self.topo.name.as_bytes());
+            for px in sample {
+                h = fnv1a(h, &px.to_bits().to_le_bytes());
+            }
+            for class in 0..self.num_classes as u64 {
+                let word = mix(h ^ class.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                // Top 24 bits -> [0, 1): exact in f32, platform-independent.
+                logits.push((word >> 40) as f32 / (1u64 << 24) as f32);
+            }
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_geometry_from_topology() {
+        let b = SimBackend::from_zoo("resnet18", 0).unwrap();
+        assert_eq!(b.batch(), 1, "batch 0 clamps to 1");
+        assert_eq!(b.num_classes(), 1000, "resnet18 FC fan-out");
+        assert_eq!(b.input_len(), SimBackend::DIGEST_PIXELS);
+        assert_eq!(b.topology().name, "resnet18");
+    }
+
+    #[test]
+    fn logits_depend_on_pixels_and_model_not_batch_slot() {
+        let a = SimBackend::from_zoo("alexnet", 2).unwrap();
+        let img = a.input_len();
+        let px0: Vec<f32> = (0..img).map(|i| i as f32 / 7.0).collect();
+        let px1: Vec<f32> = (0..img).map(|i| i as f32 / 11.0).collect();
+
+        // Batch [px0, px1] vs [px1, px0]: per-sample logits must not move.
+        let mut fwd = px0.clone();
+        fwd.extend_from_slice(&px1);
+        let mut rev = px1.clone();
+        rev.extend_from_slice(&px0);
+        let out_fwd = a.execute(&fwd).unwrap();
+        let out_rev = a.execute(&rev).unwrap();
+        let n = a.num_classes();
+        assert_eq!(out_fwd[..n], out_rev[n..]);
+        assert_eq!(out_fwd[n..], out_rev[..n]);
+        assert_ne!(out_fwd[..n], out_fwd[n..], "distinct pixels, distinct logits");
+
+        // A different model hashes the same pixels differently.
+        let b = SimBackend::from_zoo("vgg13", 2).unwrap();
+        let out_b = b.execute(&fwd).unwrap();
+        assert_ne!(out_fwd[..n], out_b[..n]);
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        let b = SimBackend::from_zoo("mobilenet", 2).unwrap();
+        assert!(b.execute(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn logits_within_unit_interval() {
+        let b = SimBackend::from_zoo("yolo_tiny", 1).unwrap();
+        let input = vec![0.25f32; b.input_len()];
+        for l in b.execute(&input).unwrap() {
+            assert!((0.0..1.0).contains(&l), "{l}");
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! The multi-model fleet server: routed, batched serving over one
+//! shared-store registry.
+//!
+//! Topology of one serving run (`flex-tpu serve`):
+//!
+//! ```text
+//!             tagged requests (bounded mpsc)
+//!                        │
+//!                 ┌──────v──────┐   per-model batch formation
+//!                 │   router    │   (continuous batching light)
+//!                 └──────┬──────┘
+//!           bounded batch queue (back-pressure)
+//!        ┌──────────┬────┴─────┬──────────┐
+//!        v          v          v          v
+//!     worker     worker     worker     worker      one shared pool
+//!        └── executes via the model's own InferenceServer ──┘
+//! ```
+//!
+//! The **router** (the caller's thread) drains the front door, groups
+//! envelopes per model — the request's `model` tag is the routing key —
+//! and emits full batches onto a bounded queue; partial batches flush
+//! whenever the front door runs momentarily dry (no request waits for
+//! strangers).  **Workers** execute whole batches through the owning
+//! model's `InferenceServer::process_batch` path — the exact code the
+//! single-model server runs, which is what makes a 1-model fleet
+//! byte-identical to [`crate::inference::InferenceServer`]
+//! (`rust/tests/fleet.rs`).
+//!
+//! Determinism contract extension: a response's *values* depend only on
+//! its own request (backends are per-sample deterministic) and its
+//! *timing* only on the model's deployment, so per-model response bytes
+//! and per-model simulated cycle totals are invariant under worker count,
+//! batch formation and request interleaving.  Host-side metrics (queue
+//! latency percentiles, throughput) are measurements, not simulations,
+//! and vary run to run.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+use super::registry::{ModelDeployment, ModelRegistry};
+use super::server::Envelope;
+
+/// One formed batch travelling from the router to the worker pool.
+struct FleetBatch {
+    deployment: Arc<ModelDeployment>,
+    envelopes: Vec<Envelope>,
+    /// Router-side arrival time of each envelope (queue-latency clock).
+    enqueued: Vec<Instant>,
+}
+
+/// Per-model serving metrics of one fleet run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelServeStats {
+    /// Requests served for this model.
+    pub requests: u64,
+    /// Batches executed for this model.
+    pub batches: u64,
+    /// CMU reprogramming events: the plan's dataflow switches replayed
+    /// once per batch launch.
+    pub reconfigurations: u64,
+    /// Simulated Flex-TPU cycles: requests × per-inference flex cycles.
+    /// Invariant under worker count and request interleaving.
+    pub sim_cycles_total: u64,
+    /// The model's per-inference flex cycles (from its deployed plan).
+    pub sim_flex_cycles_per_inference: u64,
+    /// Median time from arrival at the router to batch execution, µs.
+    pub queue_p50_us: f64,
+    /// 99th-percentile queue latency, µs.
+    pub queue_p99_us: f64,
+    /// Mean host latency per request, µs.
+    pub mean_host_latency_us: f64,
+    /// Host throughput over the whole run, requests/second.
+    pub host_throughput_rps: f64,
+}
+
+/// Aggregate statistics of one fleet serving run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetStats {
+    /// Requests served across all models.
+    pub requests: u64,
+    /// Batches executed across all models.
+    pub batches: u64,
+    /// Requests dropped because their model tag matched no registered
+    /// deployment (the response channel is dropped, so the caller observes
+    /// a receive error rather than a silent hang).
+    pub unknown_model: u64,
+    /// Requests dropped for malformed payloads (wrong pixel count).
+    pub rejected: u64,
+    /// Host wall-clock of the whole run, microseconds.
+    pub wall_us: u64,
+    /// Per-model metrics, keyed by model name.
+    pub per_model: BTreeMap<String, ModelServeStats>,
+}
+
+/// Per-model accumulator while the run is live.
+#[derive(Default)]
+struct ModelAccum {
+    requests: u64,
+    batches: u64,
+    reconfigurations: u64,
+    sim_cycles_total: u64,
+    flex_cycles: u64,
+    host_us_sum: f64,
+    queue_waits_us: Vec<f64>,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The fleet server (see module docs).  Cheap to clone into a serving
+/// thread; the registry stays shared, so models hot-add/remove while
+/// serving.
+///
+/// ```
+/// use flex_tpu::config::ArchConfig;
+/// use flex_tpu::inference::{
+///     FleetServer, InferenceRequest, ModelRegistry, SimBackend,
+/// };
+/// use std::sync::Arc;
+///
+/// let registry = Arc::new(ModelRegistry::new(ArchConfig::square(8), None).unwrap());
+/// registry.register(Arc::new(SimBackend::from_zoo("alexnet", 2).unwrap())).unwrap();
+/// let fleet = FleetServer::new(Arc::clone(&registry));
+///
+/// let (tx, rx) = std::sync::mpsc::sync_channel(16);
+/// let (otx, orx) = std::sync::mpsc::channel();
+/// tx.send((
+///     InferenceRequest {
+///         id: 0,
+///         model: "alexnet".to_string(),
+///         pixels: vec![0.0; SimBackend::DIGEST_PIXELS],
+///     },
+///     otx,
+/// )).unwrap();
+/// drop(tx);
+/// let stats = fleet.serve(rx, 2).unwrap();
+/// assert_eq!(stats.requests, 1);
+/// assert_eq!(orx.recv().unwrap().model, "alexnet");
+/// ```
+#[derive(Clone)]
+pub struct FleetServer {
+    registry: Arc<ModelRegistry>,
+}
+
+impl FleetServer {
+    /// Fleet over a (possibly shared) registry.
+    pub fn new(registry: Arc<ModelRegistry>) -> Self {
+        Self { registry }
+    }
+
+    /// The registry this fleet routes against.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Serve tagged requests arriving on `rx` until the channel closes,
+    /// with `workers` execution threads (0/1 both mean one worker) behind
+    /// one bounded batch queue.  Returns aggregate + per-model stats.
+    pub fn serve(&self, rx: Receiver<Envelope>, workers: usize) -> Result<FleetStats> {
+        let workers = workers.max(1);
+        let start = Instant::now();
+        let (btx, brx) = std::sync::mpsc::sync_channel::<FleetBatch>((workers * 2).max(2));
+        let brx = Mutex::new(brx);
+        let accum: Mutex<BTreeMap<String, ModelAccum>> = Mutex::new(BTreeMap::new());
+        // Workers record the first execution error and switch to
+        // drain-only mode instead of exiting, so the router can never
+        // deadlock against a full batch queue with no consumers left.
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+
+        let (unknown_model, rejected) = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                handles.push(scope.spawn(|| loop {
+                    let batch = {
+                        let guard = brx.lock().expect("batch queue lock");
+                        match guard.recv() {
+                            Ok(b) => b,
+                            Err(_) => return, // router gone, queue drained
+                        }
+                    };
+                    if first_err.lock().expect("error slot").is_some() {
+                        continue; // drain-only: drop envelopes, keep the queue moving
+                    }
+                    let waits: Vec<f64> = batch
+                        .enqueued
+                        .iter()
+                        .map(|t| t.elapsed().as_micros() as f64)
+                        .collect();
+                    let mut pending = batch.envelopes;
+                    match batch.deployment.server.process_batch(&mut pending) {
+                        Ok((live, batch_us)) => {
+                            let timing = batch.deployment.server.timing();
+                            let mut a = accum.lock().expect("fleet stats lock");
+                            let m = a.entry(batch.deployment.name.clone()).or_default();
+                            m.requests += live;
+                            m.batches += 1;
+                            m.reconfigurations += batch.deployment.plan_switches;
+                            m.sim_cycles_total += live * timing.flex_cycles;
+                            m.flex_cycles = timing.flex_cycles;
+                            m.host_us_sum += batch_us * live as f64;
+                            m.queue_waits_us.extend(waits);
+                        }
+                        Err(e) => {
+                            let mut slot = first_err.lock().expect("error slot");
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                        }
+                    }
+                }));
+            }
+            let counters = self.route(rx, &btx);
+            drop(btx); // close the batch queue: workers drain, then exit
+            for h in handles {
+                h.join().expect("fleet worker panicked");
+            }
+            counters
+        });
+        if let Some(e) = first_err.into_inner().expect("error slot") {
+            return Err(e);
+        }
+
+        let wall = start.elapsed();
+        let mut stats = FleetStats {
+            unknown_model,
+            rejected,
+            wall_us: wall.as_micros() as u64,
+            ..Default::default()
+        };
+        for (name, mut m) in accum.into_inner().expect("fleet stats lock") {
+            m.queue_waits_us.sort_by(f64::total_cmp);
+            stats.requests += m.requests;
+            stats.batches += m.batches;
+            stats.per_model.insert(
+                name,
+                ModelServeStats {
+                    requests: m.requests,
+                    batches: m.batches,
+                    reconfigurations: m.reconfigurations,
+                    sim_cycles_total: m.sim_cycles_total,
+                    sim_flex_cycles_per_inference: m.flex_cycles,
+                    queue_p50_us: percentile(&m.queue_waits_us, 0.50),
+                    queue_p99_us: percentile(&m.queue_waits_us, 0.99),
+                    mean_host_latency_us: if m.requests > 0 {
+                        m.host_us_sum / m.requests as f64
+                    } else {
+                        0.0
+                    },
+                    host_throughput_rps: m.requests as f64 / wall.as_secs_f64(),
+                },
+            );
+        }
+        Ok(stats)
+    }
+
+    /// The router loop: drain the front door, group per model, emit full
+    /// batches; flush partial batches whenever the door runs dry (and at
+    /// close).  Returns `(unknown_model, rejected)` drop counters.
+    fn route(
+        &self,
+        rx: Receiver<Envelope>,
+        btx: &SyncSender<FleetBatch>,
+    ) -> (u64, u64) {
+        type Pending = BTreeMap<String, FleetBatch>;
+        let mut pending: Pending = BTreeMap::new();
+        let mut unknown = 0u64;
+        let mut rejected = 0u64;
+
+        let flush = |pending: &mut Pending, model: &str| {
+            if let Some(batch) = pending.remove(model) {
+                if batch.envelopes.is_empty() {
+                    return; // a slot whose only request was rejected
+                }
+                // A send error means every worker is gone, which only
+                // happens after the queue closed; dropping the envelopes
+                // surfaces as receive errors at the callers.
+                let _ = btx.send(batch);
+            }
+        };
+        let flush_all = |pending: &mut Pending| {
+            let models: Vec<String> = pending.keys().cloned().collect();
+            for model in models {
+                flush(pending, &model);
+            }
+        };
+        let mut route_one = |pending: &mut Pending, env: Envelope| {
+            use std::collections::btree_map::Entry;
+            let model = env.0.model.clone();
+            // A request joins the batch owned by ONE deployment; validate
+            // against that owner, not a fresh registry lookup — a hot
+            // remove + re-register with different input geometry must
+            // never mix geometries within one batch.
+            let slot = match pending.entry(model.clone()) {
+                Entry::Occupied(e) => e.into_mut(),
+                Entry::Vacant(e) => {
+                    let Some(dep) = self.registry.get(&model) else {
+                        unknown += 1;
+                        return; // envelope drops; the caller sees a recv error
+                    };
+                    e.insert(FleetBatch {
+                        deployment: dep,
+                        envelopes: Vec::new(),
+                        enqueued: Vec::new(),
+                    })
+                }
+            };
+            if env.0.pixels.len() != slot.deployment.server.input_len() {
+                rejected += 1;
+                return;
+            }
+            let batch_size = slot.deployment.server.batch() as usize;
+            slot.envelopes.push(env);
+            slot.enqueued.push(Instant::now());
+            if slot.envelopes.len() >= batch_size {
+                flush(pending, &model);
+            }
+        };
+
+        loop {
+            match rx.try_recv() {
+                Ok(env) => route_one(&mut pending, env),
+                Err(TryRecvError::Empty) => {
+                    // Nothing queued: don't sit on partial batches while
+                    // blocking for the next arrival.
+                    flush_all(&mut pending);
+                    match rx.recv() {
+                        Ok(env) => route_one(&mut pending, env),
+                        Err(_) => break,
+                    }
+                }
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        flush_all(&mut pending);
+        (unknown, rejected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        let empty: [f64; 0] = [];
+        assert_eq!(percentile(&empty, 0.5), 0.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+    }
+}

@@ -1,18 +1,34 @@
-//! Batched inference driver: functional PJRT execution + Flex-TPU timing.
+//! Inference serving: single-model batched serving and the multi-model
+//! fleet.
 //!
-//! The e2e serving demo (DESIGN.md E8): requests arrive on a bounded mpsc
-//! channel, a batcher groups them into the artifact's batch size, the PJRT
-//! runtime computes the logits (*values*), and the deployed Flex-TPU
-//! simulation supplies the per-inference latency the hardware would
-//! deliver (*time*).  Responses report both, plus the would-be latency
-//! under each static dataflow, so one serving run exhibits the paper's
-//! speedup end-to-end.  On a multi-chip deployment
-//! ([`InferenceServer::new_sharded`]) each formed batch is additionally
-//! split across chips — batch-level parallelism with no interconnect
-//! traffic on the request path.
+//! Two serving shapes share one machinery:
+//!
+//! * **Single model** ([`InferenceServer`], `flex-tpu infer`): requests
+//!   arrive on a bounded mpsc channel, a batcher groups them into the
+//!   backend's batch size, the execution backend computes the logits
+//!   (*values*), and the deployed Flex-TPU simulation supplies the
+//!   per-inference latency the hardware would deliver (*time*).  On a
+//!   multi-chip deployment ([`InferenceServer::new_sharded`]) each formed
+//!   batch is additionally split across chips — batch-level parallelism
+//!   with no interconnect traffic on the request path.
+//! * **Fleet** ([`ModelRegistry`] + [`FleetServer`], `flex-tpu serve`):
+//!   several models deployed against one shared plan/shape store;
+//!   requests carry a model id and a router + bounded-queue worker pool
+//!   serve them with per-model metrics and runtime hot-add/remove.
+//!
+//! Values come from a [`ModelBackend`]: [`PjrtBackend`] executes real AOT
+//! artifacts, [`SimBackend`] serves weight-less topologies (the zoo)
+//! deterministically — which is what makes the fleet's invariants testable
+//! offline.
 
+mod backend;
+mod fleet;
+mod registry;
 mod request;
 mod server;
 
+pub use backend::{ModelBackend, PjrtBackend, SimBackend};
+pub use fleet::{FleetServer, FleetStats, ModelServeStats};
+pub use registry::{ModelDeployment, ModelRegistry, PlanSource};
 pub use request::{InferenceRequest, InferenceResponse, TimingEstimate};
 pub use server::{Envelope, InferenceServer, ServerStats};

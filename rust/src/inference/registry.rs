@@ -1,0 +1,313 @@
+//! The multi-model registry: one shared plan/shape store, many deployments.
+//!
+//! The paper's pre-deployment flow is once-per-model; datacenter serving
+//! (Jouppi et al. 2017) is many-models-per-accelerator.  A
+//! [`ModelRegistry`] holds the shared compile-once state — one
+//! [`ShapeCache`] and (optionally) one [`PlanStore`] directory — and
+//! deploys each registered model against it:
+//!
+//! * **warm-load or compile**: a model whose [`ExecutionPlan`] is already
+//!   persisted (same provenance key) deploys without recompiling; shape
+//!   entries persisted for it preload into the shared cache, so a fully
+//!   warm registration performs **zero** `simulate_layer` calls.
+//! * **cross-model reuse**: the cache is shared, so layer shapes common
+//!   between models (the zoo's repeated conv/FC geometries) are simulated
+//!   once for the whole fleet — registering N models costs strictly fewer
+//!   cold simulations than N isolated deployments.
+//! * **hot add/remove**: the registry is internally synchronized; models
+//!   can be registered and removed while a
+//!   [`crate::inference::FleetServer`] is serving.  In-flight batches hold
+//!   an [`Arc`] to their deployment, so removal never interrupts them.
+//!
+//! Fleet deployments are single-chip (the multi-chip axis is orthogonal
+//! and stays with [`crate::inference::InferenceServer::new_sharded`]).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::config::ArchConfig;
+use crate::coordinator::plan::{compile_plan, provenance_key, ExecutionPlan};
+use crate::error::{Error, Result};
+use crate::sim::engine::SimOptions;
+use crate::sim::parallel::{CacheStats, ShapeCache};
+use crate::sim::store::PlanStore;
+
+use super::backend::ModelBackend;
+use super::server::InferenceServer;
+
+/// Where a registration's execution plan came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Loaded from the shared store (warm start).
+    Loaded,
+    /// Compiled this run (and persisted, when a store is attached).
+    Compiled,
+}
+
+impl std::fmt::Display for PlanSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PlanSource::Loaded => "loaded",
+            PlanSource::Compiled => "compiled",
+        })
+    }
+}
+
+/// One registered model, fully deployed and ready to serve.
+pub struct ModelDeployment {
+    /// Model name (the routing key).
+    pub name: String,
+    /// The deployed single-model server (plan-backed).
+    pub server: InferenceServer,
+    /// Provenance key the plan and shape entries persist under.
+    pub provenance: String,
+    /// Whether the plan was warm-loaded or freshly compiled.
+    pub plan_source: PlanSource,
+    /// Shape entries preloaded from the store at registration time.
+    pub shapes_preloaded: usize,
+    /// Dataflow switches in the plan — the CMU reprogramming events one
+    /// batch replay incurs (the per-model reconfiguration metric scales
+    /// with this × batches served).
+    pub plan_switches: u64,
+}
+
+/// The shared-store multi-model registry (see module docs).
+///
+/// ```
+/// use flex_tpu::config::ArchConfig;
+/// use flex_tpu::inference::{ModelRegistry, SimBackend};
+/// use std::sync::Arc;
+///
+/// let registry = ModelRegistry::new(ArchConfig::square(8), None).unwrap();
+/// let dep = registry
+///     .register(Arc::new(SimBackend::from_zoo("alexnet", 2).unwrap()))
+///     .unwrap();
+/// assert_eq!(dep.name, "alexnet");
+/// assert_eq!(registry.names(), vec!["alexnet".to_string()]);
+/// assert!(registry.remove("alexnet"));
+/// assert!(registry.is_empty());
+/// ```
+pub struct ModelRegistry {
+    arch: ArchConfig,
+    cache: Arc<ShapeCache>,
+    store: Option<PlanStore>,
+    models: RwLock<BTreeMap<String, Arc<ModelDeployment>>>,
+}
+
+impl ModelRegistry {
+    /// Registry on `arch` with an optional persistent store (pass the same
+    /// directory across processes for cross-run warm starts).
+    pub fn new(arch: ArchConfig, store: Option<PlanStore>) -> Result<Self> {
+        arch.validate()?;
+        Ok(Self {
+            arch,
+            cache: Arc::new(ShapeCache::new()),
+            store,
+            models: RwLock::new(BTreeMap::new()),
+        })
+    }
+
+    /// The architecture every model deploys onto.
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    /// The shared cache's counters (cumulative over all registrations and
+    /// serving-side simulations).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// The attached store, if any.
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.store.as_ref()
+    }
+
+    /// Register a model: warm-load or compile its plan against the shared
+    /// store/cache and deploy it.  Errors when a model of the same name is
+    /// already registered (remove it first to redeploy).
+    pub fn register(&self, backend: Arc<dyn ModelBackend>) -> Result<Arc<ModelDeployment>> {
+        let topo = backend.topology().clone();
+        let name = topo.name.clone();
+        if self.get(&name).is_some() {
+            return Err(Error::InvalidConfig(format!(
+                "model {name:?} is already registered"
+            )));
+        }
+        let opts = SimOptions::default();
+        let provenance = provenance_key(&self.arch, std::slice::from_ref(&topo), opts, 1);
+        let shapes_preloaded = self
+            .store
+            .as_ref()
+            .map_or(0, |s| s.load_shapes(&provenance, &self.cache));
+        let misses_before = self.cache.stats().misses;
+        let (plan, plan_source) = match self
+            .store
+            .as_ref()
+            .and_then(|s| ExecutionPlan::load(s, &provenance))
+        {
+            Some(stored) => (stored, PlanSource::Loaded),
+            None => {
+                let compiled = compile_plan(&self.arch, &topo, opts, 1, &self.cache);
+                if let Some(store) = &self.store {
+                    compiled.save(store)?;
+                }
+                (compiled, PlanSource::Compiled)
+            }
+        };
+        let plan_switches = plan
+            .dataflows()
+            .windows(2)
+            .filter(|w| w[0] != w[1])
+            .count() as u64;
+        let server =
+            InferenceServer::with_backend(backend, self.arch, 1, &plan, Arc::clone(&self.cache))?;
+        if let Some(store) = &self.store {
+            // Persist only this model's shape entries under its provenance
+            // (the shared cache also holds other models' shapes — siblings
+            // persist their own under their own keys).  A fully warm
+            // registration — plan loaded, its own shapes file present, and
+            // zero new simulations — would rewrite a byte-identical file,
+            // so skip the snapshot/serialize/rename entirely.
+            let grew = self.cache.stats().misses > misses_before;
+            if plan_source == PlanSource::Compiled || shapes_preloaded == 0 || grew {
+                store.save_shapes_for_model(&provenance, &self.cache, &self.arch, &topo, opts)?;
+            }
+        }
+        let deployment = Arc::new(ModelDeployment {
+            name: name.clone(),
+            server,
+            provenance,
+            plan_source,
+            shapes_preloaded,
+            plan_switches,
+        });
+        let mut models = self.models.write().expect("registry lock");
+        // Re-check under the write lock (two concurrent registrations).
+        if models.contains_key(&name) {
+            return Err(Error::InvalidConfig(format!(
+                "model {name:?} is already registered"
+            )));
+        }
+        models.insert(name, Arc::clone(&deployment));
+        Ok(deployment)
+    }
+
+    /// Remove a model from routing.  Returns whether it was registered.
+    /// In-flight batches keep serving through their own [`Arc`].
+    pub fn remove(&self, name: &str) -> bool {
+        self.models
+            .write()
+            .expect("registry lock")
+            .remove(name)
+            .is_some()
+    }
+
+    /// Look up a registered model.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelDeployment>> {
+        self.models
+            .read()
+            .expect("registry lock")
+            .get(name)
+            .cloned()
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models
+            .read()
+            .expect("registry lock")
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    /// Registered deployments, sorted by name.
+    pub fn deployments(&self) -> Vec<Arc<ModelDeployment>> {
+        self.models
+            .read()
+            .expect("registry lock")
+            .values()
+            .cloned()
+            .collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.read().expect("registry lock").len()
+    }
+
+    /// Whether no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.read().expect("registry lock").is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::SimBackend;
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::new(ArchConfig::square(8), None).unwrap()
+    }
+
+    #[test]
+    fn register_deploys_and_routes() {
+        let r = registry();
+        let dep = r
+            .register(Arc::new(SimBackend::from_zoo("alexnet", 2).unwrap()))
+            .unwrap();
+        assert_eq!(dep.plan_source, PlanSource::Compiled);
+        assert_eq!(dep.shapes_preloaded, 0, "no store attached");
+        assert!(dep.server.timing().flex_cycles > 0);
+        assert!(r.get("alexnet").is_some());
+        assert!(r.get("vgg13").is_none());
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let r = registry();
+        r.register(Arc::new(SimBackend::from_zoo("alexnet", 1).unwrap()))
+            .unwrap();
+        assert!(r
+            .register(Arc::new(SimBackend::from_zoo("alexnet", 1).unwrap()))
+            .is_err());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn remove_then_reregister() {
+        let r = registry();
+        r.register(Arc::new(SimBackend::from_zoo("mobilenet", 1).unwrap()))
+            .unwrap();
+        assert!(r.remove("mobilenet"));
+        assert!(!r.remove("mobilenet"));
+        assert!(r
+            .register(Arc::new(SimBackend::from_zoo("mobilenet", 1).unwrap()))
+            .is_ok());
+    }
+
+    #[test]
+    fn shared_cache_collapses_repeat_registrations() {
+        let r = registry();
+        r.register(Arc::new(SimBackend::from_zoo("resnet18", 1).unwrap()))
+            .unwrap();
+        let after_first = r.cache_stats();
+        assert!(after_first.misses > 0);
+        // googlenet shares resnet18's Conv1 shape: strictly fewer misses
+        // than an isolated deployment would cost.
+        r.register(Arc::new(SimBackend::from_zoo("googlenet", 1).unwrap()))
+            .unwrap();
+        let shared_cost = r.cache_stats().misses - after_first.misses;
+        let isolated = registry();
+        isolated
+            .register(Arc::new(SimBackend::from_zoo("googlenet", 1).unwrap()))
+            .unwrap();
+        assert!(
+            shared_cost < isolated.cache_stats().misses,
+            "shared {shared_cost} vs isolated {}",
+            isolated.cache_stats().misses
+        );
+    }
+}

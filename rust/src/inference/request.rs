@@ -1,11 +1,18 @@
-//! Request/response types for the inference server.
+//! Request/response types for the inference server and the fleet.
 
 
-/// One inference request: a single image, row-major `H*W*C` f32.
+/// One inference request: a single image, row-major `H*W*C` f32, tagged
+/// with the model it is addressed to (the fleet routes on this id; the
+/// single-model [`crate::inference::InferenceServer`] serves every request
+/// it receives regardless of the tag).
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferenceRequest {
     /// Caller-chosen request id, echoed in the response.
     pub id: u64,
+    /// Name of the deployed model this request addresses (a
+    /// [`crate::topology::Topology::name`]); how
+    /// [`crate::inference::FleetServer`] routes.
+    pub model: String,
     /// Input image, row-major `H*W*C` f32.
     pub pixels: Vec<f32>,
 }
@@ -28,7 +35,12 @@ pub struct TimingEstimate {
 pub struct InferenceResponse {
     /// The request's id.
     pub id: u64,
-    /// Class logits from the PJRT executable.
+    /// The model that actually served this response, stamped by the
+    /// serving deployment itself — **not** copied from the request — so a
+    /// cross-routed request is detectable by comparing this against the
+    /// request's `model` field.
+    pub model: String,
+    /// Class logits from the execution backend.
     pub logits: Vec<f32>,
     /// Predicted class (argmax of logits).
     pub class: usize,
@@ -38,7 +50,7 @@ pub struct InferenceResponse {
 
 impl InferenceResponse {
     /// Build a response (computes the argmax class).
-    pub fn new(id: u64, logits: Vec<f32>, timing: TimingEstimate) -> Self {
+    pub fn new(id: u64, model: String, logits: Vec<f32>, timing: TimingEstimate) -> Self {
         let class = logits
             .iter()
             .enumerate()
@@ -47,6 +59,7 @@ impl InferenceResponse {
             .unwrap_or(0);
         Self {
             id,
+            model,
             logits,
             class,
             timing,
@@ -69,14 +82,15 @@ mod tests {
 
     #[test]
     fn argmax_class() {
-        let r = InferenceResponse::new(7, vec![0.1, 2.5, -1.0, 2.4], timing());
+        let r = InferenceResponse::new(7, "m".into(), vec![0.1, 2.5, -1.0, 2.4], timing());
         assert_eq!(r.class, 1);
         assert_eq!(r.id, 7);
+        assert_eq!(r.model, "m");
     }
 
     #[test]
     fn empty_logits_class_zero() {
-        let r = InferenceResponse::new(1, vec![], timing());
+        let r = InferenceResponse::new(1, "m".into(), vec![], timing());
         assert_eq!(r.class, 0);
     }
 }

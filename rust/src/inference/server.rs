@@ -2,16 +2,20 @@
 //!
 //! Architecture (vLLM-router-style, scaled to this workload): a front door
 //! accepts requests on a bounded mpsc channel; the serving loop drains it
-//! into fixed-size batches (the artifact's compiled batch — "continuous
-//! batching light"); the PJRT executable computes the logits; each response
-//! carries the deployed Flex-TPU timing estimate alongside the values.
+//! into fixed-size batches (the backend's compiled batch — "continuous
+//! batching light"); the execution backend computes the logits; each
+//! response carries the deployed Flex-TPU timing estimate alongside the
+//! values.
 //!
 //! Threading: the offline registry has no async runtime, so the server uses
 //! `std::thread` + `std::sync::mpsc` (documented substitution, DESIGN.md
-//! §6).  PJRT execution is synchronous, so serving loops *are* the workers:
-//! [`InferenceServer::serve`] runs one loop on the caller's thread, and
-//! [`InferenceServer::serve_concurrent`] runs several loops draining one
-//! shared bounded queue (`flex-tpu infer --workers N`).
+//! §6).  Backend execution is synchronous, so serving loops *are* the
+//! workers: [`InferenceServer::serve`] runs one loop on the caller's
+//! thread, and [`InferenceServer::serve_concurrent`] runs several loops
+//! draining one shared bounded queue (`flex-tpu infer --workers N`).
+//! Values come from a [`ModelBackend`] — PJRT for real artifacts, the
+//! deterministic [`crate::inference::SimBackend`] for weight-less
+//! topologies — while the timing side is always the deployed simulation.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -29,6 +33,7 @@ use crate::sim::parallel::ShapeCache;
 use crate::sim::shard::{simulate_layer_sharded_cached, ShardStrategy};
 use crate::sim::Dataflow;
 
+use super::backend::{ModelBackend, PjrtBackend};
 use super::request::{InferenceRequest, InferenceResponse, TimingEstimate};
 
 /// A request paired with the channel its response goes back on.
@@ -57,12 +62,13 @@ pub struct ServerStats {
     pub sim_speedup_vs_best_static: f64,
 }
 
-/// The server: a compiled runtime + a deployed Flex-TPU timing model.
+/// The server: an execution backend + a deployed Flex-TPU timing model.
 pub struct InferenceServer {
-    runtime: Arc<Runtime>,
+    backend: Arc<dyn ModelBackend>,
     deployment: Deployment,
     timing: TimingEstimate,
-    variant: String,
+    /// The served model's name, stamped into every response.
+    model: String,
     /// Chips one batch is split across (batch-level parallelism).
     chips: u32,
 }
@@ -77,19 +83,28 @@ impl InferenceServer {
     /// [`InferenceServer::new`] on a `chips`-chip system: each formed batch
     /// is split across the chips ([`ShardStrategy::Batch`] — one request
     /// never spans chips, so there is no interconnect traffic on the
-    /// request path) and executed concurrently.  For `chips > 1` the
-    /// [`TimingEstimate`] is recomputed per inference at the artifact's
-    /// compiled batch on both sides (sharded flex vs same-batch one-chip
-    /// statics), so the reported speedup isolates the multi-chip gain
-    /// rather than conflating it with batch amortization.  `chips = 1` is
+    /// request path) and executed concurrently.  `chips = 1` is
     /// byte-identical to [`InferenceServer::new`].
     pub fn new_sharded(runtime: Runtime, arch: ArchConfig, chips: u32) -> Result<Self> {
+        let backend: Arc<dyn ModelBackend> = Arc::new(PjrtBackend::new(runtime)?);
+        Self::from_backend(backend, arch, chips)
+    }
+
+    /// Deploy an arbitrary [`ModelBackend`] (compiling its plan from
+    /// scratch through a fresh cache).  This is how weight-less topologies
+    /// are served: pair the deterministic
+    /// [`crate::inference::SimBackend`] with any zoo model.
+    pub fn from_backend(
+        backend: Arc<dyn ModelBackend>,
+        arch: ArchConfig,
+        chips: u32,
+    ) -> Result<Self> {
         let cache = Arc::new(ShapeCache::new());
-        let topo = runtime.manifest().topology();
+        let topo = backend.topology().clone();
         let plan = FlexPipeline::new(arch)
             .with_cache(Arc::clone(&cache))
             .compile(&topo);
-        Self::with_plan(runtime, arch, chips, &plan, cache)
+        Self::with_backend(backend, arch, chips, &plan, cache)
     }
 
     /// [`InferenceServer::new_sharded`] from a **precompiled**
@@ -107,8 +122,23 @@ impl InferenceServer {
         plan: &ExecutionPlan,
         cache: Arc<ShapeCache>,
     ) -> Result<Self> {
+        let backend: Arc<dyn ModelBackend> = Arc::new(PjrtBackend::new(runtime)?);
+        Self::with_backend(backend, arch, chips, plan, cache)
+    }
+
+    /// The general constructor every deployment path funnels into: an
+    /// arbitrary backend, a precompiled plan, and a shared cache.  The
+    /// plan's provenance must match this exact deployment
+    /// (arch × topology × default options × one chip).
+    pub fn with_backend(
+        backend: Arc<dyn ModelBackend>,
+        arch: ArchConfig,
+        chips: u32,
+        plan: &ExecutionPlan,
+        cache: Arc<ShapeCache>,
+    ) -> Result<Self> {
         let chips = chips.max(1);
-        let topo = runtime.manifest().topology();
+        let topo = backend.topology().clone();
         let expected = crate::coordinator::plan::provenance_key(
             &arch,
             std::slice::from_ref(&topo),
@@ -124,10 +154,6 @@ impl InferenceServer {
         let deployment = FlexPipeline::new(arch)
             .with_cache(Arc::clone(&cache))
             .deploy_plan(&topo, plan)?;
-        let variant = "flex".to_string();
-        if !runtime.model_variants().contains(&variant) {
-            return Err(Error::Artifact("no 'flex' model artifact".into()));
-        }
         let flex_cycles = deployment.total_cycles();
         let cpd = critical_path_ns(arch.array_rows, PeVariant::Flex);
         let static_cycles = [
@@ -148,7 +174,7 @@ impl InferenceServer {
             // statics on one chip at the same batch.  Batch amortization
             // then cancels out of the speedup, leaving the sharding gain;
             // every cycle field stays in one unit (cycles per inference).
-            let batch = runtime.manifest().batch.max(1);
+            let batch = backend.batch().max(1);
             let opts = SimOptions {
                 batch,
                 ..SimOptions::default()
@@ -181,10 +207,10 @@ impl InferenceServer {
             timing.speedup_vs_best_static = best as f64 / timing.flex_cycles as f64;
         }
         Ok(Self {
-            runtime: Arc::new(runtime),
+            backend,
             deployment,
             timing,
-            variant,
+            model: topo.name,
             chips,
         })
     }
@@ -199,14 +225,28 @@ impl InferenceServer {
         &self.timing
     }
 
+    /// The served model's name (what responses are stamped with).
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The backend's scheduling batch size.
+    pub fn batch(&self) -> u32 {
+        self.backend.batch()
+    }
+
+    /// Pixels expected per request (the backend's input geometry).
+    pub fn input_len(&self) -> usize {
+        self.backend.input_len()
+    }
+
     /// Execute one chunk on one (simulated) chip: pad to the compiled
-    /// batch, run the PJRT executable, fan the responses back out.
+    /// batch, run the backend, fan the responses back out.
     /// Returns host micros spent in `execute`.
     fn execute_chunk(&self, pending: &mut Vec<Envelope>) -> Result<f64> {
-        let m = self.runtime.manifest();
-        let batch = m.batch as usize;
-        let img = (m.input_hw * m.input_hw * m.input_channels) as usize;
-        let classes = m.num_classes as usize;
+        let batch = self.backend.batch() as usize;
+        let img = self.backend.input_len();
+        let classes = self.backend.num_classes();
 
         // Pad the tail with zero images (the compiled batch is static).
         let mut input = vec![0f32; batch * img];
@@ -222,28 +262,30 @@ impl InferenceServer {
         }
 
         let batch_start = Instant::now();
-        let logits = self.runtime.execute_model(&self.variant, &input)?;
+        let logits = self.backend.execute(&input)?;
         let batch_us = batch_start.elapsed().as_micros() as f64;
 
         for (i, (req, tx)) in pending.drain(..).enumerate() {
             let out = logits[i * classes..(i + 1) * classes].to_vec();
-            let resp = InferenceResponse::new(req.id, out, self.timing);
+            let resp = InferenceResponse::new(req.id, self.model.clone(), out, self.timing);
             let _ = tx.send(resp);
         }
         Ok(batch_us)
     }
 
     /// Execute one formed batch, split across chips when configured.
-    /// Returns `(live requests, host micros)`.
-    fn process_batch(&self, pending: &mut Vec<Envelope>) -> Result<(u64, f64)> {
+    /// Returns `(live requests, host micros)`.  `pub(crate)` so the fleet
+    /// executes batches through the exact same path as the single-model
+    /// server (the byte-identity contract of `rust/tests/fleet.rs`).
+    pub(crate) fn process_batch(&self, pending: &mut Vec<Envelope>) -> Result<(u64, f64)> {
         let live = pending.len() as u64;
         if self.chips <= 1 || pending.len() <= 1 {
             let batch_us = self.execute_chunk(pending)?;
             return Ok((live, batch_us));
         }
         // Batch-level parallelism: near-even contiguous slices, one per
-        // chip, executed concurrently (PJRT executables are immutable, so
-        // concurrent execute calls only contend inside the backend).
+        // chip, executed concurrently (compiled executables are immutable,
+        // so concurrent execute calls only contend inside the backend).
         let chunk_size = pending.len().div_ceil(self.chips as usize);
         let mut chunks: Vec<Vec<Envelope>> = Vec::new();
         while !pending.is_empty() {
@@ -285,7 +327,7 @@ impl InferenceServer {
     /// Serve requests arriving on `rx` until the channel closes, sending
     /// each response back through its envelope.  Returns aggregate stats.
     pub fn serve(&self, rx: Receiver<Envelope>) -> Result<ServerStats> {
-        let batch = self.runtime.manifest().batch as usize;
+        let batch = self.backend.batch() as usize;
         let start = Instant::now();
         let mut stats = ServerStats::default();
         let mut pending: Vec<Envelope> = Vec::with_capacity(batch);
@@ -319,9 +361,9 @@ impl InferenceServer {
     /// Each worker takes the queue lock just long enough to form a batch
     /// (blocking `recv` for the batch head, non-blocking drain for the
     /// rest), then releases it and executes the batch concurrently with the
-    /// other workers — PJRT executables are immutable once compiled, so
-    /// concurrent `execute` calls only contend inside the backend.  Workers
-    /// exit when the channel closes and drains; the first error wins.
+    /// other workers — compiled executables are immutable, so concurrent
+    /// `execute` calls only contend inside the backend.  Workers exit when
+    /// the channel closes and drains; the first error wins.
     ///
     /// ```no_run
     /// use flex_tpu::config::ArchConfig;
@@ -332,7 +374,12 @@ impl InferenceServer {
     /// let server = InferenceServer::new_sharded(runtime, ArchConfig::square(8), 2)?;
     /// let (tx, rx) = std::sync::mpsc::sync_channel(64);
     /// let (otx, orx) = std::sync::mpsc::channel();
-    /// tx.send((InferenceRequest { id: 0, pixels: vec![0.0; 28 * 28] }, otx))?;
+    /// let req = InferenceRequest {
+    ///     id: 0,
+    ///     model: server.model().to_string(),
+    ///     pixels: vec![0.0; 28 * 28],
+    /// };
+    /// tx.send((req, otx))?;
     /// drop(tx); // close the front door so the serving loops exit
     /// let stats = server.serve_concurrent(rx, 4)?;
     /// assert_eq!(stats.requests, 1);
@@ -348,7 +395,7 @@ impl InferenceServer {
         if workers == 1 {
             return self.serve(rx);
         }
-        let batch = self.runtime.manifest().batch as usize;
+        let batch = self.backend.batch() as usize;
         let start = Instant::now();
         let queue = Mutex::new(rx);
         // (requests, batches, latency_sum_us) across workers.

@@ -38,8 +38,11 @@
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them; python never runs
 //!   on the request path.
-//! * [`inference`] — a batched inference driver combining functional PJRT
-//!   execution with simulated Flex-TPU timing (the e2e example).
+//! * [`inference`] — batched serving: functional execution (PJRT, or a
+//!   deterministic simulation backend for weight-less topologies) plus
+//!   simulated Flex-TPU timing, both as a single-model server and as a
+//!   multi-model fleet ([`inference::ModelRegistry`] +
+//!   [`inference::FleetServer`]) sharing one plan/shape store.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation (Table I/II, Fig. 1/5/6/7).
 //!

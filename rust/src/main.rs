@@ -7,10 +7,14 @@
 //! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer] [--plan-cache DIR]
 //! flex-tpu plan     <compile|show|check> --model resnet18 [--chips 4] [--plan-cache DIR]
 //! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|paper|all> [--size 32] [--csv DIR]
+//!                   [--plan-cache DIR]
 //! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2]
 //!                   [--chips 2] [--plan-cache DIR]
+//! flex-tpu serve    --model resnet18 --model alexnet ... [--requests 300] [--workers 4]
+//!                   [--batch 4] [--size 32] [--plan-cache DIR]
+//! flex-tpu fleet    status --plan-cache DIR
 //! flex-tpu validate [--array 4] [--cases 20]
-//! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0]
+//! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0] [--plan-cache DIR]
 //! ```
 
 use std::path::PathBuf;
@@ -20,7 +24,9 @@ use flex_tpu::config::{ArchConfig, SimFidelity};
 use flex_tpu::coordinator::cmu::Cmu;
 use flex_tpu::coordinator::pipeline::SelectorKind;
 use flex_tpu::coordinator::{partition, plan, select_exhaustive_cached, sweep, FlexPipeline};
-use flex_tpu::inference::{InferenceRequest, InferenceServer};
+use flex_tpu::inference::{
+    FleetServer, InferenceRequest, InferenceServer, ModelRegistry, SimBackend,
+};
 use flex_tpu::metrics::Table;
 use flex_tpu::report;
 use flex_tpu::runtime::Runtime;
@@ -35,7 +41,7 @@ use flex_tpu::util::cli::{Args, Parsed};
 type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
 const SUBCOMMANDS: &str =
-    "simulate | deploy | sweep | shard | plan | report | infer | validate | dse";
+    "simulate | deploy | sweep | shard | plan | report | infer | serve | fleet | validate | dse";
 
 fn load_model(name: &str) -> CliResult<Topology> {
     if name.ends_with(".csv") {
@@ -468,7 +474,22 @@ fn cmd_report(p: &Parsed) -> CliResult<()> {
     let size = p.u32("size")?;
     let csv = p.get("csv");
     match what {
-        "table1" => emit("table1", &report::table1(size), csv)?,
+        "table1" => {
+            // Table I rows persist through the store (`report` record
+            // kind): a repeat run with the same flags loads them without
+            // simulating anything.
+            let store = open_store(p)?;
+            let (rows, src) = report::table1_rows_stored(
+                size,
+                SimOptions::default(),
+                p.threads("threads")?,
+                store.as_ref(),
+            )?;
+            if let Some(store) = &store {
+                println!("report cache: {src} table1 rows ({})", store.dir().display());
+            }
+            emit("table1", &report::render_rows(&rows), csv)?
+        }
         "table2" => emit("table2", &report::table2(), csv)?,
         "fig1" => emit("fig1", &report::fig1(p.get("model").unwrap_or("resnet18"), size), csv)?,
         "fig5" => emit("fig5", &report::fig5(), csv)?,
@@ -543,6 +564,7 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
     let depth = (manifest.batch as usize * 4).max(1);
     let (tx, rx) = std::sync::mpsc::sync_channel(depth);
     let img = (manifest.input_hw * manifest.input_hw * manifest.input_channels) as usize;
+    let model = server.model().to_string();
     let producer = std::thread::spawn(move || {
         let mut response_rxs = Vec::new();
         for id in 0..requests {
@@ -550,8 +572,12 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
             let pixels: Vec<f32> = (0..img)
                 .map(|px| ((id as usize + px) % 17) as f32 / 17.0)
                 .collect();
-            tx.send((InferenceRequest { id, pixels }, otx))
-                .expect("server alive");
+            let req = InferenceRequest {
+                id,
+                model: model.clone(),
+                pixels,
+            };
+            tx.send((req, otx)).expect("server alive");
             response_rxs.push(orx);
         }
         drop(tx);
@@ -576,6 +602,175 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
         stats.sim_flex_throughput_ips,
         stats.sim_speedup_vs_best_static
     );
+    Ok(())
+}
+
+/// `flex-tpu serve`: a multi-model fleet over one shared plan/shape store,
+/// fed a deterministic mixed request stream (round-robin across the
+/// registered models).  Models come from repeated `--model` flags (zoo
+/// names or topology CSV paths) and are served by the deterministic
+/// simulation backend — no AOT artifacts required.
+fn cmd_serve(p: &Parsed) -> CliResult<()> {
+    let arch = arch_from(p)?;
+    let size = arch.array_rows;
+    let requests = p.u64("requests")?;
+    let workers = p.threads("workers")?;
+    let batch = p.u32("batch")?.max(1);
+    let mut names: Vec<String> = Vec::new();
+    for name in p.all("model") {
+        if names.contains(&name) {
+            return Err(format!("model {name:?} given more than once").into());
+        }
+        names.push(name);
+    }
+    let registry = Arc::new(ModelRegistry::new(arch, open_store(p)?)?);
+    for name in &names {
+        let topo = load_model(name)?;
+        let dep = registry.register(Arc::new(SimBackend::new(topo, batch)))?;
+        println!(
+            "fleet: registered {} (plan {}, {} shape entries preloaded, {} flex cycles/inference)",
+            dep.name,
+            dep.plan_source,
+            dep.shapes_preloaded,
+            dep.server.timing().flex_cycles
+        );
+    }
+    let fleet = FleetServer::new(Arc::clone(&registry));
+
+    // Bounded front door (a few compiled batches per model), deterministic
+    // synthetic traffic interleaved round-robin across the fleet.
+    let depth = (batch as usize * 4 * names.len()).max(4);
+    let (tx, rx) = std::sync::mpsc::sync_channel(depth);
+    let img = SimBackend::DIGEST_PIXELS;
+    let producer_names = names.clone();
+    let producer = std::thread::spawn(move || {
+        let mut response_rxs = Vec::new();
+        for id in 0..requests {
+            let model = producer_names[(id as usize) % producer_names.len()].clone();
+            let (otx, orx) = std::sync::mpsc::channel();
+            let pixels: Vec<f32> = (0..img)
+                .map(|px| ((id as usize + px) % 17) as f32 / 17.0)
+                .collect();
+            let req = InferenceRequest {
+                id,
+                model: model.clone(),
+                pixels,
+            };
+            tx.send((req, otx)).expect("fleet alive");
+            response_rxs.push((model, orx));
+        }
+        drop(tx); // close the front door so the fleet drains and exits
+        let mut delivered = 0u64;
+        let mut cross_routed = 0u64;
+        for (model, orx) in response_rxs {
+            if let Ok(resp) = orx.recv() {
+                delivered += 1;
+                if resp.model != model {
+                    cross_routed += 1;
+                }
+            }
+        }
+        (delivered, cross_routed)
+    });
+    let stats = fleet.serve(rx, workers)?;
+    let (delivered, cross_routed) = producer.join().expect("producer join");
+
+    let mut t = Table::new(&[
+        "Model",
+        "Requests",
+        "Batches",
+        "Reconfigs",
+        "Sim Cycles",
+        "p50 Queue (us)",
+        "p99 Queue (us)",
+        "Host req/s",
+    ]);
+    for (name, m) in &stats.per_model {
+        t.row(vec![
+            name.clone(),
+            m.requests.to_string(),
+            m.batches.to_string(),
+            m.reconfigurations.to_string(),
+            m.sim_cycles_total.to_string(),
+            format!("{:.0}", m.queue_p50_us),
+            format!("{:.0}", m.queue_p99_us),
+            format!("{:.1}", m.host_throughput_rps),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "served {} requests in {} batches on {workers} workers ({size}x{size} array, {} models)",
+        stats.requests,
+        stats.batches,
+        names.len()
+    );
+    if delivered != requests || cross_routed != 0 || stats.requests != requests {
+        return Err(format!(
+            "response accounting failed: {delivered}/{requests} delivered, \
+             {cross_routed} cross-routed, {} unknown-model, {} rejected",
+            stats.unknown_model, stats.rejected
+        )
+        .into());
+    }
+    println!("all {requests} responses accounted for (0 cross-routed)");
+    let preloaded = registry
+        .deployments()
+        .iter()
+        .map(|d| d.shapes_preloaded)
+        .sum();
+    print_store_line(registry.store(), preloaded);
+    let cache = registry.cache_stats();
+    print_cache_line(&cache);
+    if registry.store().is_some() && cache.misses == 0 {
+        println!("warm fleet: zero simulate_layer calls");
+    }
+    Ok(())
+}
+
+/// `flex-tpu fleet status`: inspect a shared store directory — every
+/// persisted plan (one row per model × configuration), plus shape and
+/// report document counts.  Pure reads: no simulation, no writes.
+fn cmd_fleet(p: &Parsed) -> CliResult<()> {
+    let action = p.positional(1).ok_or("fleet needs an action (status)")?;
+    match action {
+        "status" => {
+            let store = open_store(p)?.ok_or("fleet status needs --plan-cache <dir>")?;
+            let plans = plan::ExecutionPlan::list(&store);
+            let mut t = Table::new(&[
+                "Model",
+                "Chips",
+                "Layers",
+                "Flex Cycles",
+                "Reconfig",
+                "Provenance",
+            ]);
+            for pl in &plans {
+                t.row(vec![
+                    pl.model.clone(),
+                    pl.chips.to_string(),
+                    pl.layers.len().to_string(),
+                    pl.flex_cycles().to_string(),
+                    pl.reconfig_total().to_string(),
+                    pl.provenance.clone(),
+                ]);
+            }
+            println!("{}", t.render());
+            let shape_docs = store.list_kind("shapes");
+            let shape_entries: usize = shape_docs
+                .iter()
+                .filter_map(|(_, v)| v.as_array().map(|a| a.len()))
+                .sum();
+            let reports =
+                store.list_kind("report-table1").len() + store.list_kind("report-dse").len();
+            println!(
+                "fleet store {}: {} plans, {} shape documents ({shape_entries} entries), {reports} report documents",
+                store.dir().display(),
+                plans.len(),
+                shape_docs.len(),
+            );
+        }
+        other => return Err(format!("unknown fleet action {other:?} (status)").into()),
+    }
     Ok(())
 }
 
@@ -628,7 +823,12 @@ fn cmd_dse(p: &Parsed) -> CliResult<()> {
         .map(|s| s.trim().parse::<u32>())
         .collect::<Result<_, _>>()
         .map_err(|_| "--sizes must be comma-separated integers")?;
-    let points = dse::sweep_parallel(&topo, &sizes, SimOptions::default(), threads);
+    let store = open_store(p)?;
+    let (points, src) =
+        dse::sweep_stored(&topo, &sizes, SimOptions::default(), threads, store.as_ref())?;
+    if let Some(store) = &store {
+        println!("report cache: {src} dse points ({})", store.dir().display());
+    }
     let front = dse::pareto_latency_area(&points);
     let mut t = Table::new(&[
         "Size",
@@ -670,7 +870,11 @@ fn main() -> CliResult<()> {
         "Flex-TPU: runtime-reconfigurable dataflow TPU (paper reproduction)",
     )
     .positional("subcommand", SUBCOMMANDS)
-    .flag("model", Some("resnet18"), "zoo model name or topology CSV path")
+    .flag(
+        "model",
+        Some("resnet18"),
+        "zoo model name or topology CSV path (repeat to serve a fleet)",
+    )
     .flag("size", Some("32"), "square systolic-array size")
     .flag("dataflow", Some("os"), "static dataflow: is/os/ws")
     .flag("csv", None, "also write report CSVs into this directory")
@@ -683,7 +887,7 @@ fn main() -> CliResult<()> {
     .flag("config", None, "TOML arch config file (overrides --size)")
     .flag("sizes", Some("8,16,32,64,128"), "comma-separated sizes for dse")
     .flag("threads", Some("0"), "worker threads for sweep/shard/plan/dse (0 = all cores)")
-    .flag("workers", Some("2"), "serving threads for infer (0 = all cores)")
+    .flag("workers", Some("2"), "serving threads for infer/serve (0 = all cores)")
     .flag("chips", Some("0"), "chips to shard layers across (0 = from arch config)")
     .flag(
         "plan-cache",
@@ -709,6 +913,8 @@ fn main() -> CliResult<()> {
         Some("plan") => cmd_plan(&parsed),
         Some("report") => cmd_report(&parsed),
         Some("infer") => cmd_infer(&parsed),
+        Some("serve") => cmd_serve(&parsed),
+        Some("fleet") => cmd_fleet(&parsed),
         Some("validate") => cmd_validate(&parsed),
         Some("dse") => cmd_dse(&parsed),
         other => {

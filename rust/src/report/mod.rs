@@ -12,5 +12,7 @@ mod table2;
 
 pub use figures::{fig1, fig5, fig6, fig7};
 pub use summary::{paper_comparison, PAPER_TABLE1, PAPER_TABLE2};
-pub use table1::{table1, table1_rows, table1_rows_with, Table1Row};
+pub use table1::{
+    render_rows, table1, table1_rows, table1_rows_stored, table1_rows_with, Table1Row,
+};
 pub use table2::table2;

@@ -4,12 +4,16 @@
 use std::sync::Arc;
 
 use crate::config::ArchConfig;
+use crate::coordinator::plan::provenance_key;
 use crate::coordinator::FlexPipeline;
+use crate::error::Result;
 use crate::metrics::{mean, sci, Table};
 use crate::sim::engine::SimOptions;
 use crate::sim::parallel::{parallel_map, ShapeCache};
+use crate::sim::store::{DocSource, PlanStore};
 use crate::sim::Dataflow;
 use crate::topology::zoo;
+use crate::util::json::{obj, Value};
 
 /// One model's Table I data.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,9 +60,83 @@ pub fn table1_rows_with(s: u32, opts: SimOptions, threads: usize) -> Vec<Table1R
     })
 }
 
+/// [`table1_rows_with`] through a [`PlanStore`] (`flex-tpu report table1
+/// --plan-cache DIR`): a persisted `report-table1` document for this exact
+/// configuration is served without any simulation; otherwise the rows are
+/// computed and persisted.  Rows only hold integers — the speedup floats
+/// are recomputed from the cycle counts with the same expression the
+/// compute path uses, so a loaded report is byte-identical to a fresh one.
+pub fn table1_rows_stored(
+    s: u32,
+    opts: SimOptions,
+    threads: usize,
+    store: Option<&PlanStore>,
+) -> Result<(Vec<Table1Row>, DocSource)> {
+    let Some(store) = store else {
+        return Ok((table1_rows_with(s, opts, threads), DocSource::Computed));
+    };
+    let arch = ArchConfig::square(s);
+    let provenance = provenance_key(&arch, &zoo::all_models(), opts, 1);
+    if let Some(payload) = store.load_document("report-table1", &provenance) {
+        if let Some(rows) = rows_from_json(&payload) {
+            return Ok((rows, DocSource::Loaded));
+        }
+    }
+    let rows = table1_rows_with(s, opts, threads);
+    store.save_document("report-table1", &provenance, rows_to_json(&rows))?;
+    Ok((rows, DocSource::Computed))
+}
+
+fn rows_to_json(rows: &[Table1Row]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("model", Value::Str(r.model.clone())),
+                    ("flex_cycles", Value::Num(r.flex_cycles as f64)),
+                    ("is_cycles", Value::Num(r.static_cycles[0] as f64)),
+                    ("os_cycles", Value::Num(r.static_cycles[1] as f64)),
+                    ("ws_cycles", Value::Num(r.static_cycles[2] as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn rows_from_json(v: &Value) -> Option<Vec<Table1Row>> {
+    let items = v.as_array()?;
+    let mut rows = Vec::with_capacity(items.len());
+    for item in items {
+        let flex_cycles = item.req_u64("flex_cycles").ok()?;
+        if flex_cycles == 0 {
+            return None;
+        }
+        let static_cycles = [
+            item.req_u64("is_cycles").ok()?,
+            item.req_u64("os_cycles").ok()?,
+            item.req_u64("ws_cycles").ok()?,
+        ];
+        rows.push(Table1Row {
+            model: item.req_str("model").ok()?.to_string(),
+            flex_cycles,
+            static_cycles,
+            speedups: static_cycles.map(|c| c as f64 / flex_cycles as f64),
+        });
+    }
+    if rows.is_empty() {
+        return None; // an empty report is no report — recompute
+    }
+    Some(rows)
+}
+
 /// Render Table I in the paper's layout (one row per model x dataflow).
 pub fn table1(s: u32) -> Table {
-    let rows = table1_rows_with(s, SimOptions::default(), 0);
+    render_rows(&table1_rows_with(s, SimOptions::default(), 0))
+}
+
+/// Render precomputed Table I rows (shared by [`table1`] and the
+/// store-backed CLI path).
+pub fn render_rows(rows: &[Table1Row]) -> Table {
     let mut t = Table::new(&[
         "Model",
         "Flex-TPU Cycles",
@@ -66,7 +144,7 @@ pub fn table1(s: u32) -> Table {
         "Static Cycles",
         "Speedup",
     ]);
-    for row in &rows {
+    for row in rows {
         for (i, df) in Dataflow::ALL.into_iter().enumerate() {
             t.row(vec![
                 if i == 0 { row.model.clone() } else { String::new() },
@@ -131,5 +209,28 @@ mod tests {
     fn rendered_table_has_3_rows_per_model_plus_average() {
         let t = table1(8);
         assert_eq!(t.num_rows(), 7 * 3 + 1);
+    }
+
+    #[test]
+    fn stored_rows_round_trip_byte_identical() {
+        let dir = std::env::temp_dir().join(format!(
+            "flex-tpu-table1-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = PlanStore::open(&dir).unwrap();
+        let opts = SimOptions::default();
+        let (cold, src_cold) = table1_rows_stored(8, opts, 2, Some(&store)).unwrap();
+        assert_eq!(src_cold, DocSource::Computed);
+        let (warm, src_warm) = table1_rows_stored(8, opts, 2, Some(&store)).unwrap();
+        assert_eq!(src_warm, DocSource::Loaded);
+        assert_eq!(cold, warm, "loaded report must be byte-identical");
+        // Rendering loaded rows matches the direct render too.
+        assert_eq!(render_rows(&warm).render(), table1(8).render());
+        // No store: always computed.
+        let (plain, src) = table1_rows_stored(8, opts, 2, None).unwrap();
+        assert_eq!(src, DocSource::Computed);
+        assert_eq!(plain, cold);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

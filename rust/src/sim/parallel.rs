@@ -144,7 +144,7 @@ pub(crate) struct ShapeKey {
 }
 
 impl ShapeKey {
-    fn new(arch: &ArchConfig, layer: &Layer, df: Dataflow, opts: SimOptions) -> Self {
+    pub(crate) fn new(arch: &ArchConfig, layer: &Layer, df: Dataflow, opts: SimOptions) -> Self {
         Self {
             rows: arch.array_rows,
             cols: arch.array_cols,

@@ -28,17 +28,42 @@
 //!   next successful save repairs any damage.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::config::SimFidelity;
+use crate::config::{ArchConfig, SimFidelity};
 use crate::error::Result;
 use crate::sim::dataflow::OperandTraffic;
-use crate::sim::engine::LayerStats;
+use crate::sim::engine::{LayerStats, SimOptions};
 use crate::sim::gemm::DwMapping;
 use crate::sim::memory::DramTraffic;
 use crate::sim::parallel::{ShapeCache, ShapeKey};
 use crate::sim::Dataflow;
-use crate::topology::LayerKind;
+use crate::topology::{LayerKind, Topology};
 use crate::util::json::{obj, parse, Value};
+
+/// Distinguishes per-writer temp files within one process: two threads (or
+/// two sequential saves racing a slow filesystem) must never share a temp
+/// path, or their writes could interleave before the atomic rename.  Cross
+/// *process* uniqueness comes from the pid in the temp name.
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Where a store-backed result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DocSource {
+    /// Served from a persisted document (warm start).
+    Loaded,
+    /// Computed this run (and persisted for the next one).
+    Computed,
+}
+
+impl std::fmt::Display for DocSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            DocSource::Loaded => "loaded",
+            DocSource::Computed => "computed",
+        })
+    }
+}
 
 /// Version stamped into every store envelope; a mismatch (older or newer)
 /// makes the file read as cold, so layout changes only ever cost a
@@ -120,12 +145,46 @@ impl PlanStore {
             ("payload", payload),
         ]);
         let path = self.path_for(kind, provenance);
-        let tmp = self
-            .dir
-            .join(format!(".{kind}-{provenance}.tmp.{}", std::process::id()));
+        // Temp names are unique per writer (pid + in-process counter):
+        // concurrent writers — other processes sharing the store dir, or
+        // threads within this one — each stage into their own file, and
+        // the POSIX rename makes whichever lands last win wholesale.
+        let tmp = self.dir.join(format!(
+            ".{kind}-{provenance}.tmp.{}.{}",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&tmp, doc.to_string())?;
         std::fs::rename(&tmp, &path)?;
         Ok(())
+    }
+
+    /// Every valid document of exactly `kind` in the store, as
+    /// `(provenance, payload)` pairs sorted by provenance.  Files that are
+    /// missing, corrupt, schema-stale or of another kind are skipped (the
+    /// same robustness contract as [`PlanStore::load_document`]).  Kinds
+    /// are matched exactly: a `report` listing does not pick up
+    /// `report-table1` files (provenance keys never contain `-`).
+    pub fn list_kind(&self, kind: &str) -> Vec<(String, Value)> {
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        let prefix = format!("{kind}-");
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(".json") else { continue };
+            let Some(prov) = stem.strip_prefix(&prefix) else { continue };
+            if prov.is_empty() || prov.contains('-') {
+                continue; // a longer kind's file, not ours
+            }
+            if let Some(payload) = self.load_document(kind, prov) {
+                out.push((prov.to_string(), payload));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// Preload every persisted shape entry for `provenance` into `cache`
@@ -156,7 +215,43 @@ impl PlanStore {
     /// `provenance`, sorted by key so file bytes are deterministic whatever
     /// the thread count (or shard traversal order) that filled the cache.
     pub fn save_shapes(&self, provenance: &str, cache: &ShapeCache) -> Result<()> {
-        let mut entries = cache.snapshot();
+        self.save_shape_entries(provenance, cache.snapshot())
+    }
+
+    /// Persist only the entries belonging to one model — `topo`'s layers
+    /// under all three dataflows at `opts` — under `provenance`.  The
+    /// multi-model registry shares one in-memory cache across the whole
+    /// fleet but keys each model's persisted shapes by its own provenance,
+    /// so sibling models' entries stay out of each other's files.
+    pub fn save_shapes_for_model(
+        &self,
+        provenance: &str,
+        cache: &ShapeCache,
+        arch: &ArchConfig,
+        topo: &Topology,
+        opts: SimOptions,
+    ) -> Result<()> {
+        let mut keys = std::collections::HashSet::new();
+        for layer in &topo.layers {
+            for df in Dataflow::ALL {
+                keys.insert(ShapeKey::new(arch, layer, df, opts));
+            }
+        }
+        let entries = cache
+            .snapshot()
+            .into_iter()
+            .filter(|(key, _)| keys.contains(key))
+            .collect();
+        self.save_shape_entries(provenance, entries)
+    }
+
+    /// Shared tail of the shape-persistence paths: sort for deterministic
+    /// bytes, serialize, write atomically.
+    fn save_shape_entries(
+        &self,
+        provenance: &str,
+        mut entries: Vec<(ShapeKey, LayerStats)>,
+    ) -> Result<()> {
         // The Debug form renders every key field, so it is a total order
         // over distinct keys — and far cheaper than serializing whole
         // entries just to sort them.
@@ -378,6 +473,62 @@ mod tests {
         let warm = ShapeCache::new();
         assert_eq!(store.load_shapes("key-b", &warm), 0);
         assert_eq!(store.load_shapes("key-a", &warm), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn per_model_subset_save_excludes_siblings() {
+        let store = tmp_store("subset");
+        let arch = ArchConfig::square(16);
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let a = zoo::alexnet();
+        let b = zoo::yolo_tiny();
+        for topo in [&a, &b] {
+            for layer in &topo.layers {
+                for df in Dataflow::ALL {
+                    cache.simulate_layer(&arch, layer, df, opts);
+                }
+            }
+        }
+        store.save_shapes_for_model("prov-a", &cache, &arch, &a, opts).unwrap();
+        let warm = ShapeCache::new();
+        let loaded = store.load_shapes("prov-a", &warm);
+        assert!(loaded > 0);
+        assert!(
+            (loaded as u64) < cache.stats().entries,
+            "subset must exclude the sibling model's shapes"
+        );
+        // The subset fully warms its own model: zero misses on re-profiling.
+        for layer in &a.layers {
+            for df in Dataflow::ALL {
+                warm.simulate_layer(&arch, layer, df, opts);
+            }
+        }
+        assert_eq!(warm.stats().misses, 0, "{:?}", warm.stats());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn list_kind_matches_exactly_and_skips_invalid() {
+        let store = tmp_store("list");
+        store
+            .save_document("plan", "aaaa", Value::Str("p1".into()))
+            .unwrap();
+        store
+            .save_document("plan", "bbbb", Value::Str("p2".into()))
+            .unwrap();
+        store
+            .save_document("report-table1", "cccc", Value::Str("r".into()))
+            .unwrap();
+        // Corrupt file of the right name shape is skipped, not an error.
+        std::fs::write(store.dir().join("plan-dddd.json"), "{{{").unwrap();
+        let plans = store.list_kind("plan");
+        let provs: Vec<&str> = plans.iter().map(|(p, _)| p.as_str()).collect();
+        assert_eq!(provs, vec!["aaaa", "bbbb"]);
+        // `report` must not pick up `report-table1` files.
+        assert!(store.list_kind("report").is_empty());
+        assert_eq!(store.list_kind("report-table1").len(), 1);
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

@@ -29,7 +29,12 @@ pub struct Args {
 /// Parsed argument values.
 #[derive(Debug, Clone, Default)]
 pub struct Parsed {
-    values: BTreeMap<String, String>,
+    /// Explicit occurrences of each value flag, in command-line order.  A
+    /// flag may be repeated (`--model a --model b`); single-value accessors
+    /// read the last occurrence, [`Parsed::all`] reads them all.
+    values: BTreeMap<String, Vec<String>>,
+    /// Declared defaults, consulted when a flag was never given explicitly.
+    defaults: BTreeMap<String, String>,
     bools: BTreeMap<String, bool>,
     positionals: Vec<String>,
 }
@@ -105,7 +110,7 @@ impl Args {
         let mut p = Parsed::default();
         for f in &self.flags {
             if let Some(d) = &f.default {
-                p.values.insert(f.name.clone(), d.clone());
+                p.defaults.insert(f.name.clone(), d.clone());
             }
             if !f.takes_value {
                 p.bools.insert(f.name.clone(), false);
@@ -139,7 +144,7 @@ impl Args {
                                 })?
                         }
                     };
-                    p.values.insert(name.to_string(), val);
+                    p.values.entry(name.to_string()).or_default().push(val);
                 } else {
                     if inline.is_some() {
                         return Err(Error::InvalidConfig(format!(
@@ -159,8 +164,28 @@ impl Args {
 
 impl Parsed {
     /// A flag's value (its default when not given on the command line).
+    /// For a repeated flag this is the *last* occurrence.
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.values.get(name).map(String::as_str)
+        self.values
+            .get(name)
+            .and_then(|v| v.last())
+            .or_else(|| self.defaults.get(name))
+            .map(String::as_str)
+    }
+
+    /// Every explicit occurrence of a repeatable value flag, in
+    /// command-line order; falls back to the declared default (as a
+    /// one-element list) when the flag was never given, and to an empty
+    /// list when there is no default either.
+    pub fn all(&self, name: &str) -> Vec<String> {
+        match self.values.get(name) {
+            Some(v) if !v.is_empty() => v.clone(),
+            _ => self
+                .defaults
+                .get(name)
+                .map(|d| vec![d.clone()])
+                .unwrap_or_default(),
+        }
     }
 
     /// A flag's value, erroring when absent and defaultless.
@@ -248,6 +273,20 @@ mod tests {
     fn usage_mentions_flags() {
         let u = spec().usage();
         assert!(u.contains("--model") && u.contains("default: resnet18"));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_and_last_wins() {
+        let p = spec()
+            .parse(&argv(&["run", "--model", "alexnet", "--model=vgg13"]))
+            .unwrap();
+        assert_eq!(p.all("model"), vec!["alexnet".to_string(), "vgg13".to_string()]);
+        // Single-value accessors read the last occurrence.
+        assert_eq!(p.get("model"), Some("vgg13"));
+        // Unset repeatable flags fall back to the default as a singleton.
+        let d = spec().parse(&argv(&["run"])).unwrap();
+        assert_eq!(d.all("model"), vec!["resnet18".to_string()]);
+        assert_eq!(d.all("size"), vec!["32".to_string()]);
     }
 
     #[test]

@@ -99,6 +99,13 @@ impl Value {
             .ok_or_else(|| Error::Artifact(format!("field {key:?} is not a u64")))
     }
 
+    /// Required numeric field of an object (any JSON number).
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| Error::Artifact(format!("field {key:?} is not a number")))
+    }
+
     /// Required string field of an object.
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.req(key)?

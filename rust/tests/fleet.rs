@@ -1,0 +1,371 @@
+//! Acceptance tests for the multi-model serving fleet (ISSUE 4):
+//!
+//! 1. **byte identity** — a 1-model fleet produces responses byte-identical
+//!    to the single-model `InferenceServer`, at any worker count;
+//! 2. **no cross-routing** — every response is stamped by the deployment
+//!    that served it, and per-model response streams equal the standalone
+//!    oracles bit for bit;
+//! 3. **cycle invariance** — per-model simulated cycle totals depend only
+//!    on the request multiset, never on worker count, batch formation or
+//!    interleaving;
+//! 4. **shared-store warm start** — N models on one store dir restart with
+//!    plan + shape warm loads (hit rate 1.0, zero `simulate_layer` calls),
+//!    and cross-model shape reuse makes the shared-cache fleet strictly
+//!    cheaper to cold-start than N isolated deployments;
+//! 5. **hot add/remove** — models register and retire while the fleet is
+//!    serving, without disturbing in-flight traffic.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::inference::{
+    Envelope, FleetServer, FleetStats, InferenceRequest, InferenceResponse, InferenceServer,
+    ModelRegistry, PlanSource, SimBackend,
+};
+use flex_tpu::sim::PlanStore;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("flex-tpu-fleet-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A deterministic request: pixels are a pure function of the id.
+fn request(id: u64, model: &str) -> InferenceRequest {
+    let pixels = (0..SimBackend::DIGEST_PIXELS)
+        .map(|p| ((id as usize * 13 + p * 7) % 29) as f32 / 29.0)
+        .collect();
+    InferenceRequest {
+        id,
+        model: model.to_string(),
+        pixels,
+    }
+}
+
+/// Push `requests` through a fleet on `workers` threads; responses come
+/// back sorted by id (arrival order is a scheduling detail).
+fn serve_fleet(
+    fleet: &FleetServer,
+    requests: &[InferenceRequest],
+    workers: usize,
+) -> (Vec<InferenceResponse>, FleetStats) {
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(16);
+    let reqs = requests.to_vec();
+    let producer = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for req in reqs {
+            let (otx, orx) = mpsc::channel();
+            tx.send((req, otx)).expect("fleet alive");
+            rxs.push(orx);
+        }
+        drop(tx);
+        rxs.into_iter()
+            .map(|orx| orx.recv().expect("response"))
+            .collect::<Vec<_>>()
+    });
+    let stats = fleet.serve(rx, workers).expect("fleet serves");
+    let mut responses = producer.join().expect("producer join");
+    responses.sort_by_key(|r| r.id);
+    (responses, stats)
+}
+
+/// Push `requests` through a single-model server; responses sorted by id.
+fn serve_single(
+    server: &InferenceServer,
+    requests: &[InferenceRequest],
+    workers: usize,
+) -> Vec<InferenceResponse> {
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(16);
+    let reqs = requests.to_vec();
+    let producer = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for req in reqs {
+            let (otx, orx) = mpsc::channel();
+            tx.send((req, otx)).expect("server alive");
+            rxs.push(orx);
+        }
+        drop(tx);
+        rxs.into_iter()
+            .map(|orx| orx.recv().expect("response"))
+            .collect::<Vec<_>>()
+    });
+    server.serve_concurrent(rx, workers).expect("server serves");
+    let mut responses = producer.join().expect("producer join");
+    responses.sort_by_key(|r| r.id);
+    responses
+}
+
+#[test]
+fn one_model_fleet_is_byte_identical_to_single_server() {
+    let arch = ArchConfig::square(16);
+    let backend = Arc::new(SimBackend::from_zoo("alexnet", 4).unwrap());
+    let single = InferenceServer::from_backend(Arc::clone(&backend), arch, 1).unwrap();
+    let requests: Vec<_> = (0..23).map(|id| request(id, "alexnet")).collect();
+    let want = serve_single(&single, &requests, 1);
+    assert_eq!(want.len(), 23);
+
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    registry.register(backend).unwrap();
+    let fleet = FleetServer::new(Arc::clone(&registry));
+    for workers in [1usize, 2, 4] {
+        let (got, stats) = serve_fleet(&fleet, &requests, workers);
+        assert_eq!(got, want, "{workers} workers diverged from the single server");
+        assert_eq!(stats.requests, 23);
+        assert_eq!(stats.unknown_model, 0);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.per_model["alexnet"].requests, 23);
+    }
+
+    // The single server itself is worker-count invariant too.
+    assert_eq!(serve_single(&single, &requests, 4), want);
+}
+
+#[test]
+fn responses_are_never_cross_routed() {
+    let arch = ArchConfig::square(16);
+    let names = ["alexnet", "mobilenet", "yolo_tiny"];
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    for name in names {
+        registry
+            .register(Arc::new(SimBackend::from_zoo(name, 3).unwrap()))
+            .unwrap();
+    }
+
+    // Standalone per-model oracles over the same request subsets.
+    let mut oracles: BTreeMap<&str, Vec<InferenceResponse>> = BTreeMap::new();
+    for name in names {
+        let backend = Arc::new(SimBackend::from_zoo(name, 3).unwrap());
+        let server = InferenceServer::from_backend(backend, arch, 1).unwrap();
+        let reqs: Vec<_> = (0..30u64)
+            .filter(|id| names[(*id as usize) % 3] == name)
+            .map(|id| request(id, name))
+            .collect();
+        oracles.insert(name, serve_single(&server, &reqs, 2));
+    }
+
+    let requests: Vec<_> = (0..30u64)
+        .map(|id| request(id, names[(id as usize) % 3]))
+        .collect();
+    let fleet = FleetServer::new(Arc::clone(&registry));
+    let (responses, stats) = serve_fleet(&fleet, &requests, 4);
+    assert_eq!(responses.len(), 30);
+    for resp in &responses {
+        let expected = names[(resp.id as usize) % 3];
+        assert_eq!(
+            resp.model, expected,
+            "request {} served by the wrong deployment",
+            resp.id
+        );
+    }
+    for name in names {
+        let got: Vec<_> = responses
+            .iter()
+            .filter(|r| r.model == name)
+            .cloned()
+            .collect();
+        assert_eq!(&got, oracles.get(name).unwrap(), "{name}");
+        assert_eq!(stats.per_model[name].requests, 10);
+    }
+    assert_eq!(stats.per_model.len(), 3);
+}
+
+#[test]
+fn per_model_cycle_totals_invariant_under_workers_and_interleaving() {
+    let arch = ArchConfig::square(8);
+    let names = ["alexnet", "mobilenet", "vgg13"];
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    for name in names {
+        registry
+            .register(Arc::new(SimBackend::from_zoo(name, 2).unwrap()))
+            .unwrap();
+    }
+    let fleet = FleetServer::new(Arc::clone(&registry));
+
+    let round_robin: Vec<_> = (0..24u64)
+        .map(|id| request(id, names[(id as usize) % 3]))
+        .collect();
+    let mut blocks = round_robin.clone();
+    blocks.sort_by(|a, b| a.model.cmp(&b.model)); // per-model bursts
+
+    let mut reference: Option<BTreeMap<String, u64>> = None;
+    for (workers, reqs) in [
+        (1usize, &round_robin),
+        (4, &round_robin),
+        (2, &blocks),
+        (3, &blocks),
+    ] {
+        let (responses, stats) = serve_fleet(&fleet, reqs, workers);
+        assert_eq!(responses.len(), 24);
+        let cycles: BTreeMap<String, u64> = stats
+            .per_model
+            .iter()
+            .map(|(k, m)| (k.clone(), m.sim_cycles_total))
+            .collect();
+        match &reference {
+            None => reference = Some(cycles),
+            Some(want) => assert_eq!(
+                &cycles, want,
+                "{workers} workers / interleaving changed cycle totals"
+            ),
+        }
+    }
+
+    // Totals are exactly what each deployment's plan predicts: 8 requests
+    // per model × the per-inference flex cycles.
+    let reference = reference.unwrap();
+    for name in names {
+        let dep = registry.get(name).unwrap();
+        assert_eq!(reference[name], 8 * dep.server.timing().flex_cycles, "{name}");
+    }
+}
+
+#[test]
+fn shared_store_warm_start_and_cross_model_reuse() {
+    let dir = tmpdir("warm");
+    let arch = ArchConfig::square(16);
+    // googlenet shares its stem conv with resnet18 and its classifier FC
+    // with mobilenet — real cross-model shape reuse.
+    let names = ["resnet18", "googlenet", "mobilenet"];
+    let requests: Vec<_> = (0..18u64)
+        .map(|id| request(id, names[(id as usize) % 3]))
+        .collect();
+
+    // Cold fleet: one shared cache, one store dir.
+    let (cold_responses, cold_misses) = {
+        let store = PlanStore::open(&dir).unwrap();
+        let registry = Arc::new(ModelRegistry::new(arch, Some(store)).unwrap());
+        for name in names {
+            let dep = registry
+                .register(Arc::new(SimBackend::from_zoo(name, 2).unwrap()))
+                .unwrap();
+            assert_eq!(dep.plan_source, PlanSource::Compiled, "{name}");
+            assert_eq!(dep.shapes_preloaded, 0, "{name}");
+        }
+        let misses = registry.cache_stats().misses;
+        assert!(misses > 0, "cold fleet must simulate");
+        let fleet = FleetServer::new(Arc::clone(&registry));
+        let (responses, _) = serve_fleet(&fleet, &requests, 2);
+        (responses, misses)
+    };
+
+    // Isolated deployments pay strictly more cold simulations than the
+    // shared-cache fleet (the reused shapes are simulated once per fleet,
+    // once per model otherwise).
+    let mut independent_misses = 0;
+    for name in names {
+        let registry = ModelRegistry::new(arch, None).unwrap();
+        registry
+            .register(Arc::new(SimBackend::from_zoo(name, 2).unwrap()))
+            .unwrap();
+        independent_misses += registry.cache_stats().misses;
+    }
+    assert!(
+        cold_misses < independent_misses,
+        "shared fleet {cold_misses} must beat isolated {independent_misses}"
+    );
+
+    // Restart against the same store: plans load, shapes preload, zero
+    // simulate_layer calls, hit rate exactly 1.0, byte-identical serving.
+    let store = PlanStore::open(&dir).unwrap();
+    let registry = Arc::new(ModelRegistry::new(arch, Some(store)).unwrap());
+    for name in names {
+        let dep = registry
+            .register(Arc::new(SimBackend::from_zoo(name, 2).unwrap()))
+            .unwrap();
+        assert_eq!(dep.plan_source, PlanSource::Loaded, "{name}");
+        assert!(dep.shapes_preloaded > 0, "{name}");
+    }
+    let stats = registry.cache_stats();
+    assert_eq!(stats.misses, 0, "warm fleet must not simulate: {stats:?}");
+    assert!(stats.hits > 0);
+    assert_eq!(stats.hit_rate(), 1.0);
+    let fleet = FleetServer::new(Arc::clone(&registry));
+    let (warm_responses, warm_stats) = serve_fleet(&fleet, &requests, 3);
+    assert_eq!(warm_responses, cold_responses, "warm fleet output diverged");
+    assert_eq!(warm_stats.requests, 18);
+    assert_eq!(
+        registry.cache_stats().misses,
+        0,
+        "serving a warm fleet must stay simulation-free"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hot_add_and_remove_while_serving() {
+    let arch = ArchConfig::square(8);
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    registry
+        .register(Arc::new(SimBackend::from_zoo("alexnet", 2).unwrap()))
+        .unwrap();
+    let fleet = FleetServer::new(Arc::clone(&registry));
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(32);
+    let serving = std::thread::spawn(move || fleet.serve(rx, 2));
+
+    // Phase 1: the initially registered model serves.
+    let (otx, orx) = mpsc::channel();
+    tx.send((request(0, "alexnet"), otx)).unwrap();
+    assert_eq!(orx.recv().unwrap().model, "alexnet");
+
+    // Phase 2: hot-add a second model mid-serve; it serves immediately.
+    registry
+        .register(Arc::new(SimBackend::from_zoo("vgg13", 2).unwrap()))
+        .unwrap();
+    let (otx, orx) = mpsc::channel();
+    tx.send((request(1, "vgg13"), otx)).unwrap();
+    assert_eq!(orx.recv().unwrap().model, "vgg13");
+
+    // Phase 3: hot-remove the first model; its requests now drop cleanly
+    // (the caller observes a closed response channel, not a hang).
+    assert!(registry.remove("alexnet"));
+    let (otx, orx) = mpsc::channel();
+    tx.send((request(2, "alexnet"), otx)).unwrap();
+    assert!(orx.recv().is_err(), "removed model must not serve");
+
+    // The surviving model is unaffected.
+    let (otx, orx) = mpsc::channel();
+    tx.send((request(3, "vgg13"), otx)).unwrap();
+    assert_eq!(orx.recv().unwrap().id, 3);
+
+    drop(tx);
+    let stats = serving.join().expect("serve thread").expect("serve ok");
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.unknown_model, 1);
+}
+
+#[test]
+fn malformed_requests_are_rejected_not_fatal() {
+    let arch = ArchConfig::square(8);
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    registry
+        .register(Arc::new(SimBackend::from_zoo("alexnet", 2).unwrap()))
+        .unwrap();
+    let fleet = FleetServer::new(Arc::clone(&registry));
+
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(8);
+    let producer = std::thread::spawn(move || {
+        // Wrong pixel count: dropped at the front door.
+        let (otx, bad_rx) = mpsc::channel();
+        let bad = InferenceRequest {
+            id: 0,
+            model: "alexnet".to_string(),
+            pixels: vec![0.0; 3],
+        };
+        tx.send((bad, otx)).unwrap();
+        // A well-formed request behind it still serves.
+        let (otx, good_rx) = mpsc::channel();
+        tx.send((request(1, "alexnet"), otx)).unwrap();
+        drop(tx);
+        (bad_rx.recv().is_err(), good_rx.recv())
+    });
+    let stats = fleet.serve(rx, 1).expect("serve ok");
+    let (bad_dropped, good) = producer.join().unwrap();
+    assert!(bad_dropped, "malformed request must be dropped");
+    assert_eq!(good.expect("good response").id, 1);
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.requests, 1);
+}

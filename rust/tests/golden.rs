@@ -1,0 +1,82 @@
+//! Golden-file regression tests for the report layer (ISSUE 4).
+//!
+//! The rendered Table I / Table II text for the seed configurations is
+//! committed under `tests/golden/`; any drift in the cycle model, the
+//! selection tie-break, the cost calibration or the table renderer fails
+//! these tests loudly instead of silently shifting the paper numbers.
+//!
+//! To bless an *intentional* model change, regenerate with
+//! `FLEX_TPU_UPDATE_GOLDEN=1 cargo test --test golden` and commit the
+//! diff — the diff itself then documents the drift for review.
+
+use std::path::PathBuf;
+
+use flex_tpu::report;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+/// Compare `actual` against the committed golden file, with a first-diff
+/// pointer in the failure message.  `FLEX_TPU_UPDATE_GOLDEN=1` rewrites
+/// the file instead (the "bless" flow).
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_path(name);
+    if std::env::var_os("FLEX_TPU_UPDATE_GOLDEN").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        return;
+    }
+    let expected = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden file {} unreadable: {e}", path.display()));
+    if expected == actual {
+        return;
+    }
+    let diff_line = expected
+        .lines()
+        .zip(actual.lines())
+        .position(|(e, a)| e != a)
+        .map(|i| i + 1)
+        .unwrap_or_else(|| expected.lines().count().min(actual.lines().count()) + 1);
+    panic!(
+        "{name}: rendered output drifted from the committed golden \
+         (first difference at line {diff_line}).\n\
+         If the cycle/cost model changed intentionally, regenerate with \
+         FLEX_TPU_UPDATE_GOLDEN=1 and commit the diff.\n\
+         === expected ===\n{expected}\n=== actual ===\n{actual}"
+    );
+}
+
+#[test]
+fn table1_8x8_matches_golden() {
+    check_golden("table1_8x8.txt", &report::table1(8).render());
+}
+
+#[test]
+fn table1_32x32_matches_golden() {
+    check_golden("table1_32x32.txt", &report::table1(32).render());
+}
+
+#[test]
+fn table2_matches_golden() {
+    check_golden("table2.txt", &report::table2().render());
+}
+
+#[test]
+fn goldens_are_committed() {
+    if std::env::var_os("FLEX_TPU_UPDATE_GOLDEN").is_some() {
+        // Bless mode rewrites the files concurrently with this test in
+        // the same binary; checking mid-rewrite would race a torn read.
+        return;
+    }
+    // The bless flow must never leave the tree without its goldens: all
+    // three files exist and are non-trivial.
+    for name in ["table1_8x8.txt", "table1_32x32.txt", "table2.txt"] {
+        let text = std::fs::read_to_string(golden_path(name))
+            .unwrap_or_else(|e| panic!("{name} missing: {e}"));
+        assert!(text.lines().count() >= 5, "{name} suspiciously short");
+        assert!(text.ends_with('\n'), "{name} must end with a newline");
+    }
+}

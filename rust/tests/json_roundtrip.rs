@@ -104,6 +104,39 @@ fn large_u64s_survive_the_emitted_form() {
 }
 
 #[test]
+fn finite_f64_values_round_trip_exactly() {
+    // The report store (`report-dse` documents) persists energy floats;
+    // the contract is *value* exactness: parse(to_string(x)) returns the
+    // same f64 bits for every finite nonzero double (the writer emits
+    // Rust's shortest round-trip decimal form).  Negative zero is the one
+    // deliberate exception — it canonicalizes to integer 0.
+    let mut rng = Rng::new(0xD5E_F10);
+    let mut checked = 0u32;
+    for _ in 0..4000 {
+        let x = f64::from_bits(rng.next_u64());
+        if !x.is_finite() || x == 0.0 {
+            continue;
+        }
+        checked += 1;
+        let text = Value::Num(x).to_string();
+        let y = parse(&text).unwrap().as_f64().unwrap();
+        assert_eq!(y.to_bits(), x.to_bits(), "{x:e} -> {text} -> {y:e}");
+    }
+    assert!(checked > 3000, "random f64s were mostly finite: {checked}");
+    for x in [
+        0.1,
+        1.0 / 3.0,
+        6.63e-1,
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        -1.5e-300,
+    ] {
+        let y = parse(&Value::Num(x).to_string()).unwrap().as_f64().unwrap();
+        assert_eq!(y.to_bits(), x.to_bits(), "{x:e}");
+    }
+}
+
+#[test]
 fn escape_sequences_round_trip_through_text() {
     for s in STRING_POOL {
         let v = Value::Str((*s).to_string());

@@ -116,7 +116,12 @@ fn batched_server_serves_all_requests() {
         for id in 0..13u64 {
             let (otx, orx) = std::sync::mpsc::channel();
             let pixels = vec![0.1f32 * (id as f32 + 1.0); img];
-            tx.send((InferenceRequest { id, pixels }, otx)).unwrap();
+            let req = InferenceRequest {
+                id,
+                model: "flexnet_tiny".to_string(),
+                pixels,
+            };
+            tx.send((req, otx)).unwrap();
             rxs.push((id, orx));
         }
         drop(tx);

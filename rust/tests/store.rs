@@ -1,4 +1,4 @@
-//! Acceptance tests for the persisted plan/shape store (ISSUE 3):
+//! Acceptance tests for the persisted plan/shape store (ISSUE 3 + 4):
 //!
 //! 1. **warm start end-to-end** — a second sweep against the same store
 //!    preloads every shape entry, reports a hit rate of exactly 1.0 with
@@ -7,7 +7,10 @@
 //! 2. **robustness** — truncated, corrupt, wrong-schema-version and
 //!    wrong-provenance store files are silently ignored (cold start),
 //!    never panic, and are repaired by the next write;
-//! 3. plans round-trip through the store keyed by provenance.
+//! 3. plans round-trip through the store keyed by provenance;
+//! 4. **concurrent writers** — interleaved writers sharing one store dir
+//!    (threads here; processes differ only by pid in the temp-file name)
+//!    never error and never leave a torn document behind.
 
 use std::path::PathBuf;
 
@@ -88,6 +91,77 @@ fn plan_store_round_trip_keyed_by_provenance() {
     let back = ExecutionPlan::load(&store, &plan.provenance).unwrap();
     assert_eq!(plan, back);
     assert!(ExecutionPlan::load(&store, "0000000000000000").is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interleaved_writers_never_corrupt_the_store() {
+    // Two distinct complete snapshots of the same provenance key: a
+    // 1-entry cache and a full-topology cache.  Writers race to persist
+    // them; every save must succeed (no shared temp files to rename out
+    // from under each other) and every load — concurrent or final — must
+    // observe one of the two complete versions, never a torn mix.
+    let dir = tmpdir("interleave");
+    let store = PlanStore::open(&dir).unwrap();
+    let arch = ArchConfig::square(8);
+    let opts = SimOptions::default();
+    let topo = zoo::alexnet();
+
+    let small = ShapeCache::new();
+    small.simulate_layer(&arch, &topo.layers[0], flex_tpu::sim::Dataflow::Os, opts);
+    let big = ShapeCache::new();
+    for layer in &topo.layers {
+        for df in flex_tpu::sim::Dataflow::ALL {
+            big.simulate_layer(&arch, layer, df, opts);
+        }
+    }
+    let n_small = small.stats().entries as usize;
+    let n_big = big.stats().entries as usize;
+    assert!(n_small < n_big);
+
+    const WRITERS: usize = 4;
+    const READERS: usize = 2;
+    const ITERS: usize = 40;
+    std::thread::scope(|scope| {
+        for w in 0..WRITERS {
+            let store = store.clone();
+            let cache = if w % 2 == 0 { &small } else { &big };
+            scope.spawn(move || {
+                for i in 0..ITERS {
+                    store
+                        .save_shapes("race", cache)
+                        .unwrap_or_else(|e| panic!("writer {w} iter {i}: {e}"));
+                }
+            });
+        }
+        for r in 0..READERS {
+            let store = store.clone();
+            scope.spawn(move || {
+                for i in 0..ITERS {
+                    let warm = ShapeCache::new();
+                    let loaded = store.load_shapes("race", &warm);
+                    assert!(
+                        loaded == 0 || loaded == n_small || loaded == n_big,
+                        "reader {r} iter {i}: torn read of {loaded} entries \
+                         (expected 0, {n_small} or {n_big})"
+                    );
+                }
+            });
+        }
+    });
+
+    // The final document is complete and valid, and no temp litter stays
+    // behind to be mistaken for state.
+    let warm = ShapeCache::new();
+    let final_loaded = store.load_shapes("race", &warm);
+    assert!(final_loaded == n_small || final_loaded == n_big);
+    let tmp_litter: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().to_str().map(str::to_string))
+        .filter(|n| n.contains(".tmp."))
+        .collect();
+    assert!(tmp_litter.is_empty(), "temp files left behind: {tmp_litter:?}");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
