@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
                 id,
                 model: "flexnet_tiny".to_string(),
                 pixels,
+                deadline_us: None,
             };
             tx.send((req, otx)).unwrap();
             pending.push(orx);

@@ -1,0 +1,403 @@
+//! The deterministic load driver: a discrete-event simulation of one
+//! serving fleet under a seeded trace.
+//!
+//! The driver models the PR-4 serving system faithfully but on a *virtual*
+//! clock: a router (the shared [`Scheduler`]) forms batches from trace
+//! arrivals, a bounded batch queue applies back-pressure, and one
+//! simulated Flex-TPU device executes launches serially.  A launch costs
+//!
+//! ```text
+//!   batch_cost(model)                 the deployed per-layer schedule
+//!                                     simulated at the full compiled
+//!                                     batch (padding is real work)
+//! + entry_switch × reconfig_cycles    CMU reprogramming at the boundary
+//! + model_switch × upload(model)      the incoming model's weights
+//!                                     streamed over the host link
+//!                                     (Clockwork-style model-load cost)
+//! ```
+//!
+//! Everything is integer cycle arithmetic off the registry's deployed
+//! plans, so a `(config, seed)` pair produces one [`BenchReport`], byte
+//! for byte, on any machine and at any `--workers`/thread count —
+//! which is what lets CI gate *performance* the way it already gates
+//! correctness.
+//!
+//! **Open loop** replays trace arrivals at their recorded times (latency
+//! under offered load); **closed loop** keeps `concurrency` requests
+//! outstanding, issuing the next trace entry as each one completes
+//! (capacity probe).  Policy semantics:
+//!
+//! * `fifo` flushes partial batches whenever the door is dry and the
+//!   batch queue has space — the PR-4 router's eager, latency-first rule;
+//! * `reconfig-aware` holds partials while arrivals may still coalesce
+//!   (open loop: any future arrival; closed loop: while the device is
+//!   busy), so every model launches in `⌈requests/batch⌉` batches — the
+//!   minimum — and model switches collapse into runs;
+//! * `deadline-edf` is as eager as `fifo` but launches the most urgent
+//!   queue first and drops expired requests at pop time.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::ArchConfig;
+use crate::error::{Error, Result};
+use crate::inference::scheduler::{BatchPlan, SchedulePolicy, Scheduler};
+use crate::inference::{ModelDeployment, ModelRegistry};
+use crate::sim::engine::{reconfig_charges, SimOptions};
+
+use super::report::{BenchReport, ModelBenchStats};
+use super::trace::{generate, Scenario, TraceSpec};
+
+/// How the driver paces the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopMode {
+    /// Arrivals at their trace-recorded times (offered-load replay).
+    Open,
+    /// A fixed number of outstanding requests; each completion issues the
+    /// next trace entry immediately (capacity probe).
+    Closed,
+}
+
+impl LoopMode {
+    /// CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoopMode::Open => "open",
+            LoopMode::Closed => "closed",
+        }
+    }
+
+    /// Parse a mode name (case-insensitive).
+    pub fn parse(s: &str) -> Option<LoopMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "open" => Some(LoopMode::Open),
+            "closed" => Some(LoopMode::Closed),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for LoopMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One bench run's full configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Workload shape.
+    pub scenario: Scenario,
+    /// Trace seed.
+    pub seed: u64,
+    /// Requests in the trace.
+    pub requests: u64,
+    /// Mean inter-arrival gap, µs (the open-loop load knob).
+    pub mean_interarrival_us: u64,
+    /// Models the trace addresses, by registry name (trace model index i
+    /// maps to `models[i]`).
+    pub models: Vec<String>,
+    /// Scheduling policy under test.
+    pub policy: SchedulePolicy,
+    /// Open- or closed-loop pacing.
+    pub mode: LoopMode,
+    /// Outstanding requests in closed-loop mode (ignored in open loop).
+    pub concurrency: u64,
+    /// Per-request latency budget, µs (None = no deadlines in the trace).
+    pub deadline_us: Option<u64>,
+}
+
+/// Driver-side per-model constants, derived from the deployment.
+struct DriveInfo {
+    /// Cycles one launch occupies the device: the deployed per-layer
+    /// schedule simulated at the full compiled batch, plus the plan's
+    /// internal reconfiguration charges.
+    batch_cost: u64,
+    /// Host-link weight upload charged when this model becomes resident.
+    switch_cycles: u64,
+    /// Compiled batch size.
+    batch: u64,
+}
+
+/// Convert trace microseconds to device cycles (truncating, like the
+/// virtual clock everywhere else in the driver).
+fn us_to_cycles(us: u64, clock_ns: f64) -> u64 {
+    (us as f64 * 1000.0 / clock_ns) as u64
+}
+
+fn cycles_to_us(cycles: u64, clock_ns: f64) -> f64 {
+    cycles as f64 * clock_ns / 1000.0
+}
+
+/// 64-bit FNV-1a (same construction as the plan provenance and the sim
+/// backend's logit digest; deliberately duplicated — the schedule digest
+/// is part of the bench-report contract and must never shift because an
+/// unrelated hash user evolved).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Simulate `cfg` against the deployments in `registry` and return the
+/// report.  Errors when a configured model is not registered.
+pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
+    if cfg.models.is_empty() {
+        return Err(Error::InvalidConfig("bench needs at least one model".into()));
+    }
+    let arch: ArchConfig = *registry.arch();
+    let clock_ns = arch.clock_ns;
+
+    // Per-model scheduler profiles + device cost constants.
+    let mut sched: Scheduler<u64> = Scheduler::new(cfg.policy);
+    let mut info: BTreeMap<String, DriveInfo> = BTreeMap::new();
+    for name in &cfg.models {
+        let dep: std::sync::Arc<ModelDeployment> = registry.get(name).ok_or_else(|| {
+            Error::InvalidConfig(format!("bench model {name:?} is not registered"))
+        })?;
+        sched.set_profile(dep.profile());
+        let batch = u64::from(dep.server.batch()).max(1);
+        let topo = dep.server.topology().clone();
+        let opts = SimOptions {
+            batch: batch as u32,
+            ..SimOptions::default()
+        };
+        // The launch cost: the deployed (batch-1-compiled) schedule
+        // re-simulated at the serving batch, through the fleet's shared
+        // cache so repeated runs and sibling drivers memoize.
+        let mut batch_cost = 0u64;
+        for (layer, &df) in topo.layers.iter().zip(dep.plan_dataflows.iter()) {
+            batch_cost += registry
+                .cache()
+                .simulate_layer(&arch, layer, df, opts)
+                .total_cycles();
+        }
+        batch_cost += reconfig_charges(&dep.plan_dataflows, arch.reconfig_cycles);
+        let upload = topo.filter_bytes(arch.memory.bytes_per_element);
+        let switch_cycles = arch.interconnect.link_latency_cycles
+            + upload.div_ceil(arch.interconnect.link_bytes_per_cycle);
+        info.insert(
+            name.clone(),
+            DriveInfo {
+                batch_cost,
+                switch_cycles,
+                batch,
+            },
+        );
+    }
+
+    let trace = generate(&TraceSpec {
+        scenario: cfg.scenario,
+        seed: cfg.seed,
+        requests: cfg.requests,
+        models: cfg.models.len(),
+        mean_interarrival_us: cfg.mean_interarrival_us,
+    });
+    let arrivals: Vec<(u64, u64, usize)> = trace
+        .iter()
+        .map(|e| (us_to_cycles(e.at_us, clock_ns), e.id, e.model))
+        .collect();
+    let deadline_cycles = cfg.deadline_us.map(|us| us_to_cycles(us, clock_ns));
+
+    // The bounded batch queue between router and device: the same
+    // `(workers * 2).max(2)` the live fleet uses, at the bench's one
+    // virtual device.
+    const QUEUE_CAP: usize = 2;
+    let mut batchq: VecDeque<BatchPlan<u64>> = VecDeque::new();
+    let mut busy = false;
+    let mut busy_until = 0u64;
+    let mut completed_live = 0u64;
+    let mut next_arrival = 0usize; // open-loop cursor
+    let mut next_closed = 0usize; // closed-loop cursor
+    let mut t = 0u64;
+
+    let mut served = 0u64;
+    let mut batches = 0u64;
+    let mut padded = 0u64;
+    let mut reconfigurations = 0u64;
+    let mut model_switches = 0u64;
+    let mut dropped = 0u64;
+    let mut sim_cycles_total = 0u64;
+    let mut waits: Vec<u64> = Vec::with_capacity(arrivals.len());
+    let mut per: BTreeMap<String, ModelBenchStats> = cfg
+        .models
+        .iter()
+        .map(|m| (m.clone(), ModelBenchStats::default()))
+        .collect();
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+
+    let admit = |sched: &mut Scheduler<u64>,
+                 per: &mut BTreeMap<String, ModelBenchStats>,
+                 at: u64,
+                 id: u64,
+                 model_idx: usize| {
+        let model = &cfg.models[model_idx];
+        per.get_mut(model).expect("configured model").offered += 1;
+        sched.push(model, at, deadline_cycles.map(|d| at + d), id);
+    };
+
+    if cfg.mode == LoopMode::Closed {
+        let n0 = (cfg.concurrency.max(1) as usize).min(arrivals.len());
+        for &(_, id, model) in arrivals.iter().take(n0) {
+            admit(&mut sched, &mut per, 0, id, model);
+        }
+        next_closed = n0;
+    }
+
+    loop {
+        // Next event: device completion and/or (open loop) next arrival.
+        let mut next_t: Option<u64> = None;
+        if busy {
+            next_t = Some(busy_until);
+        }
+        if cfg.mode == LoopMode::Open {
+            if let Some(&(at, _, _)) = arrivals.get(next_arrival) {
+                next_t = Some(next_t.map_or(at, |v| v.min(at)));
+            }
+        }
+        let mut completed = false;
+        match next_t {
+            Some(event_t) => {
+                t = event_t;
+                if busy && busy_until == t {
+                    busy = false;
+                    completed = true;
+                }
+            }
+            None => {
+                if sched.pending() == 0 && batchq.is_empty() && !busy {
+                    break;
+                }
+                // No external events left: the refill below force-drains
+                // at the current (stale) clock.
+            }
+        }
+        if cfg.mode == LoopMode::Open {
+            while let Some(&(at, id, model)) = arrivals.get(next_arrival) {
+                if at != t {
+                    break;
+                }
+                admit(&mut sched, &mut per, t, id, model);
+                next_arrival += 1;
+            }
+        }
+        if cfg.mode == LoopMode::Closed && completed {
+            for _ in 0..completed_live {
+                if let Some(&(_, id, model)) = arrivals.get(next_closed) {
+                    admit(&mut sched, &mut per, t, id, model);
+                    next_closed += 1;
+                }
+            }
+        }
+
+        // Router refill: top the batch queue up per policy.
+        while batchq.len() < QUEUE_CAP {
+            let mut expired: Vec<(String, u64)> = Vec::new();
+            let mut batch = sched.pop(t, false, &mut expired);
+            if batch.is_none() && sched.pending() > 0 {
+                // Reconfig-aware coalescing: hold partials while arrivals
+                // may still fill them (open loop) or while the device has
+                // work anyway (closed loop).
+                let hold = cfg.policy == SchedulePolicy::ReconfigAware
+                    && match cfg.mode {
+                        LoopMode::Open => next_arrival < arrivals.len(),
+                        LoopMode::Closed => busy,
+                    };
+                if !hold {
+                    batch = sched.pop(t, true, &mut expired);
+                }
+            }
+            for (model, _id) in &expired {
+                dropped += 1;
+                per.get_mut(model).expect("configured model").dropped_deadline += 1;
+            }
+            // Closed loop: a client whose request was dropped issues its
+            // next one immediately, so the outstanding population never
+            // decays below the configured concurrency while trace remains.
+            if cfg.mode == LoopMode::Closed {
+                for _ in 0..expired.len() {
+                    if let Some(&(_, id, model)) = arrivals.get(next_closed) {
+                        admit(&mut sched, &mut per, t, id, model);
+                        next_closed += 1;
+                    }
+                }
+            }
+            match batch {
+                Some(b) => batchq.push_back(b),
+                None => break,
+            }
+        }
+
+        // Device: take the next launch when idle.
+        if !busy {
+            if let Some(plan) = batchq.pop_front() {
+                let di = &info[&plan.model];
+                let live = plan.items.len() as u64;
+                let cost = di.batch_cost
+                    + u64::from(plan.entry_switch) * arch.reconfig_cycles
+                    + if plan.model_switch { di.switch_cycles } else { 0 };
+                for item in &plan.items {
+                    waits.push(t - item.arrival);
+                }
+                served += live;
+                batches += 1;
+                padded += di.batch - live;
+                reconfigurations += plan.reconfigurations;
+                model_switches += u64::from(plan.model_switch);
+                sim_cycles_total += cost;
+                let m = per.get_mut(&plan.model).expect("configured model");
+                m.served += live;
+                m.batches += 1;
+                m.padded_slots += di.batch - live;
+                m.reconfigurations += plan.reconfigurations;
+                m.sim_cycles += cost;
+                digest = fnv1a(digest, plan.model.as_bytes());
+                digest = fnv1a(digest, &live.to_le_bytes());
+                digest = fnv1a(digest, &t.to_le_bytes());
+                digest = fnv1a(digest, b";");
+                completed_live = live;
+                busy = true;
+                busy_until = t + cost;
+            }
+        }
+
+        let drained = match cfg.mode {
+            LoopMode::Open => next_arrival >= arrivals.len(),
+            LoopMode::Closed => next_closed >= arrivals.len(),
+        };
+        if !busy && batchq.is_empty() && sched.pending() == 0 && drained {
+            break;
+        }
+    }
+
+    let wall_cycles = busy_until;
+    waits.sort_unstable();
+    let wait_us: Vec<f64> = waits.iter().map(|&w| cycles_to_us(w, clock_ns)).collect();
+    let wall_ns = wall_cycles as f64 * clock_ns;
+    let offered: u64 = per.values().map(|m| m.offered).sum();
+    Ok(BenchReport {
+        policy: cfg.policy.name().to_string(),
+        scenario: cfg.scenario.name().to_string(),
+        seed: cfg.seed,
+        mode: cfg.mode.name().to_string(),
+        offered,
+        served,
+        dropped_deadline: dropped,
+        batches,
+        padded_slots: padded,
+        reconfigurations,
+        model_switches,
+        sim_cycles_total,
+        sim_wall_us: cycles_to_us(wall_cycles, clock_ns),
+        throughput_rps: if wall_ns > 0.0 {
+            served as f64 * 1e9 / wall_ns
+        } else {
+            0.0
+        },
+        queue_p50_us: crate::inference::percentile(&wait_us, 0.50),
+        queue_p99_us: crate::inference::percentile(&wait_us, 0.99),
+        schedule_digest: format!("{digest:016x}"),
+        per_model: per,
+    })
+}

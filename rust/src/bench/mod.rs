@@ -1,0 +1,484 @@
+//! The deterministic serving bench: seeded load traces, a virtual-clock
+//! fleet driver, and CI-gateable performance reports.
+//!
+//! Correctness has been regression-gated since PR 4 (golden tables); this
+//! module does the same for *speed*.  The pieces:
+//!
+//! * [`trace`] — seeded, integer-only load generation (an explicit LCG +
+//!   quantized-exponential gaps): mixed, bursty and skewed scenarios.
+//! * [`driver`] — a discrete-event simulation of the fleet (router +
+//!   bounded batch queue + one virtual device) on the registry's deployed
+//!   plans, under any [`SchedulePolicy`].  Open loop replays offered
+//!   load; closed loop probes capacity.
+//! * [`report`] — the [`BenchReport`] record: throughput, p50/p99 queue
+//!   latency, padding, reconfiguration and model-switch counts, all in
+//!   simulated units, persisted through [`PlanStore`] as the
+//!   `bench-report` kind.
+//!
+//! Same config + same seed ⇒ byte-identical report, on any machine.  That
+//! determinism is what makes the CI `perf` job meaningful: `flex-tpu
+//! bench serve` writes `BENCH_PR5.json`, and [`gate`] fails the build if
+//! throughput regresses more than 10% or reconfigurations-per-request
+//! rise against the committed `rust/tests/golden/bench_baseline.json`
+//! (blessed with `FLEX_TPU_UPDATE_GOLDEN=1`), or if the reconfig-aware
+//! policy stops clearing its required speedup over FIFO.
+
+pub mod driver;
+pub mod report;
+pub mod trace;
+
+pub use driver::{run, BenchConfig, LoopMode};
+pub use report::{BenchReport, ModelBenchStats};
+pub use trace::{Lcg, Scenario, TraceEvent, TraceSpec};
+
+use crate::coordinator::plan::combined_provenance;
+use crate::error::{Error, Result};
+use crate::inference::{ModelRegistry, SchedulePolicy};
+use crate::sim::store::PlanStore;
+use crate::util::json::{obj, Value};
+
+/// Version of the suite/baseline JSON layout.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// CI gate: maximum tolerated throughput regression vs the baseline.
+pub const MAX_THROUGHPUT_REGRESSION: f64 = 0.10;
+
+/// CI gate: tolerated relative headroom on reconfigurations-per-request
+/// (guards against float noise while still catching real growth).
+pub const RECONFIG_HEADROOM: f64 = 1.05;
+
+/// CI gate: the speedup `reconfig-aware` must sustain over `fifo` on the
+/// gated scenario (the PR's acceptance criterion).
+pub const MIN_COALESCING_SPEEDUP: f64 = 1.2;
+
+/// Provenance key a bench report persists under: the participating
+/// models' plan provenances folded with the full run configuration, so a
+/// change to either invalidates the stored record.
+pub fn bench_provenance(registry: &ModelRegistry, cfg: &BenchConfig) -> String {
+    let mut parts: Vec<String> = cfg
+        .models
+        .iter()
+        .filter_map(|m| registry.get(m).map(|d| d.provenance.clone()))
+        .collect();
+    parts.push(format!(
+        "bench;scenario={};seed={};requests={};mean_us={};policy={};mode={};conc={};\
+         deadline={:?};batches={:?}",
+        cfg.scenario,
+        cfg.seed,
+        cfg.requests,
+        cfg.mean_interarrival_us,
+        cfg.policy,
+        cfg.mode,
+        cfg.concurrency,
+        cfg.deadline_us,
+        model_batches(registry, cfg),
+    ));
+    combined_provenance(&parts)
+}
+
+/// Per-model serving batch sizes, in `cfg.models` order — part of the
+/// measured configuration (the deployment plan's provenance is compiled
+/// at batch 1, so the serving batch must be recorded separately).
+fn model_batches(registry: &ModelRegistry, cfg: &BenchConfig) -> Vec<u64> {
+    cfg.models
+        .iter()
+        .filter_map(|m| registry.get(m).map(|d| u64::from(d.server.batch())))
+        .collect()
+}
+
+/// One bench invocation across several policies on one trace — what
+/// `flex-tpu bench serve` emits as `BENCH_PR5.json` and what the
+/// committed baseline stores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchSuite {
+    /// Scenario name.
+    pub scenario: String,
+    /// Trace seed.
+    pub seed: u64,
+    /// Requests in the trace.
+    pub requests: u64,
+    /// Mean inter-arrival gap, µs.
+    pub mean_interarrival_us: u64,
+    /// Driver mode name.
+    pub mode: String,
+    /// Closed-loop concurrency (0 in open loop).
+    pub concurrency: u64,
+    /// Per-request deadline budget, µs (0 = none).
+    pub deadline_us: u64,
+    /// Model names, in trace-index order.
+    pub models: Vec<String>,
+    /// The participating models' plan provenances — ties the suite to the
+    /// exact cycle model it was measured on, so a model change fails the
+    /// gate loudly (re-bless) instead of sliding silently.
+    pub model_provenances: Vec<String>,
+    /// Per-model serving batch sizes (plan provenances are compiled at
+    /// batch 1, so the serving batch is part of the config separately).
+    pub model_batches: Vec<u64>,
+    /// One report per policy, in run order.
+    pub reports: Vec<BenchReport>,
+}
+
+impl BenchSuite {
+    /// Run `policies` over the one trace described by `cfg` (whose
+    /// `policy` field is overridden per run) and bundle the results.
+    pub fn run(
+        registry: &ModelRegistry,
+        cfg: &BenchConfig,
+        policies: &[SchedulePolicy],
+    ) -> Result<BenchSuite> {
+        let mut reports = Vec::with_capacity(policies.len());
+        for &policy in policies {
+            let mut one = cfg.clone();
+            one.policy = policy;
+            reports.push(run(registry, &one)?);
+        }
+        Ok(BenchSuite {
+            scenario: cfg.scenario.name().to_string(),
+            seed: cfg.seed,
+            requests: cfg.requests,
+            mean_interarrival_us: cfg.mean_interarrival_us,
+            mode: cfg.mode.name().to_string(),
+            concurrency: match cfg.mode {
+                LoopMode::Closed => cfg.concurrency,
+                LoopMode::Open => 0,
+            },
+            deadline_us: cfg.deadline_us.unwrap_or(0),
+            models: cfg.models.clone(),
+            model_provenances: cfg
+                .models
+                .iter()
+                .filter_map(|m| registry.get(m).map(|d| d.provenance.clone()))
+                .collect(),
+            model_batches: model_batches(registry, cfg),
+            reports,
+        })
+    }
+
+    /// The report for one policy, if the suite ran it.
+    pub fn report(&self, policy: &str) -> Option<&BenchReport> {
+        self.reports.iter().find(|r| r.policy == policy)
+    }
+
+    /// Serialize (the `BENCH_PR5.json` / baseline layout).
+    pub fn to_json(&self) -> Value {
+        let strs = |v: &[String]| Value::Arr(v.iter().cloned().map(Value::Str).collect());
+        obj(vec![
+            ("schema", Value::Num(BENCH_SCHEMA_VERSION as f64)),
+            (
+                "config",
+                obj(vec![
+                    ("scenario", Value::Str(self.scenario.clone())),
+                    ("seed", Value::Num(self.seed as f64)),
+                    ("requests", Value::Num(self.requests as f64)),
+                    (
+                        "mean_interarrival_us",
+                        Value::Num(self.mean_interarrival_us as f64),
+                    ),
+                    ("mode", Value::Str(self.mode.clone())),
+                    ("concurrency", Value::Num(self.concurrency as f64)),
+                    ("deadline_us", Value::Num(self.deadline_us as f64)),
+                    ("models", strs(&self.models)),
+                    ("model_provenances", strs(&self.model_provenances)),
+                    (
+                        "model_batches",
+                        Value::Arr(
+                            self.model_batches.iter().map(|&b| Value::Num(b as f64)).collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "reports",
+                Value::Arr(self.reports.iter().map(BenchReport::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Deserialize a suite (rejects unknown schema versions).
+    pub fn from_json(v: &Value) -> Result<BenchSuite> {
+        let bad = |msg: &str| Error::Artifact(format!("bench suite: {msg}"));
+        if v.req_u64("schema")? != BENCH_SCHEMA_VERSION {
+            return Err(bad("unknown schema version"));
+        }
+        let config = v.req("config")?;
+        let strs = |key: &str| -> Result<Vec<String>> {
+            config
+                .req(key)?
+                .as_array()
+                .ok_or_else(|| bad("expected a string array"))?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| bad("expected a string"))
+                })
+                .collect()
+        };
+        let model_batches = config
+            .req("model_batches")?
+            .as_array()
+            .ok_or_else(|| bad("model_batches is not an array"))?
+            .iter()
+            .map(|b| b.as_u64().ok_or_else(|| bad("batch is not a u64")))
+            .collect::<Result<Vec<u64>>>()?;
+        let reports = v
+            .req("reports")?
+            .as_array()
+            .ok_or_else(|| bad("reports is not an array"))?
+            .iter()
+            .map(BenchReport::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchSuite {
+            scenario: config.req_str("scenario")?.to_string(),
+            seed: config.req_u64("seed")?,
+            requests: config.req_u64("requests")?,
+            mean_interarrival_us: config.req_u64("mean_interarrival_us")?,
+            mode: config.req_str("mode")?.to_string(),
+            concurrency: config.req_u64("concurrency")?,
+            deadline_us: config.req_u64("deadline_us")?,
+            models: strs("models")?,
+            model_provenances: strs("model_provenances")?,
+            model_batches,
+            reports,
+        })
+    }
+
+    /// The configuration part of two suites must agree for a gate
+    /// comparison to be meaningful.
+    fn config_matches(&self, other: &BenchSuite) -> bool {
+        self.scenario == other.scenario
+            && self.seed == other.seed
+            && self.requests == other.requests
+            && self.mean_interarrival_us == other.mean_interarrival_us
+            && self.mode == other.mode
+            && self.concurrency == other.concurrency
+            && self.deadline_us == other.deadline_us
+            && self.models == other.models
+            && self.model_provenances == other.model_provenances
+            && self.model_batches == other.model_batches
+    }
+}
+
+/// The CI perf gate: compare a fresh suite against the committed baseline.
+///
+/// Returns the list of checks that passed (for logging); the first
+/// violated check returns an error describing it.  Checks:
+///
+/// 1. the configurations (including model plan provenances) match — a
+///    drifted cycle model or scenario must re-bless, not silently shift;
+/// 2. every report is internally consistent (`served + dropped ==
+///    offered`);
+/// 3. `reconfig-aware` sustains [`MIN_COALESCING_SPEEDUP`] over `fifo`
+///    and performs no more reconfigurations (when both ran);
+/// 4. per policy present in both suites: throughput within
+///    [`MAX_THROUGHPUT_REGRESSION`] of the baseline and
+///    reconfigurations-per-request within [`RECONFIG_HEADROOM`].
+pub fn gate(current: &BenchSuite, baseline: &BenchSuite) -> Result<Vec<String>> {
+    let fail = |msg: String| -> Result<Vec<String>> { Err(Error::InvalidConfig(msg)) };
+    let mut passed = Vec::new();
+    if !current.config_matches(baseline) {
+        return fail(
+            "bench baseline was generated under a different configuration or cycle model; \
+             regenerate it with FLEX_TPU_UPDATE_GOLDEN=1 (cargo test --test bench) and commit \
+             the diff"
+                .to_string(),
+        );
+    }
+    passed.push("config matches baseline".to_string());
+    for r in &current.reports {
+        if r.served + r.dropped_deadline != r.offered {
+            return fail(format!(
+                "{}: served {} + dropped {} != offered {}",
+                r.policy, r.served, r.dropped_deadline, r.offered
+            ));
+        }
+    }
+    passed.push("request accounting consistent".to_string());
+    if let (Some(fifo), Some(ra)) = (current.report("fifo"), current.report("reconfig-aware")) {
+        if ra.throughput_rps < MIN_COALESCING_SPEEDUP * fifo.throughput_rps {
+            return fail(format!(
+                "reconfig-aware throughput {:.1} rps is below {MIN_COALESCING_SPEEDUP}x fifo \
+                 ({:.1} rps)",
+                ra.throughput_rps, fifo.throughput_rps
+            ));
+        }
+        if ra.reconfigurations > fifo.reconfigurations {
+            return fail(format!(
+                "reconfig-aware performed {} reconfigurations vs fifo's {}",
+                ra.reconfigurations, fifo.reconfigurations
+            ));
+        }
+        passed.push(format!(
+            "reconfig-aware: {:.2}x fifo throughput, {} vs {} reconfigurations",
+            ra.throughput_rps / fifo.throughput_rps,
+            ra.reconfigurations,
+            fifo.reconfigurations
+        ));
+    }
+    for base in &baseline.reports {
+        let Some(cur) = current.report(&base.policy) else {
+            return fail(format!("policy {:?} missing from the fresh run", base.policy));
+        };
+        let floor = (1.0 - MAX_THROUGHPUT_REGRESSION) * base.throughput_rps;
+        if cur.throughput_rps < floor {
+            return fail(format!(
+                "{}: throughput {:.1} rps regressed below {:.1} (baseline {:.1} - {:.0}%)",
+                base.policy,
+                cur.throughput_rps,
+                floor,
+                base.throughput_rps,
+                MAX_THROUGHPUT_REGRESSION * 100.0
+            ));
+        }
+        let ceiling = base.reconfigs_per_request() * RECONFIG_HEADROOM + 1e-9;
+        if cur.reconfigs_per_request() > ceiling {
+            return fail(format!(
+                "{}: {:.4} reconfigurations/request rose above baseline {:.4}",
+                base.policy,
+                cur.reconfigs_per_request(),
+                base.reconfigs_per_request()
+            ));
+        }
+        passed.push(format!(
+            "{}: {:.1} rps (baseline {:.1}), {:.4} reconfigs/request (baseline {:.4})",
+            base.policy,
+            cur.throughput_rps,
+            base.throughput_rps,
+            cur.reconfigs_per_request(),
+            base.reconfigs_per_request()
+        ));
+    }
+    Ok(passed)
+}
+
+/// Persist every report of `suite` through `store` under its policy's
+/// bench provenance; returns the provenance keys written.
+pub fn save_suite(
+    registry: &ModelRegistry,
+    store: &PlanStore,
+    cfg: &BenchConfig,
+    suite: &BenchSuite,
+) -> Result<Vec<String>> {
+    let mut keys = Vec::with_capacity(suite.reports.len());
+    for report in &suite.reports {
+        let mut one = cfg.clone();
+        one.policy = SchedulePolicy::parse(&report.policy)
+            .ok_or_else(|| Error::InvalidConfig(format!("unknown policy {:?}", report.policy)))?;
+        let key = bench_provenance(registry, &one);
+        report.save(store, &key)?;
+        keys.push(key);
+    }
+    Ok(keys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::inference::SimBackend;
+    use std::sync::Arc;
+
+    fn registry(batch: u32) -> ModelRegistry {
+        let r = ModelRegistry::new(ArchConfig::square(16), None).unwrap();
+        for name in ["alexnet", "mobilenet"] {
+            r.register(Arc::new(SimBackend::from_zoo(name, batch).unwrap()))
+                .unwrap();
+        }
+        r
+    }
+
+    fn config() -> BenchConfig {
+        BenchConfig {
+            scenario: Scenario::MixedModel,
+            seed: 11,
+            requests: 60,
+            mean_interarrival_us: 500,
+            models: vec!["alexnet".into(), "mobilenet".into()],
+            policy: SchedulePolicy::Fifo,
+            mode: LoopMode::Open,
+            concurrency: 0,
+            deadline_us: None,
+        }
+    }
+
+    #[test]
+    fn suite_round_trips_and_finds_reports() {
+        let reg = registry(2);
+        let suite = BenchSuite::run(&reg, &config(), &SchedulePolicy::ALL).unwrap();
+        assert_eq!(suite.reports.len(), 3);
+        assert!(suite.report("fifo").is_some());
+        assert!(suite.report("reconfig-aware").is_some());
+        assert!(suite.report("nope").is_none());
+        let back = BenchSuite::from_json(&suite.to_json()).unwrap();
+        assert_eq!(suite, back);
+    }
+
+    #[test]
+    fn gate_accepts_self_and_rejects_config_drift() {
+        let reg = registry(2);
+        let suite = BenchSuite::run(
+            &reg,
+            &config(),
+            &[SchedulePolicy::Fifo, SchedulePolicy::DeadlineEdf],
+        )
+        .unwrap();
+        // A suite always gates cleanly against itself (no fifo/RA pair
+        // here, so the speedup check is skipped).
+        assert!(gate(&suite, &suite).is_ok());
+        let mut other_cfg = config();
+        other_cfg.seed = 12;
+        let other = BenchSuite::run(&reg, &other_cfg, &[SchedulePolicy::Fifo]).unwrap();
+        assert!(gate(&suite, &other).is_err(), "config drift must fail");
+    }
+
+    #[test]
+    fn gate_catches_regressions() {
+        let reg = registry(2);
+        let suite = BenchSuite::run(&reg, &config(), &[SchedulePolicy::Fifo]).unwrap();
+        let mut slower = suite.clone();
+        slower.reports[0].throughput_rps *= 0.5;
+        assert!(gate(&slower, &suite).is_err(), "throughput regression");
+        let mut churny = suite.clone();
+        churny.reports[0].reconfigurations *= 3;
+        assert!(gate(&churny, &suite).is_err(), "reconfig growth");
+    }
+
+    #[test]
+    fn provenance_sensitive_to_config_and_models() {
+        let reg = registry(2);
+        let cfg = config();
+        let a = bench_provenance(&reg, &cfg);
+        assert_eq!(a, bench_provenance(&reg, &cfg), "stable");
+        let mut seeded = cfg.clone();
+        seeded.seed = 99;
+        assert_ne!(a, bench_provenance(&reg, &seeded));
+        let mut pol = cfg.clone();
+        pol.policy = SchedulePolicy::ReconfigAware;
+        assert_ne!(a, bench_provenance(&reg, &pol));
+        // The serving batch is part of the measured configuration too.
+        let rebatched = registry(3);
+        assert_ne!(a, bench_provenance(&rebatched, &cfg));
+    }
+
+    #[test]
+    fn save_suite_persists_per_policy_records() {
+        let dir = std::env::temp_dir().join(format!(
+            "flex-tpu-bench-suite-unit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = PlanStore::open(&dir).unwrap();
+        let reg = registry(2);
+        let cfg = config();
+        let suite =
+            BenchSuite::run(&reg, &cfg, &[SchedulePolicy::Fifo, SchedulePolicy::ReconfigAware])
+                .unwrap();
+        let keys = save_suite(&reg, &store, &cfg, &suite).unwrap();
+        assert_eq!(keys.len(), 2);
+        for (key, report) in keys.iter().zip(&suite.reports) {
+            assert_eq!(BenchReport::load(&store, key).as_ref(), Some(report));
+        }
+        assert_eq!(BenchReport::list(&store).len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

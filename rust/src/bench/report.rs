@@ -1,0 +1,292 @@
+//! The persisted result of one bench run.
+//!
+//! A [`BenchReport`] contains only *simulated* quantities — launch counts,
+//! padding, reconfigurations, virtual-clock wall time and the latency
+//! percentiles derived from it — so two runs with the same configuration
+//! and seed serialize to byte-identical JSON on any machine
+//! (`rust/tests/bench.rs`).  Reports persist through the shared
+//! [`PlanStore`] as a `bench-report` record kind, and the CLI additionally
+//! emits a combined `BENCH_PR5.json` at the repo root that the CI `perf`
+//! job gates against the committed baseline
+//! (`rust/tests/golden/bench_baseline.json`).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::sim::store::PlanStore;
+use crate::util::json::{obj, Value};
+
+/// Per-model slice of a bench run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelBenchStats {
+    /// Requests the trace addressed to this model.
+    pub offered: u64,
+    /// Requests that launched in a batch.
+    pub served: u64,
+    /// Requests dropped for missed deadlines (`deadline-edf` only).
+    pub dropped_deadline: u64,
+    /// Batches launched.
+    pub batches: u64,
+    /// Empty slots executed (the padding cost of partial batches).
+    pub padded_slots: u64,
+    /// Reconfigurations charged to this model's launches.
+    pub reconfigurations: u64,
+    /// Simulated device cycles its launches occupied (incl. switch costs).
+    pub sim_cycles: u64,
+}
+
+/// Aggregate result of one bench run (one policy on one trace).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BenchReport {
+    /// Scheduling policy name (`fifo` / `reconfig-aware` / `deadline-edf`).
+    pub policy: String,
+    /// Scenario name (`mixed` / `bursty` / `skewed`).
+    pub scenario: String,
+    /// Trace seed.
+    pub seed: u64,
+    /// Driver mode: `open` or `closed`.
+    pub mode: String,
+    /// Requests the trace offered.
+    pub offered: u64,
+    /// Requests served.
+    pub served: u64,
+    /// Requests dropped for missed deadlines.
+    pub dropped_deadline: u64,
+    /// Batches launched.
+    pub batches: u64,
+    /// Empty batch slots executed (padding).
+    pub padded_slots: u64,
+    /// Total reconfigurations across all launches (internal + entry).
+    pub reconfigurations: u64,
+    /// Launches that switched the resident model (weight restream).
+    pub model_switches: u64,
+    /// Simulated device-occupied cycles over the whole run.
+    pub sim_cycles_total: u64,
+    /// Virtual wall clock at the last batch completion, microseconds.
+    pub sim_wall_us: f64,
+    /// Served requests per simulated second.
+    pub throughput_rps: f64,
+    /// Median simulated queue latency (arrival → launch), µs.
+    pub queue_p50_us: f64,
+    /// 99th-percentile simulated queue latency, µs.
+    pub queue_p99_us: f64,
+    /// FNV-1a digest of the launch sequence (model, live count, launch
+    /// cycle) — a compact fingerprint of the whole schedule.
+    pub schedule_digest: String,
+    /// Per-model breakdown, keyed by model name.
+    pub per_model: BTreeMap<String, ModelBenchStats>,
+}
+
+impl BenchReport {
+    /// Reconfigurations per served request — the normalized regression
+    /// metric the CI perf gate compares against the baseline.
+    pub fn reconfigs_per_request(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.reconfigurations as f64 / self.served as f64
+        }
+    }
+
+    /// Serialize to the store's JSON layout.
+    pub fn to_json(&self) -> Value {
+        let per_model = self
+            .per_model
+            .iter()
+            .map(|(name, m)| {
+                (
+                    name.clone(),
+                    obj(vec![
+                        ("offered", Value::Num(m.offered as f64)),
+                        ("served", Value::Num(m.served as f64)),
+                        ("dropped_deadline", Value::Num(m.dropped_deadline as f64)),
+                        ("batches", Value::Num(m.batches as f64)),
+                        ("padded_slots", Value::Num(m.padded_slots as f64)),
+                        ("reconfigurations", Value::Num(m.reconfigurations as f64)),
+                        ("sim_cycles", Value::Num(m.sim_cycles as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        obj(vec![
+            ("policy", Value::Str(self.policy.clone())),
+            ("scenario", Value::Str(self.scenario.clone())),
+            ("seed", Value::Num(self.seed as f64)),
+            ("mode", Value::Str(self.mode.clone())),
+            ("offered", Value::Num(self.offered as f64)),
+            ("served", Value::Num(self.served as f64)),
+            ("dropped_deadline", Value::Num(self.dropped_deadline as f64)),
+            ("batches", Value::Num(self.batches as f64)),
+            ("padded_slots", Value::Num(self.padded_slots as f64)),
+            ("reconfigurations", Value::Num(self.reconfigurations as f64)),
+            ("model_switches", Value::Num(self.model_switches as f64)),
+            ("sim_cycles_total", Value::Num(self.sim_cycles_total as f64)),
+            ("sim_wall_us", Value::Num(self.sim_wall_us)),
+            ("throughput_rps", Value::Num(self.throughput_rps)),
+            ("queue_p50_us", Value::Num(self.queue_p50_us)),
+            ("queue_p99_us", Value::Num(self.queue_p99_us)),
+            (
+                "reconfigs_per_request",
+                Value::Num(self.reconfigs_per_request()),
+            ),
+            ("schedule_digest", Value::Str(self.schedule_digest.clone())),
+            ("per_model", Value::Obj(per_model)),
+        ])
+    }
+
+    /// Deserialize from the store's JSON layout.  `reconfigs_per_request`
+    /// is derived, so it is recomputed rather than trusted.
+    pub fn from_json(v: &Value) -> Result<BenchReport> {
+        let bad = |msg: &str| Error::Artifact(format!("bench report: {msg}"));
+        let mut per_model = BTreeMap::new();
+        let pm = v.req("per_model")?;
+        let entries = pm
+            .as_object_sorted()
+            .ok_or_else(|| bad("per_model is not an object"))?;
+        for (name, m) in entries {
+            per_model.insert(
+                name.to_string(),
+                ModelBenchStats {
+                    offered: m.req_u64("offered")?,
+                    served: m.req_u64("served")?,
+                    dropped_deadline: m.req_u64("dropped_deadline")?,
+                    batches: m.req_u64("batches")?,
+                    padded_slots: m.req_u64("padded_slots")?,
+                    reconfigurations: m.req_u64("reconfigurations")?,
+                    sim_cycles: m.req_u64("sim_cycles")?,
+                },
+            );
+        }
+        Ok(BenchReport {
+            policy: v.req_str("policy")?.to_string(),
+            scenario: v.req_str("scenario")?.to_string(),
+            seed: v.req_u64("seed")?,
+            mode: v.req_str("mode")?.to_string(),
+            offered: v.req_u64("offered")?,
+            served: v.req_u64("served")?,
+            dropped_deadline: v.req_u64("dropped_deadline")?,
+            batches: v.req_u64("batches")?,
+            padded_slots: v.req_u64("padded_slots")?,
+            reconfigurations: v.req_u64("reconfigurations")?,
+            model_switches: v.req_u64("model_switches")?,
+            sim_cycles_total: v.req_u64("sim_cycles_total")?,
+            sim_wall_us: v.req_f64("sim_wall_us")?,
+            throughput_rps: v.req_f64("throughput_rps")?,
+            queue_p50_us: v.req_f64("queue_p50_us")?,
+            queue_p99_us: v.req_f64("queue_p99_us")?,
+            schedule_digest: v.req_str("schedule_digest")?.to_string(),
+            per_model,
+        })
+    }
+
+    /// Persist under the `bench-report` record kind, keyed by `provenance`
+    /// (see [`crate::bench::bench_provenance`]).
+    pub fn save(&self, store: &PlanStore, provenance: &str) -> Result<()> {
+        store.save_document("bench-report", provenance, self.to_json())
+    }
+
+    /// Load the report persisted under `provenance`, or `None` on any
+    /// cold-start condition (the store's robustness contract).
+    pub fn load(store: &PlanStore, provenance: &str) -> Option<BenchReport> {
+        let payload = store.load_document("bench-report", provenance)?;
+        BenchReport::from_json(&payload).ok()
+    }
+
+    /// Every valid bench report persisted in `store`, sorted by
+    /// (scenario, policy, seed) — the `flex-tpu fleet status` view.
+    pub fn list(store: &PlanStore) -> Vec<BenchReport> {
+        let mut out: Vec<BenchReport> = store
+            .list_kind("bench-report")
+            .into_iter()
+            .filter_map(|(_, payload)| BenchReport::from_json(&payload).ok())
+            .collect();
+        out.sort_by(|a, b| {
+            (&a.scenario, &a.policy, a.seed).cmp(&(&b.scenario, &b.policy, b.seed))
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> BenchReport {
+        let mut per_model = BTreeMap::new();
+        per_model.insert(
+            "alexnet".to_string(),
+            ModelBenchStats {
+                offered: 10,
+                served: 9,
+                dropped_deadline: 1,
+                batches: 3,
+                padded_slots: 3,
+                reconfigurations: 5,
+                sim_cycles: 123_456,
+            },
+        );
+        BenchReport {
+            policy: "reconfig-aware".into(),
+            scenario: "mixed".into(),
+            seed: 7,
+            mode: "open".into(),
+            offered: 10,
+            served: 9,
+            dropped_deadline: 1,
+            batches: 3,
+            padded_slots: 3,
+            reconfigurations: 5,
+            model_switches: 2,
+            sim_cycles_total: 123_456,
+            sim_wall_us: 1234.5,
+            throughput_rps: 7292.83,
+            queue_p50_us: 10.25,
+            queue_p99_us: 99.75,
+            schedule_digest: "deadbeefdeadbeef".into(),
+            per_model,
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = report();
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        // Serialization itself is deterministic.
+        assert_eq!(r.to_json().to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn reconfigs_per_request_guards_zero() {
+        let mut r = report();
+        assert!((r.reconfigs_per_request() - 5.0 / 9.0).abs() < 1e-12);
+        r.served = 0;
+        assert_eq!(r.reconfigs_per_request(), 0.0);
+    }
+
+    #[test]
+    fn malformed_json_rejected() {
+        use crate::util::json::parse;
+        for bad in ["{}", r#"{"policy": "fifo"}"#] {
+            assert!(BenchReport::from_json(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn store_round_trip_and_list() {
+        let dir = std::env::temp_dir().join(format!(
+            "flex-tpu-bench-report-unit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = PlanStore::open(&dir).unwrap();
+        let r = report();
+        r.save(&store, "aaaa").unwrap();
+        let loaded = BenchReport::load(&store, "aaaa").unwrap();
+        assert_eq!(r, loaded);
+        assert!(BenchReport::load(&store, "bbbb").is_none());
+        let listed = BenchReport::list(&store);
+        assert_eq!(listed, vec![r]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -136,6 +136,38 @@ impl PlanLayer {
     }
 }
 
+/// What a fleet scheduler needs from a plan to forecast reconfiguration
+/// cost across batch boundaries: the dataflows at the plan's two ends and
+/// the number of switches one replay of the schedule performs internally.
+///
+/// Replaying a plan executes its layers in order, so every launch incurs
+/// `internal_switches` CMU reprogramming events; *entering* a launch incurs
+/// one more whenever the array's currently-loaded dataflow (the previous
+/// launch's `last`) differs from this plan's `first`.  A reconfig-aware
+/// scheduler orders launches to minimize those entry switches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReconfigForecast {
+    /// Dataflow the plan's first layer runs under (`None` for empty plans).
+    pub first: Option<Dataflow>,
+    /// Dataflow the plan's last layer runs under (`None` for empty plans).
+    pub last: Option<Dataflow>,
+    /// Dataflow changes between consecutive layers of one replay.
+    pub internal_switches: u64,
+}
+
+impl ReconfigForecast {
+    /// Reconfigurations one launch of this plan incurs when the array
+    /// currently holds `loaded` (the previous launch's last dataflow, or
+    /// `None` on the very first launch, whose configuration is free).
+    pub fn launch_switches(&self, loaded: Option<Dataflow>) -> u64 {
+        let entry = match (loaded, self.first) {
+            (Some(prev), Some(first)) if prev != first => 1,
+            _ => 0,
+        };
+        self.internal_switches + entry
+    }
+}
+
 /// A compiled, serializable deployment decision for one model.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
@@ -165,6 +197,20 @@ impl ExecutionPlan {
     /// The per-layer dataflow schedule (what the CMU gets programmed with).
     pub fn dataflows(&self) -> Vec<Dataflow> {
         self.layers.iter().map(|l| l.choice.dataflow).collect()
+    }
+
+    /// The boundary/switch summary a fleet scheduler plans with (see
+    /// [`ReconfigForecast`]).
+    pub fn reconfig_forecast(&self) -> ReconfigForecast {
+        ReconfigForecast {
+            first: self.layers.first().map(|l| l.choice.dataflow),
+            last: self.layers.last().map(|l| l.choice.dataflow),
+            internal_switches: self
+                .layers
+                .windows(2)
+                .filter(|w| w[0].choice.dataflow != w[1].choice.dataflow)
+                .count() as u64,
+        }
     }
 
     /// Total cycles had every layer run statically under `df` (first
@@ -616,6 +662,26 @@ mod tests {
         let batched = SimOptions { batch: 8, ..opts };
         let e = provenance_key(&arch(), std::slice::from_ref(&topo), batched, 1);
         assert_ne!(a, e, "batch must change the key");
+    }
+
+    #[test]
+    fn reconfig_forecast_matches_schedule() {
+        let topo = zoo::resnet18();
+        let cache = ShapeCache::new();
+        let plan = compile_plan(&arch(), &topo, SimOptions::default(), 1, &cache);
+        let f = plan.reconfig_forecast();
+        let dfs = plan.dataflows();
+        assert_eq!(f.first, dfs.first().copied());
+        assert_eq!(f.last, dfs.last().copied());
+        assert_eq!(
+            f.internal_switches,
+            dfs.windows(2).filter(|w| w[0] != w[1]).count() as u64
+        );
+        // Entering from the plan's own last dataflow charges the wrap
+        // switch only when the ends differ; the first-ever launch is free.
+        assert_eq!(f.launch_switches(None), f.internal_switches);
+        let wrap = u64::from(f.first != f.last);
+        assert_eq!(f.launch_switches(f.last), f.internal_switches + wrap);
     }
 
     #[test]

@@ -1,14 +1,14 @@
 //! The multi-model fleet server: routed, batched serving over one
-//! shared-store registry.
+//! shared-store registry, with pluggable batch scheduling.
 //!
 //! Topology of one serving run (`flex-tpu serve`):
 //!
 //! ```text
 //!             tagged requests (bounded mpsc)
 //!                        │
-//!                 ┌──────v──────┐   per-model batch formation
-//!                 │   router    │   (continuous batching light)
-//!                 └──────┬──────┘
+//!                 ┌──────v──────┐   batch formation + ordering via a
+//!                 │   router    │   SchedulePolicy (fifo / reconfig-aware
+//!                 └──────┬──────┘   / deadline-edf)
 //!           bounded batch queue (back-pressure)
 //!        ┌──────────┬────┴─────┬──────────┐
 //!        v          v          v          v
@@ -16,13 +16,27 @@
 //!        └── executes via the model's own InferenceServer ──┘
 //! ```
 //!
-//! The **router** (the caller's thread) drains the front door, groups
-//! envelopes per model — the request's `model` tag is the routing key —
-//! and emits full batches onto a bounded queue; partial batches flush
-//! whenever the front door runs momentarily dry (no request waits for
-//! strangers).  **Workers** execute whole batches through the owning
-//! model's `InferenceServer::process_batch` path — the exact code the
-//! single-model server runs, which is what makes a 1-model fleet
+//! The **router** (the caller's thread) drains the front door and feeds a
+//! [`Scheduler`] — the deterministic batch-formation state machine of
+//! [`super::scheduler`] — which decides *which* model's batch launches
+//! next and in what order.  Under the default [`SchedulePolicy::Fifo`]
+//! this is byte-identical to the PR-4 router: full batches launch the
+//! moment they fill, and partial batches flush in model-name order
+//! whenever the front door runs momentarily dry.  `ReconfigAware` keeps
+//! that liveness rule (no request waits for strangers once the door is
+//! dry) but orders ready batches to stay on the resident model and enter
+//! plans whose first dataflow matches the array's loaded one;
+//! `DeadlineEdf` launches the most urgent queue first and drops requests
+//! whose [`crate::inference::InferenceRequest::deadline_us`] budget
+//! already expired (dropped requests surface as closed response channels
+//! and per-model `deadline_misses` counts).  The full coalescing
+//! semantics of `ReconfigAware` — holding partial batches while arrivals
+//! may still coalesce — are exercised and *measured* by the simulated
+//! [`crate::bench`] driver, which owns its own clock.
+//!
+//! **Workers** execute whole batches through the owning model's
+//! `InferenceServer::process_batch` path — the exact code the
+//! single-model server runs, which is what makes a 1-model Fifo fleet
 //! byte-identical to [`crate::inference::InferenceServer`]
 //! (`rust/tests/fleet.rs`).
 //!
@@ -30,9 +44,12 @@
 //! its own request (backends are per-sample deterministic) and its
 //! *timing* only on the model's deployment, so per-model response bytes
 //! and per-model simulated cycle totals are invariant under worker count,
-//! batch formation and request interleaving.  Host-side metrics (queue
-//! latency percentiles, throughput) are measurements, not simulations,
-//! and vary run to run.
+//! batch formation, scheduling policy and request interleaving.
+//! Host-side metrics (queue latency percentiles, throughput) are
+//! measurements, not simulations, and vary run to run.  Reconfiguration
+//! counts are charged by the router at emission (the plan's internal
+//! switches plus the entry switch against the previously emitted batch),
+//! so they depend on batch formation but not on worker count.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
@@ -42,6 +59,7 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 
 use super::registry::{ModelDeployment, ModelRegistry};
+use super::scheduler::{SchedulePolicy, Scheduler};
 use super::server::Envelope;
 
 /// One formed batch travelling from the router to the worker pool.
@@ -50,6 +68,9 @@ struct FleetBatch {
     envelopes: Vec<Envelope>,
     /// Router-side arrival time of each envelope (queue-latency clock).
     enqueued: Vec<Instant>,
+    /// Reconfigurations charged to this launch by the scheduler (the
+    /// plan's internal switches + the entry switch at the batch boundary).
+    reconfigurations: u64,
 }
 
 /// Per-model serving metrics of one fleet run.
@@ -59,9 +80,14 @@ pub struct ModelServeStats {
     pub requests: u64,
     /// Batches executed for this model.
     pub batches: u64,
-    /// CMU reprogramming events: the plan's dataflow switches replayed
-    /// once per batch launch.
+    /// CMU reprogramming events charged to this model's launches: per
+    /// batch, the plan's internal dataflow switches plus the entry switch
+    /// when the previously launched batch left the array in a different
+    /// dataflow (the quantity the `reconfig-aware` policy minimizes).
     pub reconfigurations: u64,
+    /// Requests dropped because their deadline expired before launch
+    /// (`deadline-edf` policy only).
+    pub deadline_misses: u64,
     /// Simulated Flex-TPU cycles: requests × per-inference flex cycles.
     /// Invariant under worker count and request interleaving.
     pub sim_cycles_total: u64,
@@ -80,6 +106,8 @@ pub struct ModelServeStats {
 /// Aggregate statistics of one fleet serving run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetStats {
+    /// Name of the scheduling policy the router ran.
+    pub policy: String,
     /// Requests served across all models.
     pub requests: u64,
     /// Batches executed across all models.
@@ -90,6 +118,9 @@ pub struct FleetStats {
     pub unknown_model: u64,
     /// Requests dropped for malformed payloads (wrong pixel count).
     pub rejected: u64,
+    /// Requests dropped for missed deadlines, across all models
+    /// (`deadline-edf` policy only).
+    pub deadline_misses: u64,
     /// Host wall-clock of the whole run, microseconds.
     pub wall_us: u64,
     /// Per-model metrics, keyed by model name.
@@ -108,8 +139,9 @@ struct ModelAccum {
     queue_waits_us: Vec<f64>,
 }
 
-/// Nearest-rank percentile of an ascending-sorted sample.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+/// Nearest-rank percentile of an ascending-sorted sample.  Shared with
+/// the bench reporter, whose simulated queue waits use the same estimator.
+pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
@@ -139,28 +171,41 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 ///         id: 0,
 ///         model: "alexnet".to_string(),
 ///         pixels: vec![0.0; SimBackend::DIGEST_PIXELS],
+///         deadline_us: None,
 ///     },
 ///     otx,
 /// )).unwrap();
 /// drop(tx);
 /// let stats = fleet.serve(rx, 2).unwrap();
 /// assert_eq!(stats.requests, 1);
+/// assert_eq!(stats.policy, "fifo");
 /// assert_eq!(orx.recv().unwrap().model, "alexnet");
 /// ```
 #[derive(Clone)]
 pub struct FleetServer {
     registry: Arc<ModelRegistry>,
+    policy: SchedulePolicy,
 }
 
 impl FleetServer {
-    /// Fleet over a (possibly shared) registry.
+    /// Fleet over a (possibly shared) registry, scheduling FIFO.
     pub fn new(registry: Arc<ModelRegistry>) -> Self {
-        Self { registry }
+        Self::with_policy(registry, SchedulePolicy::Fifo)
+    }
+
+    /// Fleet with an explicit scheduling policy (`flex-tpu serve --policy`).
+    pub fn with_policy(registry: Arc<ModelRegistry>, policy: SchedulePolicy) -> Self {
+        Self { registry, policy }
     }
 
     /// The registry this fleet routes against.
     pub fn registry(&self) -> &Arc<ModelRegistry> {
         &self.registry
+    }
+
+    /// The scheduling policy the router consults.
+    pub fn policy(&self) -> SchedulePolicy {
+        self.policy
     }
 
     /// Serve tagged requests arriving on `rx` until the channel closes,
@@ -177,7 +222,7 @@ impl FleetServer {
         // deadlock against a full batch queue with no consumers left.
         let first_err: Mutex<Option<Error>> = Mutex::new(None);
 
-        let (unknown_model, rejected) = std::thread::scope(|scope| {
+        let (unknown_model, rejected, misses) = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(workers);
             for _ in 0..workers {
                 handles.push(scope.spawn(|| loop {
@@ -204,7 +249,7 @@ impl FleetServer {
                             let m = a.entry(batch.deployment.name.clone()).or_default();
                             m.requests += live;
                             m.batches += 1;
-                            m.reconfigurations += batch.deployment.plan_switches;
+                            m.reconfigurations += batch.reconfigurations;
                             m.sim_cycles_total += live * timing.flex_cycles;
                             m.flex_cycles = timing.flex_cycles;
                             m.host_us_sum += batch_us * live as f64;
@@ -219,7 +264,7 @@ impl FleetServer {
                     }
                 }));
             }
-            let counters = self.route(rx, &btx);
+            let counters = self.route(rx, &btx, start);
             drop(btx); // close the batch queue: workers drain, then exit
             for h in handles {
                 h.join().expect("fleet worker panicked");
@@ -232,8 +277,10 @@ impl FleetServer {
 
         let wall = start.elapsed();
         let mut stats = FleetStats {
+            policy: self.policy.name().to_string(),
             unknown_model,
             rejected,
+            deadline_misses: misses.values().sum(),
             wall_us: wall.as_micros() as u64,
             ..Default::default()
         };
@@ -242,11 +289,12 @@ impl FleetServer {
             stats.requests += m.requests;
             stats.batches += m.batches;
             stats.per_model.insert(
-                name,
+                name.clone(),
                 ModelServeStats {
                     requests: m.requests,
                     batches: m.batches,
                     reconfigurations: m.reconfigurations,
+                    deadline_misses: misses.get(&name).copied().unwrap_or(0),
                     sim_cycles_total: m.sim_cycles_total,
                     sim_flex_cycles_per_inference: m.flex_cycles,
                     queue_p50_us: percentile(&m.queue_waits_us, 0.50),
@@ -260,89 +308,124 @@ impl FleetServer {
                 },
             );
         }
+        // Models whose every request missed its deadline never executed a
+        // batch; still surface their miss counts.
+        for (name, count) in misses {
+            stats.per_model.entry(name).or_default().deadline_misses = count;
+        }
         Ok(stats)
     }
 
-    /// The router loop: drain the front door, group per model, emit full
-    /// batches; flush partial batches whenever the door runs dry (and at
-    /// close).  Returns `(unknown_model, rejected)` drop counters.
+    /// The router loop: drain the front door into the scheduler, launch
+    /// full batches as the policy dictates, and flush partial batches
+    /// whenever the door runs dry (and at close).  Returns
+    /// `(unknown_model, rejected, deadline misses per model)` counters.
     fn route(
         &self,
         rx: Receiver<Envelope>,
         btx: &SyncSender<FleetBatch>,
-    ) -> (u64, u64) {
-        type Pending = BTreeMap<String, FleetBatch>;
-        let mut pending: Pending = BTreeMap::new();
+        start: Instant,
+    ) -> (u64, u64, BTreeMap<String, u64>) {
+        let mut sched: Scheduler<(Envelope, Instant)> = Scheduler::new(self.policy);
+        // Deployments held for models with queued requests: a request
+        // joins the batch owned by ONE deployment (looked up when its
+        // queue was empty) and is validated against that owner, so a hot
+        // remove + re-register with different input geometry never mixes
+        // geometries within one batch.
+        let mut held: BTreeMap<String, Arc<ModelDeployment>> = BTreeMap::new();
         let mut unknown = 0u64;
         let mut rejected = 0u64;
+        let mut misses: BTreeMap<String, u64> = BTreeMap::new();
 
-        let flush = |pending: &mut Pending, model: &str| {
-            if let Some(batch) = pending.remove(model) {
-                if batch.envelopes.is_empty() {
-                    return; // a slot whose only request was rejected
-                }
-                // A send error means every worker is gone, which only
-                // happens after the queue closed; dropping the envelopes
-                // surfaces as receive errors at the callers.
-                let _ = btx.send(batch);
-            }
-        };
-        let flush_all = |pending: &mut Pending| {
-            let models: Vec<String> = pending.keys().cloned().collect();
-            for model in models {
-                flush(pending, &model);
-            }
-        };
-        let mut route_one = |pending: &mut Pending, env: Envelope| {
-            use std::collections::btree_map::Entry;
+        let mut admit = |sched: &mut Scheduler<(Envelope, Instant)>,
+                         held: &mut BTreeMap<String, Arc<ModelDeployment>>,
+                         env: Envelope| {
             let model = env.0.model.clone();
-            // A request joins the batch owned by ONE deployment; validate
-            // against that owner, not a fresh registry lookup — a hot
-            // remove + re-register with different input geometry must
-            // never mix geometries within one batch.
-            let slot = match pending.entry(model.clone()) {
-                Entry::Occupied(e) => e.into_mut(),
-                Entry::Vacant(e) => {
-                    let Some(dep) = self.registry.get(&model) else {
+            let vacant = sched.pending_for(&model) == 0;
+            let dep = if vacant {
+                match self.registry.get(&model) {
+                    Some(dep) => dep,
+                    None => {
                         unknown += 1;
                         return; // envelope drops; the caller sees a recv error
-                    };
-                    e.insert(FleetBatch {
-                        deployment: dep,
-                        envelopes: Vec::new(),
-                        enqueued: Vec::new(),
-                    })
+                    }
                 }
+            } else {
+                Arc::clone(held.get(&model).expect("queued model is held"))
             };
-            if env.0.pixels.len() != slot.deployment.server.input_len() {
+            if env.0.pixels.len() != dep.server.input_len() {
                 rejected += 1;
-                return;
+                return; // nothing queued: don't hold the deployment
             }
-            let batch_size = slot.deployment.server.batch() as usize;
-            slot.envelopes.push(env);
-            slot.enqueued.push(Instant::now());
-            if slot.envelopes.len() >= batch_size {
-                flush(pending, &model);
+            if vacant {
+                sched.set_profile(dep.profile());
+                held.insert(model.clone(), Arc::clone(&dep));
+            }
+            let arrival_us = start.elapsed().as_micros() as u64;
+            let deadline = env.0.deadline_us.map(|b| arrival_us.saturating_add(b));
+            sched.push(&model, arrival_us, deadline, (env, Instant::now()));
+        };
+
+        // Launch every batch the policy is willing to form right now.
+        // A send error means every worker is gone, which only happens
+        // after the queue closed; dropping the envelopes surfaces as
+        // receive errors at the callers.
+        let mut emit = |sched: &mut Scheduler<(Envelope, Instant)>,
+                        held: &mut BTreeMap<String, Arc<ModelDeployment>>,
+                        force: bool| {
+            let now_us = start.elapsed().as_micros() as u64;
+            let mut expired: Vec<(String, (Envelope, Instant))> = Vec::new();
+            while let Some(plan) = sched.pop(now_us, force, &mut expired) {
+                let dep = Arc::clone(held.get(&plan.model).expect("launched model is held"));
+                if sched.pending_for(&plan.model) == 0 {
+                    held.remove(&plan.model);
+                }
+                let mut envelopes = Vec::with_capacity(plan.items.len());
+                let mut enqueued = Vec::with_capacity(plan.items.len());
+                for item in plan.items {
+                    envelopes.push(item.item.0);
+                    enqueued.push(item.item.1);
+                }
+                let _ = btx.send(FleetBatch {
+                    deployment: dep,
+                    envelopes,
+                    enqueued,
+                    reconfigurations: plan.reconfigurations,
+                });
+            }
+            for (model, _envelope) in expired {
+                *misses.entry(model.clone()).or_insert(0) += 1;
+                if sched.pending_for(&model) == 0 {
+                    held.remove(&model);
+                }
             }
         };
 
         loop {
             match rx.try_recv() {
-                Ok(env) => route_one(&mut pending, env),
+                Ok(env) => {
+                    admit(&mut sched, &mut held, env);
+                    emit(&mut sched, &mut held, false);
+                }
                 Err(TryRecvError::Empty) => {
                     // Nothing queued: don't sit on partial batches while
-                    // blocking for the next arrival.
-                    flush_all(&mut pending);
+                    // blocking for the next arrival (liveness before
+                    // coalescing — the simulated bench driver is where
+                    // reconfig-aware batching is allowed to wait).
+                    emit(&mut sched, &mut held, true);
                     match rx.recv() {
-                        Ok(env) => route_one(&mut pending, env),
+                        Ok(env) => {
+                            admit(&mut sched, &mut held, env);
+                            emit(&mut sched, &mut held, false);
+                        }
                         Err(_) => break,
                     }
                 }
                 Err(TryRecvError::Disconnected) => break,
             }
         }
-        flush_all(&mut pending);
-        (unknown, rejected)
+        emit(&mut sched, &mut held, true);
+        (unknown, rejected, misses)
     }
 }
 

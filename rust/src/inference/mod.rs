@@ -14,7 +14,10 @@
 //! * **Fleet** ([`ModelRegistry`] + [`FleetServer`], `flex-tpu serve`):
 //!   several models deployed against one shared plan/shape store;
 //!   requests carry a model id and a router + bounded-queue worker pool
-//!   serve them with per-model metrics and runtime hot-add/remove.
+//!   serve them with per-model metrics and runtime hot-add/remove.  The
+//!   router consults a pluggable [`SchedulePolicy`]
+//!   ([`scheduler::Scheduler`]): FIFO, reconfiguration-aware coalescing,
+//!   or earliest-deadline-first with drop-and-count.
 //!
 //! Values come from a [`ModelBackend`]: [`PjrtBackend`] executes real AOT
 //! artifacts, [`SimBackend`] serves weight-less topologies (the zoo)
@@ -25,10 +28,14 @@ mod backend;
 mod fleet;
 mod registry;
 mod request;
+pub mod scheduler;
 mod server;
+
+pub(crate) use fleet::percentile;
 
 pub use backend::{ModelBackend, PjrtBackend, SimBackend};
 pub use fleet::{FleetServer, FleetStats, ModelServeStats};
 pub use registry::{ModelDeployment, ModelRegistry, PlanSource};
 pub use request::{InferenceRequest, InferenceResponse, TimingEstimate};
+pub use scheduler::{ModelProfile, SchedulePolicy, Scheduler};
 pub use server::{Envelope, InferenceServer, ServerStats};

@@ -26,11 +26,12 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 
 use crate::config::ArchConfig;
-use crate::coordinator::plan::{compile_plan, provenance_key, ExecutionPlan};
+use crate::coordinator::plan::{compile_plan, provenance_key, ExecutionPlan, ReconfigForecast};
 use crate::error::{Error, Result};
 use crate::sim::engine::SimOptions;
 use crate::sim::parallel::{CacheStats, ShapeCache};
 use crate::sim::store::PlanStore;
+use crate::sim::Dataflow;
 
 use super::backend::ModelBackend;
 use super::server::InferenceServer;
@@ -65,10 +66,25 @@ pub struct ModelDeployment {
     pub plan_source: PlanSource,
     /// Shape entries preloaded from the store at registration time.
     pub shapes_preloaded: usize,
-    /// Dataflow switches in the plan — the CMU reprogramming events one
-    /// batch replay incurs (the per-model reconfiguration metric scales
-    /// with this × batches served).
-    pub plan_switches: u64,
+    /// The plan's per-layer dataflow schedule, in execution order — what
+    /// the bench driver re-simulates at serving batch sizes.
+    pub plan_dataflows: Vec<Dataflow>,
+    /// Boundary-dataflow/switch summary the fleet scheduler plans with
+    /// (`forecast.internal_switches` is the per-replay CMU reprogramming
+    /// count; entry switches depend on the previous launch).
+    pub forecast: ReconfigForecast,
+}
+
+impl ModelDeployment {
+    /// The scheduler-facing profile of this deployment (batch geometry +
+    /// reconfiguration forecast).
+    pub fn profile(&self) -> super::scheduler::ModelProfile {
+        super::scheduler::ModelProfile {
+            model: self.name.clone(),
+            batch: self.server.batch() as usize,
+            forecast: self.forecast,
+        }
+    }
 }
 
 /// The shared-store multi-model registry (see module docs).
@@ -123,6 +139,12 @@ impl ModelRegistry {
         self.store.as_ref()
     }
 
+    /// The shared in-memory shape cache (the bench driver simulates
+    /// batch-size cost variants through it, so they memoize fleet-wide).
+    pub(crate) fn cache(&self) -> &Arc<ShapeCache> {
+        &self.cache
+    }
+
     /// Register a model: warm-load or compile its plan against the shared
     /// store/cache and deploy it.  Errors when a model of the same name is
     /// already registered (remove it first to redeploy).
@@ -155,11 +177,8 @@ impl ModelRegistry {
                 (compiled, PlanSource::Compiled)
             }
         };
-        let plan_switches = plan
-            .dataflows()
-            .windows(2)
-            .filter(|w| w[0] != w[1])
-            .count() as u64;
+        let forecast = plan.reconfig_forecast();
+        let plan_dataflows = plan.dataflows();
         let server =
             InferenceServer::with_backend(backend, self.arch, 1, &plan, Arc::clone(&self.cache))?;
         if let Some(store) = &self.store {
@@ -180,7 +199,8 @@ impl ModelRegistry {
             provenance,
             plan_source,
             shapes_preloaded,
-            plan_switches,
+            plan_dataflows,
+            forecast,
         });
         let mut models = self.models.write().expect("registry lock");
         // Re-check under the write lock (two concurrent registrations).
@@ -263,6 +283,24 @@ mod tests {
         assert!(dep.server.timing().flex_cycles > 0);
         assert!(r.get("alexnet").is_some());
         assert!(r.get("vgg13").is_none());
+    }
+
+    #[test]
+    fn deployment_exposes_plan_schedule_and_forecast() {
+        let r = registry();
+        let dep = r
+            .register(Arc::new(SimBackend::from_zoo("resnet18", 4).unwrap()))
+            .unwrap();
+        assert_eq!(dep.plan_dataflows.len(), 21, "one dataflow per layer");
+        let f = dep.forecast;
+        assert_eq!(f.first, dep.plan_dataflows.first().copied());
+        assert_eq!(f.last, dep.plan_dataflows.last().copied());
+        let switches = dep.plan_dataflows.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(f.internal_switches, switches as u64);
+        let p = dep.profile();
+        assert_eq!(p.model, "resnet18");
+        assert_eq!(p.batch, 4);
+        assert_eq!(p.forecast, f);
     }
 
     #[test]

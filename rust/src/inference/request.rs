@@ -15,6 +15,13 @@ pub struct InferenceRequest {
     pub model: String,
     /// Input image, row-major `H*W*C` f32.
     pub pixels: Vec<f32>,
+    /// Latency budget in microseconds from arrival at the router, or
+    /// `None` for best-effort.  Only enforced when the fleet runs the
+    /// `deadline-edf` scheduling policy: a request still queued past its
+    /// budget is dropped and counted (the caller observes a closed
+    /// response channel) instead of launching late.  The other policies
+    /// ignore it.
+    pub deadline_us: Option<u64>,
 }
 
 /// Simulated Flex-TPU timing attached to a response.

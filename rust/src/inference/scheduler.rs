@@ -1,0 +1,596 @@
+//! Workload-aware batch scheduling for the fleet router.
+//!
+//! PR 4's router was pure FIFO: batches flushed in plain arrival order,
+//! which on a runtime-reconfigurable TPU means every model switch between
+//! consecutive batches replays dataflow reconfigurations (and restreams
+//! the incoming model's weights) that a smarter order avoids.  Following
+//! the serving-scheduler line in PAPERS.md — Clockwork's predictable
+//! model-switch costs, ORCA's continuous batching — this module factors
+//! the *decision* ("which batch launches next, and when is a partial batch
+//! worth flushing?") out of the router into one deterministic state
+//! machine, [`Scheduler`], consulted by both the live
+//! [`crate::inference::FleetServer`] router and the simulated
+//! [`crate::bench`] driver.  One implementation, two clocks: the router
+//! feeds it host microseconds, the bench feeds it simulated cycles.
+//!
+//! Three policies ([`SchedulePolicy`]):
+//!
+//! * **Fifo** — PR 4's behaviour, bit for bit: a batch launches the moment
+//!   it fills (in fill-completion order), and partial batches flush in
+//!   model-name order whenever the caller decides the door has gone dry.
+//! * **ReconfigAware** — coalesces same-model requests: among full
+//!   batches, stay on the resident model (zero extra weight traffic),
+//!   otherwise prefer the entry whose plan begins in the currently-loaded
+//!   dataflow (forecast from [`ReconfigForecast`]), deepest queue first.
+//!   Partial batches only flush when the caller *forces* (drain); the
+//!   driver withholds force while more arrivals may still coalesce, so
+//!   every model's launch count stays at its minimum `⌈requests/batch⌉`.
+//! * **DeadlineEdf** — earliest-deadline-first: the queue holding the most
+//!   urgent request launches next, batches are filled in deadline order,
+//!   and requests whose deadline has already passed at pop time are
+//!   dropped and reported instead of launched (drop-and-count on miss).
+//!
+//! The scheduler is deliberately free of channels, threads and clocks: it
+//! is a pure data structure, which is what makes the bench's same-seed
+//! byte-identity contract (`rust/tests/bench.rs`) and the Fifo
+//! byte-identity contract (`rust/tests/fleet.rs`) testable at all.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::coordinator::plan::ReconfigForecast;
+use crate::sim::Dataflow;
+
+/// Which batch-formation/ordering policy the router runs (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulePolicy {
+    /// Plain arrival order — byte-identical to the PR-4 router.
+    #[default]
+    Fifo,
+    /// Coalesce same-model batches to minimize reconfigurations.
+    ReconfigAware,
+    /// Earliest-deadline-first with drop-and-count on missed deadlines.
+    DeadlineEdf,
+}
+
+impl SchedulePolicy {
+    /// Every policy, in CLI listing order.
+    pub const ALL: [SchedulePolicy; 3] = [
+        SchedulePolicy::Fifo,
+        SchedulePolicy::ReconfigAware,
+        SchedulePolicy::DeadlineEdf,
+    ];
+
+    /// Kebab-case name used on the CLI and in persisted bench reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulePolicy::Fifo => "fifo",
+            SchedulePolicy::ReconfigAware => "reconfig-aware",
+            SchedulePolicy::DeadlineEdf => "deadline-edf",
+        }
+    }
+
+    /// Parse a policy name (the kebab-case form, case-insensitive).
+    pub fn parse(s: &str) -> Option<SchedulePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(SchedulePolicy::Fifo),
+            "reconfig-aware" | "reconfig" => Some(SchedulePolicy::ReconfigAware),
+            "deadline-edf" | "edf" => Some(SchedulePolicy::DeadlineEdf),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Static per-model facts the scheduler plans with, extracted from the
+/// model's deployment (batch geometry) and its compiled plan (dataflow
+/// boundaries, via [`crate::coordinator::plan::ExecutionPlan::reconfig_forecast`]).
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    /// Model name (the routing key).
+    pub model: String,
+    /// Scheduling batch size of the model's deployment.
+    pub batch: usize,
+    /// The plan's boundary dataflows and internal switch count.
+    pub forecast: ReconfigForecast,
+}
+
+/// One queued request inside the scheduler.
+#[derive(Debug)]
+struct PendingItem<T> {
+    /// Global arrival sequence number (total order across models).
+    seq: u64,
+    /// Arrival time on the caller's clock.
+    arrival: u64,
+    /// Absolute deadline on the caller's clock (`None` = no deadline).
+    deadline: Option<u64>,
+    item: T,
+}
+
+/// One request of a formed batch, as handed back to the caller.
+#[derive(Debug)]
+pub struct BatchItem<T> {
+    /// Arrival time on the caller's clock (for queue-latency accounting).
+    pub arrival: u64,
+    /// The payload passed to [`Scheduler::push`].
+    pub item: T,
+}
+
+/// One formed batch, in launch order, with its reconfiguration accounting.
+#[derive(Debug)]
+pub struct BatchPlan<T> {
+    /// The model every request of this batch belongs to.
+    pub model: String,
+    /// The requests, at most the model's batch size.
+    pub items: Vec<BatchItem<T>>,
+    /// Dataflow reconfigurations this launch performs: the plan's internal
+    /// switches plus the entry switch when the array's loaded dataflow
+    /// (the previous launch's last) differs from this plan's first.
+    pub reconfigurations: u64,
+    /// Whether the entry switch above was charged.
+    pub entry_switch: bool,
+    /// Whether this launch changes the resident model (weight restream).
+    pub model_switch: bool,
+}
+
+/// The deterministic batch-formation state machine (see module docs).
+///
+/// `T` is the caller's per-request payload — the router stores response
+/// envelopes, the bench driver stores request ids — and the `u64` clock is
+/// whatever the caller measures time in, as long as arrivals, deadlines
+/// and `now` agree.
+#[derive(Debug)]
+pub struct Scheduler<T> {
+    policy: SchedulePolicy,
+    profiles: BTreeMap<String, ModelProfile>,
+    queues: BTreeMap<String, VecDeque<PendingItem<T>>>,
+    seq: u64,
+    last_model: Option<String>,
+    last_dataflow: Option<Dataflow>,
+}
+
+impl<T> Scheduler<T> {
+    /// Empty scheduler running `policy`.
+    pub fn new(policy: SchedulePolicy) -> Self {
+        Self {
+            policy,
+            profiles: BTreeMap::new(),
+            queues: BTreeMap::new(),
+            seq: 0,
+            last_model: None,
+            last_dataflow: None,
+        }
+    }
+
+    /// The policy this scheduler runs.
+    pub fn policy(&self) -> SchedulePolicy {
+        self.policy
+    }
+
+    /// Register (or replace) a model's profile.  A model must be profiled
+    /// before requests for it are pushed.
+    pub fn set_profile(&mut self, profile: ModelProfile) {
+        self.queues.entry(profile.model.clone()).or_default();
+        self.profiles.insert(profile.model.clone(), profile);
+    }
+
+    /// Whether `model` has a profile registered.
+    pub fn has_profile(&self, model: &str) -> bool {
+        self.profiles.contains_key(model)
+    }
+
+    /// Drop a model's profile and queue (hot remove).  Returns the queued
+    /// payloads so the caller can drop/fail them explicitly.
+    pub fn remove_profile(&mut self, model: &str) -> Vec<T> {
+        self.profiles.remove(model);
+        self.queues
+            .remove(model)
+            .map(|q| q.into_iter().map(|p| p.item).collect())
+            .unwrap_or_default()
+    }
+
+    /// Queue a request for `model` that arrived at `arrival`, with an
+    /// optional absolute deadline.  Panics if the model was never profiled
+    /// (the router validates against the registry before pushing).
+    pub fn push(&mut self, model: &str, arrival: u64, deadline: Option<u64>, item: T) {
+        assert!(
+            self.profiles.contains_key(model),
+            "push for unprofiled model {model:?}"
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.queues
+            .get_mut(model)
+            .expect("profiled model has a queue")
+            .push_back(PendingItem {
+                seq,
+                arrival,
+                deadline,
+                item,
+            });
+    }
+
+    /// Requests currently queued across all models.
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(VecDeque::len).sum()
+    }
+
+    /// Requests currently queued for one model.
+    pub fn pending_for(&self, model: &str) -> usize {
+        self.queues.get(model).map_or(0, VecDeque::len)
+    }
+
+    /// Move every expired request (deadline `< now`) out of the queues.
+    /// Only [`SchedulePolicy::DeadlineEdf`] enforces deadlines; the other
+    /// policies serve late requests rather than dropping them.
+    fn sweep_expired(&mut self, now: u64, expired: &mut Vec<(String, T)>) {
+        if self.policy != SchedulePolicy::DeadlineEdf {
+            return;
+        }
+        for (name, q) in self.queues.iter_mut() {
+            if !q.iter().any(|p| matches!(p.deadline, Some(d) if d < now)) {
+                continue;
+            }
+            let mut keep = VecDeque::with_capacity(q.len());
+            for p in q.drain(..) {
+                match p.deadline {
+                    Some(d) if d < now => expired.push((name.clone(), p.item)),
+                    _ => keep.push_back(p),
+                }
+            }
+            *q = keep;
+        }
+    }
+
+    /// Entry-switch cost of launching `model` next (0 or 1).
+    fn entry_cost(&self, model: &str) -> u64 {
+        match (self.last_dataflow, self.profiles[model].forecast.first) {
+            (Some(loaded), Some(first)) if loaded != first => 1,
+            _ => 0,
+        }
+    }
+
+    /// Earliest deadline queued for `model` (`u64::MAX` when none carry one).
+    fn min_deadline(&self, model: &str) -> u64 {
+        self.queues[model]
+            .iter()
+            .map(|p| p.deadline.unwrap_or(u64::MAX))
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    /// Pick the model whose batch launches next, or `None` when the policy
+    /// has nothing to launch (no full batch, and `force` not given).
+    fn select(&self, force: bool) -> Option<String> {
+        let full: Vec<&String> = self
+            .queues
+            .keys()
+            .filter(|n| self.queues[*n].len() >= self.profiles[*n].batch)
+            .collect();
+        match self.policy {
+            SchedulePolicy::Fifo => {
+                // Full batches launch in fill-completion order: the batch
+                // whose size-completing request arrived first goes first —
+                // exactly the emission order of the PR-4 router, which
+                // flushed each slot the moment it reached batch size.
+                if let Some(name) = full
+                    .iter()
+                    .min_by_key(|n| self.queues[**n][self.profiles[**n].batch - 1].seq)
+                {
+                    return Some((*name).clone());
+                }
+                if force {
+                    // Dry flush in model-name order (PR-4's `flush_all`).
+                    return self
+                        .queues
+                        .iter()
+                        .find(|(_, q)| !q.is_empty())
+                        .map(|(n, _)| n.clone());
+                }
+                None
+            }
+            SchedulePolicy::ReconfigAware => {
+                if !full.is_empty() {
+                    // Stay on the resident model while it has a full batch
+                    // (no entry switch, no weight restream)...
+                    if let Some(last) = &self.last_model {
+                        if full.iter().any(|n| *n == last) {
+                            return Some(last.clone());
+                        }
+                    }
+                    // ...otherwise the cheapest entry, deepest queue first.
+                    return full
+                        .into_iter()
+                        .min_by_key(|n| {
+                            (
+                                self.entry_cost(n),
+                                std::cmp::Reverse(self.queues[*n].len()),
+                                (*n).clone(),
+                            )
+                        })
+                        .cloned();
+                }
+                if force {
+                    // Draining: flush the fullest partial (least padding),
+                    // preferring the resident model on ties.
+                    return self
+                        .queues
+                        .iter()
+                        .filter(|(_, q)| !q.is_empty())
+                        .min_by_key(|(n, q)| {
+                            (
+                                std::cmp::Reverse(q.len()),
+                                u64::from(self.last_model.as_deref() != Some(n.as_str())),
+                                (*n).clone(),
+                            )
+                        })
+                        .map(|(n, _)| n.clone());
+                }
+                None
+            }
+            SchedulePolicy::DeadlineEdf => {
+                let urgency = |n: &String| (self.min_deadline(n), n.clone());
+                if force {
+                    // Draining: the most urgent queue launches, full or not.
+                    return self
+                        .queues
+                        .iter()
+                        .filter(|(_, q)| !q.is_empty())
+                        .map(|(n, _)| n)
+                        .min_by_key(|n| urgency(n))
+                        .cloned();
+                }
+                full.into_iter().min_by_key(|n| urgency(n)).cloned()
+            }
+        }
+    }
+
+    /// Form the next batch.  Without `force` only a full batch launches;
+    /// with it the policy's preferred partial batch flushes (the caller
+    /// decides when the door has gone dry or the run is draining).
+    ///
+    /// Under [`SchedulePolicy::DeadlineEdf`], requests whose deadline has
+    /// passed at `now` are first moved into `expired` (with their model
+    /// name) instead of ever launching — the drop-and-count contract.
+    pub fn pop(
+        &mut self,
+        now: u64,
+        force: bool,
+        expired: &mut Vec<(String, T)>,
+    ) -> Option<BatchPlan<T>> {
+        self.sweep_expired(now, expired);
+        let name = self.select(force)?;
+        let profile = &self.profiles[&name];
+        let batch = profile.batch;
+        let forecast = profile.forecast;
+        let q = self.queues.get_mut(&name).expect("selected model has a queue");
+        let items: Vec<PendingItem<T>> = if self.policy == SchedulePolicy::DeadlineEdf {
+            // Most-urgent first: order by (deadline, arrival), take a batch.
+            let mut order: Vec<(u64, u64)> = q
+                .iter()
+                .map(|p| (p.deadline.unwrap_or(u64::MAX), p.seq))
+                .collect();
+            order.sort_unstable();
+            let taken: std::collections::BTreeSet<u64> =
+                order.iter().take(batch).map(|&(_, seq)| seq).collect();
+            let mut keep = VecDeque::with_capacity(q.len());
+            let mut out = Vec::with_capacity(taken.len());
+            for p in q.drain(..) {
+                if taken.contains(&p.seq) {
+                    out.push(p);
+                } else {
+                    keep.push_back(p);
+                }
+            }
+            *q = keep;
+            out.sort_by_key(|p| (p.deadline.unwrap_or(u64::MAX), p.seq));
+            out
+        } else {
+            let n = batch.min(q.len());
+            q.drain(..n).collect()
+        };
+        debug_assert!(!items.is_empty(), "selected model had an empty queue");
+        let entry = self.entry_cost(&name) == 1;
+        let model_switch = self
+            .last_model
+            .as_deref()
+            .is_some_and(|last| last != name);
+        // One definition of the charge: the forecast's own accounting
+        // (entry_cost above is the same rule, used for *ordering*).
+        let reconfigurations = forecast.launch_switches(self.last_dataflow);
+        debug_assert_eq!(
+            reconfigurations,
+            forecast.internal_switches + u64::from(entry)
+        );
+        self.last_model = Some(name.clone());
+        if let Some(last) = forecast.last {
+            self.last_dataflow = Some(last);
+        }
+        Some(BatchPlan {
+            model: name,
+            items: items
+                .into_iter()
+                .map(|p| BatchItem {
+                    arrival: p.arrival,
+                    item: p.item,
+                })
+                .collect(),
+            reconfigurations,
+            entry_switch: entry,
+            model_switch,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn forecast(first: Dataflow, last: Dataflow, internal: u64) -> ReconfigForecast {
+        ReconfigForecast {
+            first: Some(first),
+            last: Some(last),
+            internal_switches: internal,
+        }
+    }
+
+    fn profile(name: &str, batch: usize, f: ReconfigForecast) -> ModelProfile {
+        ModelProfile {
+            model: name.to_string(),
+            batch,
+            forecast: f,
+        }
+    }
+
+    fn sched(policy: SchedulePolicy) -> Scheduler<u64> {
+        let mut s = Scheduler::new(policy);
+        s.set_profile(profile("a", 2, forecast(Dataflow::Ws, Dataflow::Os, 1)));
+        s.set_profile(profile("b", 2, forecast(Dataflow::Ws, Dataflow::Is, 3)));
+        s
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in SchedulePolicy::ALL {
+            assert_eq!(SchedulePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedulePolicy::parse("reconfig"), Some(SchedulePolicy::ReconfigAware));
+        assert_eq!(SchedulePolicy::parse("edf"), Some(SchedulePolicy::DeadlineEdf));
+        assert_eq!(SchedulePolicy::parse("lifo"), None);
+        assert_eq!(SchedulePolicy::default(), SchedulePolicy::Fifo);
+    }
+
+    #[test]
+    fn fifo_launches_in_fill_completion_order() {
+        let mut s = sched(SchedulePolicy::Fifo);
+        let mut exp = Vec::new();
+        // b fills before a despite a's head arriving first.
+        s.push("a", 0, None, 0);
+        s.push("b", 1, None, 1);
+        s.push("b", 2, None, 2);
+        let first = s.pop(3, false, &mut exp).expect("b is full");
+        assert_eq!(first.model, "b");
+        assert!(s.pop(3, false, &mut exp).is_none(), "a is only half full");
+        s.push("a", 3, None, 3);
+        let second = s.pop(4, false, &mut exp).expect("a filled");
+        assert_eq!(second.model, "a");
+        assert_eq!(second.items.len(), 2);
+        assert!(exp.is_empty());
+    }
+
+    #[test]
+    fn fifo_forced_flush_walks_name_order() {
+        let mut s = sched(SchedulePolicy::Fifo);
+        let mut exp = Vec::new();
+        s.push("b", 0, None, 0);
+        s.push("a", 1, None, 1);
+        let first = s.pop(2, true, &mut exp).unwrap();
+        let second = s.pop(2, true, &mut exp).unwrap();
+        assert_eq!((first.model.as_str(), second.model.as_str()), ("a", "b"));
+        assert!(s.pop(2, true, &mut exp).is_none());
+    }
+
+    #[test]
+    fn reconfig_aware_stays_on_resident_model() {
+        let mut s = sched(SchedulePolicy::ReconfigAware);
+        let mut exp = Vec::new();
+        for i in 0..4 {
+            s.push("a", i, None, i);
+            s.push("b", i, None, i + 10);
+        }
+        // First launch: no resident model; both full; entry cost 0 for
+        // both (nothing loaded) -> deepest queue, tie -> name order: a.
+        let first = s.pop(4, false, &mut exp).unwrap();
+        assert_eq!(first.model, "a");
+        assert!(!first.model_switch);
+        // a still has a full batch: stay resident even though b is equally
+        // full.
+        let second = s.pop(5, false, &mut exp).unwrap();
+        assert_eq!(second.model, "a");
+        assert!(!second.model_switch);
+        let third = s.pop(6, false, &mut exp).unwrap();
+        assert_eq!(third.model, "b");
+        assert!(third.model_switch);
+        // a->b boundary: b starts in WS, a ended in OS -> entry switch.
+        assert!(third.entry_switch);
+        assert_eq!(third.reconfigurations, 3 + 1);
+    }
+
+    #[test]
+    fn reconfig_aware_never_flushes_partials_unforced() {
+        let mut s = sched(SchedulePolicy::ReconfigAware);
+        let mut exp = Vec::new();
+        s.push("a", 0, None, 0);
+        s.push("b", 0, None, 1);
+        s.push("b", 1, None, 2);
+        assert_eq!(s.pop(1, false, &mut exp).unwrap().model, "b");
+        assert!(s.pop(2, false, &mut exp).is_none(), "a must wait for force");
+        let drained = s.pop(3, true, &mut exp).unwrap();
+        assert_eq!(drained.model, "a");
+        assert_eq!(drained.items.len(), 1);
+    }
+
+    #[test]
+    fn first_launch_charges_no_entry_switch() {
+        let mut s = sched(SchedulePolicy::ReconfigAware);
+        let mut exp = Vec::new();
+        s.push("b", 0, None, 0);
+        s.push("b", 1, None, 1);
+        let b = s.pop(2, false, &mut exp).unwrap();
+        assert!(!b.entry_switch, "initial configuration is free");
+        assert_eq!(b.reconfigurations, 3);
+        // Re-entering b: its plan ends in IS but begins in WS -> wrap
+        // switch charged.
+        s.push("b", 2, None, 2);
+        s.push("b", 3, None, 3);
+        let again = s.pop(4, false, &mut exp).unwrap();
+        assert!(again.entry_switch);
+        assert!(!again.model_switch);
+        assert_eq!(again.reconfigurations, 4);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_and_drops_expired() {
+        let mut s = sched(SchedulePolicy::DeadlineEdf);
+        let mut exp = Vec::new();
+        // a's lone request is the most urgent; one b request already
+        // missed its deadline at pop time.
+        s.push("b", 0, Some(5), 0);
+        s.push("b", 1, Some(100), 1);
+        s.push("b", 2, Some(50), 2);
+        s.push("a", 3, Some(20), 3);
+        let batch = s.pop(10, true, &mut exp).unwrap();
+        assert_eq!(exp.len(), 1, "deadline-5 request dropped at pop");
+        assert_eq!(exp[0].0, "b");
+        assert_eq!(batch.model, "a", "earliest live deadline wins");
+        // The b batch forms in deadline order (50 before 100).
+        let b = s.pop(11, true, &mut exp).unwrap();
+        assert_eq!(b.model, "b");
+        assert_eq!(b.items.iter().map(|i| i.item).collect::<Vec<_>>(), vec![2, 1]);
+    }
+
+    #[test]
+    fn non_edf_policies_ignore_deadlines() {
+        let mut s = sched(SchedulePolicy::Fifo);
+        let mut exp = Vec::new();
+        s.push("a", 0, Some(1), 7);
+        let b = s.pop(1_000, true, &mut exp).unwrap();
+        assert_eq!(b.items.len(), 1, "late request still served under Fifo");
+        assert!(exp.is_empty());
+    }
+
+    #[test]
+    fn remove_profile_returns_queued_items() {
+        let mut s = sched(SchedulePolicy::Fifo);
+        s.push("a", 0, None, 1);
+        s.push("a", 1, None, 2);
+        assert_eq!(s.remove_profile("a"), vec![1, 2]);
+        assert!(!s.has_profile("a"));
+        assert_eq!(s.pending(), 0);
+    }
+
+}

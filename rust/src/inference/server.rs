@@ -230,6 +230,12 @@ impl InferenceServer {
         &self.model
     }
 
+    /// The served model's layer topology (the backend's network) — what
+    /// the bench driver re-simulates at serving batch sizes.
+    pub fn topology(&self) -> &crate::topology::Topology {
+        self.backend.topology()
+    }
+
     /// The backend's scheduling batch size.
     pub fn batch(&self) -> u32 {
         self.backend.batch()
@@ -378,6 +384,7 @@ impl InferenceServer {
     ///     id: 0,
     ///     model: server.model().to_string(),
     ///     pixels: vec![0.0; 28 * 28],
+    ///     deadline_us: None,
     /// };
     /// tx.send((req, otx))?;
     /// drop(tx); // close the front door so the serving loops exit

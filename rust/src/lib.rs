@@ -42,7 +42,13 @@
 //!   deterministic simulation backend for weight-less topologies) plus
 //!   simulated Flex-TPU timing, both as a single-model server and as a
 //!   multi-model fleet ([`inference::ModelRegistry`] +
-//!   [`inference::FleetServer`]) sharing one plan/shape store.
+//!   [`inference::FleetServer`]) sharing one plan/shape store.  The fleet
+//!   router consults a pluggable [`inference::SchedulePolicy`] (FIFO /
+//!   reconfiguration-aware coalescing / earliest-deadline-first).
+//! * [`bench`] — the deterministic serving bench: seeded load traces, a
+//!   virtual-clock fleet driver, and byte-reproducible
+//!   [`bench::BenchReport`]s that CI gates against a committed baseline
+//!   (`flex-tpu bench serve` / `bench compare`).
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation (Table I/II, Fig. 1/5/6/7).
 //!
@@ -62,6 +68,7 @@
 #![deny(missing_docs)]
 
 pub mod arch;
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod cost;

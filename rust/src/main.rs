@@ -6,12 +6,18 @@
 //! flex-tpu sweep    [--size 32] [--threads 0] [--chips 4] [--plan-cache DIR]
 //! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer] [--plan-cache DIR]
 //! flex-tpu plan     <compile|show|check> --model resnet18 [--chips 4] [--plan-cache DIR]
+//! flex-tpu plan     gc --plan-cache DIR [--size 32 --size 128] [--chips 1]
 //! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|paper|all> [--size 32] [--csv DIR]
 //!                   [--plan-cache DIR]
 //! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2]
 //!                   [--chips 2] [--plan-cache DIR]
 //! flex-tpu serve    --model resnet18 --model alexnet ... [--requests 300] [--workers 4]
-//!                   [--batch 4] [--size 32] [--plan-cache DIR]
+//!                   [--batch 4] [--size 32] [--policy fifo] [--plan-cache DIR]
+//! flex-tpu bench    serve --scenario mixed --seed 7 --policy all [--requests 600]
+//!                   [--batch 4] [--size 128] [--mean-us 2000] [--mode open]
+//!                   [--deadline-us 0] [--out BENCH_PR5.json] [--plan-cache DIR]
+//! flex-tpu bench    compare [--report BENCH_PR5.json]
+//!                   [--baseline rust/tests/golden/bench_baseline.json]
 //! flex-tpu fleet    status --plan-cache DIR
 //! flex-tpu validate [--array 4] [--cases 20]
 //! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0] [--plan-cache DIR]
@@ -20,12 +26,13 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use flex_tpu::bench::{self, BenchConfig, BenchSuite, LoopMode, Scenario};
 use flex_tpu::config::{ArchConfig, SimFidelity};
 use flex_tpu::coordinator::cmu::Cmu;
 use flex_tpu::coordinator::pipeline::SelectorKind;
 use flex_tpu::coordinator::{partition, plan, select_exhaustive_cached, sweep, FlexPipeline};
 use flex_tpu::inference::{
-    FleetServer, InferenceRequest, InferenceServer, ModelRegistry, SimBackend,
+    FleetServer, InferenceRequest, InferenceServer, ModelRegistry, SchedulePolicy, SimBackend,
 };
 use flex_tpu::metrics::Table;
 use flex_tpu::report;
@@ -40,8 +47,8 @@ use flex_tpu::util::cli::{Args, Parsed};
 /// CLI-level result: any error type boxes into the exit diagnostic.
 type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
-const SUBCOMMANDS: &str =
-    "simulate | deploy | sweep | shard | plan | report | infer | serve | fleet | validate | dse";
+const SUBCOMMANDS: &str = "simulate | deploy | sweep | shard | plan | report | infer | serve | \
+                           bench | fleet | validate | dse";
 
 fn load_model(name: &str) -> CliResult<Topology> {
     if name.ends_with(".csv") {
@@ -366,11 +373,104 @@ fn cmd_shard(p: &Parsed) -> CliResult<()> {
     Ok(())
 }
 
-/// `flex-tpu plan <compile|show|check>`: manage persisted execution plans.
+/// `flex-tpu plan gc`: compact a store directory — drop `plan`/`shapes`
+/// documents whose provenance matches no live configuration, plus
+/// anything corrupt or schema-stale, and dedupe shape files.  The live
+/// set is the cross product of every `--size`, `--chips` and `--batch`
+/// occurrence (all three repeatable) over the whole zoo plus any
+/// explicitly named `--model` topologies — name every configuration you
+/// want to keep; everything else is pruned.  Report-kind records are
+/// archival and only dropped when invalid.
+fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
+    let store = open_store(p)?.ok_or("plan gc needs --plan-cache <dir>")?;
+    // Pruning is scoped by what the user *names*; never let the generic
+    // flag defaults (size 32 etc.) silently stand in for that intent and
+    // wipe every other configuration in the store.
+    if !p.is_given("size") && !p.is_given("config") {
+        return Err("plan gc prunes every plan/shapes document outside the named \
+                    configurations; pass at least one --size (repeatable) or --config, \
+                    plus --chips/--batch/--model occurrences for each combination to keep"
+            .into());
+    }
+    let memory = p.is_set("memory");
+    let sizes = p.u64_all("size")?;
+    let chips_flags = p.u64_all("chips")?;
+    let batches = p.u64_all("batch")?;
+    // Live models: the whole zoo, plus anything named explicitly (CSV
+    // topologies included; zoo names simply dedupe).
+    let mut models = zoo::all_models();
+    for name in p.all("model") {
+        let topo = load_model(&name)?;
+        if !models.iter().any(|m| m.name == topo.name) {
+            models.push(topo);
+        }
+    }
+    // Architectures: a square array per --size occurrence, plus the full
+    // TOML config when given (its memory/interconnect/clock fields are
+    // part of every provenance key, so it must be reproduced exactly).
+    let mut arches: Vec<ArchConfig> = Vec::with_capacity(sizes.len() + 1);
+    for &size in &sizes {
+        arches.push(ArchConfig::square(size as u32));
+    }
+    if let Some(path) = p.get("config") {
+        arches.push(ArchConfig::from_toml_file(path.as_ref())?);
+    }
+    let mut live = Vec::new();
+    for arch in &arches {
+        arch.validate()?;
+        for &chips_flag in &chips_flags {
+            if chips_flag > u64::from(ArchConfig::MAX_CHIPS) {
+                return Err(
+                    format!("--chips must be in 0..={}", ArchConfig::MAX_CHIPS).into()
+                );
+            }
+            let chips = if chips_flag == 0 { arch.chips } else { chips_flag as u32 };
+            for &batch in &batches {
+                let sim = opts(memory, batch as u32);
+                for topo in &models {
+                    live.push(plan::provenance_key(
+                        arch,
+                        std::slice::from_ref(topo),
+                        sim,
+                        chips,
+                    ));
+                }
+            }
+        }
+    }
+    let stats = store.compact(&live)?;
+    println!(
+        "plan gc in {}: kept {} documents; dropped {} invalid + {} unknown-provenance, \
+         removed {} temp files, deduped {} shape entries",
+        store.dir().display(),
+        stats.kept,
+        stats.dropped_invalid,
+        stats.dropped_unknown,
+        stats.tmp_removed,
+        stats.duplicates_removed,
+    );
+    println!(
+        "plan gc live set: {} keys ({} models x {} architectures (sizes {:?}{}) x chips {:?} x \
+         batches {:?})",
+        live.len(),
+        models.len(),
+        arches.len(),
+        sizes,
+        if p.get("config").is_some() { " + --config" } else { "" },
+        chips_flags,
+        batches,
+    );
+    Ok(())
+}
+
+/// `flex-tpu plan <compile|show|check|gc>`: manage persisted execution plans.
 fn cmd_plan(p: &Parsed) -> CliResult<()> {
     let action = p
         .positional(1)
-        .ok_or("plan needs an action (compile/show/check)")?;
+        .ok_or("plan needs an action (compile/show/check/gc)")?;
+    if action == "gc" {
+        return cmd_plan_gc(p);
+    }
     if p.is_set("heuristic") {
         // Heuristic plans carry a distinct provenance suffix and are only
         // produced by the deploy flow; silently compiling the exhaustive
@@ -435,7 +535,9 @@ fn cmd_plan(p: &Parsed) -> CliResult<()> {
                 stored.flex_cycles()
             );
         }
-        other => return Err(format!("unknown plan action {other:?} (compile/show/check)").into()),
+        other => {
+            return Err(format!("unknown plan action {other:?} (compile/show/check/gc)").into())
+        }
     }
     Ok(())
 }
@@ -576,6 +678,7 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
                 id,
                 model: model.clone(),
                 pixels,
+                deadline_us: None,
             };
             tx.send((req, otx)).expect("server alive");
             response_rxs.push(orx);
@@ -616,6 +719,8 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
     let requests = p.u64("requests")?;
     let workers = p.threads("workers")?;
     let batch = p.u32("batch")?.max(1);
+    let policy = SchedulePolicy::parse(p.req("policy")?)
+        .ok_or("bad --policy (fifo/reconfig-aware/deadline-edf)")?;
     let mut names: Vec<String> = Vec::new();
     for name in p.all("model") {
         if names.contains(&name) {
@@ -624,6 +729,9 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         names.push(name);
     }
     let registry = Arc::new(ModelRegistry::new(arch, open_store(p)?)?);
+    // Route by the *registered* name (a CSV path registers under its
+    // topology name, which is what the fleet's routing key is).
+    let mut routed: Vec<String> = Vec::with_capacity(names.len());
     for name in &names {
         let topo = load_model(name)?;
         let dep = registry.register(Arc::new(SimBackend::new(topo, batch)))?;
@@ -634,8 +742,10 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
             dep.shapes_preloaded,
             dep.server.timing().flex_cycles
         );
+        routed.push(dep.name.clone());
     }
-    let fleet = FleetServer::new(Arc::clone(&registry));
+    let names = routed;
+    let fleet = FleetServer::with_policy(Arc::clone(&registry), policy);
 
     // Bounded front door (a few compiled batches per model), deterministic
     // synthetic traffic interleaved round-robin across the fleet.
@@ -655,6 +765,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
                 id,
                 model: model.clone(),
                 pixels,
+                deadline_us: None,
             };
             tx.send((req, otx)).expect("fleet alive");
             response_rxs.push((model, orx));
@@ -681,6 +792,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         "Batches",
         "Reconfigs",
         "Sim Cycles",
+        "Deadline Misses",
         "p50 Queue (us)",
         "p99 Queue (us)",
         "Host req/s",
@@ -692,6 +804,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
             m.batches.to_string(),
             m.reconfigurations.to_string(),
             m.sim_cycles_total.to_string(),
+            m.deadline_misses.to_string(),
             format!("{:.0}", m.queue_p50_us),
             format!("{:.0}", m.queue_p99_us),
             format!("{:.1}", m.host_throughput_rps),
@@ -703,6 +816,10 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         stats.requests,
         stats.batches,
         names.len()
+    );
+    println!(
+        "fleet policy: {} ({} deadline misses)",
+        stats.policy, stats.deadline_misses
     );
     if delivered != requests || cross_routed != 0 || stats.requests != requests {
         return Err(format!(
@@ -727,9 +844,154 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
     Ok(())
 }
 
+/// `flex-tpu bench serve`: the deterministic serving bench — generate a
+/// seeded trace, drive the simulated fleet under one or all scheduling
+/// policies, print the comparison and write the suite JSON (the CI perf
+/// gate's input).  Same seed, same config ⇒ byte-identical output.
+fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
+    let arch = arch_from(p)?;
+    let batch = p.u32("batch")?.max(1);
+    let scenario =
+        Scenario::parse(p.req("scenario")?).ok_or("bad --scenario (mixed/bursty/skewed)")?;
+    let mode = LoopMode::parse(p.req("mode")?).ok_or("bad --mode (open/closed)")?;
+    let policy_flag = p.req("policy")?;
+    let policies: Vec<SchedulePolicy> = if policy_flag == "all" {
+        SchedulePolicy::ALL.to_vec()
+    } else {
+        vec![SchedulePolicy::parse(policy_flag)
+            .ok_or("bad --policy (fifo/reconfig-aware/deadline-edf/all)")?]
+    };
+    let deadline = p.u64("deadline-us")?;
+    let mut names: Vec<String> = Vec::new();
+    for name in p.all("model") {
+        if names.contains(&name) {
+            return Err(format!("model {name:?} given more than once").into());
+        }
+        names.push(name);
+    }
+    let registry = Arc::new(ModelRegistry::new(arch, open_store(p)?)?);
+    // Bench by the *registered* name (a CSV path registers under its
+    // topology name, which is the registry's routing key).
+    let mut routed: Vec<String> = Vec::with_capacity(names.len());
+    for name in &names {
+        let topo = load_model(name)?;
+        let dep = registry.register(Arc::new(SimBackend::new(topo, batch)))?;
+        routed.push(dep.name.clone());
+    }
+    let names = routed;
+    let cfg = BenchConfig {
+        scenario,
+        seed: p.u64("seed")?,
+        requests: p.u64("requests")?,
+        mean_interarrival_us: p.u64("mean-us")?,
+        models: names.clone(),
+        policy: policies[0],
+        mode,
+        concurrency: p.u64("concurrency")?,
+        deadline_us: if deadline > 0 { Some(deadline) } else { None },
+    };
+    let suite = BenchSuite::run(&registry, &cfg, &policies)?;
+
+    let mut t = Table::new(&[
+        "Policy",
+        "Served",
+        "Dropped",
+        "Batches",
+        "Padded",
+        "Reconfigs",
+        "Switches",
+        "p50 Queue (us)",
+        "p99 Queue (us)",
+        "Sim req/s",
+    ]);
+    for r in &suite.reports {
+        t.row(vec![
+            r.policy.clone(),
+            r.served.to_string(),
+            r.dropped_deadline.to_string(),
+            r.batches.to_string(),
+            r.padded_slots.to_string(),
+            r.reconfigurations.to_string(),
+            r.model_switches.to_string(),
+            format!("{:.0}", r.queue_p50_us),
+            format!("{:.0}", r.queue_p99_us),
+            format!("{:.1}", r.throughput_rps),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "bench: scenario {scenario}, seed {}, {} requests over {} models ({}x{} array, batch \
+         {batch}, {} loop, mean gap {} us)",
+        cfg.seed,
+        cfg.requests,
+        names.len(),
+        arch.array_rows,
+        arch.array_cols,
+        mode,
+        cfg.mean_interarrival_us,
+    );
+    if let (Some(fifo), Some(ra)) = (suite.report("fifo"), suite.report("reconfig-aware")) {
+        println!(
+            "reconfig-aware vs fifo: {:.2}x throughput, {} vs {} reconfigurations, {} vs {} \
+             model switches",
+            ra.throughput_rps / fifo.throughput_rps,
+            ra.reconfigurations,
+            fifo.reconfigurations,
+            ra.model_switches,
+            fifo.model_switches,
+        );
+    }
+    if let Some(store) = registry.store() {
+        let keys = bench::save_suite(&registry, store, &cfg, &suite)?;
+        println!(
+            "bench cache: saved {} report(s) to {}",
+            keys.len(),
+            store.dir().display()
+        );
+    }
+    let out = p.req("out")?;
+    std::fs::write(out, format!("{}\n", suite.to_json()))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// `flex-tpu bench compare`: the CI perf gate — compare a fresh suite
+/// JSON against the committed baseline and fail on regression.
+fn cmd_bench_compare(p: &Parsed) -> CliResult<()> {
+    let parse_suite = |path: &str| -> CliResult<BenchSuite> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read bench suite {path}: {e}"))?;
+        Ok(BenchSuite::from_json(&flex_tpu::util::json::parse(&text)?)?)
+    };
+    let report_path = p.req("report")?;
+    let baseline_path = p.req("baseline")?;
+    let current = parse_suite(report_path)?;
+    let baseline = parse_suite(baseline_path)?;
+    match bench::gate(&current, &baseline) {
+        Ok(passed) => {
+            for line in passed {
+                println!("ok: {line}");
+            }
+            println!("bench gate: PASS ({report_path} vs {baseline_path})");
+            Ok(())
+        }
+        Err(e) => Err(format!("bench gate: FAIL — {e}").into()),
+    }
+}
+
+/// `flex-tpu bench <serve|compare>` dispatcher.
+fn cmd_bench(p: &Parsed) -> CliResult<()> {
+    match p.positional(1) {
+        Some("serve") => cmd_bench_serve(p),
+        Some("compare") => cmd_bench_compare(p),
+        other => Err(format!("bench needs an action (serve/compare), got {other:?}").into()),
+    }
+}
+
 /// `flex-tpu fleet status`: inspect a shared store directory — every
-/// persisted plan (one row per model × configuration), plus shape and
-/// report document counts.  Pure reads: no simulation, no writes.
+/// persisted plan (one row per model × configuration), plus bench
+/// reports (scheduling policy, deadline misses) and shape/report
+/// document counts.  Pure reads: no simulation, no writes.
 fn cmd_fleet(p: &Parsed) -> CliResult<()> {
     let action = p.positional(1).ok_or("fleet needs an action (status)")?;
     match action {
@@ -755,6 +1017,43 @@ fn cmd_fleet(p: &Parsed) -> CliResult<()> {
                 ]);
             }
             println!("{}", t.render());
+            // Persisted bench runs: the store's view of serving activity —
+            // which policy ran, and who missed deadlines.
+            let benches = bench::BenchReport::list(&store);
+            if !benches.is_empty() {
+                let mut bt = Table::new(&[
+                    "Scenario",
+                    "Policy",
+                    "Mode",
+                    "Seed",
+                    "Served",
+                    "Reconfigs",
+                    "Sim req/s",
+                    "Deadline Misses (per model)",
+                ]);
+                for b in &benches {
+                    let mut misses: Vec<String> = b
+                        .per_model
+                        .iter()
+                        .filter(|(_, m)| m.dropped_deadline > 0)
+                        .map(|(name, m)| format!("{name}:{}", m.dropped_deadline))
+                        .collect();
+                    if misses.is_empty() {
+                        misses.push("none".to_string());
+                    }
+                    bt.row(vec![
+                        b.scenario.clone(),
+                        b.policy.clone(),
+                        b.mode.clone(),
+                        b.seed.to_string(),
+                        b.served.to_string(),
+                        b.reconfigurations.to_string(),
+                        format!("{:.1}", b.throughput_rps),
+                        misses.join(" "),
+                    ]);
+                }
+                println!("{}", bt.render());
+            }
             let shape_docs = store.list_kind("shapes");
             let shape_entries: usize = shape_docs
                 .iter()
@@ -763,10 +1062,11 @@ fn cmd_fleet(p: &Parsed) -> CliResult<()> {
             let reports =
                 store.list_kind("report-table1").len() + store.list_kind("report-dse").len();
             println!(
-                "fleet store {}: {} plans, {} shape documents ({shape_entries} entries), {reports} report documents",
+                "fleet store {}: {} plans, {} shape documents ({shape_entries} entries), {reports} report documents, {} bench reports",
                 store.dir().display(),
                 plans.len(),
                 shape_docs.len(),
+                benches.len(),
             );
         }
         other => return Err(format!("unknown fleet action {other:?} (status)").into()),
@@ -894,6 +1194,28 @@ fn main() -> CliResult<()> {
         None,
         "persist compiled plans + shape cache in this directory (cross-run warm starts)",
     )
+    .flag(
+        "policy",
+        Some("fifo"),
+        "fleet scheduling policy: fifo / reconfig-aware / deadline-edf (bench serve also: all)",
+    )
+    .flag("scenario", Some("mixed"), "bench trace shape: mixed / bursty / skewed")
+    .flag("seed", Some("7"), "bench trace seed (same seed = byte-identical report)")
+    .flag("mean-us", Some("2000"), "bench mean inter-arrival gap in microseconds")
+    .flag("mode", Some("open"), "bench pacing: open (offered load) / closed (capacity)")
+    .flag("concurrency", Some("32"), "outstanding requests in closed-loop bench mode")
+    .flag(
+        "deadline-us",
+        Some("0"),
+        "per-request latency budget in microseconds for the bench trace (0 = none)",
+    )
+    .flag("out", Some("BENCH_PR5.json"), "where bench serve writes the suite JSON")
+    .flag("report", Some("BENCH_PR5.json"), "fresh suite JSON for bench compare")
+    .flag(
+        "baseline",
+        Some("rust/tests/golden/bench_baseline.json"),
+        "committed baseline JSON for bench compare",
+    )
     .switch("memory", "enable the SRAM/DRAM stall model")
     .switch("per-layer", "print per-layer detail")
     .switch("heuristic", "use the shape-heuristic selector (future-work mode)");
@@ -914,6 +1236,7 @@ fn main() -> CliResult<()> {
         Some("report") => cmd_report(&parsed),
         Some("infer") => cmd_infer(&parsed),
         Some("serve") => cmd_serve(&parsed),
+        Some("bench") => cmd_bench(&parsed),
         Some("fleet") => cmd_fleet(&parsed),
         Some("validate") => cmd_validate(&parsed),
         Some("dse") => cmd_dse(&parsed),

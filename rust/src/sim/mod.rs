@@ -39,7 +39,7 @@ pub use engine::{simulate_layer, simulate_network, LayerStats, NetworkStats};
 pub use gemm::{layer_gemms, layer_gemms_batched, DwMapping, Gemm};
 pub use parallel::{parallel_map, CacheStats, ShapeCache};
 pub use shard::{simulate_layer_sharded, ShardStrategy, ShardedLayerStats};
-pub use store::{DocSource, PlanStore};
+pub use store::{CompactStats, DocSource, PlanStore};
 
 
 /// The three systolic dataflows of the paper (and the CMU's alphabet).

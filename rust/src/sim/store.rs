@@ -70,6 +70,22 @@ impl std::fmt::Display for DocSource {
 /// recompute, never a misparse.
 pub const STORE_SCHEMA_VERSION: u64 = 1;
 
+/// What one [`PlanStore::compact`] pass did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompactStats {
+    /// Documents that survived the pass.
+    pub kept: usize,
+    /// Corrupt / schema-stale / mislabelled documents removed.
+    pub dropped_invalid: usize,
+    /// `plan`/`shapes` documents removed because their provenance matched
+    /// no live configuration.
+    pub dropped_unknown: usize,
+    /// Crashed writers' staged temp files removed.
+    pub tmp_removed: usize,
+    /// Duplicate shape entries collapsed inside surviving documents.
+    pub duplicates_removed: usize,
+}
+
 /// A directory of versioned, provenance-keyed JSON documents.
 ///
 /// ```no_run
@@ -185,6 +201,113 @@ impl PlanStore {
         }
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
+    }
+
+    /// Garbage-collect the store directory (`flex-tpu plan gc`).
+    ///
+    /// Store directories only ever grow: every architecture × model ×
+    /// option combination leaves a `plan`/`shapes` document behind, and a
+    /// crashed writer can leave a staged temp file.  One compact pass:
+    ///
+    /// * removes **abandoned** writer temp files (`.<kind>-<prov>.tmp.*`
+    ///   older than an hour — a live writer renames within milliseconds,
+    ///   so fresh staged files are left for their owners);
+    /// * removes documents that no longer load — corrupt, truncated,
+    ///   schema-stale, or stamped with a kind/provenance that disagrees
+    ///   with their file name (the same conditions reads treat as cold);
+    /// * removes `plan` and `shapes` documents whose provenance is not in
+    ///   `live` — the caller computes the live set from the
+    ///   configurations it still cares about (an empty set drops them
+    ///   all).  Other record kinds (reports, bench results) are archival
+    ///   and only dropped when invalid;
+    /// * deduplicates entries inside each surviving `shapes` document
+    ///   (byte-identical entries collapse to one; the file is rewritten
+    ///   atomically only when something was removed).
+    ///
+    /// A compacted store warm-starts exactly like the original for every
+    /// live provenance (`rust/tests/store.rs`).
+    pub fn compact(&self, live: &[String]) -> Result<CompactStats> {
+        use std::collections::HashSet;
+        use std::time::{Duration, SystemTime};
+        let live: HashSet<&str> = live.iter().map(String::as_str).collect();
+        let mut stats = CompactStats::default();
+        // Snapshot the listing first: the dedupe pass below rewrites files
+        // (temp + rename) while we work, and a live readdir cursor could
+        // surface those transient temp names mid-scan.
+        let entries: Vec<std::fs::DirEntry> = std::fs::read_dir(&self.dir)?.flatten().collect();
+        for entry in entries {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let path = entry.path();
+            if name.starts_with('.') && name.contains(".tmp.") {
+                // A staged write.  Only reap it when clearly abandoned: a
+                // live writer stages and renames within milliseconds, so
+                // an old mtime means its process died mid-save.  (Temp
+                // names are unique per writer, so racing a *live* writer
+                // is the only hazard, and the age guard removes it.)
+                let abandoned = entry
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| SystemTime::now().duration_since(t).ok())
+                    .is_some_and(|age| age > Duration::from_secs(3600));
+                if abandoned {
+                    std::fs::remove_file(&path)?;
+                    stats.tmp_removed += 1;
+                }
+                continue;
+            }
+            let Some(stem) = name.strip_suffix(".json") else {
+                continue; // not a store document; leave foreign files alone
+            };
+            // Identify the document from its own envelope stamps — kinds
+            // (`report-table1`) and provenances (the heuristic pipeline's
+            // `-heuristic` suffix) may both contain '-', so the file name
+            // alone is ambiguous.  The name must then agree with the
+            // stamps exactly, which is what reads require anyway.
+            let doc = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|text| parse(&text).ok());
+            let stamps = doc.as_ref().and_then(|d| {
+                if d.req_u64("schema").ok()? != STORE_SCHEMA_VERSION {
+                    return None;
+                }
+                let kind = d.req_str("kind").ok()?;
+                let prov = d.req_str("provenance").ok()?;
+                if prov.is_empty() || stem != format!("{kind}-{prov}") {
+                    return None;
+                }
+                d.get("payload")?;
+                Some((kind.to_string(), prov.to_string()))
+            });
+            let Some((kind, prov)) = stamps else {
+                std::fs::remove_file(&path)?;
+                stats.dropped_invalid += 1;
+                continue;
+            };
+            if matches!(kind.as_str(), "plan" | "shapes") && !live.contains(prov.as_str()) {
+                std::fs::remove_file(&path)?;
+                stats.dropped_unknown += 1;
+                continue;
+            }
+            if kind == "shapes" {
+                let payload = doc.as_ref().and_then(|d| d.get("payload"));
+                if let Some(items) = payload.and_then(Value::as_array) {
+                    let mut seen = HashSet::new();
+                    let deduped: Vec<Value> = items
+                        .iter()
+                        .filter(|item| seen.insert(item.to_string()))
+                        .cloned()
+                        .collect();
+                    if deduped.len() < items.len() {
+                        stats.duplicates_removed += items.len() - deduped.len();
+                        self.save_document(&kind, &prov, Value::Arr(deduped))?;
+                    }
+                }
+            }
+            stats.kept += 1;
+        }
+        Ok(stats)
     }
 
     /// Preload every persisted shape entry for `provenance` into `cache`
@@ -529,6 +652,98 @@ mod tests {
         // `report` must not pick up `report-table1` files.
         assert!(store.list_kind("report").is_empty());
         assert_eq!(store.list_kind("report-table1").len(), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    /// Backdate a file so compact sees it as abandoned.
+    fn age_file(path: &Path) {
+        let f = std::fs::OpenOptions::new().write(true).open(path).unwrap();
+        f.set_modified(std::time::SystemTime::now() - std::time::Duration::from_secs(2 * 3600))
+            .unwrap();
+    }
+
+    #[test]
+    fn compact_keeps_dashed_provenances_it_knows() {
+        // The heuristic pipeline suffixes provenances with `-heuristic`,
+        // so compact must identify documents from their envelope stamps,
+        // not by splitting the file name at a dash.
+        let store = tmp_store("dashed");
+        store
+            .save_document("plan", "abcd-heuristic", Value::Str("h".into()))
+            .unwrap();
+        let stats = store.compact(&["abcd-heuristic".to_string()]).unwrap();
+        assert_eq!(stats.kept, 1);
+        assert_eq!(stats.dropped_invalid, 0);
+        assert!(store.load_document("plan", "abcd-heuristic").is_some());
+        // And an unknown dashed provenance is dropped as unknown, not as
+        // corrupt.
+        let gone = store.compact(&[]).unwrap();
+        assert_eq!(gone.dropped_unknown, 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn compact_prunes_stale_and_unknown_keeps_live_and_reports() {
+        let store = tmp_store("compact");
+        store.save_document("plan", "aaaa", Value::Str("live".into())).unwrap();
+        store.save_document("plan", "bbbb", Value::Str("dead".into())).unwrap();
+        store.save_document("shapes", "aaaa", Value::Arr(vec![])).unwrap();
+        store
+            .save_document("report-table1", "cccc", Value::Str("report".into()))
+            .unwrap();
+        // Corrupt document + crashed-writer litter (old) + a staged write
+        // some live writer made a moment ago (must survive).
+        std::fs::write(store.dir().join("plan-dddd.json"), "{{{").unwrap();
+        let stale_tmp = store.dir().join(".plan-x.tmp.1.2");
+        std::fs::write(&stale_tmp, "partial").unwrap();
+        age_file(&stale_tmp);
+        let fresh_tmp = store.dir().join(".plan-y.tmp.3.4");
+        std::fs::write(&fresh_tmp, "staging").unwrap();
+        let live = vec!["aaaa".to_string()];
+        let stats = store.compact(&live).unwrap();
+        assert_eq!(stats.kept, 3, "live plan + live shapes + report");
+        assert_eq!(stats.dropped_unknown, 1, "plan-bbbb");
+        assert_eq!(stats.dropped_invalid, 1, "corrupt plan-dddd");
+        assert_eq!(stats.tmp_removed, 1, "only the abandoned temp file");
+        assert!(!stale_tmp.exists());
+        assert!(fresh_tmp.exists(), "a live writer's staged file survives");
+        assert!(store.load_document("plan", "aaaa").is_some());
+        assert!(store.load_document("plan", "bbbb").is_none());
+        assert!(store.load_document("report-table1", "cccc").is_some());
+        // Idempotent: a second pass keeps everything.
+        let again = store.compact(&live).unwrap();
+        assert_eq!(again.kept, 3);
+        assert_eq!(
+            (again.dropped_invalid, again.dropped_unknown, again.tmp_removed),
+            (0, 0, 0)
+        );
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn compact_dedupes_shape_entries() {
+        let store = tmp_store("dedupe");
+        let arch = ArchConfig::square(8);
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let layer = &zoo::alexnet().layers[0];
+        cache.simulate_layer(&arch, layer, Dataflow::Os, opts);
+        store.save_shapes("pp", &cache).unwrap();
+        // Duplicate the single entry by hand.
+        let payload = store.load_document("shapes", "pp").unwrap();
+        let entry = payload.as_array().unwrap()[0].clone();
+        store
+            .save_document("shapes", "pp", Value::Arr(vec![entry.clone(), entry]))
+            .unwrap();
+        let stats = store.compact(&["pp".to_string()]).unwrap();
+        assert_eq!(stats.duplicates_removed, 1);
+        assert_eq!(
+            store.load_document("shapes", "pp").unwrap().as_array().unwrap().len(),
+            1
+        );
+        // The deduped file still warm-loads.
+        let warm = ShapeCache::new();
+        assert_eq!(store.load_shapes("pp", &warm), 1);
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

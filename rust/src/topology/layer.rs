@@ -186,6 +186,21 @@ impl Topology {
         self.layers.iter().map(Layer::macs).sum()
     }
 
+    /// Bytes of filter weights as mapped (`fh*fw*C*num_filters` per layer
+    /// — for depthwise rows `num_filters` is 1, which is exactly the
+    /// per-channel filter count, so the sum is the true weight footprint).
+    /// This is what a fleet streams over the host link when it switches
+    /// the resident model (Clockwork-style model-load cost).
+    pub fn filter_bytes(&self, bytes_per_element: u64) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.filt_h as u64 * l.filt_w as u64 * l.channels as u64 * l.num_filters as u64
+            })
+            .sum::<u64>()
+            * bytes_per_element
+    }
+
     /// Number of compute layers.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
@@ -221,6 +236,20 @@ mod tests {
         // 112*112 out pixels * 9 taps * 32 channels
         assert_eq!(dw.macs(), 112 * 112 * 9 * 32);
         assert_eq!(dw.out_channels(), 32);
+    }
+
+    #[test]
+    fn filter_bytes_counts_weights_once() {
+        let t = Topology::new(
+            "t",
+            vec![
+                Layer::conv("c", 10, 10, 3, 3, 4, 8, 1), // 3*3*4*8 = 288
+                Layer::dwconv("dw", 10, 10, 3, 3, 4, 1), // 3*3*4*1 = 36
+                Layer::fc("fc", 16, 10),                 // 16*10 = 160
+            ],
+        );
+        assert_eq!(t.filter_bytes(1), 288 + 36 + 160);
+        assert_eq!(t.filter_bytes(2), 2 * (288 + 36 + 160));
     }
 
     #[test]

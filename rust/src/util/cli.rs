@@ -206,6 +206,20 @@ impl Parsed {
         Ok(self.u64(name)? as u32)
     }
 
+    /// Every occurrence of a repeatable flag parsed as u64, in
+    /// command-line order (`plan gc --size 16 --size 32`); the declared
+    /// default when never given.
+    pub fn u64_all(&self, name: &str) -> Result<Vec<u64>> {
+        self.all(name)
+            .iter()
+            .map(|v| {
+                v.parse().map_err(|_| {
+                    Error::InvalidConfig(format!("--{name} must be an integer, got {v:?}"))
+                })
+            })
+            .collect()
+    }
+
     /// A worker-count flag: parses as an integer and resolves the `0`
     /// ("auto") convention to all available cores through the one
     /// definition in [`crate::sim::parallel::effective_threads`], so no
@@ -219,6 +233,13 @@ impl Parsed {
     /// Whether a boolean switch was given.
     pub fn is_set(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    /// Whether a value flag was given explicitly on the command line (as
+    /// opposed to falling back to its declared default) — for commands
+    /// where a default must not silently stand in for user intent.
+    pub fn is_given(&self, name: &str) -> bool {
+        self.values.get(name).is_some_and(|v| !v.is_empty())
     }
 
     /// The `idx`-th positional argument.
@@ -287,6 +308,27 @@ mod tests {
         let d = spec().parse(&argv(&["run"])).unwrap();
         assert_eq!(d.all("model"), vec!["resnet18".to_string()]);
         assert_eq!(d.all("size"), vec!["32".to_string()]);
+    }
+
+    #[test]
+    fn is_given_distinguishes_explicit_from_default() {
+        let p = spec().parse(&argv(&["run", "--size", "8"])).unwrap();
+        assert!(p.is_given("size"));
+        assert!(!p.is_given("model"), "default does not count as given");
+        assert_eq!(p.get("model"), Some("resnet18"), "default still resolves");
+    }
+
+    #[test]
+    fn u64_all_parses_each_occurrence() {
+        let p = spec()
+            .parse(&argv(&["run", "--size", "16", "--size=32"]))
+            .unwrap();
+        assert_eq!(p.u64_all("size").unwrap(), vec![16, 32]);
+        // Defaults surface as a one-element list; bad values error.
+        let d = spec().parse(&argv(&["run"])).unwrap();
+        assert_eq!(d.u64_all("size").unwrap(), vec![32]);
+        let bad = spec().parse(&argv(&["run", "--size", "big"])).unwrap();
+        assert!(bad.u64_all("size").is_err());
     }
 
     #[test]

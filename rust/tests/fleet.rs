@@ -14,6 +14,12 @@
 //!    cheaper to cold-start than N isolated deployments;
 //! 5. **hot add/remove** — models register and retire while the fleet is
 //!    serving, without disturbing in-flight traffic.
+//!
+//! PR 5 adds the scheduling-policy layer: the default-policy fleet (the
+//! byte-identity baseline above) **is** the Fifo policy, response *values*
+//! are invariant under every policy (scheduling reorders batches, never
+//! rewrites them), and `deadline-edf` accounting closes (served + missed
+//! + dropped == offered).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -23,7 +29,7 @@ use std::sync::Arc;
 use flex_tpu::config::ArchConfig;
 use flex_tpu::inference::{
     Envelope, FleetServer, FleetStats, InferenceRequest, InferenceResponse, InferenceServer,
-    ModelRegistry, PlanSource, SimBackend,
+    ModelRegistry, PlanSource, SchedulePolicy, SimBackend,
 };
 use flex_tpu::sim::PlanStore;
 
@@ -43,6 +49,7 @@ fn request(id: u64, model: &str) -> InferenceRequest {
         id,
         model: model.to_string(),
         pixels,
+        deadline_us: None,
     }
 }
 
@@ -338,6 +345,107 @@ fn hot_add_and_remove_while_serving() {
 }
 
 #[test]
+fn explicit_fifo_policy_is_the_default_fleet() {
+    // `FleetServer::new` and `with_policy(Fifo)` are the same router: the
+    // PR-4 byte-identity contract transfers to the policy layer verbatim.
+    let arch = ArchConfig::square(16);
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    registry
+        .register(Arc::new(SimBackend::from_zoo("alexnet", 4).unwrap()))
+        .unwrap();
+    let requests: Vec<_> = (0..17).map(|id| request(id, "alexnet")).collect();
+    let default_fleet = FleetServer::new(Arc::clone(&registry));
+    let fifo_fleet = FleetServer::with_policy(Arc::clone(&registry), SchedulePolicy::Fifo);
+    assert_eq!(default_fleet.policy(), SchedulePolicy::Fifo);
+    let (want, want_stats) = serve_fleet(&default_fleet, &requests, 2);
+    let (got, got_stats) = serve_fleet(&fifo_fleet, &requests, 2);
+    assert_eq!(want, got);
+    assert_eq!(want_stats.policy, "fifo");
+    assert_eq!(got_stats.per_model["alexnet"].requests, 17);
+    assert_eq!(got_stats.deadline_misses, 0);
+}
+
+#[test]
+fn response_values_are_invariant_under_every_policy() {
+    // Scheduling reorders batches; it must never change what any request
+    // computes.  Same mixed stream through all three policies: the sorted
+    // response sets are identical, every request is served (no deadlines
+    // set), and the stats are stamped with the right policy name.
+    let arch = ArchConfig::square(16);
+    let names = ["alexnet", "mobilenet", "vgg13"];
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    for name in names {
+        registry
+            .register(Arc::new(SimBackend::from_zoo(name, 3).unwrap()))
+            .unwrap();
+    }
+    let requests: Vec<_> = (0..27u64)
+        .map(|id| request(id, names[(id as usize) % 3]))
+        .collect();
+    let mut baseline: Option<Vec<InferenceResponse>> = None;
+    for policy in SchedulePolicy::ALL {
+        let fleet = FleetServer::with_policy(Arc::clone(&registry), policy);
+        let (responses, stats) = serve_fleet(&fleet, &requests, 3);
+        assert_eq!(stats.policy, policy.name());
+        assert_eq!(stats.requests, 27, "{policy}");
+        assert_eq!(stats.deadline_misses, 0, "{policy}: no deadlines set");
+        assert!(
+            stats.per_model.values().all(|m| m.reconfigurations > 0),
+            "{policy}: reconfiguration accounting must be live"
+        );
+        match &baseline {
+            None => baseline = Some(responses),
+            Some(want) => assert_eq!(&responses, want, "{policy} changed response values"),
+        }
+    }
+}
+
+#[test]
+fn edf_accounting_closes_under_tight_deadlines() {
+    // Every request carries a 1 µs budget: whether each one launches in
+    // time is host-timing luck, but the books must always close — every
+    // request is either served or counted as a deadline miss, and a
+    // missed request's response channel reads as closed, never as a hang.
+    let arch = ArchConfig::square(8);
+    let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
+    registry
+        .register(Arc::new(SimBackend::from_zoo("mobilenet", 4).unwrap()))
+        .unwrap();
+    let fleet = FleetServer::with_policy(Arc::clone(&registry), SchedulePolicy::DeadlineEdf);
+
+    let total = 40u64;
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(8);
+    let producer = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for id in 0..total {
+            let mut req = request(id, "mobilenet");
+            req.deadline_us = Some(1);
+            let (otx, orx) = mpsc::channel();
+            tx.send((req, otx)).expect("fleet alive");
+            rxs.push(orx);
+            if id % 8 == 7 {
+                // Let the router go dry now and then so partial batches
+                // (and expiry sweeps) actually happen mid-stream.
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        drop(tx);
+        rxs.into_iter().filter(|orx| orx.recv().is_ok()).count() as u64
+    });
+    let stats = fleet.serve(rx, 2).expect("serve ok");
+    let delivered = producer.join().expect("producer join");
+    assert_eq!(stats.policy, "deadline-edf");
+    assert_eq!(delivered, stats.requests, "every served request is delivered");
+    assert_eq!(
+        stats.requests + stats.deadline_misses,
+        total,
+        "served + missed must cover the offered stream"
+    );
+    let m = &stats.per_model["mobilenet"];
+    assert_eq!(m.requests + m.deadline_misses, total);
+}
+
+#[test]
 fn malformed_requests_are_rejected_not_fatal() {
     let arch = ArchConfig::square(8);
     let registry = Arc::new(ModelRegistry::new(arch, None).unwrap());
@@ -354,6 +462,7 @@ fn malformed_requests_are_rejected_not_fatal() {
             id: 0,
             model: "alexnet".to_string(),
             pixels: vec![0.0; 3],
+            deadline_us: None,
         };
         tx.send((bad, otx)).unwrap();
         // A well-formed request behind it still serves.

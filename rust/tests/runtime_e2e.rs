@@ -120,6 +120,7 @@ fn batched_server_serves_all_requests() {
                 id,
                 model: "flexnet_tiny".to_string(),
                 pixels,
+                deadline_us: None,
             };
             tx.send((req, otx)).unwrap();
             rxs.push((id, orx));

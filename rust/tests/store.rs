@@ -220,3 +220,67 @@ fn corrupt_store_files_read_cold_and_are_repaired() {
     assert_eq!(std::fs::read_to_string(&plan_path).unwrap(), good_plan);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn compacted_store_still_warm_starts_at_full_hit_rate() {
+    // The ISSUE-5 gc contract: prune everything that is not live, then
+    // prove the survivors still warm-start exactly — plans load, shapes
+    // preload, hit rate 1.0 with zero simulate_layer calls.
+    let dir = tmpdir("compact-warm");
+    let store = PlanStore::open(&dir).unwrap();
+    let opts = SimOptions::default();
+    let live_arch = ArchConfig::square(16);
+    let stale_arch = ArchConfig::square(8);
+
+    // Live + stale artifacts for the same models at two array sizes.
+    let mut live_keys = Vec::new();
+    for arch in [live_arch, stale_arch] {
+        for topo in [zoo::alexnet(), zoo::mobilenet()] {
+            let provenance = provenance_key(&arch, std::slice::from_ref(&topo), opts, 1);
+            let cache = ShapeCache::new();
+            let plan = compile_plan(&arch, &topo, opts, 1, &cache);
+            plan.save(&store).unwrap();
+            store.save_shapes(&provenance, &cache).unwrap();
+            if arch == live_arch {
+                live_keys.push(provenance);
+            }
+        }
+    }
+    // Corrupt litter on top, plus an abandoned staged write (backdated —
+    // compact leaves *fresh* temp files for their live writers).
+    std::fs::write(dir.join("plan-00ff.json"), "{torn").unwrap();
+    let tmp = dir.join(".shapes-x.tmp.9.9");
+    std::fs::write(&tmp, "staged").unwrap();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&tmp)
+        .unwrap()
+        .set_modified(std::time::SystemTime::now() - std::time::Duration::from_secs(7200))
+        .unwrap();
+
+    let stats = store.compact(&live_keys).unwrap();
+    assert_eq!(stats.kept, 4, "2 live plans + 2 live shape docs");
+    assert_eq!(stats.dropped_unknown, 4, "stale-size plans + shapes");
+    assert_eq!(stats.dropped_invalid, 1);
+    assert_eq!(stats.tmp_removed, 1);
+
+    // Survivors warm-start exactly as before the gc.
+    for topo in [zoo::alexnet(), zoo::mobilenet()] {
+        let provenance = provenance_key(&live_arch, std::slice::from_ref(&topo), opts, 1);
+        let warm = ShapeCache::new();
+        assert!(store.load_shapes(&provenance, &warm) > 0, "{}", topo.name);
+        let stored = ExecutionPlan::load(&store, &provenance).expect("live plan survives");
+        let recompiled = compile_plan(&live_arch, &topo, opts, 1, &warm);
+        assert_eq!(stored, recompiled, "{}", topo.name);
+        let s = warm.stats();
+        assert_eq!(s.misses, 0, "{}: compact broke the warm start: {s:?}", topo.name);
+        assert_eq!(s.hit_rate(), 1.0, "{}", topo.name);
+    }
+    // The stale size reads cold now.
+    let cold = ShapeCache::new();
+    let stale_prov =
+        provenance_key(&stale_arch, std::slice::from_ref(&zoo::alexnet()), opts, 1);
+    assert_eq!(store.load_shapes(&stale_prov, &cold), 0);
+    assert!(ExecutionPlan::load(&store, &stale_prov).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
