@@ -39,7 +39,9 @@ fn main() -> anyhow::Result<()> {
         rt.manifest().batch
     );
     let manifest = rt.manifest().clone();
-    let server = InferenceServer::new(rt, ArchConfig::square(ARRAY))?;
+    let server = InferenceServer::builder(ArchConfig::square(ARRAY))
+        .runtime(rt)
+        .build()?;
 
     // The deployment the CMU programmed for this network.
     let d = server.deployment();

@@ -3,8 +3,15 @@
 //!
 //! The driver models the PR-4 serving system faithfully but on a *virtual*
 //! clock: a router (the shared [`Scheduler`]) forms batches from trace
-//! arrivals, a bounded batch queue applies back-pressure, and one
-//! simulated Flex-TPU device executes launches serially.  A launch costs
+//! arrivals, a bounded batch queue applies back-pressure, and a simulated
+//! Flex-TPU pod executes launches.  Under the classic policies the pod is
+//! one device — one chip for a single-chip registry (the PR-5 driver, bit
+//! for bit), the whole pod blindly sharding every launch otherwise.
+//! Under [`SchedulePolicy::Placement`] the pod splits into the registry's
+//! chip *groups* ([`crate::inference::placement`]): each group is its own
+//! serial device with its own batch queue and dataflow residency, groups
+//! run concurrently, and each model launches only on its own group at its
+//! group's shard width.  A launch costs
 //!
 //! ```text
 //!   batch_cost(model)                 the deployed per-layer schedule
@@ -34,15 +41,21 @@
 //!   busy), so every model launches in `⌈requests/batch⌉` batches — the
 //!   minimum — and model switches collapse into runs;
 //! * `deadline-edf` is as eager as `fifo` but launches the most urgent
-//!   queue first and drops expired requests at pop time.
+//!   queue first and drops expired requests at pop time;
+//! * `placement` coalesces like `reconfig-aware` but per chip group: each
+//!   group holds partials while its own device is the reason to wait, and
+//!   the per-group dataflow residency means co-located boundary-compatible
+//!   models alternate without entry switches.
 
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::ArchConfig;
 use crate::error::{Error, Result};
 use crate::inference::scheduler::{BatchPlan, SchedulePolicy, Scheduler};
-use crate::inference::{ModelDeployment, ModelRegistry};
+use crate::inference::{ModelDeployment, ModelPlacement, ModelRegistry};
 use crate::sim::engine::{reconfig_charges, SimOptions};
+use crate::sim::shard::simulate_layer_sharded_cached;
+use crate::sim::Dataflow;
 
 use super::report::{BenchReport, ModelBenchStats};
 use super::trace::{generate, Scenario, TraceSpec};
@@ -106,6 +119,105 @@ pub struct BenchConfig {
     pub deadline_us: Option<u64>,
 }
 
+impl BenchConfig {
+    /// Builder seeded with the gated-scenario defaults — mixed trace,
+    /// seed 7, 600 requests, 2 000 µs mean gap, FIFO, open loop,
+    /// concurrency 32, no deadlines.  Set what differs, [`build`] the
+    /// rest; `models` is the one field with no sensible default.
+    ///
+    /// [`build`]: BenchConfigBuilder::build
+    ///
+    /// ```
+    /// use flex_tpu::bench::{BenchConfig, LoopMode};
+    /// use flex_tpu::inference::SchedulePolicy;
+    ///
+    /// let cfg = BenchConfig::builder(vec!["alexnet".to_string()])
+    ///     .policy(SchedulePolicy::ReconfigAware)
+    ///     .mode(LoopMode::Closed)
+    ///     .concurrency(16)
+    ///     .build();
+    /// assert_eq!(cfg.seed, 7);
+    /// assert_eq!(cfg.requests, 600);
+    /// ```
+    pub fn builder(models: Vec<String>) -> BenchConfigBuilder {
+        BenchConfigBuilder {
+            cfg: BenchConfig {
+                scenario: Scenario::MixedModel,
+                seed: 7,
+                requests: 600,
+                mean_interarrival_us: 2_000,
+                models,
+                policy: SchedulePolicy::Fifo,
+                mode: LoopMode::Open,
+                concurrency: 32,
+                deadline_us: None,
+            },
+        }
+    }
+}
+
+/// Builder for [`BenchConfig`]; see [`BenchConfig::builder`] for the
+/// defaults it starts from.
+#[derive(Debug, Clone)]
+pub struct BenchConfigBuilder {
+    cfg: BenchConfig,
+}
+
+impl BenchConfigBuilder {
+    /// Workload shape.
+    pub fn scenario(mut self, scenario: Scenario) -> Self {
+        self.cfg.scenario = scenario;
+        self
+    }
+
+    /// Trace seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Requests in the trace.
+    pub fn requests(mut self, requests: u64) -> Self {
+        self.cfg.requests = requests;
+        self
+    }
+
+    /// Mean inter-arrival gap, µs (the open-loop load knob).
+    pub fn mean_interarrival_us(mut self, us: u64) -> Self {
+        self.cfg.mean_interarrival_us = us;
+        self
+    }
+
+    /// Scheduling policy under test.
+    pub fn policy(mut self, policy: SchedulePolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Open- or closed-loop pacing.
+    pub fn mode(mut self, mode: LoopMode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    /// Outstanding requests in closed-loop mode (ignored in open loop).
+    pub fn concurrency(mut self, concurrency: u64) -> Self {
+        self.cfg.concurrency = concurrency;
+        self
+    }
+
+    /// Per-request latency budget, µs (`None` = no deadlines).
+    pub fn deadline_us(mut self, deadline_us: Option<u64>) -> Self {
+        self.cfg.deadline_us = deadline_us;
+        self
+    }
+
+    /// The finished configuration.
+    pub fn build(self) -> BenchConfig {
+        self.cfg
+    }
+}
+
 /// Driver-side per-model constants, derived from the deployment.
 struct DriveInfo {
     /// Cycles one launch occupies the device: the deployed per-layer
@@ -148,32 +260,76 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     }
     let arch: ArchConfig = *registry.arch();
     let clock_ns = arch.clock_ns;
+    let pod_chips = arch.chips.max(1);
+    let placement_mode = cfg.policy == SchedulePolicy::Placement;
 
-    // Per-model scheduler profiles + device cost constants.
+    // Per-model scheduler profiles + device cost constants.  Classic
+    // policies treat the whole pod as one device (blind all-chip sharding
+    // when multi-chip); placement executes each model at its own group's
+    // shard width.
     let mut sched: Scheduler<u64> = Scheduler::new(cfg.policy);
     let mut info: BTreeMap<String, DriveInfo> = BTreeMap::new();
+    let mut group_ids: Vec<usize> = Vec::new();
     for name in &cfg.models {
         let dep: std::sync::Arc<ModelDeployment> = registry.get(name).ok_or_else(|| {
             Error::InvalidConfig(format!("bench model {name:?} is not registered"))
         })?;
-        sched.set_profile(dep.profile());
+        let (group, chips) = if placement_mode {
+            let p = registry
+                .placement_of(name)
+                .unwrap_or(ModelPlacement { group: 0, chips: 1 });
+            (p.group, p.chips)
+        } else {
+            (0usize, pod_chips)
+        };
         let batch = u64::from(dep.server.batch()).max(1);
         let topo = dep.server.topology().clone();
         let opts = SimOptions {
             batch: batch as u32,
             ..SimOptions::default()
         };
-        // The launch cost: the deployed (batch-1-compiled) schedule
-        // re-simulated at the serving batch, through the fleet's shared
-        // cache so repeated runs and sibling drivers memoize.
+        // The launch cost: the schedule at this model's shard width,
+        // re-simulated at the serving batch through the fleet's shared
+        // cache so repeated runs and sibling drivers memoize.  Width 1
+        // takes the deployed plan verbatim (the PR-5 path, bit for bit).
+        let mut profile = dep.profile();
         let mut batch_cost = 0u64;
-        for (layer, &df) in topo.layers.iter().zip(dep.plan_dataflows.iter()) {
-            batch_cost += registry
-                .cache()
-                .simulate_layer(&arch, layer, df, opts)
+        if chips <= 1 {
+            for (layer, &df) in topo.layers.iter().zip(dep.plan_dataflows.iter()) {
+                batch_cost += registry
+                    .cache()
+                    .simulate_layer(&arch, layer, df, opts)
+                    .total_cycles();
+            }
+            batch_cost += reconfig_charges(&dep.plan_dataflows, arch.reconfig_cycles);
+        } else {
+            let schedule = registry.schedule_for(name, chips)?;
+            let dataflows: Vec<Dataflow> =
+                schedule.choices.iter().map(|c| c.dataflow).collect();
+            for (layer, choice) in topo.layers.iter().zip(schedule.choices.iter()) {
+                batch_cost += simulate_layer_sharded_cached(
+                    &arch,
+                    layer,
+                    choice.dataflow,
+                    choice.strategy,
+                    chips,
+                    opts,
+                    registry.cache(),
+                )
                 .total_cycles();
+            }
+            batch_cost += reconfig_charges(&dataflows, arch.reconfig_cycles);
+            // The scheduler must forecast boundaries from the plan that
+            // actually runs, not the single-chip one.
+            profile.forecast = schedule.forecast;
         }
-        batch_cost += reconfig_charges(&dep.plan_dataflows, arch.reconfig_cycles);
+        sched.set_profile(profile);
+        if placement_mode {
+            sched.assign_group(name, group);
+        }
+        if !group_ids.contains(&group) {
+            group_ids.push(group);
+        }
         let upload = topo.filter_bytes(arch.memory.bytes_per_element);
         let switch_cycles = arch.interconnect.link_latency_cycles
             + upload.div_ceil(arch.interconnect.link_bytes_per_cycle);
@@ -186,6 +342,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
             },
         );
     }
+    group_ids.sort_unstable();
 
     let trace = generate(&TraceSpec {
         scenario: cfg.scenario,
@@ -200,14 +357,32 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
         .collect();
     let deadline_cycles = cfg.deadline_us.map(|us| us_to_cycles(us, clock_ns));
 
-    // The bounded batch queue between router and device: the same
-    // `(workers * 2).max(2)` the live fleet uses, at the bench's one
-    // virtual device.
+    // One virtual device per chip group (classic policies: exactly one),
+    // each with the bounded batch queue the live fleet uses — the same
+    // `(workers * 2).max(2)`, at the bench's per-device worker of one.
     const QUEUE_CAP: usize = 2;
-    let mut batchq: VecDeque<BatchPlan<u64>> = VecDeque::new();
-    let mut busy = false;
-    let mut busy_until = 0u64;
-    let mut completed_live = 0u64;
+    struct Device {
+        group: usize,
+        batchq: VecDeque<BatchPlan<u64>>,
+        busy: bool,
+        busy_until: u64,
+        completed_live: u64,
+        just_completed: bool,
+        cycles: u64,
+    }
+    let mut devices: Vec<Device> = group_ids
+        .iter()
+        .map(|&group| Device {
+            group,
+            batchq: VecDeque::new(),
+            busy: false,
+            busy_until: 0,
+            completed_live: 0,
+            just_completed: false,
+            cycles: 0,
+        })
+        .collect();
+    let multi = devices.len() > 1;
     let mut next_arrival = 0usize; // open-loop cursor
     let mut next_closed = 0usize; // closed-loop cursor
     let mut t = 0u64;
@@ -246,27 +421,33 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     }
 
     loop {
-        // Next event: device completion and/or (open loop) next arrival.
+        // Next event: any device completion and/or (open loop) the next
+        // arrival.
         let mut next_t: Option<u64> = None;
-        if busy {
-            next_t = Some(busy_until);
+        for d in &devices {
+            if d.busy {
+                next_t = Some(next_t.map_or(d.busy_until, |v| v.min(d.busy_until)));
+            }
         }
         if cfg.mode == LoopMode::Open {
             if let Some(&(at, _, _)) = arrivals.get(next_arrival) {
                 next_t = Some(next_t.map_or(at, |v| v.min(at)));
             }
         }
-        let mut completed = false;
         match next_t {
             Some(event_t) => {
                 t = event_t;
-                if busy && busy_until == t {
-                    busy = false;
-                    completed = true;
+                for d in &mut devices {
+                    if d.busy && d.busy_until == t {
+                        d.busy = false;
+                        d.just_completed = true;
+                    }
                 }
             }
             None => {
-                if sched.pending() == 0 && batchq.is_empty() && !busy {
+                if sched.pending() == 0
+                    && devices.iter().all(|d| d.batchq.is_empty() && !d.busy)
+                {
                     break;
                 }
                 // No external events left: the refill below force-drains
@@ -282,56 +463,83 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 next_arrival += 1;
             }
         }
-        if cfg.mode == LoopMode::Closed && completed {
-            for _ in 0..completed_live {
-                if let Some(&(_, id, model)) = arrivals.get(next_closed) {
-                    admit(&mut sched, &mut per, t, id, model);
-                    next_closed += 1;
+        if cfg.mode == LoopMode::Closed {
+            for di in 0..devices.len() {
+                if !devices[di].just_completed {
+                    continue;
                 }
-            }
-        }
-
-        // Router refill: top the batch queue up per policy.
-        while batchq.len() < QUEUE_CAP {
-            let mut expired: Vec<(String, u64)> = Vec::new();
-            let mut batch = sched.pop(t, false, &mut expired);
-            if batch.is_none() && sched.pending() > 0 {
-                // Reconfig-aware coalescing: hold partials while arrivals
-                // may still fill them (open loop) or while the device has
-                // work anyway (closed loop).
-                let hold = cfg.policy == SchedulePolicy::ReconfigAware
-                    && match cfg.mode {
-                        LoopMode::Open => next_arrival < arrivals.len(),
-                        LoopMode::Closed => busy,
-                    };
-                if !hold {
-                    batch = sched.pop(t, true, &mut expired);
-                }
-            }
-            for (model, _id) in &expired {
-                dropped += 1;
-                per.get_mut(model).expect("configured model").dropped_deadline += 1;
-            }
-            // Closed loop: a client whose request was dropped issues its
-            // next one immediately, so the outstanding population never
-            // decays below the configured concurrency while trace remains.
-            if cfg.mode == LoopMode::Closed {
-                for _ in 0..expired.len() {
+                for _ in 0..devices[di].completed_live {
                     if let Some(&(_, id, model)) = arrivals.get(next_closed) {
                         admit(&mut sched, &mut per, t, id, model);
                         next_closed += 1;
                     }
                 }
             }
-            match batch {
-                Some(b) => batchq.push_back(b),
-                None => break,
+        }
+        for d in &mut devices {
+            d.just_completed = false;
+        }
+
+        // Router refill: top each device's batch queue up per policy, in
+        // group order.  Classic policies pop the shared door; placement
+        // pops only the device's own group.
+        for di in 0..devices.len() {
+            let group = devices[di].group;
+            while devices[di].batchq.len() < QUEUE_CAP {
+                let mut expired: Vec<(String, u64)> = Vec::new();
+                let mut batch = if placement_mode {
+                    sched.pop_group(group, t, false, &mut expired)
+                } else {
+                    sched.pop(t, false, &mut expired)
+                };
+                if batch.is_none() && sched.pending() > 0 {
+                    // Coalescing: hold partials while arrivals may still
+                    // fill them (open loop) or while this device has work
+                    // anyway (closed loop).
+                    let hold = matches!(
+                        cfg.policy,
+                        SchedulePolicy::ReconfigAware | SchedulePolicy::Placement
+                    ) && match cfg.mode {
+                        LoopMode::Open => next_arrival < arrivals.len(),
+                        LoopMode::Closed => devices[di].busy,
+                    };
+                    if !hold {
+                        batch = if placement_mode {
+                            sched.pop_group(group, t, true, &mut expired)
+                        } else {
+                            sched.pop(t, true, &mut expired)
+                        };
+                    }
+                }
+                for (model, _id) in &expired {
+                    dropped += 1;
+                    per.get_mut(model).expect("configured model").dropped_deadline += 1;
+                }
+                // Closed loop: a client whose request was dropped issues
+                // its next one immediately, so the outstanding population
+                // never decays below the configured concurrency while
+                // trace remains.
+                if cfg.mode == LoopMode::Closed {
+                    for _ in 0..expired.len() {
+                        if let Some(&(_, id, model)) = arrivals.get(next_closed) {
+                            admit(&mut sched, &mut per, t, id, model);
+                            next_closed += 1;
+                        }
+                    }
+                }
+                match batch {
+                    Some(b) => devices[di].batchq.push_back(b),
+                    None => break,
+                }
             }
         }
 
-        // Device: take the next launch when idle.
-        if !busy {
-            if let Some(plan) = batchq.pop_front() {
+        // Devices: each idle one takes its next launch, in group order.
+        for d in &mut devices {
+            if d.busy {
+                continue;
+            }
+            if let Some(plan) = d.batchq.pop_front() {
                 let di = &info[&plan.model];
                 let live = plan.items.len() as u64;
                 let cost = di.batch_cost
@@ -352,13 +560,20 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 m.padded_slots += di.batch - live;
                 m.reconfigurations += plan.reconfigurations;
                 m.sim_cycles += cost;
+                // The group id folds into the digest only on a multi-group
+                // run, so single-group placement stays byte-identical to
+                // the single-device driver.
+                if multi {
+                    digest = fnv1a(digest, &(d.group as u64).to_le_bytes());
+                }
                 digest = fnv1a(digest, plan.model.as_bytes());
                 digest = fnv1a(digest, &live.to_le_bytes());
                 digest = fnv1a(digest, &t.to_le_bytes());
                 digest = fnv1a(digest, b";");
-                completed_live = live;
-                busy = true;
-                busy_until = t + cost;
+                d.completed_live = live;
+                d.cycles += cost;
+                d.busy = true;
+                d.busy_until = t + cost;
             }
         }
 
@@ -366,12 +581,15 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
             LoopMode::Open => next_arrival >= arrivals.len(),
             LoopMode::Closed => next_closed >= arrivals.len(),
         };
-        if !busy && batchq.is_empty() && sched.pending() == 0 && drained {
+        if devices.iter().all(|d| !d.busy && d.batchq.is_empty())
+            && sched.pending() == 0
+            && drained
+        {
             break;
         }
     }
 
-    let wall_cycles = busy_until;
+    let wall_cycles = devices.iter().map(|d| d.busy_until).max().unwrap_or(0);
     waits.sort_unstable();
     let wait_us: Vec<f64> = waits.iter().map(|&w| cycles_to_us(w, clock_ns)).collect();
     let wall_ns = wall_cycles as f64 * clock_ns;
@@ -389,6 +607,8 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
         reconfigurations,
         model_switches,
         sim_cycles_total,
+        chip_groups: devices.len() as u64,
+        group_cycles: devices.iter().map(|d| d.cycles).collect(),
         sim_wall_us: cycles_to_us(wall_cycles, clock_ns),
         throughput_rps: if wall_ns > 0.0 {
             served as f64 * 1e9 / wall_ns

@@ -7,9 +7,11 @@
 //! * [`trace`] — seeded, integer-only load generation (an explicit LCG +
 //!   quantized-exponential gaps): mixed, bursty and skewed scenarios.
 //! * [`driver`] — a discrete-event simulation of the fleet (router +
-//!   bounded batch queue + one virtual device) on the registry's deployed
-//!   plans, under any [`SchedulePolicy`].  Open loop replays offered
-//!   load; closed loop probes capacity.
+//!   bounded batch queues + one virtual device per chip group; classic
+//!   policies drive one device, `placement` drives the registry's groups
+//!   concurrently) on the registry's deployed plans, under any
+//!   [`SchedulePolicy`].  Open loop replays offered load; closed loop
+//!   probes capacity.
 //! * [`report`] — the [`BenchReport`] record: throughput, p50/p99 queue
 //!   latency, padding, reconfiguration and model-switch counts, all in
 //!   simulated units, persisted through [`PlanStore`] as the
@@ -27,7 +29,7 @@ pub mod driver;
 pub mod report;
 pub mod trace;
 
-pub use driver::{run, BenchConfig, LoopMode};
+pub use driver::{run, BenchConfig, BenchConfigBuilder, LoopMode};
 pub use report::{BenchReport, ModelBenchStats};
 pub use trace::{Lcg, Scenario, TraceEvent, TraceSpec};
 
@@ -62,7 +64,7 @@ pub fn bench_provenance(registry: &ModelRegistry, cfg: &BenchConfig) -> String {
         .collect();
     parts.push(format!(
         "bench;scenario={};seed={};requests={};mean_us={};policy={};mode={};conc={};\
-         deadline={:?};batches={:?}",
+         deadline={:?};batches={:?};chips={};placement={}",
         cfg.scenario,
         cfg.seed,
         cfg.requests,
@@ -72,6 +74,8 @@ pub fn bench_provenance(registry: &ModelRegistry, cfg: &BenchConfig) -> String {
         cfg.concurrency,
         cfg.deadline_us,
         model_batches(registry, cfg),
+        registry.arch().chips.max(1),
+        registry.placement_policy(),
     ));
     combined_provenance(&parts)
 }
@@ -105,6 +109,12 @@ pub struct BenchSuite {
     pub concurrency: u64,
     /// Per-request deadline budget, µs (0 = none).
     pub deadline_us: u64,
+    /// Chips in the pod the suite drove (1 for the legacy single-device
+    /// bench; pre-pod baselines deserialize as 1).
+    pub chips: u64,
+    /// Registry placement policy name (`single` / `pod` / `co-locate`;
+    /// pre-pod baselines deserialize as `single`).
+    pub placement: String,
     /// Model names, in trace-index order.
     pub models: Vec<String>,
     /// The participating models' plan provenances — ties the suite to the
@@ -143,6 +153,8 @@ impl BenchSuite {
                 LoopMode::Open => 0,
             },
             deadline_us: cfg.deadline_us.unwrap_or(0),
+            chips: u64::from(registry.arch().chips.max(1)),
+            placement: registry.placement_policy().name().to_string(),
             models: cfg.models.clone(),
             model_provenances: cfg
                 .models
@@ -177,6 +189,8 @@ impl BenchSuite {
                     ("mode", Value::Str(self.mode.clone())),
                     ("concurrency", Value::Num(self.concurrency as f64)),
                     ("deadline_us", Value::Num(self.deadline_us as f64)),
+                    ("chips", Value::Num(self.chips as f64)),
+                    ("placement", Value::Str(self.placement.clone())),
                     ("models", strs(&self.models)),
                     ("model_provenances", strs(&self.model_provenances)),
                     (
@@ -236,6 +250,14 @@ impl BenchSuite {
             mode: config.req_str("mode")?.to_string(),
             concurrency: config.req_u64("concurrency")?,
             deadline_us: config.req_u64("deadline_us")?,
+            // Pre-pod baselines predate both fields: one chip, single
+            // placement.
+            chips: config.get("chips").and_then(Value::as_u64).unwrap_or(1),
+            placement: config
+                .get("placement")
+                .and_then(Value::as_str)
+                .unwrap_or("single")
+                .to_string(),
             models: strs("models")?,
             model_provenances: strs("model_provenances")?,
             model_batches,
@@ -253,6 +275,8 @@ impl BenchSuite {
             && self.mode == other.mode
             && self.concurrency == other.concurrency
             && self.deadline_us == other.deadline_us
+            && self.chips == other.chips
+            && self.placement == other.placement
             && self.models == other.models
             && self.model_provenances == other.model_provenances
             && self.model_batches == other.model_batches
@@ -270,7 +294,10 @@ impl BenchSuite {
 ///    offered`);
 /// 3. `reconfig-aware` sustains [`MIN_COALESCING_SPEEDUP`] over `fifo`
 ///    and performs no more reconfigurations (when both ran);
-/// 4. per policy present in both suites: throughput within
+/// 4. `placement` beats `fifo` — blind all-chip sharding on the pod —
+///    outright on throughput at no more reconfigurations (when both ran:
+///    the tentpole's acceptance criterion);
+/// 5. per policy present in both suites: throughput within
 ///    [`MAX_THROUGHPUT_REGRESSION`] of the baseline and
 ///    reconfigurations-per-request within [`RECONFIG_HEADROOM`].
 pub fn gate(current: &BenchSuite, baseline: &BenchSuite) -> Result<Vec<String>> {
@@ -312,6 +339,28 @@ pub fn gate(current: &BenchSuite, baseline: &BenchSuite) -> Result<Vec<String>> 
             "reconfig-aware: {:.2}x fifo throughput, {} vs {} reconfigurations",
             ra.throughput_rps / fifo.throughput_rps,
             ra.reconfigurations,
+            fifo.reconfigurations
+        ));
+    }
+    if let (Some(fifo), Some(pl)) = (current.report("fifo"), current.report("placement")) {
+        if pl.throughput_rps <= fifo.throughput_rps {
+            return fail(format!(
+                "placement throughput {:.1} rps does not beat blind sharding (fifo, {:.1} rps)",
+                pl.throughput_rps, fifo.throughput_rps
+            ));
+        }
+        if pl.reconfigurations > fifo.reconfigurations {
+            return fail(format!(
+                "placement performed {} reconfigurations vs blind sharding's {}",
+                pl.reconfigurations, fifo.reconfigurations
+            ));
+        }
+        passed.push(format!(
+            "placement: {:.2}x blind-sharding throughput over {} chip group(s), {} vs {} \
+             reconfigurations",
+            pl.throughput_rps / fifo.throughput_rps,
+            pl.chip_groups,
+            pl.reconfigurations,
             fifo.reconfigurations
         ));
     }
@@ -405,10 +454,13 @@ mod tests {
     fn suite_round_trips_and_finds_reports() {
         let reg = registry(2);
         let suite = BenchSuite::run(&reg, &config(), &SchedulePolicy::ALL).unwrap();
-        assert_eq!(suite.reports.len(), 3);
+        assert_eq!(suite.reports.len(), 4);
         assert!(suite.report("fifo").is_some());
         assert!(suite.report("reconfig-aware").is_some());
+        assert!(suite.report("placement").is_some());
         assert!(suite.report("nope").is_none());
+        assert_eq!(suite.chips, 1);
+        assert_eq!(suite.placement, "single");
         let back = BenchSuite::from_json(&suite.to_json()).unwrap();
         assert_eq!(suite, back);
     }

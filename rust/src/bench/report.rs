@@ -62,6 +62,12 @@ pub struct BenchReport {
     pub model_switches: u64,
     /// Simulated device-occupied cycles over the whole run.
     pub sim_cycles_total: u64,
+    /// Chip groups the run drove (1 for every classic policy; the
+    /// registry's placement group count under `placement`).
+    pub chip_groups: u64,
+    /// Device-occupied cycles per chip group, in ascending group order;
+    /// sums to `sim_cycles_total`.
+    pub group_cycles: Vec<u64>,
     /// Virtual wall clock at the last batch completion, microseconds.
     pub sim_wall_us: f64,
     /// Served requests per simulated second.
@@ -121,6 +127,16 @@ impl BenchReport {
             ("reconfigurations", Value::Num(self.reconfigurations as f64)),
             ("model_switches", Value::Num(self.model_switches as f64)),
             ("sim_cycles_total", Value::Num(self.sim_cycles_total as f64)),
+            ("chip_groups", Value::Num(self.chip_groups as f64)),
+            (
+                "group_cycles",
+                Value::Arr(
+                    self.group_cycles
+                        .iter()
+                        .map(|&c| Value::Num(c as f64))
+                        .collect(),
+                ),
+            ),
             ("sim_wall_us", Value::Num(self.sim_wall_us)),
             ("throughput_rps", Value::Num(self.throughput_rps)),
             ("queue_p50_us", Value::Num(self.queue_p50_us)),
@@ -170,6 +186,14 @@ impl BenchReport {
             reconfigurations: v.req_u64("reconfigurations")?,
             model_switches: v.req_u64("model_switches")?,
             sim_cycles_total: v.req_u64("sim_cycles_total")?,
+            // Pre-pod reports carry neither field: one implicit group
+            // whose per-group breakdown was never recorded.
+            chip_groups: v.get("chip_groups").and_then(Value::as_u64).unwrap_or(1),
+            group_cycles: v
+                .get("group_cycles")
+                .and_then(Value::as_array)
+                .map(|a| a.iter().filter_map(Value::as_u64).collect())
+                .unwrap_or_default(),
             sim_wall_us: v.req_f64("sim_wall_us")?,
             throughput_rps: v.req_f64("throughput_rps")?,
             queue_p50_us: v.req_f64("queue_p50_us")?,
@@ -238,6 +262,8 @@ mod tests {
             reconfigurations: 5,
             model_switches: 2,
             sim_cycles_total: 123_456,
+            chip_groups: 2,
+            group_cycles: vec![100_000, 23_456],
             sim_wall_us: 1234.5,
             throughput_rps: 7292.83,
             queue_p50_us: 10.25,
@@ -262,6 +288,22 @@ mod tests {
         assert!((r.reconfigs_per_request() - 5.0 / 9.0).abs() < 1e-12);
         r.served = 0;
         assert_eq!(r.reconfigs_per_request(), 0.0);
+    }
+
+    #[test]
+    fn pre_pod_reports_default_to_one_implicit_group() {
+        let Value::Obj(fields) = report().to_json() else {
+            panic!("report serializes to an object")
+        };
+        let stripped = Value::Obj(
+            fields
+                .into_iter()
+                .filter(|(k, _)| k != "chip_groups" && k != "group_cycles")
+                .collect(),
+        );
+        let back = BenchReport::from_json(&stripped).unwrap();
+        assert_eq!(back.chip_groups, 1);
+        assert!(back.group_cycles.is_empty());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!                        │
 //!                 ┌──────v──────┐   batch formation + ordering via a
 //!                 │   router    │   SchedulePolicy (fifo / reconfig-aware
-//!                 └──────┬──────┘   / deadline-edf)
+//!                 └──────┬──────┘   / deadline-edf / placement)
 //!           bounded batch queue (back-pressure)
 //!        ┌──────────┬────┴─────┬──────────┐
 //!        v          v          v          v
@@ -29,8 +29,12 @@
 //! `DeadlineEdf` launches the most urgent queue first and drops requests
 //! whose [`crate::inference::InferenceRequest::deadline_us`] budget
 //! already expired (dropped requests surface as closed response channels
-//! and per-model `deadline_misses` counts).  The full coalescing
-//! semantics of `ReconfigAware` — holding partial batches while arrivals
+//! and per-model `deadline_misses` counts); `Placement` routes per chip
+//! group — each model launches in its registry-assigned group
+//! ([`crate::inference::placement`]) with that group's own dataflow
+//! residency, so co-located boundary-compatible models alternate without
+//! entry reconfigurations.  The full coalescing semantics of
+//! `ReconfigAware`/`Placement` — holding partial batches while arrivals
 //! may still coalesce — are exercised and *measured* by the simulated
 //! [`crate::bench`] driver, which owns its own clock.
 //!
@@ -187,15 +191,47 @@ pub struct FleetServer {
     policy: SchedulePolicy,
 }
 
+/// Builder for [`FleetServer`]; see [`FleetServer::builder`].
+pub struct FleetServerBuilder {
+    registry: Arc<ModelRegistry>,
+    policy: SchedulePolicy,
+}
+
+impl FleetServerBuilder {
+    /// Scheduling policy the router consults (default
+    /// [`SchedulePolicy::Fifo`]).
+    pub fn policy(mut self, policy: SchedulePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// The finished fleet.
+    pub fn build(self) -> FleetServer {
+        FleetServer {
+            registry: self.registry,
+            policy: self.policy,
+        }
+    }
+}
+
 impl FleetServer {
+    /// Start building a fleet over a (possibly shared) registry.
+    pub fn builder(registry: Arc<ModelRegistry>) -> FleetServerBuilder {
+        FleetServerBuilder {
+            registry,
+            policy: SchedulePolicy::Fifo,
+        }
+    }
+
     /// Fleet over a (possibly shared) registry, scheduling FIFO.
     pub fn new(registry: Arc<ModelRegistry>) -> Self {
-        Self::with_policy(registry, SchedulePolicy::Fifo)
+        Self::builder(registry).build()
     }
 
     /// Fleet with an explicit scheduling policy (`flex-tpu serve --policy`).
+    #[deprecated(note = "use FleetServer::builder(registry).policy(policy).build()")]
     pub fn with_policy(registry: Arc<ModelRegistry>, policy: SchedulePolicy) -> Self {
-        Self { registry, policy }
+        Self::builder(registry).policy(policy).build()
     }
 
     /// The registry this fleet routes against.
@@ -358,7 +394,19 @@ impl FleetServer {
                 return; // nothing queued: don't hold the deployment
             }
             if vacant {
-                sched.set_profile(dep.profile());
+                let mut profile = dep.profile();
+                if self.policy == SchedulePolicy::Placement {
+                    if let Some(p) = self.registry.placement_of(&model) {
+                        // Forecast boundaries from the plan the group
+                        // actually runs (its shard width), and pin the
+                        // model's launches to its group's residency.
+                        if let Ok(s) = self.registry.schedule_for(&model, p.chips) {
+                            profile.forecast = s.forecast;
+                        }
+                        sched.assign_group(&model, p.group);
+                    }
+                }
+                sched.set_profile(profile);
                 held.insert(model.clone(), Arc::clone(&dep));
             }
             let arrival_us = start.elapsed().as_micros() as u64;
@@ -375,7 +423,21 @@ impl FleetServer {
                         force: bool| {
             let now_us = start.elapsed().as_micros() as u64;
             let mut expired: Vec<(String, (Envelope, Instant))> = Vec::new();
-            while let Some(plan) = sched.pop(now_us, force, &mut expired) {
+            let mut plans = Vec::new();
+            if self.policy == SchedulePolicy::Placement {
+                // Per chip group: each group forms batches against its own
+                // dataflow residency, in group order.
+                for g in sched.active_groups() {
+                    while let Some(plan) = sched.pop_group(g, now_us, force, &mut expired) {
+                        plans.push(plan);
+                    }
+                }
+            } else {
+                while let Some(plan) = sched.pop(now_us, force, &mut expired) {
+                    plans.push(plan);
+                }
+            }
+            for plan in plans {
                 let dep = Arc::clone(held.get(&plan.model).expect("launched model is held"));
                 if sched.pending_for(&plan.model) == 0 {
                     held.remove(&plan.model);

@@ -8,16 +8,17 @@
 //!   backend's batch size, the execution backend computes the logits
 //!   (*values*), and the deployed Flex-TPU simulation supplies the
 //!   per-inference latency the hardware would deliver (*time*).  On a
-//!   multi-chip deployment ([`InferenceServer::new_sharded`]) each formed
-//!   batch is additionally split across chips — batch-level parallelism
-//!   with no interconnect traffic on the request path.
+//!   multi-chip deployment ([`ServerBuilder::chips`]) each formed batch
+//!   is additionally split across chips — batch-level parallelism with no
+//!   interconnect traffic on the request path.
 //! * **Fleet** ([`ModelRegistry`] + [`FleetServer`], `flex-tpu serve`):
 //!   several models deployed against one shared plan/shape store;
 //!   requests carry a model id and a router + bounded-queue worker pool
 //!   serve them with per-model metrics and runtime hot-add/remove.  The
 //!   router consults a pluggable [`SchedulePolicy`]
 //!   ([`scheduler::Scheduler`]): FIFO, reconfiguration-aware coalescing,
-//!   or earliest-deadline-first with drop-and-count.
+//!   earliest-deadline-first with drop-and-count, or chip-group placement
+//!   ([`placement`]) that co-schedules models across a pod's chip groups.
 //!
 //! Values come from a [`ModelBackend`]: [`PjrtBackend`] executes real AOT
 //! artifacts, [`SimBackend`] serves weight-less topologies (the zoo)
@@ -26,6 +27,7 @@
 
 mod backend;
 mod fleet;
+pub mod placement;
 mod registry;
 mod request;
 pub mod scheduler;
@@ -34,8 +36,9 @@ mod server;
 pub(crate) use fleet::percentile;
 
 pub use backend::{ModelBackend, PjrtBackend, SimBackend};
-pub use fleet::{FleetServer, FleetStats, ModelServeStats};
+pub use fleet::{FleetServer, FleetServerBuilder, FleetStats, ModelServeStats};
+pub use placement::{ChipSchedule, ModelPlacement, PlacementPolicy};
 pub use registry::{ModelDeployment, ModelRegistry, PlanSource};
 pub use request::{InferenceRequest, InferenceResponse, TimingEstimate};
 pub use scheduler::{ModelProfile, SchedulePolicy, Scheduler};
-pub use server::{Envelope, InferenceServer, ServerStats};
+pub use server::{Envelope, InferenceServer, ServerBuilder, ServerStats};

@@ -1,0 +1,324 @@
+//! Chip-group placement: which models share which chips of a pod.
+//!
+//! The paper proves per-layer runtime dataflow reconfiguration per chip;
+//! pod-scale serving (Jouppi et al. 2017, PAPERS.md) adds a second axis:
+//! *placement*.  Sharding a model across more chips makes each launch
+//! shorter ([`crate::coordinator::partition`] joint selection), but
+//! putting more models on the same chips makes consecutive launches
+//! alternate models — and every alternation whose boundary dataflows
+//! differ pays a reconfiguration plus a weight restream.  This module
+//! holds the deterministic solver that trades the two off:
+//!
+//! * [`PlacementPolicy::Single`] — the legacy single-device fleet: every
+//!   model on one chip, one group (PR-5 behaviour, bit for bit).
+//! * [`PlacementPolicy::Pod`] — blind whole-pod sharding: every model on
+//!   all chips, one group.  Maximum shard speedup, maximum interference.
+//! * [`PlacementPolicy::CoLocate`] — cluster models whose plan boundary
+//!   dataflows are [`compatible`] (launches can alternate without entry
+//!   switches, per [`crate::coordinator::plan::ExecutionPlan::reconfig_forecast`]),
+//!   then score whole-pod co-location against per-cluster chip groups
+//!   (whole pod / half pod / single chip) and keep the cheaper layout.
+//!
+//! The solver is pure integer arithmetic over plan cycle totals, so a
+//! registry's placement is a deterministic function of (arch, model set,
+//! policy) — which is what lets the bench gate placement decisions the
+//! same way it gates schedules.
+
+use std::collections::BTreeMap;
+
+use crate::config::ArchConfig;
+use crate::coordinator::partition::ShardChoice;
+use crate::coordinator::plan::ReconfigForecast;
+use crate::sim::Dataflow;
+
+/// How a registry maps models onto its pod's chips (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Every model on one chip, one group — the legacy single-device
+    /// fleet.  Only valid on a 1-chip architecture.
+    #[default]
+    Single,
+    /// Every model sharded across the whole pod, one group (blind
+    /// all-chip sharding — the baseline placement-aware scheduling must
+    /// beat).
+    Pod,
+    /// Compatibility-clustered placement scored against whole-pod
+    /// co-location (shard speedup vs reconfiguration interference).
+    CoLocate,
+}
+
+impl PlacementPolicy {
+    /// Every policy, in CLI listing order.
+    pub const ALL: [PlacementPolicy; 3] = [
+        PlacementPolicy::Single,
+        PlacementPolicy::Pod,
+        PlacementPolicy::CoLocate,
+    ];
+
+    /// Kebab-case name used on the CLI and in persisted bench suites.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Single => "single",
+            PlacementPolicy::Pod => "pod",
+            PlacementPolicy::CoLocate => "co-locate",
+        }
+    }
+
+    /// Parse a placement name (case-insensitive).
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "single" => Some(PlacementPolicy::Single),
+            "pod" => Some(PlacementPolicy::Pod),
+            "co-locate" | "colocate" => Some(PlacementPolicy::CoLocate),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One model's chip-group assignment inside a registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelPlacement {
+    /// Chip-group id (dense, 0-based; group ids order groups
+    /// deterministically but carry no topology meaning).
+    pub group: usize,
+    /// Chips in the model's group — the shard width its group plan is
+    /// compiled at.
+    pub chips: u32,
+}
+
+/// A model's per-layer execution schedule at one chip-group width, as the
+/// bench driver and fleet router consume it.
+#[derive(Debug, Clone)]
+pub struct ChipSchedule {
+    /// Chips the schedule was compiled for.
+    pub chips: u32,
+    /// Winning (dataflow, strategy) per layer, in execution order.
+    pub choices: Vec<ShardChoice>,
+    /// Boundary-dataflow forecast of this width's plan.
+    pub forecast: ReconfigForecast,
+}
+
+/// Whether two plans' boundary dataflows let their launches alternate in
+/// either order without paying an entry switch: each plan must end in the
+/// dataflow the other begins with.  Empty-plan boundaries (`None`) are
+/// wildcards — they constrain nothing.
+pub(crate) fn compatible(a: &ReconfigForecast, b: &ReconfigForecast) -> bool {
+    fn ok(x: Option<Dataflow>, y: Option<Dataflow>) -> bool {
+        match (x, y) {
+            (Some(x), Some(y)) => x == y,
+            _ => true,
+        }
+    }
+    ok(a.last, b.first) && ok(b.last, a.first)
+}
+
+/// Entry-switch interference of co-locating `groups`: two charged
+/// reconfiguration boundaries per incompatible pair sharing a group (one
+/// per alternation direction).
+fn interference(arch: &ArchConfig, models: &[(String, ReconfigForecast)], groups: &[Vec<usize>]) -> u64 {
+    let mut extra = 0u64;
+    for g in groups {
+        for (x, &i) in g.iter().enumerate() {
+            for &j in &g[x + 1..] {
+                if !compatible(&models[i].1, &models[j].1) {
+                    extra += 2 * arch.reconfig_cycles;
+                }
+            }
+        }
+    }
+    extra
+}
+
+/// Compute every model's chip-group assignment (see module docs).
+///
+/// `models` carries each model's name and 1-chip plan forecast, in name
+/// order; `cost(name, chips)` is the model's end-to-end plan cycle total
+/// at a chip count (the registry backs it with load-or-compile through
+/// the shared cache, so the solver stays pure).  Deterministic: same
+/// inputs, same assignment, on any machine.
+pub(crate) fn assign(
+    arch: &ArchConfig,
+    models: &[(String, ReconfigForecast)],
+    policy: PlacementPolicy,
+    mut cost: impl FnMut(&str, u32) -> u64,
+) -> BTreeMap<String, ModelPlacement> {
+    let pod = arch.chips.max(1);
+    let everyone = |chips: u32| -> BTreeMap<String, ModelPlacement> {
+        models
+            .iter()
+            .map(|(n, _)| (n.clone(), ModelPlacement { group: 0, chips }))
+            .collect()
+    };
+    match policy {
+        PlacementPolicy::Single => everyone(1),
+        PlacementPolicy::Pod => everyone(pod),
+        PlacementPolicy::CoLocate => {
+            if models.is_empty() {
+                return BTreeMap::new();
+            }
+            // Greedy compatibility clustering in name order: a model joins
+            // the first cluster it is mutually compatible with, else opens
+            // a new one.  Clusters are internally compatible by
+            // construction (zero interference inside one).
+            let mut clusters: Vec<Vec<usize>> = Vec::new();
+            for (i, (_, f)) in models.iter().enumerate() {
+                match clusters
+                    .iter_mut()
+                    .find(|c| c.iter().all(|&j| compatible(f, &models[j].1)))
+                {
+                    Some(c) => c.push(i),
+                    None => clusters.push(vec![i]),
+                }
+            }
+            // Layout A: everyone co-located on the whole pod.  One group
+            // serializes every launch, so its makespan proxy is the sum of
+            // all plan totals, plus the interference of incompatible
+            // neighbours.
+            let whole: Vec<Vec<usize>> = vec![(0..models.len()).collect()];
+            let score_a: u64 = models.iter().map(|(n, _)| cost(n, pod)).sum::<u64>()
+                + interference(arch, models, &whole);
+            // Layout B: one chip group per cluster, sized by how many
+            // clusters split the pod (whole pod / half pod / single chip).
+            // Groups run concurrently, so the makespan proxy is the
+            // slowest group's serial total; interference is zero.
+            let split_chips = match clusters.len() {
+                0 | 1 => pod,
+                2 => (pod / 2).max(1),
+                _ => 1,
+            };
+            let score_b = clusters
+                .iter()
+                .map(|c| c.iter().map(|&i| cost(&models[i].0, split_chips)).sum::<u64>())
+                .max()
+                .unwrap_or(0);
+            if score_a <= score_b {
+                everyone(pod)
+            } else {
+                clusters
+                    .iter()
+                    .enumerate()
+                    .flat_map(|(gid, c)| {
+                        c.iter().map(move |&i| {
+                            (
+                                models[i].0.clone(),
+                                ModelPlacement {
+                                    group: gid,
+                                    chips: split_chips,
+                                },
+                            )
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch(chips: u32) -> ArchConfig {
+        ArchConfig::square(8).with_chips(chips)
+    }
+
+    fn fc(first: Dataflow, last: Dataflow) -> ReconfigForecast {
+        ReconfigForecast {
+            first: Some(first),
+            last: Some(last),
+            internal_switches: 0,
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("colocate"), Some(PlacementPolicy::CoLocate));
+        assert_eq!(PlacementPolicy::parse("nope"), None);
+        assert_eq!(PlacementPolicy::default(), PlacementPolicy::Single);
+    }
+
+    #[test]
+    fn compatibility_is_symmetric_and_wildcards_none() {
+        let a = fc(Dataflow::Ws, Dataflow::Os);
+        let b = fc(Dataflow::Os, Dataflow::Ws);
+        let c = fc(Dataflow::Is, Dataflow::Is);
+        assert!(compatible(&a, &b) && compatible(&b, &a));
+        assert!(!compatible(&a, &c));
+        let empty = ReconfigForecast {
+            first: None,
+            last: None,
+            internal_switches: 0,
+        };
+        assert!(compatible(&a, &empty) && compatible(&empty, &c));
+    }
+
+    #[test]
+    fn single_and_pod_are_trivial_layouts() {
+        let models = vec![
+            ("a".to_string(), fc(Dataflow::Ws, Dataflow::Os)),
+            ("b".to_string(), fc(Dataflow::Is, Dataflow::Is)),
+        ];
+        let single = assign(&arch(4), &models, PlacementPolicy::Single, |_, _| {
+            panic!("single placement must not cost plans")
+        });
+        assert!(single.values().all(|p| p.group == 0 && p.chips == 1));
+        let pod = assign(&arch(4), &models, PlacementPolicy::Pod, |_, _| {
+            panic!("pod placement must not cost plans")
+        });
+        assert!(pod.values().all(|p| p.group == 0 && p.chips == 4));
+    }
+
+    #[test]
+    fn co_locate_prefers_the_pod_when_one_model_dominates() {
+        // b is 50x heavier than a; isolating the pair on half-pods would
+        // leave b's group the bottleneck, so whole-pod wins even though
+        // the models are boundary-incompatible.
+        let models = vec![
+            ("a".to_string(), fc(Dataflow::Ws, Dataflow::Ws)),
+            ("b".to_string(), fc(Dataflow::Is, Dataflow::Is)),
+        ];
+        let placed = assign(&arch(4), &models, PlacementPolicy::CoLocate, |name, chips| {
+            let base = if name == "b" { 50_000 } else { 1_000 };
+            base / u64::from(chips)
+        });
+        assert!(placed.values().all(|p| p.group == 0 && p.chips == 4));
+    }
+
+    #[test]
+    fn co_locate_splits_incompatible_equals() {
+        // Two equal-weight, boundary-incompatible models: two half-pod
+        // groups halve the makespan versus serializing both on the pod.
+        let models = vec![
+            ("a".to_string(), fc(Dataflow::Ws, Dataflow::Ws)),
+            ("b".to_string(), fc(Dataflow::Is, Dataflow::Is)),
+        ];
+        let placed = assign(&arch(4), &models, PlacementPolicy::CoLocate, |_, chips| {
+            8_000 / u64::from(chips)
+        });
+        assert_eq!(placed["a"], ModelPlacement { group: 0, chips: 2 });
+        assert_eq!(placed["b"], ModelPlacement { group: 1, chips: 2 });
+    }
+
+    #[test]
+    fn co_locate_keeps_compatible_models_together() {
+        // Mutually compatible boundaries cluster into one group, which
+        // makes layout B identical to whole-pod — either way, one group.
+        let models = vec![
+            ("a".to_string(), fc(Dataflow::Ws, Dataflow::Os)),
+            ("b".to_string(), fc(Dataflow::Os, Dataflow::Ws)),
+        ];
+        let placed = assign(&arch(4), &models, PlacementPolicy::CoLocate, |_, chips| {
+            8_000 / u64::from(chips)
+        });
+        assert!(placed.values().all(|p| p.group == 0 && p.chips == 4));
+    }
+}

@@ -18,9 +18,14 @@
 //!   can be registered and removed while a
 //!   [`crate::inference::FleetServer`] is serving.  In-flight batches hold
 //!   an [`Arc`] to their deployment, so removal never interrupts them.
-//!
-//! Fleet deployments are single-chip (the multi-chip axis is orthogonal
-//! and stays with [`crate::inference::InferenceServer::new_sharded`]).
+//! * **placement**: on a multi-chip architecture the registry also owns
+//!   the pod's placement — which models share which chip group, under a
+//!   [`PlacementPolicy`] fixed at construction.  Assignments are
+//!   recomputed deterministically after every register/remove (see
+//!   [`crate::inference::placement`] module docs for the solver), and
+//!   group-width schedules come from [`ModelRegistry::schedule_for`],
+//!   which load-or-compiles the joint plan at that chip count through the
+//!   same shared store/cache as everything else.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
@@ -33,8 +38,13 @@ use crate::sim::parallel::{CacheStats, ShapeCache};
 use crate::sim::store::PlanStore;
 use crate::sim::Dataflow;
 
+use crate::topology::Topology;
+
 use super::backend::ModelBackend;
+use super::placement::{assign, ChipSchedule, ModelPlacement, PlacementPolicy};
 use super::server::InferenceServer;
+use crate::coordinator::partition::ShardChoice;
+use crate::sim::ShardStrategy;
 
 /// Where a registration's execution plan came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -108,18 +118,43 @@ pub struct ModelRegistry {
     cache: Arc<ShapeCache>,
     store: Option<PlanStore>,
     models: RwLock<BTreeMap<String, Arc<ModelDeployment>>>,
+    placement: PlacementPolicy,
+    assignments: RwLock<BTreeMap<String, ModelPlacement>>,
 }
 
 impl ModelRegistry {
     /// Registry on `arch` with an optional persistent store (pass the same
-    /// directory across processes for cross-run warm starts).
+    /// directory across processes for cross-run warm starts).  Placement is
+    /// [`PlacementPolicy::Single`], so `arch` must be single-chip — use
+    /// [`ModelRegistry::with_placement`] for a pod.
     pub fn new(arch: ArchConfig, store: Option<PlanStore>) -> Result<Self> {
+        Self::with_placement(arch, store, PlacementPolicy::Single)
+    }
+
+    /// Registry with an explicit [`PlacementPolicy`].  Rejects the one
+    /// silent-footgun combination: a multi-chip `arch` under
+    /// [`PlacementPolicy::Single`] would ignore every chip but the first,
+    /// so it errors instead — pick `pod` or `co-locate` (or 1 chip).
+    pub fn with_placement(
+        arch: ArchConfig,
+        store: Option<PlanStore>,
+        placement: PlacementPolicy,
+    ) -> Result<Self> {
         arch.validate()?;
+        if placement == PlacementPolicy::Single && arch.chips > 1 {
+            return Err(Error::InvalidConfig(format!(
+                "placement {placement:?} serves one chip but the architecture has {}; \
+                 use --placement pod or co-locate (or chips = 1)",
+                arch.chips
+            )));
+        }
         Ok(Self {
             arch,
             cache: Arc::new(ShapeCache::new()),
             store,
             models: RwLock::new(BTreeMap::new()),
+            placement,
+            assignments: RwLock::new(BTreeMap::new()),
         })
     }
 
@@ -179,8 +214,11 @@ impl ModelRegistry {
         };
         let forecast = plan.reconfig_forecast();
         let plan_dataflows = plan.dataflows();
-        let server =
-            InferenceServer::with_backend(backend, self.arch, 1, &plan, Arc::clone(&self.cache))?;
+        let server = InferenceServer::builder(self.arch)
+            .backend(backend)
+            .plan(&plan)
+            .cache(Arc::clone(&self.cache))
+            .build()?;
         if let Some(store) = &self.store {
             // Persist only this model's shape entries under its provenance
             // (the shared cache also holds other models' shapes — siblings
@@ -202,25 +240,121 @@ impl ModelRegistry {
             plan_dataflows,
             forecast,
         });
-        let mut models = self.models.write().expect("registry lock");
-        // Re-check under the write lock (two concurrent registrations).
-        if models.contains_key(&name) {
-            return Err(Error::InvalidConfig(format!(
-                "model {name:?} is already registered"
-            )));
+        {
+            let mut models = self.models.write().expect("registry lock");
+            // Re-check under the write lock (two concurrent registrations).
+            if models.contains_key(&name) {
+                return Err(Error::InvalidConfig(format!(
+                    "model {name:?} is already registered"
+                )));
+            }
+            models.insert(name, Arc::clone(&deployment));
         }
-        models.insert(name, Arc::clone(&deployment));
+        self.refresh_placement();
         Ok(deployment)
     }
 
     /// Remove a model from routing.  Returns whether it was registered.
     /// In-flight batches keep serving through their own [`Arc`].
     pub fn remove(&self, name: &str) -> bool {
-        self.models
+        let removed = self
+            .models
             .write()
             .expect("registry lock")
             .remove(name)
-            .is_some()
+            .is_some();
+        if removed {
+            self.refresh_placement();
+        }
+        removed
+    }
+
+    /// Recompute every model's chip-group assignment from the current
+    /// model set.  Concurrent register/remove calls each recompute from
+    /// the set they observe; last write wins, and the final call sees the
+    /// final set, so the map converges.
+    fn refresh_placement(&self) {
+        let deployments = self.deployments();
+        let models: Vec<(String, ReconfigForecast)> = deployments
+            .iter()
+            .map(|d| (d.name.clone(), d.forecast))
+            .collect();
+        let placed = assign(&self.arch, &models, self.placement, |name, chips| {
+            deployments
+                .iter()
+                .find(|d| d.name == name)
+                .map_or(0, |d| self.plan_at(d.server.topology(), chips).flex_cycles())
+        });
+        *self.assignments.write().expect("placement lock") = placed;
+    }
+
+    /// Load-or-compile `topo`'s joint plan at a chip count through the
+    /// shared store and cache.  A failed persist only costs the next
+    /// process its warm start, so it is deliberately not propagated.
+    fn plan_at(&self, topo: &Topology, chips: u32) -> ExecutionPlan {
+        let opts = SimOptions::default();
+        let key = provenance_key(&self.arch, std::slice::from_ref(topo), opts, chips);
+        if let Some(stored) = self
+            .store
+            .as_ref()
+            .and_then(|s| ExecutionPlan::load(s, &key))
+        {
+            return stored;
+        }
+        let compiled = compile_plan(&self.arch, topo, opts, chips, &self.cache);
+        if let Some(store) = &self.store {
+            let _ = compiled.save(store);
+        }
+        compiled
+    }
+
+    /// The placement policy this registry groups models under.
+    pub fn placement_policy(&self) -> PlacementPolicy {
+        self.placement
+    }
+
+    /// `name`'s current chip-group assignment (`None` when unregistered).
+    pub fn placement_of(&self, name: &str) -> Option<ModelPlacement> {
+        self.assignments
+            .read()
+            .expect("placement lock")
+            .get(name)
+            .copied()
+    }
+
+    /// Every registered model's chip-group assignment, keyed by name.
+    pub fn placements(&self) -> BTreeMap<String, ModelPlacement> {
+        self.assignments.read().expect("placement lock").clone()
+    }
+
+    /// `name`'s per-layer schedule at a chip-group width.  At `chips <= 1`
+    /// this is exactly the registered deployment's plan (no recompile, the
+    /// single-chip tie-break strategy); wider schedules load-or-compile
+    /// the joint (dataflow × shard-strategy) plan at that width.
+    pub fn schedule_for(&self, name: &str, chips: u32) -> Result<ChipSchedule> {
+        let dep = self.get(name).ok_or_else(|| {
+            Error::InvalidConfig(format!("model {name:?} is not registered"))
+        })?;
+        if chips <= 1 {
+            return Ok(ChipSchedule {
+                chips: 1,
+                choices: dep
+                    .plan_dataflows
+                    .iter()
+                    .map(|&dataflow| ShardChoice {
+                        dataflow,
+                        strategy: ShardStrategy::Rows,
+                    })
+                    .collect(),
+                forecast: dep.forecast,
+            });
+        }
+        let plan = self.plan_at(dep.server.topology(), chips);
+        Ok(ChipSchedule {
+            chips,
+            choices: plan.layers.iter().map(|l| l.choice).collect(),
+            forecast: plan.reconfig_forecast(),
+        })
     }
 
     /// Look up a registered model.
@@ -324,6 +458,57 @@ mod tests {
         assert!(r
             .register(Arc::new(SimBackend::from_zoo("mobilenet", 1).unwrap()))
             .is_ok());
+    }
+
+    #[test]
+    fn single_registry_places_every_model_on_one_chip() {
+        let r = registry();
+        r.register(Arc::new(SimBackend::from_zoo("alexnet", 1).unwrap()))
+            .unwrap();
+        assert_eq!(r.placement_policy(), PlacementPolicy::Single);
+        assert_eq!(
+            r.placement_of("alexnet"),
+            Some(ModelPlacement { group: 0, chips: 1 })
+        );
+        assert!(r.placement_of("vgg13").is_none());
+        r.remove("alexnet");
+        assert!(r.placement_of("alexnet").is_none(), "removal drops placement");
+    }
+
+    #[test]
+    fn single_placement_rejects_multi_chip_arch() {
+        let err = ModelRegistry::new(ArchConfig::square(8).with_chips(4), None);
+        assert!(err.is_err(), "multi-chip arch must not silently serve 1 chip");
+    }
+
+    #[test]
+    fn pod_registry_shards_across_all_chips_and_schedules_at_width() {
+        let r = ModelRegistry::with_placement(
+            ArchConfig::square(8).with_chips(4),
+            None,
+            PlacementPolicy::Pod,
+        )
+        .unwrap();
+        r.register(Arc::new(SimBackend::from_zoo("alexnet", 2).unwrap()))
+            .unwrap();
+        assert_eq!(
+            r.placement_of("alexnet"),
+            Some(ModelPlacement { group: 0, chips: 4 })
+        );
+        let dep = r.get("alexnet").unwrap();
+        // Width 1 is the registered plan verbatim — no recompilation.
+        let s1 = r.schedule_for("alexnet", 1).unwrap();
+        assert_eq!(
+            s1.choices.iter().map(|c| c.dataflow).collect::<Vec<_>>(),
+            dep.plan_dataflows
+        );
+        assert_eq!(s1.forecast, dep.forecast);
+        // Width 4 is the joint plan at pod width: same layer count, and
+        // no slower end to end than the single-chip schedule.
+        let s4 = r.schedule_for("alexnet", 4).unwrap();
+        assert_eq!(s4.chips, 4);
+        assert_eq!(s4.choices.len(), dep.plan_dataflows.len());
+        assert!(r.schedule_for("missing", 4).is_err());
     }
 
     #[test]

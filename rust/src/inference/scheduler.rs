@@ -50,14 +50,21 @@ pub enum SchedulePolicy {
     ReconfigAware,
     /// Earliest-deadline-first with drop-and-count on missed deadlines.
     DeadlineEdf,
+    /// Placement-aware co-scheduling: requests route to their model's chip
+    /// group ([`Scheduler::assign_group`]) and each group runs the
+    /// reconfig-aware ordering independently, so co-located models with
+    /// compatible boundary dataflows coalesce while incompatible ones stay
+    /// isolated on their own chips.
+    Placement,
 }
 
 impl SchedulePolicy {
     /// Every policy, in CLI listing order.
-    pub const ALL: [SchedulePolicy; 3] = [
+    pub const ALL: [SchedulePolicy; 4] = [
         SchedulePolicy::Fifo,
         SchedulePolicy::ReconfigAware,
         SchedulePolicy::DeadlineEdf,
+        SchedulePolicy::Placement,
     ];
 
     /// Kebab-case name used on the CLI and in persisted bench reports.
@@ -66,6 +73,7 @@ impl SchedulePolicy {
             SchedulePolicy::Fifo => "fifo",
             SchedulePolicy::ReconfigAware => "reconfig-aware",
             SchedulePolicy::DeadlineEdf => "deadline-edf",
+            SchedulePolicy::Placement => "placement",
         }
     }
 
@@ -75,6 +83,7 @@ impl SchedulePolicy {
             "fifo" => Some(SchedulePolicy::Fifo),
             "reconfig-aware" | "reconfig" => Some(SchedulePolicy::ReconfigAware),
             "deadline-edf" | "edf" => Some(SchedulePolicy::DeadlineEdf),
+            "placement" => Some(SchedulePolicy::Placement),
             _ => None,
         }
     }
@@ -137,6 +146,16 @@ pub struct BatchPlan<T> {
     pub model_switch: bool,
 }
 
+/// Per-chip-group array residency: which model's weights are streamed in
+/// and which dataflow the group's arrays were last configured to.  The
+/// classic single-device policies use group `0` for everything; under
+/// [`SchedulePolicy::Placement`] each chip group tracks its own residency.
+#[derive(Debug, Clone, Default)]
+struct GroupState {
+    last_model: Option<String>,
+    last_dataflow: Option<Dataflow>,
+}
+
 /// The deterministic batch-formation state machine (see module docs).
 ///
 /// `T` is the caller's per-request payload — the router stores response
@@ -149,8 +168,10 @@ pub struct Scheduler<T> {
     profiles: BTreeMap<String, ModelProfile>,
     queues: BTreeMap<String, VecDeque<PendingItem<T>>>,
     seq: u64,
-    last_model: Option<String>,
-    last_dataflow: Option<Dataflow>,
+    /// Chip-group assignment per model; unassigned models live in group 0.
+    groups: BTreeMap<String, usize>,
+    /// Array residency per chip group, keyed by group id.
+    state: BTreeMap<usize, GroupState>,
 }
 
 impl<T> Scheduler<T> {
@@ -161,8 +182,8 @@ impl<T> Scheduler<T> {
             profiles: BTreeMap::new(),
             queues: BTreeMap::new(),
             seq: 0,
-            last_model: None,
-            last_dataflow: None,
+            groups: BTreeMap::new(),
+            state: BTreeMap::new(),
         }
     }
 
@@ -187,10 +208,43 @@ impl<T> Scheduler<T> {
     /// payloads so the caller can drop/fail them explicitly.
     pub fn remove_profile(&mut self, model: &str) -> Vec<T> {
         self.profiles.remove(model);
+        self.groups.remove(model);
         self.queues
             .remove(model)
             .map(|q| q.into_iter().map(|p| p.item).collect())
             .unwrap_or_default()
+    }
+
+    /// Pin `model` to chip group `group`.  Only [`Scheduler::pop_group`]
+    /// consults assignments; the classic [`Scheduler::pop`] path ignores
+    /// them, so assigning groups never perturbs single-device behavior.
+    pub fn assign_group(&mut self, model: &str, group: usize) {
+        self.groups.insert(model.to_string(), group);
+    }
+
+    /// The chip group `model` is pinned to (0 when never assigned).
+    pub fn group_of(&self, model: &str) -> usize {
+        self.groups.get(model).copied().unwrap_or(0)
+    }
+
+    /// Distinct chip groups of the currently profiled models, ascending.
+    pub fn active_groups(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .profiles
+            .keys()
+            .map(|n| self.group_of(n))
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Whether `model` participates when selecting for `filter`.
+    fn in_scope(&self, filter: Option<usize>, model: &str) -> bool {
+        match filter {
+            Some(g) => self.group_of(model) == g,
+            None => true,
+        }
     }
 
     /// Queue a request for `model` that arrived at `arrival`, with an
@@ -246,9 +300,10 @@ impl<T> Scheduler<T> {
         }
     }
 
-    /// Entry-switch cost of launching `model` next (0 or 1).
-    fn entry_cost(&self, model: &str) -> u64 {
-        match (self.last_dataflow, self.profiles[model].forecast.first) {
+    /// Entry-switch cost of launching `model` next on a group whose arrays
+    /// hold `state` (0 or 1).
+    fn entry_cost(&self, state: &GroupState, model: &str) -> u64 {
+        match (state.last_dataflow, self.profiles[model].forecast.first) {
             (Some(loaded), Some(first)) if loaded != first => 1,
             _ => 0,
         }
@@ -265,10 +320,13 @@ impl<T> Scheduler<T> {
 
     /// Pick the model whose batch launches next, or `None` when the policy
     /// has nothing to launch (no full batch, and `force` not given).
-    fn select(&self, force: bool) -> Option<String> {
+    /// `filter` restricts the choice to one chip group's models; `state` is
+    /// the residency of the group being scheduled.
+    fn select(&self, filter: Option<usize>, state: &GroupState, force: bool) -> Option<String> {
         let full: Vec<&String> = self
             .queues
             .keys()
+            .filter(|n| self.in_scope(filter, n))
             .filter(|n| self.queues[*n].len() >= self.profiles[*n].batch)
             .collect();
         match self.policy {
@@ -288,16 +346,19 @@ impl<T> Scheduler<T> {
                     return self
                         .queues
                         .iter()
-                        .find(|(_, q)| !q.is_empty())
+                        .find(|(n, q)| self.in_scope(filter, n) && !q.is_empty())
                         .map(|(n, _)| n.clone());
                 }
                 None
             }
-            SchedulePolicy::ReconfigAware => {
+            // Placement reuses the reconfig-aware ordering verbatim; the
+            // difference is purely which models are in scope (one chip
+            // group's) and whose residency `state` is consulted.
+            SchedulePolicy::ReconfigAware | SchedulePolicy::Placement => {
                 if !full.is_empty() {
                     // Stay on the resident model while it has a full batch
                     // (no entry switch, no weight restream)...
-                    if let Some(last) = &self.last_model {
+                    if let Some(last) = &state.last_model {
                         if full.iter().any(|n| *n == last) {
                             return Some(last.clone());
                         }
@@ -307,7 +368,7 @@ impl<T> Scheduler<T> {
                         .into_iter()
                         .min_by_key(|n| {
                             (
-                                self.entry_cost(n),
+                                self.entry_cost(state, n),
                                 std::cmp::Reverse(self.queues[*n].len()),
                                 (*n).clone(),
                             )
@@ -320,11 +381,11 @@ impl<T> Scheduler<T> {
                     return self
                         .queues
                         .iter()
-                        .filter(|(_, q)| !q.is_empty())
+                        .filter(|(n, q)| self.in_scope(filter, n) && !q.is_empty())
                         .min_by_key(|(n, q)| {
                             (
                                 std::cmp::Reverse(q.len()),
-                                u64::from(self.last_model.as_deref() != Some(n.as_str())),
+                                u64::from(state.last_model.as_deref() != Some(n.as_str())),
                                 (*n).clone(),
                             )
                         })
@@ -339,7 +400,7 @@ impl<T> Scheduler<T> {
                     return self
                         .queues
                         .iter()
-                        .filter(|(_, q)| !q.is_empty())
+                        .filter(|(n, q)| self.in_scope(filter, n) && !q.is_empty())
                         .map(|(n, _)| n)
                         .min_by_key(|n| urgency(n))
                         .cloned();
@@ -362,8 +423,36 @@ impl<T> Scheduler<T> {
         force: bool,
         expired: &mut Vec<(String, T)>,
     ) -> Option<BatchPlan<T>> {
+        self.pop_filtered(0, None, now, force, expired)
+    }
+
+    /// [`Scheduler::pop`] restricted to one chip group: only models
+    /// assigned to `group` (via [`Scheduler::assign_group`]) are eligible,
+    /// and entry switches are charged against that group's own residency —
+    /// a model switch on one group never invalidates another group's
+    /// loaded dataflow.  With every model in one group this is
+    /// byte-identical to [`Scheduler::pop`].
+    pub fn pop_group(
+        &mut self,
+        group: usize,
+        now: u64,
+        force: bool,
+        expired: &mut Vec<(String, T)>,
+    ) -> Option<BatchPlan<T>> {
+        self.pop_filtered(group, Some(group), now, force, expired)
+    }
+
+    fn pop_filtered(
+        &mut self,
+        key: usize,
+        filter: Option<usize>,
+        now: u64,
+        force: bool,
+        expired: &mut Vec<(String, T)>,
+    ) -> Option<BatchPlan<T>> {
         self.sweep_expired(now, expired);
-        let name = self.select(force)?;
+        let state = self.state.get(&key).cloned().unwrap_or_default();
+        let name = self.select(filter, &state, force)?;
         let profile = &self.profiles[&name];
         let batch = profile.batch;
         let forecast = profile.forecast;
@@ -394,21 +483,22 @@ impl<T> Scheduler<T> {
             q.drain(..n).collect()
         };
         debug_assert!(!items.is_empty(), "selected model had an empty queue");
-        let entry = self.entry_cost(&name) == 1;
-        let model_switch = self
+        let entry = self.entry_cost(&state, &name) == 1;
+        let model_switch = state
             .last_model
             .as_deref()
             .is_some_and(|last| last != name);
         // One definition of the charge: the forecast's own accounting
         // (entry_cost above is the same rule, used for *ordering*).
-        let reconfigurations = forecast.launch_switches(self.last_dataflow);
+        let reconfigurations = forecast.launch_switches(state.last_dataflow);
         debug_assert_eq!(
             reconfigurations,
             forecast.internal_switches + u64::from(entry)
         );
-        self.last_model = Some(name.clone());
+        let residency = self.state.entry(key).or_default();
+        residency.last_model = Some(name.clone());
         if let Some(last) = forecast.last {
-            self.last_dataflow = Some(last);
+            residency.last_dataflow = Some(last);
         }
         Some(BatchPlan {
             model: name,
@@ -593,4 +683,102 @@ mod tests {
         assert_eq!(s.pending(), 0);
     }
 
+    #[test]
+    fn single_group_placement_matches_reconfig_aware() {
+        // With every model in group 0, pop_group(0) under Placement must
+        // replay the reconfig-aware pop decisions bit for bit.
+        let mut ra = sched(SchedulePolicy::ReconfigAware);
+        let mut pl = sched(SchedulePolicy::Placement);
+        pl.assign_group("a", 0);
+        pl.assign_group("b", 0);
+        let mut exp = Vec::new();
+        for i in 0..4 {
+            ra.push("a", i, None, i);
+            ra.push("b", i, None, i + 10);
+            pl.push("a", i, None, i);
+            pl.push("b", i, None, i + 10);
+        }
+        loop {
+            let want = ra.pop(9, true, &mut exp);
+            let got = pl.pop_group(0, 9, true, &mut exp);
+            match (want, got) {
+                (None, None) => break,
+                (Some(w), Some(g)) => {
+                    assert_eq!(w.model, g.model);
+                    assert_eq!(w.reconfigurations, g.reconfigurations);
+                    assert_eq!(w.model_switch, g.model_switch);
+                    assert_eq!(
+                        w.items.iter().map(|i| i.item).collect::<Vec<_>>(),
+                        g.items.iter().map(|i| i.item).collect::<Vec<_>>()
+                    );
+                }
+                (w, g) => panic!("diverged: {:?} vs {:?}", w.is_some(), g.is_some()),
+            }
+        }
+        assert!(exp.is_empty());
+    }
+
+    #[test]
+    fn groups_track_residency_independently() {
+        let mut s = sched(SchedulePolicy::Placement);
+        s.assign_group("a", 0);
+        s.assign_group("b", 1);
+        assert_eq!(s.active_groups(), vec![0, 1]);
+        assert_eq!(s.group_of("a"), 0);
+        assert_eq!(s.group_of("b"), 1);
+        let mut exp = Vec::new();
+        for i in 0..2 {
+            s.push("a", i, None, i);
+            s.push("b", i, None, i + 10);
+        }
+        // Group 1 only sees b; group 0 only sees a.
+        let b = s.pop_group(1, 2, false, &mut exp).unwrap();
+        assert_eq!(b.model, "b");
+        assert!(!b.entry_switch, "group 1 arrays were unconfigured");
+        let a = s.pop_group(0, 2, false, &mut exp).unwrap();
+        assert_eq!(a.model, "a");
+        assert!(
+            !a.entry_switch,
+            "b's launch on group 1 must not touch group 0 residency"
+        );
+        assert!(s.pop_group(0, 3, true, &mut exp).is_none());
+        assert!(s.pop_group(1, 3, true, &mut exp).is_none());
+    }
+
+    #[test]
+    fn co_located_compatible_pair_never_pays_more_than_isolated() {
+        // a ends in OS; c begins in OS and ends in WS; a begins in WS: a
+        // and c are boundary-compatible in both directions, so co-locating
+        // them must not cost a single extra reconfiguration versus giving
+        // each its own group.
+        let mk = |group_of_c: usize| {
+            let mut s: Scheduler<u64> = Scheduler::new(SchedulePolicy::Placement);
+            s.set_profile(profile("a", 2, forecast(Dataflow::Ws, Dataflow::Os, 1)));
+            s.set_profile(profile("c", 2, forecast(Dataflow::Os, Dataflow::Ws, 2)));
+            s.assign_group("a", 0);
+            s.assign_group("c", group_of_c);
+            s
+        };
+        let run = |s: &mut Scheduler<u64>| -> u64 {
+            let mut exp = Vec::new();
+            let mut total = 0;
+            for i in 0..8 {
+                s.push("a", i, None, i);
+                s.push("c", i, None, i + 100);
+            }
+            for g in s.active_groups() {
+                while let Some(b) = s.pop_group(g, 9, true, &mut exp) {
+                    total += b.reconfigurations;
+                }
+            }
+            assert!(exp.is_empty());
+            total
+        };
+        let co_located = run(&mut mk(0));
+        let isolated = run(&mut mk(1));
+        assert!(
+            co_located <= isolated,
+            "co-located {co_located} > isolated {isolated}"
+        );
+    }
 }

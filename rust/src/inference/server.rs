@@ -62,6 +62,112 @@ pub struct ServerStats {
     pub sim_speedup_vs_best_static: f64,
 }
 
+/// Where a [`ServerBuilder`] gets its values from: PJRT artifacts (a
+/// [`Runtime`]) or an already-constructed [`ModelBackend`].
+enum BackendSource {
+    Runtime(Runtime),
+    Backend(Arc<dyn ModelBackend>),
+}
+
+/// Staged construction of an [`InferenceServer`] — the one deployment path
+/// the five legacy constructors (`new`, `new_sharded`, `from_backend`,
+/// `with_plan`, `with_backend`) now funnel through.
+///
+/// Exactly one value source is required — [`ServerBuilder::runtime`] for
+/// PJRT artifacts or [`ServerBuilder::backend`] for any [`ModelBackend`]
+/// (setting one replaces the other; the last call wins).  Everything else
+/// has a default: without [`ServerBuilder::plan`] the plan is compiled from
+/// scratch, without [`ServerBuilder::cache`] a fresh [`ShapeCache`] backs
+/// the deployment, and [`ServerBuilder::chips`] defaults to a single chip.
+///
+/// ```
+/// use std::sync::Arc;
+/// use flex_tpu::config::ArchConfig;
+/// use flex_tpu::inference::{InferenceServer, SimBackend};
+///
+/// let backend = Arc::new(SimBackend::from_zoo("alexnet", 2)?);
+/// let server = InferenceServer::builder(ArchConfig::square(32))
+///     .backend(backend)
+///     .chips(2)
+///     .build()?;
+/// assert_eq!(server.model(), "alexnet");
+/// # Ok::<(), Box<dyn std::error::Error>>(())
+/// ```
+pub struct ServerBuilder {
+    arch: ArchConfig,
+    source: Option<BackendSource>,
+    chips: u32,
+    plan: Option<ExecutionPlan>,
+    cache: Option<Arc<ShapeCache>>,
+}
+
+impl ServerBuilder {
+    /// Serve PJRT artifacts: compile the runtime's model variant and pair
+    /// it with the deployed timing model.
+    pub fn runtime(mut self, runtime: Runtime) -> Self {
+        self.source = Some(BackendSource::Runtime(runtime));
+        self
+    }
+
+    /// Serve an arbitrary [`ModelBackend`] — e.g. the deterministic
+    /// [`crate::inference::SimBackend`] for weight-less zoo topologies.
+    pub fn backend(mut self, backend: Arc<dyn ModelBackend>) -> Self {
+        self.source = Some(BackendSource::Backend(backend));
+        self
+    }
+
+    /// Split each formed batch across `chips` chips
+    /// ([`ShardStrategy::Batch`] — one request never spans chips).
+    /// Values below one clamp to one; the default is a single chip.
+    pub fn chips(mut self, chips: u32) -> Self {
+        self.chips = chips;
+        self
+    }
+
+    /// Deploy from a **precompiled** [`ExecutionPlan`] (e.g. loaded from a
+    /// [`crate::sim::store::PlanStore`]), skipping the profiling phase.
+    /// [`ServerBuilder::build`] errors when the plan was compiled for a
+    /// different model, architecture or option set (provenance check).
+    pub fn plan(mut self, plan: &ExecutionPlan) -> Self {
+        self.plan = Some(plan.clone());
+        self
+    }
+
+    /// Memoize every (re)simulation in `cache`.  Preload it from the same
+    /// store as the plan and a warm start deploys with zero
+    /// `simulate_layer` calls.
+    pub fn cache(mut self, cache: Arc<ShapeCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Deploy.  Errors when no value source was configured, when the
+    /// backend fails to load, or when a supplied plan's provenance does not
+    /// match this deployment.
+    pub fn build(self) -> Result<InferenceServer> {
+        let source = self.source.ok_or_else(|| {
+            Error::InvalidConfig(
+                "server builder needs a value source: .runtime(..) or .backend(..)".to_string(),
+            )
+        })?;
+        let backend: Arc<dyn ModelBackend> = match source {
+            BackendSource::Runtime(runtime) => Arc::new(PjrtBackend::new(runtime)?),
+            BackendSource::Backend(backend) => backend,
+        };
+        let cache = self.cache.unwrap_or_else(|| Arc::new(ShapeCache::new()));
+        let plan = match self.plan {
+            Some(plan) => plan,
+            None => {
+                let topo = backend.topology().clone();
+                FlexPipeline::new(self.arch)
+                    .with_cache(Arc::clone(&cache))
+                    .compile(&topo)
+            }
+        };
+        InferenceServer::deploy(backend, self.arch, self.chips, &plan, cache)
+    }
+}
+
 /// The server: an execution backend + a deployed Flex-TPU timing model.
 pub struct InferenceServer {
     backend: Arc<dyn ModelBackend>,
@@ -74,40 +180,48 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Deploy: run the paper's pre-deployment flow for the artifact's
-    /// network on `arch` and bind the matching compiled model variant.
-    pub fn new(runtime: Runtime, arch: ArchConfig) -> Result<Self> {
-        Self::new_sharded(runtime, arch, 1)
+    /// Start configuring a deployment on `arch` (see [`ServerBuilder`]).
+    pub fn builder(arch: ArchConfig) -> ServerBuilder {
+        ServerBuilder {
+            arch,
+            source: None,
+            chips: 1,
+            plan: None,
+            cache: None,
+        }
     }
 
-    /// [`InferenceServer::new`] on a `chips`-chip system: each formed batch
-    /// is split across the chips ([`ShardStrategy::Batch`] — one request
-    /// never spans chips, so there is no interconnect traffic on the
-    /// request path) and executed concurrently.  `chips = 1` is
-    /// byte-identical to [`InferenceServer::new`].
+    /// Deploy: run the paper's pre-deployment flow for the artifact's
+    /// network on `arch` and bind the matching compiled model variant.
+    #[deprecated(note = "use InferenceServer::builder(arch).runtime(runtime).build()")]
+    pub fn new(runtime: Runtime, arch: ArchConfig) -> Result<Self> {
+        Self::builder(arch).runtime(runtime).build()
+    }
+
+    /// [`InferenceServer::builder`] on a `chips`-chip system: each formed
+    /// batch is split across the chips ([`ShardStrategy::Batch`] — one
+    /// request never spans chips, so there is no interconnect traffic on
+    /// the request path) and executed concurrently.  `chips = 1` is
+    /// byte-identical to the single-chip deployment.
+    #[deprecated(note = "use InferenceServer::builder(arch).runtime(runtime).chips(chips).build()")]
     pub fn new_sharded(runtime: Runtime, arch: ArchConfig, chips: u32) -> Result<Self> {
-        let backend: Arc<dyn ModelBackend> = Arc::new(PjrtBackend::new(runtime)?);
-        Self::from_backend(backend, arch, chips)
+        Self::builder(arch).runtime(runtime).chips(chips).build()
     }
 
     /// Deploy an arbitrary [`ModelBackend`] (compiling its plan from
     /// scratch through a fresh cache).  This is how weight-less topologies
     /// are served: pair the deterministic
     /// [`crate::inference::SimBackend`] with any zoo model.
+    #[deprecated(note = "use InferenceServer::builder(arch).backend(backend).chips(chips).build()")]
     pub fn from_backend(
         backend: Arc<dyn ModelBackend>,
         arch: ArchConfig,
         chips: u32,
     ) -> Result<Self> {
-        let cache = Arc::new(ShapeCache::new());
-        let topo = backend.topology().clone();
-        let plan = FlexPipeline::new(arch)
-            .with_cache(Arc::clone(&cache))
-            .compile(&topo);
-        Self::with_backend(backend, arch, chips, &plan, cache)
+        Self::builder(arch).backend(backend).chips(chips).build()
     }
 
-    /// [`InferenceServer::new_sharded`] from a **precompiled**
+    /// [`InferenceServer::builder`] from a **precompiled**
     /// [`ExecutionPlan`] (e.g. loaded from a
     /// [`crate::sim::store::PlanStore`]), skipping the profiling phase:
     /// the plan supplies the per-layer schedule, `cache` memoizes every
@@ -115,6 +229,9 @@ impl InferenceServer {
     /// deploys with zero `simulate_layer` calls.  Errors when the plan was
     /// compiled for a different model, architecture or option set (the
     /// provenance key is checked).
+    #[deprecated(
+        note = "use InferenceServer::builder(arch).runtime(runtime).chips(chips).plan(plan).cache(cache).build()"
+    )]
     pub fn with_plan(
         runtime: Runtime,
         arch: ArchConfig,
@@ -122,15 +239,35 @@ impl InferenceServer {
         plan: &ExecutionPlan,
         cache: Arc<ShapeCache>,
     ) -> Result<Self> {
-        let backend: Arc<dyn ModelBackend> = Arc::new(PjrtBackend::new(runtime)?);
-        Self::with_backend(backend, arch, chips, plan, cache)
+        Self::builder(arch)
+            .runtime(runtime)
+            .chips(chips)
+            .plan(plan)
+            .cache(cache)
+            .build()
     }
 
     /// The general constructor every deployment path funnels into: an
     /// arbitrary backend, a precompiled plan, and a shared cache.  The
     /// plan's provenance must match this exact deployment
     /// (arch × topology × default options × one chip).
+    #[deprecated(
+        note = "use InferenceServer::builder(arch).backend(backend).chips(chips).plan(plan).cache(cache).build()"
+    )]
     pub fn with_backend(
+        backend: Arc<dyn ModelBackend>,
+        arch: ArchConfig,
+        chips: u32,
+        plan: &ExecutionPlan,
+        cache: Arc<ShapeCache>,
+    ) -> Result<Self> {
+        Self::deploy(backend, arch, chips, plan, cache)
+    }
+
+    /// The deployment funnel behind [`ServerBuilder::build`] (and, for
+    /// byte-identity, behind every deprecated constructor): provenance
+    /// check, plan deployment, and the single-/multi-chip timing model.
+    fn deploy(
         backend: Arc<dyn ModelBackend>,
         arch: ArchConfig,
         chips: u32,
@@ -377,7 +514,10 @@ impl InferenceServer {
     /// use flex_tpu::runtime::Runtime;
     ///
     /// let runtime = Runtime::load("artifacts".as_ref())?;
-    /// let server = InferenceServer::new_sharded(runtime, ArchConfig::square(8), 2)?;
+    /// let server = InferenceServer::builder(ArchConfig::square(8))
+    ///     .runtime(runtime)
+    ///     .chips(2)
+    ///     .build()?;
     /// let (tx, rx) = std::sync::mpsc::sync_channel(64);
     /// let (otx, orx) = std::sync::mpsc::channel();
     /// let req = InferenceRequest {

@@ -12,10 +12,12 @@
 //! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2]
 //!                   [--chips 2] [--plan-cache DIR]
 //! flex-tpu serve    --model resnet18 --model alexnet ... [--requests 300] [--workers 4]
-//!                   [--batch 4] [--size 32] [--policy fifo] [--plan-cache DIR]
+//!                   [--batch 4] [--size 32] [--policy fifo] [--chips 4] [--placement pod]
+//!                   [--plan-cache DIR]
 //! flex-tpu bench    serve --scenario mixed --seed 7 --policy all [--requests 600]
-//!                   [--batch 4] [--size 128] [--mean-us 2000] [--mode open]
-//!                   [--deadline-us 0] [--out BENCH_PR5.json] [--plan-cache DIR]
+//!                   [--batch 4] [--size 128] [--chips 4] [--placement co-locate]
+//!                   [--mean-us 2000] [--mode open] [--deadline-us 0]
+//!                   [--out BENCH_PR5.json] [--plan-cache DIR]
 //! flex-tpu bench    compare [--report BENCH_PR5.json]
 //!                   [--baseline rust/tests/golden/bench_baseline.json]
 //! flex-tpu fleet    status --plan-cache DIR
@@ -32,7 +34,8 @@ use flex_tpu::coordinator::cmu::Cmu;
 use flex_tpu::coordinator::pipeline::SelectorKind;
 use flex_tpu::coordinator::{partition, plan, select_exhaustive_cached, sweep, FlexPipeline};
 use flex_tpu::inference::{
-    FleetServer, InferenceRequest, InferenceServer, ModelRegistry, SchedulePolicy, SimBackend,
+    FleetServer, InferenceRequest, InferenceServer, ModelRegistry, PlacementPolicy,
+    SchedulePolicy, SimBackend,
 };
 use flex_tpu::metrics::Table;
 use flex_tpu::report;
@@ -120,6 +123,22 @@ fn effective_chips(p: &Parsed, arch: &ArchConfig) -> CliResult<u32> {
         return Err(format!("--chips must be in 1..={}", ArchConfig::MAX_CHIPS).into());
     }
     Ok(chips)
+}
+
+/// Build the fleet registry for `serve` / `bench serve`: resolve `--chips`
+/// against the arch config and apply the `--placement` chip-group policy.
+/// A multi-chip pod needs a placement that can serve it —
+/// [`ModelRegistry::with_placement`] rejects the mismatch instead of
+/// silently serving one chip.
+fn fleet_registry(p: &Parsed, arch: ArchConfig) -> CliResult<Arc<ModelRegistry>> {
+    let chips = effective_chips(p, &arch)?;
+    let placement = PlacementPolicy::parse(p.req("placement")?)
+        .ok_or("bad --placement (single/pod/co-locate)")?;
+    Ok(Arc::new(ModelRegistry::with_placement(
+        arch.with_chips(chips),
+        open_store(p)?,
+        placement,
+    )?))
 }
 
 fn cmd_simulate(p: &Parsed) -> CliResult<()> {
@@ -623,7 +642,7 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
     println!("platform: {}", rt.platform());
     let manifest = rt.manifest().clone();
     let server = match open_store(p)? {
-        None => InferenceServer::new_sharded(rt, arch, chips)?,
+        None => InferenceServer::builder(arch).runtime(rt).chips(chips).build()?,
         Some(store) => {
             // Warm-start serving: reload the persisted plan + shape entries
             // for this exact deployment, compile only what is missing, and
@@ -651,8 +670,12 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
                 "plan cache: {plan_state} plan {} ({loaded} shape entries preloaded)",
                 deploy_plan.provenance
             );
-            let server =
-                InferenceServer::with_plan(rt, arch, chips, &deploy_plan, Arc::clone(&cache))?;
+            let server = InferenceServer::builder(arch)
+                .runtime(rt)
+                .chips(chips)
+                .plan(&deploy_plan)
+                .cache(Arc::clone(&cache))
+                .build()?;
             // Persist only after the server is up: its timing estimate
             // simulates the batch-sharded layers and static baselines into
             // the cache, and those entries must warm the next run too.
@@ -720,7 +743,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
     let workers = p.threads("workers")?;
     let batch = p.u32("batch")?.max(1);
     let policy = SchedulePolicy::parse(p.req("policy")?)
-        .ok_or("bad --policy (fifo/reconfig-aware/deadline-edf)")?;
+        .ok_or("bad --policy (fifo/reconfig-aware/deadline-edf/placement)")?;
     let mut names: Vec<String> = Vec::new();
     for name in p.all("model") {
         if names.contains(&name) {
@@ -728,7 +751,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         }
         names.push(name);
     }
-    let registry = Arc::new(ModelRegistry::new(arch, open_store(p)?)?);
+    let registry = fleet_registry(p, arch)?;
     // Route by the *registered* name (a CSV path registers under its
     // topology name, which is what the fleet's routing key is).
     let mut routed: Vec<String> = Vec::with_capacity(names.len());
@@ -745,7 +768,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         routed.push(dep.name.clone());
     }
     let names = routed;
-    let fleet = FleetServer::with_policy(Arc::clone(&registry), policy);
+    let fleet = FleetServer::builder(Arc::clone(&registry)).policy(policy).build();
 
     // Bounded front door (a few compiled batches per model), deterministic
     // synthetic traffic interleaved round-robin across the fleet.
@@ -812,10 +835,13 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
     }
     println!("{}", t.render());
     println!(
-        "served {} requests in {} batches on {workers} workers ({size}x{size} array, {} models)",
+        "served {} requests in {} batches on {workers} workers ({size}x{size} array x {} \
+         chip(s), {} models, placement {})",
         stats.requests,
         stats.batches,
-        names.len()
+        registry.arch().chips.max(1),
+        names.len(),
+        registry.placement_policy(),
     );
     println!(
         "fleet policy: {} ({} deadline misses)",
@@ -854,13 +880,25 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
     let scenario =
         Scenario::parse(p.req("scenario")?).ok_or("bad --scenario (mixed/bursty/skewed)")?;
     let mode = LoopMode::parse(p.req("mode")?).ok_or("bad --mode (open/closed)")?;
-    let policy_flag = p.req("policy")?;
-    let policies: Vec<SchedulePolicy> = if policy_flag == "all" {
-        SchedulePolicy::ALL.to_vec()
-    } else {
-        vec![SchedulePolicy::parse(policy_flag)
-            .ok_or("bad --policy (fifo/reconfig-aware/deadline-edf/all)")?]
-    };
+    // `--policy` repeats to pick an explicit suite (the pod baseline runs
+    // fifo + deadline-edf + placement); `all` expands to every policy.
+    let mut policies: Vec<SchedulePolicy> = Vec::new();
+    for flag in p.all("policy") {
+        if flag == "all" {
+            for pol in SchedulePolicy::ALL {
+                if !policies.contains(&pol) {
+                    policies.push(pol);
+                }
+            }
+            continue;
+        }
+        let pol = SchedulePolicy::parse(&flag)
+            .ok_or("bad --policy (fifo/reconfig-aware/deadline-edf/placement/all)")?;
+        if policies.contains(&pol) {
+            return Err(format!("--policy {flag} given more than once").into());
+        }
+        policies.push(pol);
+    }
     let deadline = p.u64("deadline-us")?;
     let mut names: Vec<String> = Vec::new();
     for name in p.all("model") {
@@ -869,7 +907,7 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
         }
         names.push(name);
     }
-    let registry = Arc::new(ModelRegistry::new(arch, open_store(p)?)?);
+    let registry = fleet_registry(p, arch)?;
     // Bench by the *registered* name (a CSV path registers under its
     // topology name, which is the registry's routing key).
     let mut routed: Vec<String> = Vec::with_capacity(names.len());
@@ -879,17 +917,16 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
         routed.push(dep.name.clone());
     }
     let names = routed;
-    let cfg = BenchConfig {
-        scenario,
-        seed: p.u64("seed")?,
-        requests: p.u64("requests")?,
-        mean_interarrival_us: p.u64("mean-us")?,
-        models: names.clone(),
-        policy: policies[0],
-        mode,
-        concurrency: p.u64("concurrency")?,
-        deadline_us: if deadline > 0 { Some(deadline) } else { None },
-    };
+    let cfg = BenchConfig::builder(names.clone())
+        .scenario(scenario)
+        .seed(p.u64("seed")?)
+        .requests(p.u64("requests")?)
+        .mean_interarrival_us(p.u64("mean-us")?)
+        .policy(policies[0])
+        .mode(mode)
+        .concurrency(p.u64("concurrency")?)
+        .deadline_us(if deadline > 0 { Some(deadline) } else { None })
+        .build();
     let suite = BenchSuite::run(&registry, &cfg, &policies)?;
 
     let mut t = Table::new(&[
@@ -920,13 +957,15 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
     }
     println!("{}", t.render());
     println!(
-        "bench: scenario {scenario}, seed {}, {} requests over {} models ({}x{} array, batch \
-         {batch}, {} loop, mean gap {} us)",
+        "bench: scenario {scenario}, seed {}, {} requests over {} models ({}x{} array x {} \
+         chip(s), placement {}, batch {batch}, {} loop, mean gap {} us)",
         cfg.seed,
         cfg.requests,
         names.len(),
         arch.array_rows,
         arch.array_cols,
+        registry.arch().chips.max(1),
+        registry.placement_policy(),
         mode,
         cfg.mean_interarrival_us,
     );
@@ -939,6 +978,16 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
             fifo.reconfigurations,
             ra.model_switches,
             fifo.model_switches,
+        );
+    }
+    if let (Some(fifo), Some(pl)) = (suite.report("fifo"), suite.report("placement")) {
+        println!(
+            "placement vs fifo: {:.2}x throughput over {} chip group(s), {} vs {} \
+             reconfigurations",
+            pl.throughput_rps / fifo.throughput_rps,
+            pl.chip_groups,
+            pl.reconfigurations,
+            fifo.reconfigurations,
         );
     }
     if let Some(store) = registry.store() {
@@ -1197,7 +1246,13 @@ fn main() -> CliResult<()> {
     .flag(
         "policy",
         Some("fifo"),
-        "fleet scheduling policy: fifo / reconfig-aware / deadline-edf (bench serve also: all)",
+        "fleet scheduling policy: fifo / reconfig-aware / deadline-edf / placement \
+         (bench serve also: all, and the flag repeats to run a suite)",
+    )
+    .flag(
+        "placement",
+        Some("single"),
+        "fleet chip-group placement: single / pod / co-locate (serve + bench serve)",
     )
     .flag("scenario", Some("mixed"), "bench trace shape: mixed / bursty / skewed")
     .flag("seed", Some("7"), "bench trace seed (same seed = byte-identical report)")

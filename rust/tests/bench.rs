@@ -233,3 +233,245 @@ fn gated_suite_matches_committed_baseline() {
         ),
     }
 }
+
+// --------------------------------------------------------------------------
+// Pod-scale placement (ISSUE 6): N virtual chips behind one scheduler.
+
+use flex_tpu::coordinator::plan::ReconfigForecast;
+use flex_tpu::inference::{ModelProfile, PlacementPolicy, Scheduler};
+use flex_tpu::sim::Dataflow;
+
+/// The gated pod: four of the paper's 32x32 chips — committed as
+/// `configs/pod_4x32x32.toml` and regenerated here from code so the TOML
+/// and the test can never drift apart silently.
+fn pod_arch() -> flex_tpu::config::ArchConfig {
+    ArchConfig::square(32).with_chips(4)
+}
+
+fn pod_registry(placement: PlacementPolicy) -> Arc<ModelRegistry> {
+    let registry = ModelRegistry::with_placement(pod_arch(), None, placement).unwrap();
+    for name in GATED_MODELS {
+        registry
+            .register(Arc::new(SimBackend::from_zoo(name, GATED_BATCH).unwrap()))
+            .unwrap();
+    }
+    Arc::new(registry)
+}
+
+/// The gated pod policy set: fifo is blind all-chip sharding (the baseline
+/// placement must beat), deadline-edf exercises drops at pod width, and
+/// placement is the tentpole.  Reconfig-aware is deliberately absent — its
+/// 1.2x coalescing gate constant is calibrated to the single-chip 128x128
+/// suite, and on the pod placement subsumes its ordering anyway.
+const POD_POLICIES: [SchedulePolicy; 3] = [
+    SchedulePolicy::Fifo,
+    SchedulePolicy::DeadlineEdf,
+    SchedulePolicy::Placement,
+];
+
+#[test]
+fn pod_toml_matches_the_gated_architecture() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/pod_4x32x32.toml");
+    let from_file = ArchConfig::from_toml_file(&path).unwrap();
+    assert_eq!(from_file, pod_arch(), "configs/pod_4x32x32.toml drifted");
+}
+
+#[test]
+fn placement_on_a_single_chip_is_the_reconfig_aware_driver_byte_for_byte() {
+    // Degenerate pod: one chip, one group.  The placement policy must be
+    // indistinguishable from the PR-5 reconfig-aware single-device driver
+    // in every number and in the schedule digest — only the policy label
+    // may differ.
+    let reg = registry(GATED_SIZE, GATED_BATCH, &GATED_MODELS);
+    let suite = BenchSuite::run(
+        &reg,
+        &gated_config(),
+        &[SchedulePolicy::ReconfigAware, SchedulePolicy::Placement],
+    )
+    .unwrap();
+    let ra = suite.report("reconfig-aware").unwrap();
+    let pl = suite.report("placement").unwrap();
+    let mut relabeled = pl.clone();
+    relabeled.policy = ra.policy.clone();
+    assert_eq!(
+        relabeled.to_json().to_string(),
+        ra.to_json().to_string(),
+        "single-chip placement must degenerate to reconfig-aware"
+    );
+    assert_eq!(pl.chip_groups, 1);
+    assert_eq!(pl.group_cycles, [pl.sim_cycles_total]);
+}
+
+#[test]
+fn whole_pod_placement_matches_blind_sharding_with_reconfig_aware_order() {
+    // The gated model set clusters onto the whole pod under co-locate
+    // (shard speedup dominates isolation for these three), so a placement
+    // run must equal a reconfig-aware run over the same blind all-chip
+    // sharding: one group, same digest, same cycle totals.
+    let reg = pod_registry(PlacementPolicy::CoLocate);
+    for name in GATED_MODELS {
+        assert_eq!(
+            reg.placement_of(name).unwrap().chips,
+            4,
+            "{name} must land on the whole pod"
+        );
+    }
+    let suite = BenchSuite::run(
+        &reg,
+        &gated_config(),
+        &[SchedulePolicy::ReconfigAware, SchedulePolicy::Placement],
+    )
+    .unwrap();
+    let ra = suite.report("reconfig-aware").unwrap();
+    let pl = suite.report("placement").unwrap();
+    assert_eq!(pl.schedule_digest, ra.schedule_digest);
+    assert_eq!(pl.sim_cycles_total, ra.sim_cycles_total);
+    assert_eq!(pl.reconfigurations, ra.reconfigurations);
+    assert_eq!(pl.chip_groups, 1);
+}
+
+#[test]
+fn pod_reports_are_deterministic_and_group_cycles_sum_to_total() {
+    let cfg = BenchConfig::builder(GATED_MODELS.iter().map(|s| s.to_string()).collect())
+        .deadline_us(Some(2_000_000))
+        .build();
+    let a = BenchSuite::run(&pod_registry(PlacementPolicy::CoLocate), &cfg, &POD_POLICIES)
+        .unwrap();
+    // A fresh registry (cold cache, recomputed placement) must serialize
+    // to the same bytes.
+    let b = BenchSuite::run(&pod_registry(PlacementPolicy::CoLocate), &cfg, &POD_POLICIES)
+        .unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    for report in &a.reports {
+        assert_eq!(
+            report.group_cycles.iter().sum::<u64>(),
+            report.sim_cycles_total,
+            "{}: per-group cycles must partition the total",
+            report.policy
+        );
+        assert_eq!(report.group_cycles.len() as u64, report.chip_groups);
+        assert_eq!(report.served + report.dropped_deadline, report.offered);
+    }
+}
+
+#[test]
+fn co_located_compatible_pair_never_pays_more_reconfigs_than_isolated() {
+    // Scheduler-level oracle for the co-location bet: two models whose
+    // boundary dataflows agree can share a chip group without ever paying
+    // more entry switches than the same pair on isolated groups.
+    let forecast = |first, last| ReconfigForecast {
+        first: Some(first),
+        last: Some(last),
+        internal_switches: 2,
+    };
+    let run = |colocated: bool| -> u64 {
+        let mut s: Scheduler<u64> = Scheduler::new(SchedulePolicy::Placement);
+        for (i, name) in ["ws_a", "ws_b"].iter().enumerate() {
+            s.set_profile(ModelProfile {
+                model: name.to_string(),
+                batch: 2,
+                forecast: forecast(Dataflow::Ws, Dataflow::Ws),
+            });
+            s.assign_group(name, if colocated { 0 } else { i });
+        }
+        for i in 0..16u64 {
+            s.push(if i % 2 == 0 { "ws_a" } else { "ws_b" }, i, None, i);
+        }
+        let mut total = 0;
+        let mut expired = Vec::new();
+        for group in [0usize, 1] {
+            while let Some(plan) = s.pop_group(group, 100, true, &mut expired) {
+                total += plan.reconfigurations;
+            }
+        }
+        assert!(expired.is_empty());
+        total
+    };
+    assert!(
+        run(true) <= run(false),
+        "compatible co-location must not add reconfigurations"
+    );
+
+    // And the contrapositive sanity check: an incompatible pair sharing a
+    // group alternates dataflows, paying entry switches isolation avoids.
+    let run_mixed = |colocated: bool| -> u64 {
+        let mut s: Scheduler<u64> = Scheduler::new(SchedulePolicy::Placement);
+        let pair = [("ws_model", Dataflow::Ws), ("os_model", Dataflow::Os)];
+        for (i, (name, df)) in pair.iter().enumerate() {
+            s.set_profile(ModelProfile {
+                model: name.to_string(),
+                batch: 2,
+                forecast: ReconfigForecast {
+                    first: Some(*df),
+                    last: Some(*df),
+                    internal_switches: 0,
+                },
+            });
+            s.assign_group(name, if colocated { 0 } else { i });
+        }
+        for i in 0..16u64 {
+            s.push(if i % 2 == 0 { "ws_model" } else { "os_model" }, i, None, i);
+        }
+        let mut total = 0;
+        let mut expired = Vec::new();
+        for group in [0usize, 1] {
+            while let Some(plan) = s.pop_group(group, 100, true, &mut expired) {
+                total += plan.reconfigurations;
+            }
+        }
+        total
+    };
+    assert!(
+        run_mixed(true) > run_mixed(false),
+        "incompatible co-location must cost entry switches isolation avoids"
+    );
+}
+
+#[test]
+fn placement_beats_blind_all_chip_sharding_on_the_gated_pod_scenario() {
+    // The tentpole acceptance criterion: on the mixed 3-model pod
+    // scenario, placement-aware scheduling beats blind all-chip sharding
+    // (fifo over the whole pod) on throughput at no more reconfigurations.
+    let reg = pod_registry(PlacementPolicy::CoLocate);
+    let suite = BenchSuite::run(&reg, &gated_config(), &POD_POLICIES).unwrap();
+    let fifo = suite.report("fifo").unwrap();
+    let pl = suite.report("placement").unwrap();
+    assert!(
+        pl.throughput_rps > fifo.throughput_rps,
+        "placement {:.1} rps vs blind sharding {:.1} rps",
+        pl.throughput_rps,
+        fifo.throughput_rps
+    );
+    assert!(
+        pl.reconfigurations <= fifo.reconfigurations,
+        "placement {} vs blind sharding {}",
+        pl.reconfigurations,
+        fifo.reconfigurations
+    );
+}
+
+#[test]
+fn gated_pod_suite_matches_committed_baseline() {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/bench_pod_baseline.json");
+    let reg = pod_registry(PlacementPolicy::CoLocate);
+    let suite = BenchSuite::run(&reg, &gated_config(), &POD_POLICIES).unwrap();
+    if std::env::var_os("FLEX_TPU_UPDATE_GOLDEN").is_some() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{}\n", suite.to_json())).unwrap();
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("pod baseline {} unreadable: {e}", path.display()));
+    let baseline = BenchSuite::from_json(&parse(&text).unwrap()).unwrap();
+    match bench::gate(&suite, &baseline) {
+        Ok(passed) => assert!(!passed.is_empty()),
+        Err(e) => panic!(
+            "pod bench gate failed against the committed baseline: {e}\n\
+             If the cycle model, shard model or placement solver changed\n\
+             intentionally, regenerate with\n\
+             FLEX_TPU_UPDATE_GOLDEN=1 cargo test --test bench\n\
+             and commit the diff (it documents the performance drift for review)."
+        ),
+    }
+}
