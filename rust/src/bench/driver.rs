@@ -117,6 +117,17 @@ pub struct BenchConfig {
     pub concurrency: u64,
     /// Per-request latency budget, µs (None = no deadlines in the trace).
     pub deadline_us: Option<u64>,
+    /// Per-model admit budgets: a request whose model already has this
+    /// many queued is rejected at the door (empty = no admission control,
+    /// the pre-overload driver bit for bit).  Budgets normally come from a
+    /// persisted tuned config ([`crate::bench::tune`]).
+    pub admission: BTreeMap<String, usize>,
+    /// Per-model priority tiers (`0` = highest; absent models are tier 0).
+    /// Degraded mode sheds the largest tier value first.
+    pub priorities: BTreeMap<String, u8>,
+    /// Enable scheduler overload control (degraded mode under sustained
+    /// deadline pressure).  Off by default.
+    pub overload_control: bool,
 }
 
 impl BenchConfig {
@@ -151,6 +162,9 @@ impl BenchConfig {
                 mode: LoopMode::Open,
                 concurrency: 32,
                 deadline_us: None,
+                admission: BTreeMap::new(),
+                priorities: BTreeMap::new(),
+                overload_control: false,
             },
         }
     }
@@ -212,6 +226,24 @@ impl BenchConfigBuilder {
         self
     }
 
+    /// Per-model admit budgets (empty = no admission control).
+    pub fn admission(mut self, budgets: BTreeMap<String, usize>) -> Self {
+        self.cfg.admission = budgets;
+        self
+    }
+
+    /// Per-model priority tiers (`0` = highest; absent models are tier 0).
+    pub fn priorities(mut self, priorities: BTreeMap<String, u8>) -> Self {
+        self.cfg.priorities = priorities;
+        self
+    }
+
+    /// Enable scheduler overload control (degraded mode; off by default).
+    pub fn overload_control(mut self, enabled: bool) -> Self {
+        self.cfg.overload_control = enabled;
+        self
+    }
+
     /// The finished configuration.
     pub fn build(self) -> BenchConfig {
         self.cfg
@@ -268,6 +300,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     // when multi-chip); placement executes each model at its own group's
     // shard width.
     let mut sched: Scheduler<u64> = Scheduler::new(cfg.policy);
+    sched.set_overload_control(cfg.overload_control);
     let mut info: BTreeMap<String, DriveInfo> = BTreeMap::new();
     let mut group_ids: Vec<usize> = Vec::new();
     for name in &cfg.models {
@@ -323,6 +356,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
             // actually runs, not the single-chip one.
             profile.forecast = schedule.forecast;
         }
+        profile.priority = cfg.priorities.get(name.as_str()).copied().unwrap_or(0);
         sched.set_profile(profile);
         if placement_mode {
             sched.assign_group(name, group);
@@ -393,6 +427,11 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     let mut reconfigurations = 0u64;
     let mut model_switches = 0u64;
     let mut dropped = 0u64;
+    let mut rejected = 0u64;
+    let mut shed_total = 0u64;
+    let mut slo_met = 0u64;
+    let mut degraded_batches = 0u64;
+    let mut miss_by_tier: BTreeMap<u8, u64> = BTreeMap::new();
     let mut sim_cycles_total = 0u64;
     let mut waits: Vec<u64> = Vec::with_capacity(arrivals.len());
     let mut per: BTreeMap<String, ModelBenchStats> = cfg
@@ -402,22 +441,55 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
         .collect();
     let mut digest = 0xcbf2_9ce4_8422_2325u64;
 
+    let tier_of = |model: &str| cfg.priorities.get(model).copied().unwrap_or(0);
     let admit = |sched: &mut Scheduler<u64>,
                  per: &mut BTreeMap<String, ModelBenchStats>,
+                 rejected: &mut u64,
                  at: u64,
                  id: u64,
-                 model_idx: usize| {
+                 model_idx: usize|
+     -> bool {
         let model = &cfg.models[model_idx];
-        per.get_mut(model).expect("configured model").offered += 1;
-        sched.push(model, at, deadline_cycles.map(|d| at + d), id);
+        let m = per.get_mut(model).expect("configured model");
+        m.offered += 1;
+        let deadline = deadline_cycles.map(|d| at + d);
+        match cfg.admission.get(model) {
+            Some(&cap) => {
+                if sched.try_push(model, at, deadline, id, cap) {
+                    true
+                } else {
+                    m.rejected += 1;
+                    *rejected += 1;
+                    false
+                }
+            }
+            None => {
+                sched.push(model, at, deadline, id);
+                true
+            }
+        }
+    };
+    // Closed loop: a rejected client immediately retries as its next
+    // request, so admission control never starves the outstanding
+    // population while trace remains.
+    let issue_next = |sched: &mut Scheduler<u64>,
+                      per: &mut BTreeMap<String, ModelBenchStats>,
+                      rejected: &mut u64,
+                      cursor: &mut usize,
+                      at: u64| {
+        while let Some(&(_, id, model)) = arrivals.get(*cursor) {
+            *cursor += 1;
+            if admit(sched, per, rejected, at, id, model) {
+                break;
+            }
+        }
     };
 
     if cfg.mode == LoopMode::Closed {
         let n0 = (cfg.concurrency.max(1) as usize).min(arrivals.len());
-        for &(_, id, model) in arrivals.iter().take(n0) {
-            admit(&mut sched, &mut per, 0, id, model);
+        for _ in 0..n0 {
+            issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, 0);
         }
-        next_closed = n0;
     }
 
     loop {
@@ -459,7 +531,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 if at != t {
                     break;
                 }
-                admit(&mut sched, &mut per, t, id, model);
+                admit(&mut sched, &mut per, &mut rejected, t, id, model);
                 next_arrival += 1;
             }
         }
@@ -469,10 +541,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                     continue;
                 }
                 for _ in 0..devices[di].completed_live {
-                    if let Some(&(_, id, model)) = arrivals.get(next_closed) {
-                        admit(&mut sched, &mut per, t, id, model);
-                        next_closed += 1;
-                    }
+                    issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, t);
                 }
             }
         }
@@ -514,6 +583,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 for (model, _id) in &expired {
                     dropped += 1;
                     per.get_mut(model).expect("configured model").dropped_deadline += 1;
+                    *miss_by_tier.entry(tier_of(model)).or_insert(0) += 1;
                 }
                 // Closed loop: a client whose request was dropped issues
                 // its next one immediately, so the outstanding population
@@ -521,14 +591,33 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 // trace remains.
                 if cfg.mode == LoopMode::Closed {
                     for _ in 0..expired.len() {
-                        if let Some(&(_, id, model)) = arrivals.get(next_closed) {
-                            admit(&mut sched, &mut per, t, id, model);
-                            next_closed += 1;
+                        issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, t);
+                    }
+                }
+                // Degraded mode may have shed queued requests during the
+                // pop; account them like deadline misses (and, closed
+                // loop, let the shed clients retry).
+                if cfg.overload_control {
+                    let mut shed_now: Vec<(String, u64)> = Vec::new();
+                    sched.drain_shed(&mut shed_now);
+                    for (model, _id) in &shed_now {
+                        shed_total += 1;
+                        per.get_mut(model).expect("configured model").shed += 1;
+                        *miss_by_tier.entry(tier_of(model)).or_insert(0) += 1;
+                    }
+                    if cfg.mode == LoopMode::Closed {
+                        for _ in 0..shed_now.len() {
+                            issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, t);
                         }
                     }
                 }
                 match batch {
-                    Some(b) => devices[di].batchq.push_back(b),
+                    Some(b) => {
+                        if sched.degraded() {
+                            degraded_batches += 1;
+                        }
+                        devices[di].batchq.push_back(b)
+                    }
                     None => break,
                 }
             }
@@ -545,9 +634,22 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 let cost = di.batch_cost
                     + u64::from(plan.entry_switch) * arch.reconfig_cycles
                     + if plan.model_switch { di.switch_cycles } else { 0 };
+                // SLO accounting is decided at launch: the whole batch
+                // completes at `t + cost`, so a request meets its budget
+                // iff that completion lands inside its own deadline.
+                let done = t + cost;
+                let mut live_met = 0u64;
                 for item in &plan.items {
                     waits.push(t - item.arrival);
+                    let met = match deadline_cycles {
+                        Some(d) => done <= item.arrival + d,
+                        None => true,
+                    };
+                    if met {
+                        live_met += 1;
+                    }
                 }
+                slo_met += live_met;
                 served += live;
                 batches += 1;
                 padded += di.batch - live;
@@ -556,6 +658,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 sim_cycles_total += cost;
                 let m = per.get_mut(&plan.model).expect("configured model");
                 m.served += live;
+                m.slo_met += live_met;
                 m.batches += 1;
                 m.padded_slots += di.batch - live;
                 m.reconfigurations += plan.reconfigurations;
@@ -602,6 +705,12 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
         offered,
         served,
         dropped_deadline: dropped,
+        admitted: offered - rejected,
+        rejected,
+        shed: shed_total,
+        slo_met,
+        degraded_batches,
+        miss_by_tier,
         batches,
         padded_slots: padded,
         reconfigurations,
@@ -612,6 +721,11 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
         sim_wall_us: cycles_to_us(wall_cycles, clock_ns),
         throughput_rps: if wall_ns > 0.0 {
             served as f64 * 1e9 / wall_ns
+        } else {
+            0.0
+        },
+        goodput_rps: if wall_ns > 0.0 {
+            slo_met as f64 * 1e9 / wall_ns
         } else {
             0.0
         },

@@ -16,6 +16,11 @@
 //!   latency, padding, reconfiguration and model-switch counts, all in
 //!   simulated units, persisted through [`PlanStore`] as the
 //!   `bench-report` kind.
+//! * [`tune`] — the closed-loop autotuner: sweep serving batch × policy
+//!   against the seeded trace, select the SLO-feasible throughput argmax,
+//!   derive admission budgets and priority tiers from the trace mix, and
+//!   persist the result through [`PlanStore`] as the `tuned-config` kind
+//!   (warm restarts load it back with zero re-sweeps).
 //!
 //! Same config + same seed ⇒ byte-identical report, on any machine.  That
 //! determinism is what makes the CI `perf` job meaningful: `flex-tpu
@@ -28,10 +33,15 @@
 pub mod driver;
 pub mod report;
 pub mod trace;
+pub mod tune;
 
 pub use driver::{run, BenchConfig, BenchConfigBuilder, LoopMode};
 pub use report::{BenchReport, ModelBenchStats};
 pub use trace::{Lcg, Scenario, TraceEvent, TraceSpec};
+pub use tune::{
+    gate_tune, mix_drift_millis, overload_comparison, tune_or_load, TuneDoc, TuneOutcome,
+    TuneSpec, TunedConfig, DRIFT_RETUNE_MILLIS, TUNED_CONFIG_KIND, TUNE_SCHEMA_VERSION,
+};
 
 use crate::coordinator::plan::combined_provenance;
 use crate::error::{Error, Result};
@@ -62,7 +72,7 @@ pub fn bench_provenance(registry: &ModelRegistry, cfg: &BenchConfig) -> String {
         .iter()
         .filter_map(|m| registry.get(m).map(|d| d.provenance.clone()))
         .collect();
-    parts.push(format!(
+    let mut config = format!(
         "bench;scenario={};seed={};requests={};mean_us={};policy={};mode={};conc={};\
          deadline={:?};batches={:?};chips={};placement={}",
         cfg.scenario,
@@ -76,7 +86,18 @@ pub fn bench_provenance(registry: &ModelRegistry, cfg: &BenchConfig) -> String {
         model_batches(registry, cfg),
         registry.arch().chips.max(1),
         registry.placement_policy(),
-    ));
+    );
+    // The overload knobs join the key only when set, so every pre-overload
+    // provenance (and the records stored under it) survives unchanged.
+    if !cfg.admission.is_empty() || !cfg.priorities.is_empty() || cfg.overload_control {
+        use std::fmt::Write as _;
+        let _ = write!(
+            config,
+            ";admission={:?};priorities={:?};overload={}",
+            cfg.admission, cfg.priorities, cfg.overload_control
+        );
+    }
+    parts.push(config);
     combined_provenance(&parts)
 }
 
@@ -290,8 +311,8 @@ impl BenchSuite {
 ///
 /// 1. the configurations (including model plan provenances) match — a
 ///    drifted cycle model or scenario must re-bless, not silently shift;
-/// 2. every report is internally consistent (`served + dropped ==
-///    offered`);
+/// 2. every report is internally consistent (`served + dropped +
+///    rejected + shed == offered`);
 /// 3. `reconfig-aware` sustains [`MIN_COALESCING_SPEEDUP`] over `fifo`
 ///    and performs no more reconfigurations (when both ran);
 /// 4. `placement` beats `fifo` — blind all-chip sharding on the pod —
@@ -313,10 +334,10 @@ pub fn gate(current: &BenchSuite, baseline: &BenchSuite) -> Result<Vec<String>> 
     }
     passed.push("config matches baseline".to_string());
     for r in &current.reports {
-        if r.served + r.dropped_deadline != r.offered {
+        if r.served + r.dropped_deadline + r.rejected + r.shed != r.offered {
             return fail(format!(
-                "{}: served {} + dropped {} != offered {}",
-                r.policy, r.served, r.dropped_deadline, r.offered
+                "{}: served {} + dropped {} + rejected {} + shed {} != offered {}",
+                r.policy, r.served, r.dropped_deadline, r.rejected, r.shed, r.offered
             ));
         }
     }
@@ -447,6 +468,9 @@ mod tests {
             mode: LoopMode::Open,
             concurrency: 0,
             deadline_us: None,
+            admission: std::collections::BTreeMap::new(),
+            priorities: std::collections::BTreeMap::new(),
+            overload_control: false,
         }
     }
 

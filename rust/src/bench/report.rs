@@ -25,6 +25,14 @@ pub struct ModelBenchStats {
     pub served: u64,
     /// Requests dropped for missed deadlines (`deadline-edf` only).
     pub dropped_deadline: u64,
+    /// Requests rejected at the door by admission control (never queued).
+    pub rejected: u64,
+    /// Requests shed by degraded mode (queued, then dropped under
+    /// sustained deadline pressure, lowest priority tier first).
+    pub shed: u64,
+    /// Served requests whose completion met their deadline (equals
+    /// `served` when the run carries no deadline).
+    pub slo_met: u64,
     /// Batches launched.
     pub batches: u64,
     /// Empty slots executed (the padding cost of partial batches).
@@ -52,6 +60,18 @@ pub struct BenchReport {
     pub served: u64,
     /// Requests dropped for missed deadlines.
     pub dropped_deadline: u64,
+    /// Requests admitted past the door (`offered - rejected`).
+    pub admitted: u64,
+    /// Requests rejected at the door by admission control.
+    pub rejected: u64,
+    /// Requests shed by degraded mode, lowest priority tier first.
+    pub shed: u64,
+    /// Served requests whose completion met their deadline.
+    pub slo_met: u64,
+    /// Batches launched while the scheduler was in degraded mode.
+    pub degraded_batches: u64,
+    /// Deadline misses (drops + sheds) per priority tier, keyed by tier.
+    pub miss_by_tier: BTreeMap<u8, u64>,
     /// Batches launched.
     pub batches: u64,
     /// Empty batch slots executed (padding).
@@ -72,6 +92,10 @@ pub struct BenchReport {
     pub sim_wall_us: f64,
     /// Served requests per simulated second.
     pub throughput_rps: f64,
+    /// SLO-met responses per simulated second (the overload-control
+    /// metric the tune gate compares; equals `throughput_rps` when every
+    /// served response met its deadline).
+    pub goodput_rps: f64,
     /// Median simulated queue latency (arrival → launch), µs.
     pub queue_p50_us: f64,
     /// 99th-percentile simulated queue latency, µs.
@@ -106,6 +130,9 @@ impl BenchReport {
                         ("offered", Value::Num(m.offered as f64)),
                         ("served", Value::Num(m.served as f64)),
                         ("dropped_deadline", Value::Num(m.dropped_deadline as f64)),
+                        ("rejected", Value::Num(m.rejected as f64)),
+                        ("shed", Value::Num(m.shed as f64)),
+                        ("slo_met", Value::Num(m.slo_met as f64)),
                         ("batches", Value::Num(m.batches as f64)),
                         ("padded_slots", Value::Num(m.padded_slots as f64)),
                         ("reconfigurations", Value::Num(m.reconfigurations as f64)),
@@ -122,6 +149,20 @@ impl BenchReport {
             ("offered", Value::Num(self.offered as f64)),
             ("served", Value::Num(self.served as f64)),
             ("dropped_deadline", Value::Num(self.dropped_deadline as f64)),
+            ("admitted", Value::Num(self.admitted as f64)),
+            ("rejected", Value::Num(self.rejected as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("slo_met", Value::Num(self.slo_met as f64)),
+            ("degraded_batches", Value::Num(self.degraded_batches as f64)),
+            (
+                "miss_by_tier",
+                Value::Obj(
+                    self.miss_by_tier
+                        .iter()
+                        .map(|(tier, n)| (tier.to_string(), Value::Num(*n as f64)))
+                        .collect(),
+                ),
+            ),
             ("batches", Value::Num(self.batches as f64)),
             ("padded_slots", Value::Num(self.padded_slots as f64)),
             ("reconfigurations", Value::Num(self.reconfigurations as f64)),
@@ -139,6 +180,7 @@ impl BenchReport {
             ),
             ("sim_wall_us", Value::Num(self.sim_wall_us)),
             ("throughput_rps", Value::Num(self.throughput_rps)),
+            ("goodput_rps", Value::Num(self.goodput_rps)),
             ("queue_p50_us", Value::Num(self.queue_p50_us)),
             ("queue_p99_us", Value::Num(self.queue_p99_us)),
             (
@@ -160,12 +202,19 @@ impl BenchReport {
             .as_object_sorted()
             .ok_or_else(|| bad("per_model is not an object"))?;
         for (name, m) in entries {
+            let served = m.req_u64("served")?;
             per_model.insert(
                 name.to_string(),
                 ModelBenchStats {
                     offered: m.req_u64("offered")?,
-                    served: m.req_u64("served")?,
+                    served,
                     dropped_deadline: m.req_u64("dropped_deadline")?,
+                    // Pre-overload-control reports carry none of these:
+                    // nothing was rejected or shed, and every served
+                    // response counted as SLO-met.
+                    rejected: m.get("rejected").and_then(Value::as_u64).unwrap_or(0),
+                    shed: m.get("shed").and_then(Value::as_u64).unwrap_or(0),
+                    slo_met: m.get("slo_met").and_then(Value::as_u64).unwrap_or(served),
                     batches: m.req_u64("batches")?,
                     padded_slots: m.req_u64("padded_slots")?,
                     reconfigurations: m.req_u64("reconfigurations")?,
@@ -173,14 +222,44 @@ impl BenchReport {
                 },
             );
         }
+        let offered = v.req_u64("offered")?;
+        let served = v.req_u64("served")?;
+        let rejected = v.get("rejected").and_then(Value::as_u64).unwrap_or(0);
+        let throughput_rps = v.req_f64("throughput_rps")?;
         Ok(BenchReport {
             policy: v.req_str("policy")?.to_string(),
             scenario: v.req_str("scenario")?.to_string(),
             seed: v.req_u64("seed")?,
             mode: v.req_str("mode")?.to_string(),
-            offered: v.req_u64("offered")?,
-            served: v.req_u64("served")?,
+            offered,
+            served,
             dropped_deadline: v.req_u64("dropped_deadline")?,
+            // Pre-overload-control reports: no admission control (every
+            // offered request was admitted), nothing shed, every served
+            // response SLO-met, goodput == throughput.
+            admitted: v
+                .get("admitted")
+                .and_then(Value::as_u64)
+                .unwrap_or(offered - rejected),
+            rejected,
+            shed: v.get("shed").and_then(Value::as_u64).unwrap_or(0),
+            slo_met: v.get("slo_met").and_then(Value::as_u64).unwrap_or(served),
+            degraded_batches: v
+                .get("degraded_batches")
+                .and_then(Value::as_u64)
+                .unwrap_or(0),
+            miss_by_tier: v
+                .get("miss_by_tier")
+                .and_then(Value::as_object_sorted)
+                .map(|entries| {
+                    entries
+                        .iter()
+                        .filter_map(|(tier, n)| {
+                            Some((tier.parse::<u8>().ok()?, n.as_u64()?))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
             batches: v.req_u64("batches")?,
             padded_slots: v.req_u64("padded_slots")?,
             reconfigurations: v.req_u64("reconfigurations")?,
@@ -195,7 +274,11 @@ impl BenchReport {
                 .map(|a| a.iter().filter_map(Value::as_u64).collect())
                 .unwrap_or_default(),
             sim_wall_us: v.req_f64("sim_wall_us")?,
-            throughput_rps: v.req_f64("throughput_rps")?,
+            throughput_rps,
+            goodput_rps: v
+                .get("goodput_rps")
+                .and_then(Value::as_f64)
+                .unwrap_or(throughput_rps),
             queue_p50_us: v.req_f64("queue_p50_us")?,
             queue_p99_us: v.req_f64("queue_p99_us")?,
             schedule_digest: v.req_str("schedule_digest")?.to_string(),
@@ -241,22 +324,33 @@ mod tests {
             "alexnet".to_string(),
             ModelBenchStats {
                 offered: 10,
-                served: 9,
+                served: 8,
                 dropped_deadline: 1,
+                rejected: 1,
+                shed: 0,
+                slo_met: 7,
                 batches: 3,
                 padded_slots: 3,
                 reconfigurations: 5,
                 sim_cycles: 123_456,
             },
         );
+        let mut miss_by_tier = BTreeMap::new();
+        miss_by_tier.insert(0u8, 1u64);
         BenchReport {
             policy: "reconfig-aware".into(),
             scenario: "mixed".into(),
             seed: 7,
             mode: "open".into(),
             offered: 10,
-            served: 9,
+            served: 8,
             dropped_deadline: 1,
+            admitted: 9,
+            rejected: 1,
+            shed: 0,
+            slo_met: 7,
+            degraded_batches: 1,
+            miss_by_tier,
             batches: 3,
             padded_slots: 3,
             reconfigurations: 5,
@@ -266,6 +360,7 @@ mod tests {
             group_cycles: vec![100_000, 23_456],
             sim_wall_us: 1234.5,
             throughput_rps: 7292.83,
+            goodput_rps: 6381.23,
             queue_p50_us: 10.25,
             queue_p99_us: 99.75,
             schedule_digest: "deadbeefdeadbeef".into(),
@@ -304,6 +399,66 @@ mod tests {
         let back = BenchReport::from_json(&stripped).unwrap();
         assert_eq!(back.chip_groups, 1);
         assert!(back.group_cycles.is_empty());
+    }
+
+    #[test]
+    fn pre_overload_reports_default_to_inert_admission() {
+        // Reports persisted before overload control existed carry none of
+        // the admission/degraded-mode fields: they must read back as "all
+        // offered admitted, nothing rejected or shed, every served
+        // response SLO-met, goodput == throughput".
+        let overload_fields = [
+            "admitted",
+            "rejected",
+            "shed",
+            "slo_met",
+            "degraded_batches",
+            "miss_by_tier",
+            "goodput_rps",
+        ];
+        let Value::Obj(fields) = report().to_json() else {
+            panic!("report serializes to an object")
+        };
+        let stripped = Value::Obj(
+            fields
+                .into_iter()
+                .map(|(k, v)| {
+                    if k == "per_model" {
+                        let Value::Obj(models) = v else { panic!("per_model object") };
+                        let models = models
+                            .into_iter()
+                            .map(|(name, m)| {
+                                let Value::Obj(mf) = m else { panic!("model object") };
+                                (
+                                    name,
+                                    Value::Obj(
+                                        mf.into_iter()
+                                            .filter(|(k, _)| {
+                                                !overload_fields.contains(&k.as_str())
+                                            })
+                                            .collect(),
+                                    ),
+                                )
+                            })
+                            .collect();
+                        (k, Value::Obj(models))
+                    } else {
+                        (k, v)
+                    }
+                })
+                .filter(|(k, _)| !overload_fields.contains(&k.as_str()))
+                .collect(),
+        );
+        let back = BenchReport::from_json(&stripped).unwrap();
+        assert_eq!(back.admitted, back.offered);
+        assert_eq!(back.rejected, 0);
+        assert_eq!(back.shed, 0);
+        assert_eq!(back.slo_met, back.served);
+        assert_eq!(back.degraded_batches, 0);
+        assert!(back.miss_by_tier.is_empty());
+        assert_eq!(back.goodput_rps, back.throughput_rps);
+        let m = &back.per_model["alexnet"];
+        assert_eq!((m.rejected, m.shed, m.slo_met), (0, 0, m.served));
     }
 
     #[test]

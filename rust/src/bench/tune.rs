@@ -1,0 +1,675 @@
+//! Closed-loop autotuning: `flex-tpu tune`.
+//!
+//! The tuner sweeps serving batch size × scheduling policy against the
+//! seeded trace the fleet is about to face, scores every candidate with
+//! the deterministic [`driver`](super::driver), and selects the
+//! SLO-feasible throughput argmax (candidates that drop, reject, shed, or
+//! miss a deadline lose to any feasible point, however fast).  From the
+//! winner it derives the production overload posture:
+//!
+//! * **admission budgets** — each model may hold at most `2 × batch`
+//!   queued requests; the excess is rejected at the door instead of
+//!   rotting in a queue it can never clear;
+//! * **priority tiers** — models ranked by trace popularity (the
+//!   most-offered model is tier 0); degraded mode sheds the largest tier
+//!   first;
+//! * **expected mix** — the per-model offered counts of the tuned-for
+//!   trace, kept so later traffic can be tested for drift.
+//!
+//! The result persists through [`PlanStore`] as the `tuned-config` kind,
+//! keyed by [`ModelRegistry::tuned_provenance`] — a warm restart with the
+//! same deployments, tuning spec, and a trace mix within
+//! [`DRIFT_RETUNE_MILLIS`] of the tuned-for mix loads it back with **zero
+//! sweep re-simulation**.  A drifted mix (the workload moved under the
+//! fleet) re-tunes instead: that is the closed loop.
+//!
+//! Everything here inherits the bench's determinism contract: same spec +
+//! same seed ⇒ byte-identical [`TunedConfig`] and [`TuneDoc`], on any
+//! machine, which is what lets CI `cmp` two `flex-tpu tune` runs and gate
+//! goodput against the committed `rust/tests/golden/tune_baseline.json`
+//! via [`gate_tune`].
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::inference::{ModelRegistry, SchedulePolicy};
+use crate::sim::store::{DocSource, PlanStore};
+use crate::util::json::{obj, Value};
+
+use super::driver::{run, BenchConfig, LoopMode};
+use super::report::BenchReport;
+use super::trace::{generate, Scenario, TraceSpec};
+
+/// Version stamped into persisted tuned configs and tune documents; a
+/// mismatch reads as a cold start (re-tune), never a misparse.
+pub const TUNE_SCHEMA_VERSION: u64 = 1;
+
+/// Store kind tuned configs persist under (pruned by `flex-tpu plan gc`
+/// like plans and shapes: a tuned config whose provenance matches no live
+/// configuration is dead weight).
+pub const TUNED_CONFIG_KIND: &str = "tuned-config";
+
+/// Re-tune threshold: when the L1 distance between the tuned-for and the
+/// observed model mix ([`mix_drift_millis`], parts per thousand) reaches
+/// this value, a warm start is refused and the tuner re-sweeps.  250 ‰
+/// means a quarter of the traffic moved to different models.
+pub const DRIFT_RETUNE_MILLIS: u64 = 250;
+
+/// What to tune: the workload the fleet is about to face plus the
+/// candidate grid to sweep.
+#[derive(Debug, Clone)]
+pub struct TuneSpec {
+    /// Workload shape.
+    pub scenario: Scenario,
+    /// Trace seed.
+    pub seed: u64,
+    /// Requests in the trace.
+    pub requests: u64,
+    /// Mean inter-arrival gap, µs (the load knob).
+    pub mean_interarrival_us: u64,
+    /// Models the trace addresses, by registry name.
+    pub models: Vec<String>,
+    /// Open- or closed-loop pacing.
+    pub mode: LoopMode,
+    /// Outstanding requests in closed-loop mode.
+    pub concurrency: u64,
+    /// Per-request latency budget, µs (`None` = tune for throughput only).
+    pub deadline_us: Option<u64>,
+    /// Serving batch sizes to sweep.
+    pub batch_candidates: Vec<u32>,
+    /// Scheduling policies to sweep.
+    pub policy_candidates: Vec<SchedulePolicy>,
+}
+
+impl TuneSpec {
+    /// A spec with the gated-scenario defaults: mixed trace, seed 7,
+    /// 1 200 requests, 2 000 µs mean gap, open loop, concurrency 32, a
+    /// 1 000 000 µs deadline, batches `[1, 2, 4, 8]`, and the classic
+    /// single-device policies.  The trace is long enough (and the deadline
+    /// tight enough) that the overload is *sustained*: an uncontrolled
+    /// queue grows past the deadline horizon instead of draining in the
+    /// post-arrival tail, which is what the overload-control oracle needs.
+    pub fn new(models: Vec<String>) -> TuneSpec {
+        TuneSpec {
+            scenario: Scenario::MixedModel,
+            seed: 7,
+            requests: 1_200,
+            mean_interarrival_us: 2_000,
+            models,
+            mode: LoopMode::Open,
+            concurrency: 32,
+            deadline_us: Some(1_000_000),
+            batch_candidates: vec![1, 2, 4, 8],
+            policy_candidates: vec![
+                SchedulePolicy::Fifo,
+                SchedulePolicy::ReconfigAware,
+                SchedulePolicy::DeadlineEdf,
+            ],
+        }
+    }
+
+    /// The identity string stored with a tuned config: everything a warm
+    /// start must agree on.  Scenario and seed are deliberately excluded —
+    /// statistically equivalent traffic should warm-start without a
+    /// sweep, and [`mix_drift_millis`] decides when the mix moved enough
+    /// to re-tune instead.
+    pub fn config_string(&self) -> String {
+        let policies: Vec<&str> = self.policy_candidates.iter().map(|p| p.name()).collect();
+        format!(
+            "tune;models={:?};mode={};conc={};mean_us={};requests={};deadline={:?};\
+             batches={:?};policies={:?}",
+            self.models,
+            self.mode,
+            self.concurrency,
+            self.mean_interarrival_us,
+            self.requests,
+            self.deadline_us,
+            self.batch_candidates,
+            policies,
+        )
+    }
+
+    /// Offered requests per model in this spec's trace (the tuned-for
+    /// mix; drift detection compares later traffic against it).
+    pub fn trace_mix(&self) -> BTreeMap<String, u64> {
+        let trace = generate(&TraceSpec {
+            scenario: self.scenario,
+            seed: self.seed,
+            requests: self.requests,
+            models: self.models.len(),
+            mean_interarrival_us: self.mean_interarrival_us,
+        });
+        let mut mix: BTreeMap<String, u64> =
+            self.models.iter().map(|m| (m.clone(), 0)).collect();
+        for e in &trace {
+            *mix.get_mut(&self.models[e.model]).expect("trace model in spec") += 1;
+        }
+        mix
+    }
+
+    /// The bench configuration one sweep point runs (no overload knobs:
+    /// candidates are scored on their own merits first).
+    fn bench_config(&self, policy: SchedulePolicy) -> BenchConfig {
+        BenchConfig::builder(self.models.clone())
+            .scenario(self.scenario)
+            .seed(self.seed)
+            .requests(self.requests)
+            .mean_interarrival_us(self.mean_interarrival_us)
+            .policy(policy)
+            .mode(self.mode)
+            .concurrency(self.concurrency)
+            .deadline_us(self.deadline_us)
+            .build()
+    }
+}
+
+/// Whether a sweep report meets the spec's SLO outright: nothing dropped,
+/// rejected or shed, and (when a deadline is set) every served request
+/// completed inside its budget.
+fn is_feasible(spec: &TuneSpec, r: &BenchReport) -> bool {
+    r.dropped_deadline == 0
+        && r.rejected == 0
+        && r.shed == 0
+        && (spec.deadline_us.is_none() || r.slo_met == r.served)
+}
+
+/// One scored sweep point.
+struct Candidate {
+    batch: u32,
+    policy: SchedulePolicy,
+    feasible: bool,
+    report: BenchReport,
+}
+
+/// Deterministic selection order: feasible beats infeasible, then higher
+/// throughput, then the smaller batch (less padding exposure), then the
+/// lexicographically first policy name.  Total and platform-independent
+/// (`total_cmp`), so the argmax is reproducible byte for byte.
+fn preferred(a: &Candidate, b: &Candidate) -> bool {
+    if a.feasible != b.feasible {
+        return a.feasible;
+    }
+    match a.report.throughput_rps.total_cmp(&b.report.throughput_rps) {
+        std::cmp::Ordering::Greater => return true,
+        std::cmp::Ordering::Less => return false,
+        std::cmp::Ordering::Equal => {}
+    }
+    if a.batch != b.batch {
+        return a.batch < b.batch;
+    }
+    a.policy.name() < b.policy.name()
+}
+
+/// The autotuner's product: the selected serving configuration plus the
+/// overload posture derived from it, persisted as the `tuned-config`
+/// record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedConfig {
+    /// The [`TuneSpec::config_string`] this config was tuned for (warm
+    /// starts must match it exactly).
+    pub config: String,
+    /// Selected serving batch size.
+    pub batch: u32,
+    /// Selected scheduling policy name.
+    pub policy: String,
+    /// Whether the selected point met the SLO outright (false means no
+    /// candidate did and this is the least-bad throughput argmax).
+    pub feasible: bool,
+    /// The selected point's throughput, responses/sec.
+    pub throughput_rps: f64,
+    /// The selected point's goodput, SLO-met responses/sec.
+    pub goodput_rps: f64,
+    /// Per-model admit budgets (`2 × batch`): the door rejects a request
+    /// whose model already holds this many queued.
+    pub admission: BTreeMap<String, usize>,
+    /// Per-model priority tiers from trace popularity (most-offered =
+    /// tier 0; degraded mode sheds the largest tier first).
+    pub priorities: BTreeMap<String, u8>,
+    /// Offered requests per model in the tuned-for trace (the drift
+    /// detector's reference mix).
+    pub expected_mix: BTreeMap<String, u64>,
+}
+
+/// Parse a `{model: count}` JSON object.
+fn parse_u64_map(v: &Value, what: &str) -> Result<BTreeMap<String, u64>> {
+    let bad = || Error::Artifact(format!("tuned config: bad {what} map"));
+    let mut out = BTreeMap::new();
+    for (k, val) in v.as_object_sorted().ok_or_else(bad)? {
+        out.insert(k.to_string(), val.as_u64().ok_or_else(bad)?);
+    }
+    Ok(out)
+}
+
+impl TunedConfig {
+    /// Serialize (the `tuned-config` payload layout).
+    pub fn to_json(&self) -> Value {
+        let counts = |m: &BTreeMap<String, u64>| {
+            obj(m.iter().map(|(k, &v)| (k.as_str(), Value::Num(v as f64))).collect())
+        };
+        obj(vec![
+            ("schema", Value::Num(TUNE_SCHEMA_VERSION as f64)),
+            ("config", Value::Str(self.config.clone())),
+            ("batch", Value::Num(f64::from(self.batch))),
+            ("policy", Value::Str(self.policy.clone())),
+            ("feasible", Value::Bool(self.feasible)),
+            ("throughput_rps", Value::Num(self.throughput_rps)),
+            ("goodput_rps", Value::Num(self.goodput_rps)),
+            (
+                "admission",
+                obj(self
+                    .admission
+                    .iter()
+                    .map(|(k, &v)| (k.as_str(), Value::Num(v as f64)))
+                    .collect()),
+            ),
+            (
+                "priorities",
+                obj(self
+                    .priorities
+                    .iter()
+                    .map(|(k, &v)| (k.as_str(), Value::Num(f64::from(v))))
+                    .collect()),
+            ),
+            ("expected_mix", counts(&self.expected_mix)),
+        ])
+    }
+
+    /// Deserialize (rejects unknown schema versions).
+    pub fn from_json(v: &Value) -> Result<TunedConfig> {
+        let bad = |msg: &str| Error::Artifact(format!("tuned config: {msg}"));
+        if v.req_u64("schema")? != TUNE_SCHEMA_VERSION {
+            return Err(bad("unknown schema version"));
+        }
+        let admission = parse_u64_map(v.req("admission")?, "admission")?
+            .into_iter()
+            .map(|(k, n)| {
+                usize::try_from(n).map(|n| (k, n)).map_err(|_| bad("admission overflow"))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let priorities = parse_u64_map(v.req("priorities")?, "priorities")?
+            .into_iter()
+            .map(|(k, n)| u8::try_from(n).map(|n| (k, n)).map_err(|_| bad("tier overflow")))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(TunedConfig {
+            config: v.req_str("config")?.to_string(),
+            batch: u32::try_from(v.req_u64("batch")?).map_err(|_| bad("batch overflow"))?,
+            policy: v.req_str("policy")?.to_string(),
+            feasible: v
+                .req("feasible")?
+                .as_bool()
+                .ok_or_else(|| bad("feasible is not a bool"))?,
+            throughput_rps: v.req_f64("throughput_rps")?,
+            goodput_rps: v.req_f64("goodput_rps")?,
+            admission,
+            priorities,
+            expected_mix: parse_u64_map(v.req("expected_mix")?, "expected_mix")?,
+        })
+    }
+
+    /// Persist under `provenance` as the `tuned-config` kind.
+    pub fn save(&self, store: &PlanStore, provenance: &str) -> Result<()> {
+        store.save_document(TUNED_CONFIG_KIND, provenance, self.to_json())
+    }
+
+    /// Load a persisted tuned config, or `None` on any cold-start
+    /// condition (the store's robustness contract).
+    pub fn load(store: &PlanStore, provenance: &str) -> Option<TunedConfig> {
+        let payload = store.load_document(TUNED_CONFIG_KIND, provenance)?;
+        TunedConfig::from_json(&payload).ok()
+    }
+}
+
+/// L1 distance between two model mixes after normalizing each to parts
+/// per thousand (integer arithmetic, so the drift test is deterministic).
+/// 0 = identical mix shape, 2000 = fully disjoint; an empty mix is fully
+/// distant from a non-empty one.
+pub fn mix_drift_millis(
+    expected: &BTreeMap<String, u64>,
+    observed: &BTreeMap<String, u64>,
+) -> u64 {
+    let te: u64 = expected.values().sum();
+    let to: u64 = observed.values().sum();
+    if te == 0 || to == 0 {
+        return if te == to { 0 } else { 2000 };
+    }
+    let mut keys: std::collections::BTreeSet<&String> = expected.keys().collect();
+    keys.extend(observed.keys());
+    keys.into_iter()
+        .map(|k| {
+            let e = expected.get(k).copied().unwrap_or(0) * 1000 / te;
+            let o = observed.get(k).copied().unwrap_or(0) * 1000 / to;
+            e.abs_diff(o)
+        })
+        .sum()
+}
+
+/// What [`tune_or_load`] produced.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// The selected configuration.
+    pub tuned: TunedConfig,
+    /// Warm-loaded from the store or freshly swept.
+    pub source: DocSource,
+    /// Sweep simulations spent (0 on a warm load — the warm-restart
+    /// acceptance criterion).
+    pub sweeps: u64,
+}
+
+/// Sweep every batch × policy candidate (`factory` builds the registry
+/// serving each candidate batch) and select the SLO-feasible throughput
+/// argmax.  Pure cold path; see [`tune_or_load`] for the store-backed
+/// entry point.
+pub fn tune(
+    factory: &dyn Fn(u32) -> Result<Arc<ModelRegistry>>,
+    spec: &TuneSpec,
+) -> Result<TunedConfig> {
+    if spec.models.is_empty() {
+        return Err(Error::InvalidConfig("tune needs at least one model".into()));
+    }
+    if spec.batch_candidates.is_empty() || spec.policy_candidates.is_empty() {
+        return Err(Error::InvalidConfig(
+            "tune needs at least one batch and one policy candidate".into(),
+        ));
+    }
+    let mut best: Option<Candidate> = None;
+    for &batch in &spec.batch_candidates {
+        let registry = factory(batch)?;
+        for &policy in &spec.policy_candidates {
+            let report = run(&registry, &spec.bench_config(policy))?;
+            let cand = Candidate {
+                batch,
+                policy,
+                feasible: is_feasible(spec, &report),
+                report,
+            };
+            let take = match &best {
+                None => true,
+                Some(incumbent) => preferred(&cand, incumbent),
+            };
+            if take {
+                best = Some(cand);
+            }
+        }
+    }
+    let chosen = best.expect("candidate grid is non-empty");
+    let mix = spec.trace_mix();
+    // Popularity rank → priority tier: the most-offered model is tier 0,
+    // ties broken by name so the ranking is total.
+    let mut ranked: Vec<(&String, u64)> = mix.iter().map(|(k, &v)| (k, v)).collect();
+    ranked.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(b.0)));
+    let priorities: BTreeMap<String, u8> = ranked
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| ((*name).clone(), u8::try_from(i).unwrap_or(u8::MAX)))
+        .collect();
+    let admission: BTreeMap<String, usize> = spec
+        .models
+        .iter()
+        .map(|m| (m.clone(), 2 * chosen.batch as usize))
+        .collect();
+    Ok(TunedConfig {
+        config: spec.config_string(),
+        batch: chosen.batch,
+        policy: chosen.policy.name().to_string(),
+        feasible: chosen.feasible,
+        throughput_rps: chosen.report.throughput_rps,
+        goodput_rps: chosen.report.goodput_rps,
+        admission,
+        priorities,
+        expected_mix: mix,
+    })
+}
+
+/// The store-backed tuner: warm-start from a persisted `tuned-config`
+/// when the spec matches and the trace mix has not drifted past
+/// [`DRIFT_RETUNE_MILLIS`]; otherwise sweep, select, and persist.
+/// `registry` is only consulted for its [`ModelRegistry::tuned_provenance`]
+/// (any serving batch of the same deployments yields the same key).
+pub fn tune_or_load(
+    store: Option<&PlanStore>,
+    registry: &ModelRegistry,
+    factory: &dyn Fn(u32) -> Result<Arc<ModelRegistry>>,
+    spec: &TuneSpec,
+) -> Result<TuneOutcome> {
+    let provenance = registry.tuned_provenance();
+    if let Some(store) = store {
+        if let Some(prev) = TunedConfig::load(store, &provenance) {
+            if prev.config == spec.config_string()
+                && mix_drift_millis(&prev.expected_mix, &spec.trace_mix()) < DRIFT_RETUNE_MILLIS
+            {
+                return Ok(TuneOutcome {
+                    tuned: prev,
+                    source: DocSource::Loaded,
+                    sweeps: 0,
+                });
+            }
+        }
+    }
+    let tuned = tune(factory, spec)?;
+    if let Some(store) = store {
+        tuned.save(store, &provenance)?;
+    }
+    Ok(TuneOutcome {
+        tuned,
+        source: DocSource::Computed,
+        sweeps: (spec.batch_candidates.len() * spec.policy_candidates.len()) as u64,
+    })
+}
+
+/// Run the overload comparison behind the goodput gate: the tuned config
+/// served under full overload control (`deadline-edf` + admission budgets
+/// + priority tiers + degraded mode) vs plain `deadline-edf` with no
+/// controls, on the same trace and the same registry (which must serve
+/// `tuned.batch`).  Returns `(controlled, plain)`.
+pub fn overload_comparison(
+    registry: &ModelRegistry,
+    spec: &TuneSpec,
+    tuned: &TunedConfig,
+) -> Result<(BenchReport, BenchReport)> {
+    let mut cfg = spec.bench_config(SchedulePolicy::DeadlineEdf);
+    cfg.admission = tuned.admission.clone();
+    cfg.priorities = tuned.priorities.clone();
+    cfg.overload_control = true;
+    let controlled = run(registry, &cfg)?;
+    let plain = run(registry, &spec.bench_config(SchedulePolicy::DeadlineEdf))?;
+    Ok((controlled, plain))
+}
+
+/// What `flex-tpu tune --out` writes (`BENCH_TUNE.json`) and what the
+/// committed `rust/tests/golden/tune_baseline.json` stores: the selected
+/// config plus the overload comparison backing the goodput gate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneDoc {
+    /// The selected configuration.
+    pub tuned: TunedConfig,
+    /// The tuned config under full overload control.
+    pub controlled: BenchReport,
+    /// Plain `deadline-edf` at the same batch on the same trace.
+    pub plain: BenchReport,
+}
+
+impl TuneDoc {
+    /// Serialize (the `BENCH_TUNE.json` / baseline layout).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("schema", Value::Num(TUNE_SCHEMA_VERSION as f64)),
+            ("tuned", self.tuned.to_json()),
+            ("controlled", self.controlled.to_json()),
+            ("plain", self.plain.to_json()),
+        ])
+    }
+
+    /// Deserialize (rejects unknown schema versions).
+    pub fn from_json(v: &Value) -> Result<TuneDoc> {
+        if v.req_u64("schema")? != TUNE_SCHEMA_VERSION {
+            return Err(Error::Artifact("tune doc: unknown schema version".into()));
+        }
+        Ok(TuneDoc {
+            tuned: TunedConfig::from_json(v.req("tuned")?)?,
+            controlled: BenchReport::from_json(v.req("controlled")?)?,
+            plain: BenchReport::from_json(v.req("plain")?)?,
+        })
+    }
+}
+
+/// The CI tune gate: compare a fresh [`TuneDoc`] against the committed
+/// baseline.  Returns the checks that passed; the first violation errors.
+/// Checks:
+///
+/// 1. the tuning specs match — a drifted spec must re-bless, not slide;
+/// 2. the tuner selected the same batch and policy as the baseline (the
+///    selection is deterministic, so a change means the cycle model
+///    moved);
+/// 3. both overload reports' request accounting closes
+///    (`served + dropped + rejected + shed == offered`);
+/// 4. overload control beats plain `deadline-edf` goodput **strictly**
+///    (the tentpole's acceptance criterion);
+/// 5. controlled goodput is within
+///    [`MAX_THROUGHPUT_REGRESSION`](super::MAX_THROUGHPUT_REGRESSION) of
+///    the baseline.
+pub fn gate_tune(current: &TuneDoc, baseline: &TuneDoc) -> Result<Vec<String>> {
+    let fail = |msg: String| -> Result<Vec<String>> { Err(Error::InvalidConfig(msg)) };
+    let mut passed = Vec::new();
+    if current.tuned.config != baseline.tuned.config {
+        return fail(
+            "tune baseline was generated under a different tuning spec; regenerate it with \
+             FLEX_TPU_UPDATE_GOLDEN=1 (cargo test --test tune) and commit the diff"
+                .to_string(),
+        );
+    }
+    passed.push("tuning spec matches baseline".to_string());
+    if current.tuned.batch != baseline.tuned.batch || current.tuned.policy != baseline.tuned.policy
+    {
+        return fail(format!(
+            "tuner selected batch {} / {} vs the baseline's batch {} / {}; the cycle model \
+             moved — re-bless",
+            current.tuned.batch, current.tuned.policy, baseline.tuned.batch, baseline.tuned.policy
+        ));
+    }
+    passed.push(format!(
+        "selected batch {} under {}",
+        current.tuned.batch, current.tuned.policy
+    ));
+    for r in [&current.controlled, &current.plain] {
+        if r.served + r.dropped_deadline + r.rejected + r.shed != r.offered {
+            return fail(format!(
+                "{}: served {} + dropped {} + rejected {} + shed {} != offered {}",
+                r.policy, r.served, r.dropped_deadline, r.rejected, r.shed, r.offered
+            ));
+        }
+    }
+    passed.push("request accounting consistent".to_string());
+    if current.controlled.goodput_rps <= current.plain.goodput_rps {
+        return fail(format!(
+            "overload control goodput {:.1} rps does not beat plain deadline-edf ({:.1} rps)",
+            current.controlled.goodput_rps, current.plain.goodput_rps
+        ));
+    }
+    passed.push(format!(
+        "overload control: {:.2}x plain deadline-edf goodput ({:.1} vs {:.1} rps)",
+        current.controlled.goodput_rps / current.plain.goodput_rps,
+        current.controlled.goodput_rps,
+        current.plain.goodput_rps
+    ));
+    let floor = (1.0 - super::MAX_THROUGHPUT_REGRESSION) * baseline.controlled.goodput_rps;
+    if current.controlled.goodput_rps < floor {
+        return fail(format!(
+            "controlled goodput {:.1} rps regressed below {:.1} (baseline {:.1})",
+            current.controlled.goodput_rps, floor, baseline.controlled.goodput_rps
+        ));
+    }
+    passed.push(format!(
+        "controlled goodput {:.1} rps (baseline {:.1})",
+        current.controlled.goodput_rps, baseline.controlled.goodput_rps
+    ));
+    Ok(passed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix(pairs: &[(&str, u64)]) -> BTreeMap<String, u64> {
+        pairs.iter().map(|&(k, v)| (k.to_string(), v)).collect()
+    }
+
+    #[test]
+    fn drift_metric_is_zero_for_scaled_identical_mixes() {
+        let a = mix(&[("a", 10), ("b", 30)]);
+        let b = mix(&[("a", 100), ("b", 300)]);
+        assert_eq!(mix_drift_millis(&a, &b), 0);
+        assert_eq!(mix_drift_millis(&a, &a), 0);
+    }
+
+    #[test]
+    fn drift_metric_detects_mix_shifts_and_disjoint_sets() {
+        let a = mix(&[("a", 100), ("b", 0)]);
+        let b = mix(&[("a", 0), ("b", 100)]);
+        assert_eq!(mix_drift_millis(&a, &b), 2000);
+        let half = mix(&[("a", 50), ("b", 50)]);
+        assert_eq!(mix_drift_millis(&a, &half), 1000);
+        assert_eq!(mix_drift_millis(&a, &mix(&[])), 2000);
+        assert_eq!(mix_drift_millis(&mix(&[]), &mix(&[])), 0);
+    }
+
+    #[test]
+    fn tuned_config_round_trips_through_json() {
+        let cfg = TunedConfig {
+            config: "tune;test".to_string(),
+            batch: 4,
+            policy: "deadline-edf".to_string(),
+            feasible: true,
+            throughput_rps: 123.5,
+            goodput_rps: 120.25,
+            admission: [("a".to_string(), 8usize)].into_iter().collect(),
+            priorities: [("a".to_string(), 0u8), ("b".to_string(), 1u8)]
+                .into_iter()
+                .collect(),
+            expected_mix: mix(&[("a", 40), ("b", 20)]),
+        };
+        let back = TunedConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // Unknown schema reads as an error (store loads treat it as cold).
+        let mut doc = cfg.to_json();
+        if let Value::Obj(fields) = &mut doc {
+            fields[0].1 = Value::Num(99.0);
+        }
+        assert!(TunedConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn selection_order_is_total_and_feasibility_first() {
+        let report = |rps: f64| BenchReport {
+            throughput_rps: rps,
+            ..BenchReport::default()
+        };
+        let c = |batch: u32, feasible: bool, rps: f64| Candidate {
+            batch,
+            policy: SchedulePolicy::Fifo,
+            feasible,
+            report: report(rps),
+        };
+        // Feasible beats a faster infeasible point.
+        assert!(preferred(&c(4, true, 10.0), &c(1, false, 99.0)));
+        assert!(!preferred(&c(1, false, 99.0), &c(4, true, 10.0)));
+        // Same feasibility: throughput decides, then the smaller batch.
+        assert!(preferred(&c(8, true, 20.0), &c(1, true, 10.0)));
+        assert!(preferred(&c(2, true, 10.0), &c(4, true, 10.0)));
+        // Full tie: policy name breaks it (deterministic either way).
+        let a = Candidate {
+            batch: 2,
+            policy: SchedulePolicy::DeadlineEdf,
+            feasible: true,
+            report: report(10.0),
+        };
+        let b = Candidate {
+            batch: 2,
+            policy: SchedulePolicy::Fifo,
+            feasible: true,
+            report: report(10.0),
+        };
+        assert!(preferred(&a, &b));
+        assert!(!preferred(&b, &a));
+    }
+}

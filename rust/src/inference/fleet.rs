@@ -92,6 +92,12 @@ pub struct ModelServeStats {
     /// Requests dropped because their deadline expired before launch
     /// (`deadline-edf` policy only).
     pub deadline_misses: u64,
+    /// Requests rejected at the door by admission control (per-model
+    /// admit budget reached; never queued).
+    pub admission_rejected: u64,
+    /// Requests shed by degraded mode (queued, then dropped under
+    /// sustained deadline pressure, lowest priority tier first).
+    pub shed: u64,
     /// Simulated Flex-TPU cycles: requests × per-inference flex cycles.
     /// Invariant under worker count and request interleaving.
     pub sim_cycles_total: u64,
@@ -125,10 +131,34 @@ pub struct FleetStats {
     /// Requests dropped for missed deadlines, across all models
     /// (`deadline-edf` policy only).
     pub deadline_misses: u64,
+    /// Requests rejected at the door by admission control, across all
+    /// models (only when per-model admit budgets are configured).
+    pub admission_rejected: u64,
+    /// Requests shed by degraded mode across all models (only when
+    /// overload control is enabled).
+    pub shed: u64,
+    /// Deadline misses (drops + sheds) per request priority tier.
+    pub miss_by_tier: BTreeMap<u8, u64>,
     /// Host wall-clock of the whole run, microseconds.
     pub wall_us: u64,
     /// Per-model metrics, keyed by model name.
     pub per_model: BTreeMap<String, ModelServeStats>,
+}
+
+/// Router-side drop counters of one serving run.
+#[derive(Default)]
+struct RouteCounters {
+    unknown: u64,
+    rejected: u64,
+    admission_rejected: u64,
+    /// Deadline misses per model.
+    misses: BTreeMap<String, u64>,
+    /// Degraded-mode sheds per model.
+    shed: BTreeMap<String, u64>,
+    /// Admission rejections per model.
+    admission_by_model: BTreeMap<String, u64>,
+    /// Deadline misses (drops + sheds) per request priority tier.
+    miss_by_tier: BTreeMap<u8, u64>,
 }
 
 /// Per-model accumulator while the run is live.
@@ -176,6 +206,7 @@ pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
 ///         model: "alexnet".to_string(),
 ///         pixels: vec![0.0; SimBackend::DIGEST_PIXELS],
 ///         deadline_us: None,
+///         priority: 0,
 ///     },
 ///     otx,
 /// )).unwrap();
@@ -189,12 +220,18 @@ pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
 pub struct FleetServer {
     registry: Arc<ModelRegistry>,
     policy: SchedulePolicy,
+    admission: BTreeMap<String, usize>,
+    priorities: BTreeMap<String, u8>,
+    overload_control: bool,
 }
 
 /// Builder for [`FleetServer`]; see [`FleetServer::builder`].
 pub struct FleetServerBuilder {
     registry: Arc<ModelRegistry>,
     policy: SchedulePolicy,
+    admission: BTreeMap<String, usize>,
+    priorities: BTreeMap<String, u8>,
+    overload_control: bool,
 }
 
 impl FleetServerBuilder {
@@ -205,11 +242,45 @@ impl FleetServerBuilder {
         self
     }
 
+    /// Per-model admit budgets: a request whose model already has this
+    /// many requests queued is rejected at the door (counted in
+    /// [`FleetStats::admission_rejected`], the caller observes a closed
+    /// response channel) instead of queueing into a deadline it cannot
+    /// meet.  Models absent from the map are never rejected (default:
+    /// empty — no admission control).  Budgets normally come from a
+    /// persisted tuned config (see [`crate::bench::tune`]).
+    pub fn admission(mut self, budgets: BTreeMap<String, usize>) -> Self {
+        self.admission = budgets;
+        self
+    }
+
+    /// Per-model priority tiers (`0` = highest; default tier `0`).
+    /// Degraded mode sheds queued requests of the largest tier value
+    /// first; per-tier miss counts surface in
+    /// [`FleetStats::miss_by_tier`].
+    pub fn priorities(mut self, priorities: BTreeMap<String, u8>) -> Self {
+        self.priorities = priorities;
+        self
+    }
+
+    /// Enable scheduler overload control (degraded mode under sustained
+    /// deadline pressure; see
+    /// [`crate::inference::Scheduler::set_overload_control`]).  Off by
+    /// default, where serving is bit-for-bit what it was before overload
+    /// control existed.
+    pub fn overload_control(mut self, enabled: bool) -> Self {
+        self.overload_control = enabled;
+        self
+    }
+
     /// The finished fleet.
     pub fn build(self) -> FleetServer {
         FleetServer {
             registry: self.registry,
             policy: self.policy,
+            admission: self.admission,
+            priorities: self.priorities,
+            overload_control: self.overload_control,
         }
     }
 }
@@ -220,6 +291,9 @@ impl FleetServer {
         FleetServerBuilder {
             registry,
             policy: SchedulePolicy::Fifo,
+            admission: BTreeMap::new(),
+            priorities: BTreeMap::new(),
+            overload_control: false,
         }
     }
 
@@ -258,7 +332,7 @@ impl FleetServer {
         // deadlock against a full batch queue with no consumers left.
         let first_err: Mutex<Option<Error>> = Mutex::new(None);
 
-        let (unknown_model, rejected, misses) = std::thread::scope(|scope| {
+        let counters = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(workers);
             for _ in 0..workers {
                 handles.push(scope.spawn(|| loop {
@@ -314,9 +388,12 @@ impl FleetServer {
         let wall = start.elapsed();
         let mut stats = FleetStats {
             policy: self.policy.name().to_string(),
-            unknown_model,
-            rejected,
-            deadline_misses: misses.values().sum(),
+            unknown_model: counters.unknown,
+            rejected: counters.rejected,
+            deadline_misses: counters.misses.values().sum(),
+            admission_rejected: counters.admission_rejected,
+            shed: counters.shed.values().sum(),
+            miss_by_tier: counters.miss_by_tier,
             wall_us: wall.as_micros() as u64,
             ..Default::default()
         };
@@ -330,7 +407,13 @@ impl FleetServer {
                     requests: m.requests,
                     batches: m.batches,
                     reconfigurations: m.reconfigurations,
-                    deadline_misses: misses.get(&name).copied().unwrap_or(0),
+                    deadline_misses: counters.misses.get(&name).copied().unwrap_or(0),
+                    admission_rejected: counters
+                        .admission_by_model
+                        .get(&name)
+                        .copied()
+                        .unwrap_or(0),
+                    shed: counters.shed.get(&name).copied().unwrap_or(0),
                     sim_cycles_total: m.sim_cycles_total,
                     sim_flex_cycles_per_inference: m.flex_cycles,
                     queue_p50_us: percentile(&m.queue_waits_us, 0.50),
@@ -344,25 +427,32 @@ impl FleetServer {
                 },
             );
         }
-        // Models whose every request missed its deadline never executed a
-        // batch; still surface their miss counts.
-        for (name, count) in misses {
+        // Models whose every request was dropped at the door or in the
+        // queue never executed a batch; still surface their counts.
+        for (name, count) in counters.misses {
             stats.per_model.entry(name).or_default().deadline_misses = count;
+        }
+        for (name, count) in counters.shed {
+            stats.per_model.entry(name).or_default().shed = count;
+        }
+        for (name, count) in counters.admission_by_model {
+            stats.per_model.entry(name).or_default().admission_rejected = count;
         }
         Ok(stats)
     }
 
     /// The router loop: drain the front door into the scheduler, launch
     /// full batches as the policy dictates, and flush partial batches
-    /// whenever the door runs dry (and at close).  Returns
-    /// `(unknown_model, rejected, deadline misses per model)` counters.
+    /// whenever the door runs dry (and at close).  Returns the routing
+    /// counters (unknown model, rejections, per-model misses/sheds).
     fn route(
         &self,
         rx: Receiver<Envelope>,
         btx: &SyncSender<FleetBatch>,
         start: Instant,
-    ) -> (u64, u64, BTreeMap<String, u64>) {
+    ) -> RouteCounters {
         let mut sched: Scheduler<(Envelope, Instant)> = Scheduler::new(self.policy);
+        sched.set_overload_control(self.overload_control);
         // Deployments held for models with queued requests: a request
         // joins the batch owned by ONE deployment (looked up when its
         // queue was empty) and is validated against that owner, so a hot
@@ -371,12 +461,26 @@ impl FleetServer {
         let mut held: BTreeMap<String, Arc<ModelDeployment>> = BTreeMap::new();
         let mut unknown = 0u64;
         let mut rejected = 0u64;
+        let mut admission_rejected = 0u64;
+        let mut admission_by_model: BTreeMap<String, u64> = BTreeMap::new();
         let mut misses: BTreeMap<String, u64> = BTreeMap::new();
+        let mut shed: BTreeMap<String, u64> = BTreeMap::new();
+        let mut miss_by_tier: BTreeMap<u8, u64> = BTreeMap::new();
 
         let mut admit = |sched: &mut Scheduler<(Envelope, Instant)>,
                          held: &mut BTreeMap<String, Arc<ModelDeployment>>,
                          env: Envelope| {
             let model = env.0.model.clone();
+            // Admission control at the door: a model at its admit budget
+            // rejects before any queue state is touched, so overload on
+            // one model cannot grow its queue beyond the tuned bound.
+            if let Some(&cap) = self.admission.get(&model) {
+                if sched.pending_for(&model) >= cap {
+                    admission_rejected += 1;
+                    *admission_by_model.entry(model).or_insert(0) += 1;
+                    return; // envelope drops; the caller sees a recv error
+                }
+            }
             let vacant = sched.pending_for(&model) == 0;
             let dep = if vacant {
                 match self.registry.get(&model) {
@@ -395,6 +499,7 @@ impl FleetServer {
             }
             if vacant {
                 let mut profile = dep.profile();
+                profile.priority = self.priorities.get(&model).copied().unwrap_or(0);
                 if self.policy == SchedulePolicy::Placement {
                     if let Some(p) = self.registry.placement_of(&model) {
                         // Forecast boundaries from the plan the group
@@ -455,8 +560,21 @@ impl FleetServer {
                     reconfigurations: plan.reconfigurations,
                 });
             }
-            for (model, _envelope) in expired {
+            for (model, (env, _)) in expired {
                 *misses.entry(model.clone()).or_insert(0) += 1;
+                *miss_by_tier.entry(env.0.priority).or_insert(0) += 1;
+                if sched.pending_for(&model) == 0 {
+                    held.remove(&model);
+                }
+            }
+            // Degraded mode sheds the newest low-tier requests; dropping
+            // the envelope closes its reply channel, so callers observe a
+            // receive error exactly like a deadline-expired request.
+            let mut shed_out: Vec<(String, (Envelope, Instant))> = Vec::new();
+            sched.drain_shed(&mut shed_out);
+            for (model, (env, _)) in shed_out {
+                *shed.entry(model.clone()).or_insert(0) += 1;
+                *miss_by_tier.entry(env.0.priority).or_insert(0) += 1;
                 if sched.pending_for(&model) == 0 {
                     held.remove(&model);
                 }
@@ -487,7 +605,15 @@ impl FleetServer {
             }
         }
         emit(&mut sched, &mut held, true);
-        (unknown, rejected, misses)
+        RouteCounters {
+            unknown,
+            rejected,
+            admission_rejected,
+            misses,
+            shed,
+            admission_by_model,
+            miss_by_tier,
+        }
     }
 }
 

@@ -93,6 +93,7 @@ impl ModelDeployment {
             model: self.name.clone(),
             batch: self.server.batch() as usize,
             forecast: self.forecast,
+            priority: 0,
         }
     }
 }
@@ -355,6 +356,25 @@ impl ModelRegistry {
             choices: plan.layers.iter().map(|l| l.choice).collect(),
             forecast: plan.reconfig_forecast(),
         })
+    }
+
+    /// The provenance key a tuned operating point for this registry's
+    /// *deployment* — architecture, registered model set, chip count and
+    /// placement policy — persists under (the `tuned-config` store kind,
+    /// see [`crate::bench::tune`]).  Deliberately independent of the
+    /// serving batch size and scheduling policy: those are the knobs the
+    /// tuner chooses, so they live in the record's payload, not its key.
+    pub fn tuned_provenance(&self) -> String {
+        let mut parts: Vec<String> = self
+            .deployments()
+            .iter()
+            .map(|d| d.provenance.clone())
+            .collect();
+        parts.push(format!(
+            "tuned;chips={};placement={:?}",
+            self.arch.chips, self.placement
+        ));
+        crate::coordinator::plan::combined_provenance(&parts)
     }
 
     /// Look up a registered model.

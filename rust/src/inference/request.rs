@@ -22,6 +22,12 @@ pub struct InferenceRequest {
     /// response channel) instead of launching late.  The other policies
     /// ignore it.
     pub deadline_us: Option<u64>,
+    /// Priority tier: `0` is the highest tier, larger values are shed
+    /// first when the fleet enters degraded mode under sustained deadline
+    /// pressure (see [`crate::inference::Scheduler`]).  Tiers are
+    /// normally assigned per model (`flex-tpu serve --priority
+    /// model=tier`); requests inherit their model's tier.
+    pub priority: u8,
 }
 
 /// Simulated Flex-TPU timing attached to a response.

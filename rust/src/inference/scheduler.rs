@@ -106,6 +106,10 @@ pub struct ModelProfile {
     pub batch: usize,
     /// The plan's boundary dataflows and internal switch count.
     pub forecast: ReconfigForecast,
+    /// Priority tier: `0` is the highest tier; under degraded mode (see
+    /// [`Scheduler::set_overload_control`]) queued requests of the
+    /// largest tier value present are shed first.
+    pub priority: u8,
 }
 
 /// One queued request inside the scheduler.
@@ -172,7 +176,23 @@ pub struct Scheduler<T> {
     groups: BTreeMap<String, usize>,
     /// Array residency per chip group, keyed by group id.
     state: BTreeMap<usize, GroupState>,
+    /// Whether overload control (degraded mode) is enabled; off by
+    /// default, in which case the scheduler behaves bit-for-bit as it did
+    /// before overload control existed.
+    overload: bool,
+    /// Deadline-pressure accumulator: +1 per pop that swept expired
+    /// requests, −1 per clean pop, saturating at [`PRESSURE_CAP`].
+    pressure: u32,
+    /// Requests shed by degraded mode, with their owning model, awaiting
+    /// [`Scheduler::drain_shed`].
+    shed_log: Vec<(String, T)>,
 }
+
+/// Pops-with-expirations needed before degraded mode engages.
+const DEGRADE_ENTER: u32 = 3;
+/// Upper bound on the pressure accumulator, so recovery after a long
+/// overload takes at most `PRESSURE_CAP` clean pops.
+const PRESSURE_CAP: u32 = 6;
 
 impl<T> Scheduler<T> {
     /// Empty scheduler running `policy`.
@@ -184,12 +204,55 @@ impl<T> Scheduler<T> {
             seq: 0,
             groups: BTreeMap::new(),
             state: BTreeMap::new(),
+            overload: false,
+            pressure: 0,
+            shed_log: Vec::new(),
         }
     }
 
     /// The policy this scheduler runs.
     pub fn policy(&self) -> SchedulePolicy {
         self.policy
+    }
+
+    /// Enable/disable overload control.  When enabled (and the policy is
+    /// [`SchedulePolicy::DeadlineEdf`], the only deadline-enforcing
+    /// policy), sustained deadline pressure — [`DEGRADE_ENTER`]
+    /// consecutive pops that swept expired requests — flips the scheduler
+    /// into *degraded mode*: serving batches shrink to half size (launch
+    /// sooner, less padding wait) and queue depth beyond twice the
+    /// degraded batch capacity is shed, strictly lowest-priority tier
+    /// first, newest request first within a tier.  Shed requests are
+    /// recorded with their owning model and drained via
+    /// [`Scheduler::drain_shed`].  Disabled (the default), behavior is
+    /// bit-for-bit identical to a scheduler without overload control.
+    pub fn set_overload_control(&mut self, enabled: bool) {
+        self.overload = enabled;
+        if !enabled {
+            self.pressure = 0;
+        }
+    }
+
+    /// Whether degraded mode is currently engaged.
+    pub fn degraded(&self) -> bool {
+        self.overload && self.pressure >= DEGRADE_ENTER
+    }
+
+    /// Move every request shed by degraded mode (with its owning model's
+    /// name) into `sink`, oldest shed first.
+    pub fn drain_shed(&mut self, sink: &mut Vec<(String, T)>) {
+        sink.append(&mut self.shed_log);
+    }
+
+    /// The batch size batches for `model` currently form at: the profiled
+    /// size, halved (min 1) while degraded mode is engaged.
+    fn effective_batch(&self, model: &str) -> usize {
+        let batch = self.profiles[model].batch;
+        if self.degraded() {
+            (batch / 2).max(1)
+        } else {
+            batch
+        }
     }
 
     /// Register (or replace) a model's profile.  A model must be profiled
@@ -268,6 +331,27 @@ impl<T> Scheduler<T> {
             });
     }
 
+    /// Admission-controlled [`Scheduler::push`]: the request is admitted
+    /// only while `model`'s queue holds fewer than `cap` requests.
+    /// Returns whether it was admitted; a rejected request never enters a
+    /// queue (the door-level bound that keeps queued work fresh enough to
+    /// meet its deadline).  Panics if the model was never profiled, like
+    /// `push`.
+    pub fn try_push(
+        &mut self,
+        model: &str,
+        arrival: u64,
+        deadline: Option<u64>,
+        item: T,
+        cap: usize,
+    ) -> bool {
+        if self.pending_for(model) >= cap {
+            return false;
+        }
+        self.push(model, arrival, deadline, item);
+        true
+    }
+
     /// Requests currently queued across all models.
     pub fn pending(&self) -> usize {
         self.queues.values().map(VecDeque::len).sum()
@@ -300,6 +384,39 @@ impl<T> Scheduler<T> {
         }
     }
 
+    /// Degraded-mode load shedding: while the total queue depth across
+    /// the in-scope models exceeds twice their summed (degraded) batch
+    /// capacity, drop one request at a time from the lowest-priority
+    /// non-empty queue — strictly largest tier value first, name order
+    /// within a tier, newest request (back of the queue) first — into the
+    /// shed log.  Oldest requests survive: they are the ones deadline-EDF
+    /// can still launch in time.
+    fn shed_over_capacity(&mut self, filter: Option<usize>) {
+        let names: Vec<String> = self
+            .profiles
+            .keys()
+            .filter(|n| self.in_scope(filter, n))
+            .cloned()
+            .collect();
+        let cap: usize = names.iter().map(|n| 2 * self.effective_batch(n)).sum();
+        let mut total: usize = names.iter().map(|n| self.queues[n].len()).sum();
+        while total > cap {
+            let Some(victim) = names
+                .iter()
+                .filter(|n| !self.queues[*n].is_empty())
+                .max_by_key(|n| (self.profiles[*n].priority, (*n).clone()))
+                .cloned()
+            else {
+                break;
+            };
+            let q = self.queues.get_mut(&victim).expect("victim has a queue");
+            if let Some(p) = q.pop_back() {
+                self.shed_log.push((victim, p.item));
+            }
+            total -= 1;
+        }
+    }
+
     /// Entry-switch cost of launching `model` next on a group whose arrays
     /// hold `state` (0 or 1).
     fn entry_cost(&self, state: &GroupState, model: &str) -> u64 {
@@ -327,7 +444,7 @@ impl<T> Scheduler<T> {
             .queues
             .keys()
             .filter(|n| self.in_scope(filter, n))
-            .filter(|n| self.queues[*n].len() >= self.profiles[*n].batch)
+            .filter(|n| self.queues[*n].len() >= self.effective_batch(n))
             .collect();
         match self.policy {
             SchedulePolicy::Fifo => {
@@ -337,7 +454,7 @@ impl<T> Scheduler<T> {
                 // flushed each slot the moment it reached batch size.
                 if let Some(name) = full
                     .iter()
-                    .min_by_key(|n| self.queues[**n][self.profiles[**n].batch - 1].seq)
+                    .min_by_key(|n| self.queues[**n][self.effective_batch(n) - 1].seq)
                 {
                     return Some((*name).clone());
                 }
@@ -450,12 +567,22 @@ impl<T> Scheduler<T> {
         force: bool,
         expired: &mut Vec<(String, T)>,
     ) -> Option<BatchPlan<T>> {
+        let already_expired = expired.len();
         self.sweep_expired(now, expired);
+        if self.overload {
+            if expired.len() > already_expired {
+                self.pressure = (self.pressure + 1).min(PRESSURE_CAP);
+            } else {
+                self.pressure = self.pressure.saturating_sub(1);
+            }
+            if self.degraded() {
+                self.shed_over_capacity(filter);
+            }
+        }
         let state = self.state.get(&key).cloned().unwrap_or_default();
         let name = self.select(filter, &state, force)?;
-        let profile = &self.profiles[&name];
-        let batch = profile.batch;
-        let forecast = profile.forecast;
+        let batch = self.effective_batch(&name);
+        let forecast = self.profiles[&name].forecast;
         let q = self.queues.get_mut(&name).expect("selected model has a queue");
         let items: Vec<PendingItem<T>> = if self.policy == SchedulePolicy::DeadlineEdf {
             // Most-urgent first: order by (deadline, arrival), take a batch.
@@ -533,6 +660,7 @@ mod tests {
             model: name.to_string(),
             batch,
             forecast: f,
+            priority: 0,
         }
     }
 
@@ -743,6 +871,142 @@ mod tests {
         );
         assert!(s.pop_group(0, 3, true, &mut exp).is_none());
         assert!(s.pop_group(1, 3, true, &mut exp).is_none());
+    }
+
+    /// Drive an EDF scheduler into degraded mode and saturate its
+    /// pressure: push already-expired requests and pop until `degraded()`
+    /// reports true, then keep going so a few clean pops cannot
+    /// immediately decay it back out.
+    fn pressurize(s: &mut Scheduler<u64>, exp: &mut Vec<(String, u64)>) {
+        let mut fill = 1_000_000;
+        let mut extra = PRESSURE_CAP;
+        loop {
+            if s.degraded() {
+                if extra == 0 {
+                    break;
+                }
+                extra -= 1;
+            }
+            s.push("a", 0, Some(1), fill);
+            fill += 1;
+            s.pop(10, false, exp);
+        }
+    }
+
+    #[test]
+    fn overload_control_off_is_inert() {
+        let mut s = sched(SchedulePolicy::DeadlineEdf);
+        let mut exp = Vec::new();
+        for i in 0..32 {
+            s.push("a", i, Some(1), i);
+            s.pop(1_000, false, &mut exp);
+        }
+        assert!(!s.degraded(), "disabled overload control never degrades");
+        let mut shed = Vec::new();
+        s.drain_shed(&mut shed);
+        assert!(shed.is_empty());
+    }
+
+    #[test]
+    fn sustained_pressure_enters_and_recovery_exits_degraded_mode() {
+        let mut s = sched(SchedulePolicy::DeadlineEdf);
+        s.set_overload_control(true);
+        let mut exp = Vec::new();
+        assert!(!s.degraded());
+        pressurize(&mut s, &mut exp);
+        assert!(s.degraded());
+        // Clean pops decay the pressure back out of degraded mode.
+        for t in 0..PRESSURE_CAP {
+            s.pop(1_000 + u64::from(t), true, &mut exp);
+        }
+        assert!(!s.degraded(), "clean pops must recover");
+    }
+
+    #[test]
+    fn degraded_mode_halves_the_forming_batch() {
+        let mut s = sched(SchedulePolicy::DeadlineEdf);
+        s.set_overload_control(true);
+        let mut exp = Vec::new();
+        pressurize(&mut s, &mut exp);
+        // Batch size 2 degrades to 1: a single queued request launches
+        // without force.
+        s.push("b", 2_000, Some(9_000), 7);
+        let b = s.pop(2_001, false, &mut exp).expect("half batch launches");
+        assert_eq!(b.model, "b");
+        assert_eq!(b.items.len(), 1);
+    }
+
+    #[test]
+    fn degraded_mode_sheds_lowest_priority_first() {
+        let mut s: Scheduler<u64> = Scheduler::new(SchedulePolicy::DeadlineEdf);
+        let mut hi = profile("a", 2, forecast(Dataflow::Ws, Dataflow::Os, 1));
+        hi.priority = 0;
+        let mut lo = profile("b", 2, forecast(Dataflow::Ws, Dataflow::Is, 3));
+        lo.priority = 2;
+        s.set_profile(hi);
+        s.set_profile(lo);
+        s.set_overload_control(true);
+        let mut exp = Vec::new();
+        pressurize(&mut s, &mut exp);
+        // Degraded capacity: 2 models x 2x(batch 2/2) = 4 queued total.
+        // 3 tier-0 + 10 tier-2 live requests overflow it by 9 — fewer
+        // than tier-2's queue depth, so a strict priority order sheds
+        // exclusively from tier 2.
+        for i in 0..10 {
+            if i < 3 {
+                s.push("a", 1_000 + i, Some(9_000), i);
+            }
+            s.push("b", 1_000 + i, Some(9_000), 100 + i);
+        }
+        let launched = s.pop(1_100, false, &mut exp).expect("live batch launches");
+        let mut shed = Vec::new();
+        s.drain_shed(&mut shed);
+        assert!(!shed.is_empty(), "over-capacity queues must shed");
+        assert!(
+            shed.iter().all(|(m, _)| m == "b"),
+            "shed set crossed tiers: {shed:?}"
+        );
+        let a_live = s.pending_for("a")
+            + if launched.model == "a" { launched.items.len() } else { 0 };
+        assert_eq!(a_live, 3, "tier 0 rides out the overload");
+    }
+
+    #[test]
+    fn expired_requests_charge_their_owning_model() {
+        // Regression: a deadline miss must be charged to the model that
+        // owned the expired request, never to the resident model that
+        // happens to launch at the same pop.
+        let mut s = sched(SchedulePolicy::DeadlineEdf);
+        let mut exp = Vec::new();
+        s.push("a", 0, Some(100), 0);
+        s.push("a", 1, Some(100), 1);
+        assert_eq!(s.pop(2, false, &mut exp).unwrap().model, "a");
+        assert!(exp.is_empty());
+        // Only b's requests expire; "a" stays resident and launches the
+        // surviving live request at the same forced pop.
+        for i in 0..3 {
+            s.push("b", 10 + i, Some(20), 10 + i);
+        }
+        s.push("a", 30, Some(1_000), 99);
+        let batch = s.pop(500, true, &mut exp).expect("live a request launches");
+        assert_eq!(batch.model, "a");
+        assert_eq!(exp.len(), 3);
+        assert!(
+            exp.iter().all(|(m, _)| m == "b"),
+            "missed b requests charged to the resident model: {exp:?}"
+        );
+    }
+
+    #[test]
+    fn try_push_bounds_queue_depth() {
+        let mut s = sched(SchedulePolicy::Fifo);
+        assert!(s.try_push("a", 0, None, 0, 2));
+        assert!(s.try_push("a", 1, None, 1, 2));
+        assert!(!s.try_push("a", 2, None, 2, 2), "cap reached: reject");
+        assert_eq!(s.pending_for("a"), 2);
+        let mut exp = Vec::new();
+        s.pop(3, true, &mut exp);
+        assert!(s.try_push("a", 4, None, 3, 2), "drained queue admits again");
     }
 
     #[test]

@@ -525,6 +525,7 @@ impl InferenceServer {
     ///     model: server.model().to_string(),
     ///     pixels: vec![0.0; 28 * 28],
     ///     deadline_us: None,
+    ///     priority: 0,
     /// };
     /// tx.send((req, otx))?;
     /// drop(tx); // close the front door so the serving loops exit

@@ -13,13 +13,17 @@
 //!                   [--chips 2] [--plan-cache DIR]
 //! flex-tpu serve    --model resnet18 --model alexnet ... [--requests 300] [--workers 4]
 //!                   [--batch 4] [--size 32] [--policy fifo] [--chips 4] [--placement pod]
-//!                   [--plan-cache DIR]
+//!                   [--plan-cache DIR] [--tuned] [--priority alexnet=1]
 //! flex-tpu bench    serve --scenario mixed --seed 7 --policy all [--requests 600]
 //!                   [--batch 4] [--size 128] [--chips 4] [--placement co-locate]
 //!                   [--mean-us 2000] [--mode open] [--deadline-us 0]
 //!                   [--out BENCH_PR5.json] [--plan-cache DIR]
 //! flex-tpu bench    compare [--report BENCH_PR5.json]
 //!                   [--baseline rust/tests/golden/bench_baseline.json]
+//! flex-tpu tune     --model resnet18 --model alexnet ... [--size 128] [--batches 1,2,4,8]
+//!                   [--policy fifo --policy deadline-edf] [--scenario mixed] [--seed 7]
+//!                   [--mean-us 2000] [--deadline-us 2000000] [--out BENCH_PR5.json]
+//!                   [--chips 4] [--placement co-locate] [--plan-cache DIR]
 //! flex-tpu fleet    status --plan-cache DIR
 //! flex-tpu validate [--array 4] [--cases 20]
 //! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0] [--plan-cache DIR]
@@ -51,7 +55,7 @@ use flex_tpu::util::cli::{Args, Parsed};
 type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
 const SUBCOMMANDS: &str = "simulate | deploy | sweep | shard | plan | report | infer | serve | \
-                           bench | fleet | validate | dse";
+                           bench | tune | fleet | validate | dse";
 
 fn load_model(name: &str) -> CliResult<Topology> {
     if name.ends_with(".csv") {
@@ -392,14 +396,16 @@ fn cmd_shard(p: &Parsed) -> CliResult<()> {
     Ok(())
 }
 
-/// `flex-tpu plan gc`: compact a store directory — drop `plan`/`shapes`
-/// documents whose provenance matches no live configuration, plus
-/// anything corrupt or schema-stale, and dedupe shape files.  The live
-/// set is the cross product of every `--size`, `--chips` and `--batch`
-/// occurrence (all three repeatable) over the whole zoo plus any
-/// explicitly named `--model` topologies — name every configuration you
-/// want to keep; everything else is pruned.  Report-kind records are
-/// archival and only dropped when invalid.
+/// `flex-tpu plan gc`: compact a store directory — drop
+/// `plan`/`shapes`/`tuned-config` documents whose provenance matches no
+/// live configuration, plus anything corrupt or schema-stale, and dedupe
+/// shape files.  The live set is the cross product of every `--size`,
+/// `--chips` and `--batch` occurrence (all three repeatable) over the
+/// whole zoo plus any explicitly named `--model` topologies — name every
+/// configuration you want to keep; everything else is pruned.  Tuned
+/// configs are keyed per *fleet* (the `--model` set under `--placement`),
+/// so name the served fleet exactly to keep its tuned operating point.
+/// Report-kind records are archival and only dropped when invalid.
 fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
     let store = open_store(p)?.ok_or("plan gc needs --plan-cache <dir>")?;
     // Pruning is scoped by what the user *names*; never let the generic
@@ -457,6 +463,44 @@ fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
             }
         }
     }
+    // Tuned-config records are keyed per *fleet* — the registered model
+    // set plus chip count and placement (see
+    // `ModelRegistry::tuned_provenance`) — not per model.  Reconstruct
+    // the key the registry would compute for the explicitly named models
+    // under every architecture x chips combination: deployments sort by
+    // name, and each registers under its single-chip default-options
+    // provenance.
+    let placement = PlacementPolicy::parse(p.req("placement")?)
+        .ok_or("bad --placement (single/pod/co-locate)")?;
+    let mut fleet: Vec<Topology> = Vec::new();
+    for name in p.all("model") {
+        let topo = load_model(&name)?;
+        if !fleet.iter().any(|t| t.name == topo.name) {
+            fleet.push(topo);
+        }
+    }
+    fleet.sort_by(|a, b| a.name.cmp(&b.name));
+    let mut tuned_keys = 0usize;
+    for arch in &arches {
+        for &chips_flag in &chips_flags {
+            let chips = if chips_flag == 0 { arch.chips } else { chips_flag as u32 };
+            let fleet_arch = arch.with_chips(chips);
+            let mut parts: Vec<String> = fleet
+                .iter()
+                .map(|t| {
+                    plan::provenance_key(
+                        &fleet_arch,
+                        std::slice::from_ref(t),
+                        SimOptions::default(),
+                        1,
+                    )
+                })
+                .collect();
+            parts.push(format!("tuned;chips={chips};placement={placement:?}"));
+            live.push(plan::combined_provenance(&parts));
+            tuned_keys += 1;
+        }
+    }
     let stats = store.compact(&live)?;
     println!(
         "plan gc in {}: kept {} documents; dropped {} invalid + {} unknown-provenance, \
@@ -470,7 +514,7 @@ fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
     );
     println!(
         "plan gc live set: {} keys ({} models x {} architectures (sizes {:?}{}) x chips {:?} x \
-         batches {:?})",
+         batches {:?}, + {} tuned-config fleet keys over {} model(s))",
         live.len(),
         models.len(),
         arches.len(),
@@ -478,6 +522,8 @@ fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
         if p.get("config").is_some() { " + --config" } else { "" },
         chips_flags,
         batches,
+        tuned_keys,
+        fleet.len(),
     );
     Ok(())
 }
@@ -702,6 +748,7 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
                 model: model.clone(),
                 pixels,
                 deadline_us: None,
+                priority: 0,
             };
             tx.send((req, otx)).expect("server alive");
             response_rxs.push(orx);
@@ -768,7 +815,57 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         routed.push(dep.name.clone());
     }
     let names = routed;
-    let fleet = FleetServer::builder(Arc::clone(&registry)).policy(policy).build();
+    // Per-model priority tiers: explicit `--priority model=tier` flags,
+    // topped up from the persisted tuned config under `--tuned` (explicit
+    // flags win).
+    let mut priorities: std::collections::BTreeMap<String, u8> = Default::default();
+    for spec in p.all("priority") {
+        let (model, tier) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("--priority must be model=tier, got {spec:?}"))?;
+        let tier: u8 = tier
+            .parse()
+            .map_err(|_| format!("--priority tier must be in 0..=255, got {tier:?}"))?;
+        priorities.insert(model.to_string(), tier);
+    }
+    let mut admission: std::collections::BTreeMap<String, usize> = Default::default();
+    let mut overload_control = false;
+    if p.is_set("tuned") {
+        let store = registry
+            .store()
+            .ok_or("serve --tuned needs --plan-cache <dir> (tuned configs live in the store)")?;
+        let key = registry.tuned_provenance();
+        let tuned = bench::TunedConfig::load(store, &key).ok_or_else(|| {
+            format!(
+                "no tuned config persisted for this fleet (key {key}); run flex-tpu tune with \
+                 the same --model/--size/--chips/--placement/--plan-cache first"
+            )
+        })?;
+        if tuned.batch != batch {
+            println!(
+                "serve --tuned: tuned serving batch is {} but serving at --batch {batch}; \
+                 pass --batch {} to serve the tuned operating point",
+                tuned.batch, tuned.batch
+            );
+        }
+        println!(
+            "serve: tuned config loaded ({}, batch {}, {} admission budgets, overload control on)",
+            tuned.policy,
+            tuned.batch,
+            tuned.admission.len()
+        );
+        admission = tuned.admission;
+        for (model, tier) in tuned.priorities {
+            priorities.entry(model).or_insert(tier);
+        }
+        overload_control = true;
+    }
+    let fleet = FleetServer::builder(Arc::clone(&registry))
+        .policy(policy)
+        .admission(admission)
+        .priorities(priorities.clone())
+        .overload_control(overload_control)
+        .build();
 
     // Bounded front door (a few compiled batches per model), deterministic
     // synthetic traffic interleaved round-robin across the fleet.
@@ -776,6 +873,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
     let (tx, rx) = std::sync::mpsc::sync_channel(depth);
     let img = SimBackend::DIGEST_PIXELS;
     let producer_names = names.clone();
+    let producer_priorities = priorities;
     let producer = std::thread::spawn(move || {
         let mut response_rxs = Vec::new();
         for id in 0..requests {
@@ -789,6 +887,7 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
                 model: model.clone(),
                 pixels,
                 deadline_us: None,
+                priority: producer_priorities.get(&model).copied().unwrap_or(0),
             };
             tx.send((req, otx)).expect("fleet alive");
             response_rxs.push((model, orx));
@@ -847,15 +946,26 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         "fleet policy: {} ({} deadline misses)",
         stats.policy, stats.deadline_misses
     );
-    if delivered != requests || cross_routed != 0 || stats.requests != requests {
+    // Admission-rejected / deadline-dropped / shed requests never get a
+    // response (the fleet drops their channel), so the delivery check
+    // counts them out explicitly instead of declaring them lost.
+    let undelivered = stats.admission_rejected + stats.deadline_misses + stats.shed;
+    if undelivered > 0 {
+        println!(
+            "overload: {} admission-rejected, {} deadline-dropped, {} shed",
+            stats.admission_rejected, stats.deadline_misses, stats.shed
+        );
+    }
+    let expected = requests - undelivered;
+    if delivered != expected || cross_routed != 0 || stats.requests != expected {
         return Err(format!(
-            "response accounting failed: {delivered}/{requests} delivered, \
-             {cross_routed} cross-routed, {} unknown-model, {} rejected",
+            "response accounting failed: {delivered}/{expected} delivered \
+             ({requests} offered), {cross_routed} cross-routed, {} unknown-model, {} rejected",
             stats.unknown_model, stats.rejected
         )
         .into());
     }
-    println!("all {requests} responses accounted for (0 cross-routed)");
+    println!("all {expected} responses accounted for (0 cross-routed)");
     let preloaded = registry
         .deployments()
         .iter()
@@ -1004,27 +1114,56 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
     Ok(())
 }
 
-/// `flex-tpu bench compare`: the CI perf gate — compare a fresh suite
-/// JSON against the committed baseline and fail on regression.
+/// `flex-tpu bench compare`: the CI perf gate — compare a fresh document
+/// against the committed baseline and fail on regression.  Dispatches on
+/// the document shape: tune documents (the ones written by `flex-tpu
+/// tune`, carrying a `tuned` section) gate goodput through
+/// `bench::gate_tune`; bench suites gate throughput through
+/// `bench::gate`.
 fn cmd_bench_compare(p: &Parsed) -> CliResult<()> {
-    let parse_suite = |path: &str| -> CliResult<BenchSuite> {
+    let read = |path: &str| -> CliResult<flex_tpu::util::json::Value> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("cannot read bench suite {path}: {e}"))?;
-        Ok(BenchSuite::from_json(&flex_tpu::util::json::parse(&text)?)?)
+            .map_err(|e| format!("cannot read bench document {path}: {e}"))?;
+        Ok(flex_tpu::util::json::parse(&text)?)
     };
     let report_path = p.req("report")?;
     let baseline_path = p.req("baseline")?;
-    let current = parse_suite(report_path)?;
-    let baseline = parse_suite(baseline_path)?;
-    match bench::gate(&current, &baseline) {
+    let current = read(report_path)?;
+    let baseline = read(baseline_path)?;
+    let current_is_tune = current.req("tuned").is_ok();
+    if current_is_tune != baseline.req("tuned").is_ok() {
+        return Err(format!(
+            "bench compare: {report_path} and {baseline_path} are different document kinds \
+             (one is a tune document, the other a bench suite)"
+        )
+        .into());
+    }
+    let (kind, gated) = if current_is_tune {
+        (
+            "tune gate",
+            bench::gate_tune(
+                &bench::TuneDoc::from_json(&current)?,
+                &bench::TuneDoc::from_json(&baseline)?,
+            ),
+        )
+    } else {
+        (
+            "bench gate",
+            bench::gate(
+                &BenchSuite::from_json(&current)?,
+                &BenchSuite::from_json(&baseline)?,
+            ),
+        )
+    };
+    match gated {
         Ok(passed) => {
             for line in passed {
                 println!("ok: {line}");
             }
-            println!("bench gate: PASS ({report_path} vs {baseline_path})");
+            println!("{kind}: PASS ({report_path} vs {baseline_path})");
             Ok(())
         }
-        Err(e) => Err(format!("bench gate: FAIL — {e}").into()),
+        Err(e) => Err(format!("{kind}: FAIL — {e}").into()),
     }
 }
 
@@ -1035,6 +1174,183 @@ fn cmd_bench(p: &Parsed) -> CliResult<()> {
         Some("compare") => cmd_bench_compare(p),
         other => Err(format!("bench needs an action (serve/compare), got {other:?}").into()),
     }
+}
+
+/// `flex-tpu tune`: the closed-loop autotuner — sweep serving batch size
+/// (`--batches`) x scheduling policy against the seeded trace, select the
+/// SLO-feasible throughput argmax, derive the overload posture (admission
+/// budgets + priority tiers), and run the overload comparison — the tuned
+/// config under full control vs plain `deadline-edf` — that `bench
+/// compare` gates goodput on.  With `--plan-cache` the selection persists
+/// as a `tuned-config` record: a re-run under the same spec whose trace
+/// mix has not drifted warm-starts with zero sweep re-simulation, and
+/// `serve --tuned` picks it up.
+fn cmd_tune(p: &Parsed) -> CliResult<()> {
+    let arch = arch_from(p)?;
+    let chips = effective_chips(p, &arch)?;
+    let placement = PlacementPolicy::parse(p.req("placement")?)
+        .ok_or("bad --placement (single/pod/co-locate)")?;
+    let scenario =
+        Scenario::parse(p.req("scenario")?).ok_or("bad --scenario (mixed/bursty/skewed)")?;
+    let mode = LoopMode::parse(p.req("mode")?).ok_or("bad --mode (open/closed)")?;
+    let deadline = p.u64("deadline-us")?;
+    let mut topos: Vec<Topology> = Vec::new();
+    for name in p.all("model") {
+        let topo = load_model(&name)?;
+        if topos.iter().any(|t| t.name == topo.name) {
+            return Err(format!("model {name:?} given more than once").into());
+        }
+        topos.push(topo);
+    }
+    let names: Vec<String> = topos.iter().map(|t| t.name.clone()).collect();
+    let batches: Vec<u32> = p
+        .req("batches")?
+        .split(',')
+        .map(|s| s.trim().parse::<u32>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| "--batches must be comma-separated integers")?;
+    let first_batch = *batches.first().ok_or("--batches needs at least one value")?;
+    // `--policy` repeats to pick an explicit candidate set (`all` expands
+    // to every policy); when never given, the tuner sweeps its default
+    // trio (fifo / reconfig-aware / deadline-edf).
+    let mut policies: Vec<SchedulePolicy> = Vec::new();
+    if p.is_given("policy") {
+        for flag in p.all("policy") {
+            if flag == "all" {
+                for pol in SchedulePolicy::ALL {
+                    if !policies.contains(&pol) {
+                        policies.push(pol);
+                    }
+                }
+                continue;
+            }
+            let pol = SchedulePolicy::parse(&flag)
+                .ok_or("bad --policy (fifo/reconfig-aware/deadline-edf/placement/all)")?;
+            if policies.contains(&pol) {
+                return Err(format!("--policy {flag} given more than once").into());
+            }
+            policies.push(pol);
+        }
+    }
+    let mut spec = bench::TuneSpec::new(names);
+    spec.scenario = scenario;
+    spec.seed = p.u64("seed")?;
+    spec.requests = p.u64("requests")?;
+    spec.mean_interarrival_us = p.u64("mean-us")?;
+    spec.mode = mode;
+    spec.concurrency = p.u64("concurrency")?;
+    spec.deadline_us = if deadline > 0 { Some(deadline) } else { None };
+    spec.batch_candidates = batches;
+    if !policies.is_empty() {
+        spec.policy_candidates = policies;
+    }
+    let store = open_store(p)?;
+    let fleet_arch = arch.with_chips(chips);
+    let factory_store = store.clone();
+    let factory_topos = topos;
+    let factory = move |batch: u32| -> flex_tpu::error::Result<Arc<ModelRegistry>> {
+        let registry = Arc::new(ModelRegistry::with_placement(
+            fleet_arch,
+            factory_store.clone(),
+            placement,
+        )?);
+        for topo in &factory_topos {
+            registry.register(Arc::new(SimBackend::new(topo.clone(), batch)))?;
+        }
+        Ok(registry)
+    };
+    let reference = factory(first_batch)?;
+    let outcome = bench::tune_or_load(store.as_ref(), &reference, &factory, &spec)?;
+    match outcome.source {
+        flex_tpu::sim::store::DocSource::Loaded => println!(
+            "tune: warm start — tuned config loaded from the plan cache \
+             (zero sweep re-simulation)"
+        ),
+        flex_tpu::sim::store::DocSource::Computed => {
+            println!("tune: swept {} batch x policy candidates", outcome.sweeps)
+        }
+    }
+    let tuned = outcome.tuned.clone();
+    println!(
+        "tune: selected batch {} under {} — {} ({:.1} req/s, {:.1} goodput req/s)",
+        tuned.batch,
+        tuned.policy,
+        if tuned.feasible {
+            "SLO-feasible"
+        } else {
+            "no SLO-feasible candidate; throughput argmax"
+        },
+        tuned.throughput_rps,
+        tuned.goodput_rps,
+    );
+    let budgets: Vec<String> = tuned
+        .admission
+        .iter()
+        .map(|(m, cap)| format!("{m}={cap}"))
+        .collect();
+    let tiers: Vec<String> = tuned
+        .priorities
+        .iter()
+        .map(|(m, t)| format!("{m}={t}"))
+        .collect();
+    println!(
+        "tune: admission budgets [{}], priority tiers [{}]",
+        budgets.join(" "),
+        tiers.join(" ")
+    );
+    let serving = if tuned.batch == first_batch {
+        reference
+    } else {
+        factory(tuned.batch)?
+    };
+    let (controlled, plain) = bench::overload_comparison(&serving, &spec, &tuned)?;
+    let mut t = Table::new(&[
+        "Run",
+        "Served",
+        "Dropped",
+        "Rejected",
+        "Shed",
+        "Degraded",
+        "SLO Met",
+        "Goodput r/s",
+        "Sim req/s",
+    ]);
+    for (label, r) in [("controlled", &controlled), ("plain edf", &plain)] {
+        t.row(vec![
+            label.to_string(),
+            r.served.to_string(),
+            r.dropped_deadline.to_string(),
+            r.rejected.to_string(),
+            r.shed.to_string(),
+            r.degraded_batches.to_string(),
+            r.slo_met.to_string(),
+            format!("{:.1}", r.goodput_rps),
+            format!("{:.1}", r.throughput_rps),
+        ]);
+    }
+    println!("{}", t.render());
+    if plain.goodput_rps > 0.0 {
+        println!(
+            "overload control vs plain deadline-edf: {:.2}x goodput ({:.1} vs {:.1} SLO-met \
+             req/s)",
+            controlled.goodput_rps / plain.goodput_rps,
+            controlled.goodput_rps,
+            plain.goodput_rps,
+        );
+    }
+    if let Some(store) = &store {
+        println!(
+            "tuned-config cache: {} under key {} ({})",
+            outcome.source,
+            serving.tuned_provenance(),
+            store.dir().display()
+        );
+    }
+    let doc = bench::TuneDoc { tuned, controlled, plain };
+    let out = p.req("out")?;
+    std::fs::write(out, format!("{}\n", doc.to_json()))?;
+    println!("wrote {out}");
+    Ok(())
 }
 
 /// `flex-tpu fleet status`: inspect a shared store directory — every
@@ -1264,16 +1580,32 @@ fn main() -> CliResult<()> {
         Some("0"),
         "per-request latency budget in microseconds for the bench trace (0 = none)",
     )
-    .flag("out", Some("BENCH_PR5.json"), "where bench serve writes the suite JSON")
-    .flag("report", Some("BENCH_PR5.json"), "fresh suite JSON for bench compare")
+    .flag("out", Some("BENCH_PR5.json"), "where bench serve / tune write their JSON")
+    .flag("report", Some("BENCH_PR5.json"), "fresh suite or tune JSON for bench compare")
     .flag(
         "baseline",
         Some("rust/tests/golden/bench_baseline.json"),
         "committed baseline JSON for bench compare",
     )
+    .flag(
+        "batches",
+        Some("1,2,4,8"),
+        "comma-separated serving batch-size candidates for tune",
+    )
+    .flag(
+        "priority",
+        None,
+        "serve: per-model priority tier, model=tier (0 = highest, larger tiers shed \
+         first; repeatable)",
+    )
     .switch("memory", "enable the SRAM/DRAM stall model")
     .switch("per-layer", "print per-layer detail")
-    .switch("heuristic", "use the shape-heuristic selector (future-work mode)");
+    .switch("heuristic", "use the shape-heuristic selector (future-work mode)")
+    .switch(
+        "tuned",
+        "serve: load the persisted tuned config (admission budgets, priority tiers, \
+         overload control) from --plan-cache",
+    );
 
     let parsed = match spec.parse(&argv) {
         Ok(p) => p,
@@ -1292,6 +1624,7 @@ fn main() -> CliResult<()> {
         Some("infer") => cmd_infer(&parsed),
         Some("serve") => cmd_serve(&parsed),
         Some("bench") => cmd_bench(&parsed),
+        Some("tune") => cmd_tune(&parsed),
         Some("fleet") => cmd_fleet(&parsed),
         Some("validate") => cmd_validate(&parsed),
         Some("dse") => cmd_dse(&parsed),

@@ -77,8 +77,8 @@ pub struct CompactStats {
     pub kept: usize,
     /// Corrupt / schema-stale / mislabelled documents removed.
     pub dropped_invalid: usize,
-    /// `plan`/`shapes` documents removed because their provenance matched
-    /// no live configuration.
+    /// `plan`/`shapes`/`tuned-config` documents removed because their
+    /// provenance matched no live configuration.
     pub dropped_unknown: usize,
     /// Crashed writers' staged temp files removed.
     pub tmp_removed: usize,
@@ -215,11 +215,11 @@ impl PlanStore {
     /// * removes documents that no longer load — corrupt, truncated,
     ///   schema-stale, or stamped with a kind/provenance that disagrees
     ///   with their file name (the same conditions reads treat as cold);
-    /// * removes `plan` and `shapes` documents whose provenance is not in
-    ///   `live` — the caller computes the live set from the
-    ///   configurations it still cares about (an empty set drops them
-    ///   all).  Other record kinds (reports, bench results) are archival
-    ///   and only dropped when invalid;
+    /// * removes `plan`, `shapes` and `tuned-config` documents whose
+    ///   provenance is not in `live` — the caller computes the live set
+    ///   from the configurations it still cares about (an empty set drops
+    ///   them all).  Other record kinds (reports, bench results) are
+    ///   archival and only dropped when invalid;
     /// * deduplicates entries inside each surviving `shapes` document
     ///   (byte-identical entries collapse to one; the file is rewritten
     ///   atomically only when something was removed).
@@ -285,7 +285,9 @@ impl PlanStore {
                 stats.dropped_invalid += 1;
                 continue;
             };
-            if matches!(kind.as_str(), "plan" | "shapes") && !live.contains(prov.as_str()) {
+            if matches!(kind.as_str(), "plan" | "shapes" | "tuned-config")
+                && !live.contains(prov.as_str())
+            {
                 std::fs::remove_file(&path)?;
                 stats.dropped_unknown += 1;
                 continue;

@@ -51,6 +51,9 @@ fn gated_config() -> BenchConfig {
         mode: LoopMode::Open,
         concurrency: 32,
         deadline_us: Some(2_000_000),
+        admission: std::collections::BTreeMap::new(),
+        priorities: std::collections::BTreeMap::new(),
+        overload_control: false,
     }
 }
 
@@ -371,6 +374,7 @@ fn co_located_compatible_pair_never_pays_more_reconfigs_than_isolated() {
                 model: name.to_string(),
                 batch: 2,
                 forecast: forecast(Dataflow::Ws, Dataflow::Ws),
+                priority: 0,
             });
             s.assign_group(name, if colocated { 0 } else { i });
         }
@@ -406,6 +410,7 @@ fn co_located_compatible_pair_never_pays_more_reconfigs_than_isolated() {
                     last: Some(*df),
                     internal_switches: 0,
                 },
+                priority: 0,
             });
             s.assign_group(name, if colocated { 0 } else { i });
         }

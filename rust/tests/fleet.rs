@@ -50,6 +50,7 @@ fn request(id: u64, model: &str) -> InferenceRequest {
         model: model.to_string(),
         pixels,
         deadline_us: None,
+        priority: 0,
     }
 }
 
@@ -463,6 +464,7 @@ fn malformed_requests_are_rejected_not_fatal() {
             model: "alexnet".to_string(),
             pixels: vec![0.0; 3],
             deadline_us: None,
+            priority: 0,
         };
         tx.send((bad, otx)).unwrap();
         // A well-formed request behind it still serves.

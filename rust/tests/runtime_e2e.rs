@@ -121,6 +121,7 @@ fn batched_server_serves_all_requests() {
                 model: "flexnet_tiny".to_string(),
                 pixels,
                 deadline_us: None,
+                priority: 0,
             };
             tx.send((req, otx)).unwrap();
             rxs.push((id, orx));

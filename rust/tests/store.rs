@@ -13,12 +13,16 @@
 //!    never error and never leave a torn document behind.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
+use flex_tpu::bench::{self, TuneSpec, TunedConfig, TUNED_CONFIG_KIND};
 use flex_tpu::config::ArchConfig;
 use flex_tpu::coordinator::plan::{compile_plan, provenance_key, ExecutionPlan};
 use flex_tpu::coordinator::sweep::{sweep_models, sweep_zoo_stored};
+use flex_tpu::inference::{ModelRegistry, SchedulePolicy, SimBackend};
 use flex_tpu::sim::engine::SimOptions;
 use flex_tpu::sim::parallel::ShapeCache;
+use flex_tpu::sim::store::DocSource;
 use flex_tpu::sim::PlanStore;
 use flex_tpu::topology::zoo;
 
@@ -162,6 +166,87 @@ fn interleaved_writers_never_corrupt_the_store() {
         .filter(|n| n.contains(".tmp."))
         .collect();
     assert!(tmp_litter.is_empty(), "temp files left behind: {tmp_litter:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compact_keeps_live_tuned_configs_and_drops_unknown_ones() {
+    // The PR-7 extension of the gc contract: `tuned-config` records are
+    // pruned exactly like plans and shapes — live provenances survive,
+    // unknown ones are dropped.
+    let dir = tmpdir("tuned-gc");
+    let store = PlanStore::open(&dir).unwrap();
+    let live = TunedConfig {
+        config: "tune;live".to_string(),
+        batch: 2,
+        policy: "deadline-edf".to_string(),
+        feasible: true,
+        throughput_rps: 100.0,
+        goodput_rps: 90.0,
+        admission: [("alexnet".to_string(), 4usize)].into_iter().collect(),
+        priorities: [("alexnet".to_string(), 0u8)].into_iter().collect(),
+        expected_mix: [("alexnet".to_string(), 60u64)].into_iter().collect(),
+    };
+    let mut stale = live.clone();
+    stale.config = "tune;stale".to_string();
+    stale.batch = 8;
+    live.save(&store, "feedfacefeedface").unwrap();
+    stale.save(&store, "deadbeefdeadbeef").unwrap();
+    assert_eq!(store.list_kind(TUNED_CONFIG_KIND).len(), 2);
+
+    let stats = store.compact(&["feedfacefeedface".to_string()]).unwrap();
+    assert_eq!(stats.kept, 1);
+    assert_eq!(stats.dropped_unknown, 1);
+
+    let left = store.list_kind(TUNED_CONFIG_KIND);
+    assert_eq!(left.len(), 1);
+    assert_eq!(left[0].0, "feedfacefeedface");
+    assert_eq!(TunedConfig::load(&store, "feedfacefeedface").unwrap(), live);
+    assert!(TunedConfig::load(&store, "deadbeefdeadbeef").is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_restart_after_gc_loads_tuned_config_with_zero_sweeps() {
+    // gc down to the live tuned record, then restart: the tuner must
+    // warm-load it with zero sweep re-simulation (the PR-7 warm-restart
+    // acceptance criterion, post-compaction).
+    let dir = tmpdir("tuned-warm-gc");
+    let store = PlanStore::open(&dir).unwrap();
+    let models = ["alexnet", "mobilenet"];
+    let make = |batch: u32| -> flex_tpu::error::Result<Arc<ModelRegistry>> {
+        let registry = ModelRegistry::new(ArchConfig::square(16), Some(store.clone()))?;
+        for name in models {
+            registry.register(Arc::new(SimBackend::from_zoo(name, batch)?))?;
+        }
+        Ok(Arc::new(registry))
+    };
+    let mut spec = TuneSpec::new(models.iter().map(|s| s.to_string()).collect());
+    spec.requests = 120;
+    spec.deadline_us = None;
+    spec.batch_candidates = vec![1, 2];
+    spec.policy_candidates = vec![SchedulePolicy::Fifo];
+
+    let reference = make(1).unwrap();
+    let cold = bench::tune_or_load(Some(&store), &reference, &make, &spec).unwrap();
+    assert_eq!(cold.source, DocSource::Computed);
+    assert_eq!(cold.sweeps, 2, "2 batches x 1 policy");
+
+    // Compact down to the tuned record alone (plans and shapes of the
+    // sweep registries are deliberately left for dead here).
+    let stats = store.compact(&[reference.tuned_provenance()]).unwrap();
+    assert_eq!(stats.kept, 1, "the live tuned config survives");
+    assert!(stats.dropped_unknown > 0, "sweep plans/shapes were pruned");
+    let left = store.list_kind(TUNED_CONFIG_KIND);
+    assert_eq!(left.len(), 1);
+    assert_eq!(left[0].0, reference.tuned_provenance());
+
+    // A fresh restart over the compacted store warm-loads the config.
+    let restarted = make(1).unwrap();
+    let warm = bench::tune_or_load(Some(&store), &restarted, &make, &spec).unwrap();
+    assert_eq!(warm.source, DocSource::Loaded);
+    assert_eq!(warm.sweeps, 0, "warm restart must not re-sweep");
+    assert_eq!(warm.tuned, cold.tuned);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
