@@ -1,0 +1,89 @@
+//! Micro-bench for `util::json` on a committed representative store
+//! document (a 120-entry shapes memo table, `benches/data/`), so parser
+//! regressions on either read path are visible in CI bench output.
+//!
+//! Cases:
+//! - `parse/tree`    — full `Value` tree build (the legacy read path);
+//! - `parse/events`  — one `EventParser` walk, no tree (the store's
+//!   streaming read path);
+//! - `scan/envelope` — the stamp-check-then-locate-payload scan that
+//!   `PlanStore::load_document` performs before touching the payload;
+//! - `serialize/tree` — `Value::to_string` on the parsed document.
+
+mod harness;
+
+use std::borrow::Cow;
+
+use flex_tpu::util::json::{parse, EventParser, JsonEvent};
+
+const DOC: &str = include_str!("data/shapes-store.json");
+
+/// Walk the full event stream, counting events and zero-copy strings.
+fn event_walk(text: &str) -> (u64, u64) {
+    let mut p = EventParser::new(text);
+    let (mut events, mut borrowed) = (0u64, 0u64);
+    while let Some(ev) = p.next_event().expect("committed doc is valid") {
+        events += 1;
+        if let JsonEvent::Str(Cow::Borrowed(_)) | JsonEvent::Key(Cow::Borrowed(_)) = ev {
+            borrowed += 1;
+        }
+    }
+    p.finish().expect("committed doc is valid");
+    (events, borrowed)
+}
+
+/// The envelope scan `load_document` does: validate the outer object,
+/// read the stamps as scalars, and locate the payload byte span without
+/// parsing it.
+fn envelope_scan(text: &str) -> (f64, usize) {
+    let mut p = EventParser::new(text);
+    assert!(matches!(p.next_event(), Ok(Some(JsonEvent::ObjStart))));
+    let mut schema = None;
+    let mut payload = None;
+    loop {
+        match p.next_event().expect("committed doc is valid") {
+            Some(JsonEvent::ObjEnd) => break,
+            Some(JsonEvent::Key(k)) => {
+                if k == "schema" {
+                    match p.next_event() {
+                        Ok(Some(JsonEvent::Num(n))) => schema = Some(n),
+                        other => panic!("schema stamp: {other:?}"),
+                    }
+                } else if k == "payload" {
+                    payload = Some(p.skip_value().expect("committed doc is valid"));
+                } else {
+                    p.skip_value().expect("committed doc is valid");
+                }
+            }
+            other => panic!("envelope scan: {other:?}"),
+        }
+    }
+    p.finish().expect("committed doc is valid");
+    let span = payload.expect("committed doc has a payload");
+    (schema.expect("committed doc has a schema"), span.len())
+}
+
+fn main() {
+    // Sanity: the committed document is a valid schema-1 shapes store and
+    // both read paths see the same shape of it.
+    let doc = parse(DOC).expect("committed doc must parse");
+    assert_eq!(doc.get("kind").and_then(|v| v.as_str()), Some("shapes"));
+    assert_eq!(doc.get("schema").and_then(|v| v.as_u64()), Some(1));
+    let (events, borrowed) = event_walk(DOC);
+    let (schema, payload_bytes) = envelope_scan(DOC);
+    assert_eq!(schema, 1.0);
+    // The payload is the last envelope field; its span must end 2 bytes
+    // ("\n}") before EOF and open with the array bracket.
+    assert!(DOC[DOC.len() - 2 - payload_bytes..].starts_with('['));
+
+    let mut b = harness::Bench::new("json");
+    b.metric("doc", "bytes", DOC.len());
+    b.metric("doc", "events", events);
+    b.metric("doc", "borrowed_strings", borrowed);
+
+    b.bench("parse/tree", || parse(DOC).unwrap());
+    b.bench("parse/events", || event_walk(DOC));
+    b.bench("scan/envelope", || envelope_scan(DOC));
+    b.bench("serialize/tree", || doc.to_string());
+    b.finish();
+}

@@ -48,6 +48,7 @@
 //!   models alternate without entry switches.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::iter::Peekable;
 
 use crate::config::ArchConfig;
 use crate::error::{Error, Result};
@@ -56,9 +57,10 @@ use crate::inference::{ModelDeployment, ModelPlacement, ModelRegistry};
 use crate::sim::engine::{reconfig_charges, SimOptions};
 use crate::sim::shard::simulate_layer_sharded_cached;
 use crate::sim::Dataflow;
+use crate::util::hist::LatencyHistogram;
 
 use super::report::{BenchReport, ModelBenchStats};
-use super::trace::{generate, Scenario, TraceSpec};
+use super::trace::{Scenario, TraceEvent, TraceSpec};
 
 /// How the driver paces the trace.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -286,7 +288,42 @@ fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
 
 /// Simulate `cfg` against the deployments in `registry` and return the
 /// report.  Errors when a configured model is not registered.
+///
+/// The trace is streamed straight off the seeded LCG
+/// ([`TraceSpec::events`]): the driver holds at most one future arrival
+/// (a peek window), so memory is O(1) in `cfg.requests` and a 10⁷-request
+/// run costs no more resident memory than a 600-request one.
 pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
+    if cfg.models.is_empty() {
+        return Err(Error::InvalidConfig("bench needs at least one model".into()));
+    }
+    let spec = TraceSpec {
+        scenario: cfg.scenario,
+        seed: cfg.seed,
+        requests: cfg.requests,
+        models: cfg.models.len(),
+        mean_interarrival_us: cfg.mean_interarrival_us,
+    };
+    run_with_trace(registry, cfg, spec.events())
+}
+
+/// [`run`] with an explicit event stream instead of the spec-derived one.
+///
+/// This is the seam the streaming contract is tested through: feeding the
+/// same events as a pre-collected `Vec` (via [`super::trace::generate`])
+/// or as the lazy [`super::trace::TraceIter`] must produce byte-identical
+/// reports.  Events must be in arrival order (non-decreasing `at_us`,
+/// sequential ids), as both producers guarantee; `cfg`'s trace fields
+/// (`scenario`/`seed`/`requests`/`mean_interarrival_us`) are echoed into
+/// the report but the stream is what actually runs.
+pub fn run_with_trace<I>(
+    registry: &ModelRegistry,
+    cfg: &BenchConfig,
+    trace: I,
+) -> Result<BenchReport>
+where
+    I: IntoIterator<Item = TraceEvent>,
+{
     if cfg.models.is_empty() {
         return Err(Error::InvalidConfig("bench needs at least one model".into()));
     }
@@ -378,17 +415,10 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     }
     group_ids.sort_unstable();
 
-    let trace = generate(&TraceSpec {
-        scenario: cfg.scenario,
-        seed: cfg.seed,
-        requests: cfg.requests,
-        models: cfg.models.len(),
-        mean_interarrival_us: cfg.mean_interarrival_us,
-    });
-    let arrivals: Vec<(u64, u64, usize)> = trace
-        .iter()
-        .map(|e| (us_to_cycles(e.at_us, clock_ns), e.id, e.model))
-        .collect();
+    // The bounded lookahead window over the event stream: the driver only
+    // ever peeks one arrival ahead (for the next-event time and exact-time
+    // admission), so the whole trace never materializes.
+    let mut arrivals: Peekable<I::IntoIter> = trace.into_iter().peekable();
     let deadline_cycles = cfg.deadline_us.map(|us| us_to_cycles(us, clock_ns));
 
     // One virtual device per chip group (classic policies: exactly one),
@@ -417,8 +447,6 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
         })
         .collect();
     let multi = devices.len() > 1;
-    let mut next_arrival = 0usize; // open-loop cursor
-    let mut next_closed = 0usize; // closed-loop cursor
     let mut t = 0u64;
 
     let mut served = 0u64;
@@ -433,7 +461,9 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     let mut degraded_batches = 0u64;
     let mut miss_by_tier: BTreeMap<u8, u64> = BTreeMap::new();
     let mut sim_cycles_total = 0u64;
-    let mut waits: Vec<u64> = Vec::with_capacity(arrivals.len());
+    // Queue-wait percentiles stream through a fixed-size log-scale
+    // histogram (O(buckets), ~15 KiB) instead of a per-request Vec.
+    let mut wait_hist = LatencyHistogram::new();
     let mut per: BTreeMap<String, ModelBenchStats> = cfg
         .models
         .iter()
@@ -475,20 +505,22 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     let issue_next = |sched: &mut Scheduler<u64>,
                       per: &mut BTreeMap<String, ModelBenchStats>,
                       rejected: &mut u64,
-                      cursor: &mut usize,
+                      arrivals: &mut Peekable<I::IntoIter>,
                       at: u64| {
-        while let Some(&(_, id, model)) = arrivals.get(*cursor) {
-            *cursor += 1;
-            if admit(sched, per, rejected, at, id, model) {
+        while let Some(e) = arrivals.next() {
+            if admit(sched, per, rejected, at, e.id, e.model) {
                 break;
             }
         }
     };
 
     if cfg.mode == LoopMode::Closed {
-        let n0 = (cfg.concurrency.max(1) as usize).min(arrivals.len());
+        // Cap the initial fill at the trace length: the stream has no
+        // `len()`, but it never yields more than `cfg.requests` events,
+        // and a huge `--concurrency` must not spin a near-2⁶⁴ no-op loop.
+        let n0 = cfg.concurrency.max(1).min(cfg.requests);
         for _ in 0..n0 {
-            issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, 0);
+            issue_next(&mut sched, &mut per, &mut rejected, &mut arrivals, 0);
         }
     }
 
@@ -502,7 +534,8 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
             }
         }
         if cfg.mode == LoopMode::Open {
-            if let Some(&(at, _, _)) = arrivals.get(next_arrival) {
+            if let Some(e) = arrivals.peek() {
+                let at = us_to_cycles(e.at_us, clock_ns);
                 next_t = Some(next_t.map_or(at, |v| v.min(at)));
             }
         }
@@ -527,12 +560,13 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
             }
         }
         if cfg.mode == LoopMode::Open {
-            while let Some(&(at, id, model)) = arrivals.get(next_arrival) {
-                if at != t {
+            while let Some(e) = arrivals.peek() {
+                if us_to_cycles(e.at_us, clock_ns) != t {
                     break;
                 }
+                let (id, model) = (e.id, e.model);
+                arrivals.next();
                 admit(&mut sched, &mut per, &mut rejected, t, id, model);
-                next_arrival += 1;
             }
         }
         if cfg.mode == LoopMode::Closed {
@@ -541,7 +575,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                     continue;
                 }
                 for _ in 0..devices[di].completed_live {
-                    issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, t);
+                    issue_next(&mut sched, &mut per, &mut rejected, &mut arrivals, t);
                 }
             }
         }
@@ -569,7 +603,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                         cfg.policy,
                         SchedulePolicy::ReconfigAware | SchedulePolicy::Placement
                     ) && match cfg.mode {
-                        LoopMode::Open => next_arrival < arrivals.len(),
+                        LoopMode::Open => arrivals.peek().is_some(),
                         LoopMode::Closed => devices[di].busy,
                     };
                     if !hold {
@@ -591,7 +625,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 // trace remains.
                 if cfg.mode == LoopMode::Closed {
                     for _ in 0..expired.len() {
-                        issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, t);
+                        issue_next(&mut sched, &mut per, &mut rejected, &mut arrivals, t);
                     }
                 }
                 // Degraded mode may have shed queued requests during the
@@ -607,7 +641,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                     }
                     if cfg.mode == LoopMode::Closed {
                         for _ in 0..shed_now.len() {
-                            issue_next(&mut sched, &mut per, &mut rejected, &mut next_closed, t);
+                            issue_next(&mut sched, &mut per, &mut rejected, &mut arrivals, t);
                         }
                     }
                 }
@@ -640,7 +674,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
                 let done = t + cost;
                 let mut live_met = 0u64;
                 for item in &plan.items {
-                    waits.push(t - item.arrival);
+                    wait_hist.record(t - item.arrival);
                     let met = match deadline_cycles {
                         Some(d) => done <= item.arrival + d,
                         None => true,
@@ -680,10 +714,7 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
             }
         }
 
-        let drained = match cfg.mode {
-            LoopMode::Open => next_arrival >= arrivals.len(),
-            LoopMode::Closed => next_closed >= arrivals.len(),
-        };
+        let drained = arrivals.peek().is_none();
         if devices.iter().all(|d| !d.busy && d.batchq.is_empty())
             && sched.pending() == 0
             && drained
@@ -693,8 +724,6 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     }
 
     let wall_cycles = devices.iter().map(|d| d.busy_until).max().unwrap_or(0);
-    waits.sort_unstable();
-    let wait_us: Vec<f64> = waits.iter().map(|&w| cycles_to_us(w, clock_ns)).collect();
     let wall_ns = wall_cycles as f64 * clock_ns;
     let offered: u64 = per.values().map(|m| m.offered).sum();
     Ok(BenchReport {
@@ -729,8 +758,8 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
         } else {
             0.0
         },
-        queue_p50_us: crate::inference::percentile(&wait_us, 0.50),
-        queue_p99_us: crate::inference::percentile(&wait_us, 0.99),
+        queue_p50_us: cycles_to_us(wait_hist.percentile(0.50), clock_ns),
+        queue_p99_us: cycles_to_us(wait_hist.percentile(0.99), clock_ns),
         schedule_digest: format!("{digest:016x}"),
         per_model: per,
     })

@@ -35,9 +35,9 @@ pub mod report;
 pub mod trace;
 pub mod tune;
 
-pub use driver::{run, BenchConfig, BenchConfigBuilder, LoopMode};
+pub use driver::{run, run_with_trace, BenchConfig, BenchConfigBuilder, LoopMode};
 pub use report::{BenchReport, ModelBenchStats};
-pub use trace::{Lcg, Scenario, TraceEvent, TraceSpec};
+pub use trace::{Lcg, Scenario, TraceEvent, TraceIter, TraceSpec};
 pub use tune::{
     gate_tune, mix_drift_millis, overload_comparison, tune_or_load, TuneDoc, TuneOutcome,
     TuneSpec, TunedConfig, DRIFT_RETUNE_MILLIS, TUNED_CONFIG_KIND, TUNE_SCHEMA_VERSION,

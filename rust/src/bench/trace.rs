@@ -130,54 +130,105 @@ pub struct TraceEvent {
     pub model: usize,
 }
 
-/// Generate the trace named by `spec` (deterministic; see module docs).
-pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
-    assert!(spec.models > 0, "trace needs at least one model");
-    let n = spec.models as u64;
-    let mut lcg = Lcg::new(spec.seed);
-    let mut out = Vec::with_capacity(spec.requests as usize);
-    let mut at = 0u64;
-    match spec.scenario {
-        Scenario::MixedModel => {
-            for id in 0..spec.requests {
-                at += exp_gap_us(&mut lcg, spec.mean_interarrival_us);
-                let model = lcg.pick(n) as usize;
-                out.push(TraceEvent { at_us: at, id, model });
-            }
+impl TraceSpec {
+    /// Lazily stream this trace's events in O(1) memory (see
+    /// [`TraceIter`]).  `spec.events().collect::<Vec<_>>()` is
+    /// element-identical to [`generate`] — the iterator replays the exact
+    /// LCG draw sequence the collecting generator made, so switching a
+    /// consumer to streaming can never change a trace.
+    pub fn events(&self) -> TraceIter {
+        assert!(self.models > 0, "trace needs at least one model");
+        TraceIter {
+            lcg: Lcg::new(self.seed),
+            scenario: self.scenario,
+            requests: self.requests,
+            models: self.models as u64,
+            mean_us: self.mean_interarrival_us,
+            at: 0,
+            next_id: 0,
+            burst_left: 0,
+            burst_model: 0,
         }
-        Scenario::Skewed => {
-            // Model i draws weight 2^(n-1-i): a halving popularity curve.
-            let total = (1u64 << n) - 1;
-            for id in 0..spec.requests {
-                at += exp_gap_us(&mut lcg, spec.mean_interarrival_us);
-                let r = lcg.pick(total);
+    }
+}
+
+/// Lazy trace generator: yields [`TraceEvent`]s one at a time straight
+/// off the LCG, so a 10⁷-request trace costs the same memory as a
+/// 600-request one.  Produced by [`TraceSpec::events`]; the driver
+/// consumes it through a one-event peek window instead of an owned `Vec`.
+#[derive(Debug, Clone)]
+pub struct TraceIter {
+    lcg: Lcg,
+    scenario: Scenario,
+    requests: u64,
+    models: u64,
+    mean_us: u64,
+    /// Virtual clock, µs (non-decreasing across events).
+    at: u64,
+    /// Next request id to emit (also the count already emitted).
+    next_id: u64,
+    /// Bursty carry-state: events left in the current burst…
+    burst_left: u64,
+    /// …and the single model the burst addresses.
+    burst_model: usize,
+}
+
+impl Iterator for TraceIter {
+    type Item = TraceEvent;
+
+    fn next(&mut self) -> Option<TraceEvent> {
+        if self.next_id >= self.requests {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let model = match self.scenario {
+            Scenario::MixedModel => {
+                self.at += exp_gap_us(&mut self.lcg, self.mean_us);
+                self.lcg.pick(self.models) as usize
+            }
+            Scenario::Skewed => {
+                // Model i draws weight 2^(n-1-i): a halving popularity curve.
+                let total = (1u64 << self.models) - 1;
+                self.at += exp_gap_us(&mut self.lcg, self.mean_us);
+                let r = self.lcg.pick(total);
                 let mut model = 0usize;
-                let mut weight = 1u64 << (n - 1);
+                let mut weight = 1u64 << (self.models - 1);
                 let mut acc = weight;
                 while r >= acc {
                     model += 1;
                     weight >>= 1;
                     acc += weight;
                 }
-                out.push(TraceEvent { at_us: at, id, model });
+                model
             }
-        }
-        Scenario::Bursty => {
-            let mut id = 0u64;
-            while id < spec.requests {
-                let burst = 4 + lcg.pick(13);
-                let model = lcg.pick(n) as usize;
-                at += exp_gap_us(&mut lcg, spec.mean_interarrival_us * 3);
-                let take = burst.min(spec.requests - id);
-                for _ in 0..take {
-                    at += exp_gap_us(&mut lcg, spec.mean_interarrival_us / 4 + 1);
-                    out.push(TraceEvent { at_us: at, id, model });
-                    id += 1;
+            Scenario::Bursty => {
+                if self.burst_left == 0 {
+                    self.burst_left = 4 + self.lcg.pick(13);
+                    self.burst_model = self.lcg.pick(self.models) as usize;
+                    self.at += exp_gap_us(&mut self.lcg, self.mean_us * 3);
                 }
+                self.burst_left -= 1;
+                self.at += exp_gap_us(&mut self.lcg, self.mean_us / 4 + 1);
+                self.burst_model
             }
-        }
+        };
+        Some(TraceEvent { at_us: self.at, id, model })
     }
-    out
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.requests - self.next_id) as usize;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for TraceIter {}
+
+/// Generate the trace named by `spec` (deterministic; see module docs).
+/// Collecting wrapper over [`TraceSpec::events`] for callers that want
+/// the whole trace in memory; the streaming paths iterate directly.
+pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
+    spec.events().collect()
 }
 
 #[cfg(test)]

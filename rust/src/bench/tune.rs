@@ -39,7 +39,7 @@ use crate::util::json::{obj, Value};
 
 use super::driver::{run, BenchConfig, LoopMode};
 use super::report::BenchReport;
-use super::trace::{generate, Scenario, TraceSpec};
+use super::trace::{Scenario, TraceSpec};
 
 /// Version stamped into persisted tuned configs and tune documents; a
 /// mismatch reads as a cold start (re-tune), never a misparse.
@@ -133,16 +133,16 @@ impl TuneSpec {
     /// Offered requests per model in this spec's trace (the tuned-for
     /// mix; drift detection compares later traffic against it).
     pub fn trace_mix(&self) -> BTreeMap<String, u64> {
-        let trace = generate(&TraceSpec {
+        let spec = TraceSpec {
             scenario: self.scenario,
             seed: self.seed,
             requests: self.requests,
             models: self.models.len(),
             mean_interarrival_us: self.mean_interarrival_us,
-        });
+        };
         let mut mix: BTreeMap<String, u64> =
             self.models.iter().map(|m| (m.clone(), 0)).collect();
-        for e in &trace {
+        for e in spec.events() {
             *mix.get_mut(&self.models[e.model]).expect("trace model in spec") += 1;
         }
         mix

@@ -61,6 +61,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::util::hist::LatencyHistogram;
 
 use super::registry::{ModelDeployment, ModelRegistry};
 use super::scheduler::{SchedulePolicy, Scheduler};
@@ -170,17 +171,10 @@ struct ModelAccum {
     sim_cycles_total: u64,
     flex_cycles: u64,
     host_us_sum: f64,
-    queue_waits_us: Vec<f64>,
-}
-
-/// Nearest-rank percentile of an ascending-sorted sample.  Shared with
-/// the bench reporter, whose simulated queue waits use the same estimator.
-pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    /// Queue waits stream through a fixed-size log-scale histogram
+    /// (O(buckets) per model) instead of a per-request `Vec`, so a
+    /// long-running fleet's metrics memory does not grow with traffic.
+    queue_waits_us: LatencyHistogram,
 }
 
 /// The fleet server (see module docs).  Cheap to clone into a serving
@@ -346,10 +340,10 @@ impl FleetServer {
                     if first_err.lock().expect("error slot").is_some() {
                         continue; // drain-only: drop envelopes, keep the queue moving
                     }
-                    let waits: Vec<f64> = batch
+                    let waits: Vec<u64> = batch
                         .enqueued
                         .iter()
-                        .map(|t| t.elapsed().as_micros() as f64)
+                        .map(|t| t.elapsed().as_micros() as u64)
                         .collect();
                     let mut pending = batch.envelopes;
                     match batch.deployment.server.process_batch(&mut pending) {
@@ -363,7 +357,9 @@ impl FleetServer {
                             m.sim_cycles_total += live * timing.flex_cycles;
                             m.flex_cycles = timing.flex_cycles;
                             m.host_us_sum += batch_us * live as f64;
-                            m.queue_waits_us.extend(waits);
+                            for w in waits {
+                                m.queue_waits_us.record(w);
+                            }
                         }
                         Err(e) => {
                             let mut slot = first_err.lock().expect("error slot");
@@ -397,8 +393,7 @@ impl FleetServer {
             wall_us: wall.as_micros() as u64,
             ..Default::default()
         };
-        for (name, mut m) in accum.into_inner().expect("fleet stats lock") {
-            m.queue_waits_us.sort_by(f64::total_cmp);
+        for (name, m) in accum.into_inner().expect("fleet stats lock") {
             stats.requests += m.requests;
             stats.batches += m.batches;
             stats.per_model.insert(
@@ -416,8 +411,8 @@ impl FleetServer {
                     shed: counters.shed.get(&name).copied().unwrap_or(0),
                     sim_cycles_total: m.sim_cycles_total,
                     sim_flex_cycles_per_inference: m.flex_cycles,
-                    queue_p50_us: percentile(&m.queue_waits_us, 0.50),
-                    queue_p99_us: percentile(&m.queue_waits_us, 0.99),
+                    queue_p50_us: m.queue_waits_us.percentile(0.50) as f64,
+                    queue_p99_us: m.queue_waits_us.percentile(0.99) as f64,
                     mean_host_latency_us: if m.requests > 0 {
                         m.host_us_sum / m.requests as f64
                     } else {
@@ -622,13 +617,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentile_nearest_rank() {
-        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 0.5), 3.0);
-        assert_eq!(percentile(&xs, 1.0), 5.0);
-        let empty: [f64; 0] = [];
-        assert_eq!(percentile(&empty, 0.5), 0.0);
-        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+    fn queue_wait_histogram_streams_percentiles() {
+        // The live-fleet metric path: integral-µs waits recorded one at a
+        // time, percentiles read out without any per-request storage.
+        let mut m = ModelAccum::default();
+        for w in [1u64, 2, 3, 4, 5] {
+            m.queue_waits_us.record(w);
+        }
+        assert_eq!(m.queue_waits_us.percentile(0.0), 1);
+        assert_eq!(m.queue_waits_us.percentile(0.5), 3);
+        assert_eq!(m.queue_waits_us.percentile(1.0), 5);
+        assert_eq!(ModelAccum::default().queue_waits_us.percentile(0.5), 0);
     }
 }

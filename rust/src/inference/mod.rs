@@ -33,8 +33,6 @@ mod request;
 pub mod scheduler;
 mod server;
 
-pub(crate) use fleet::percentile;
-
 pub use backend::{ModelBackend, PjrtBackend, SimBackend};
 pub use fleet::{FleetServer, FleetServerBuilder, FleetStats, ModelServeStats};
 pub use placement::{ChipSchedule, ModelPlacement, PlacementPolicy};

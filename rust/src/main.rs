@@ -1545,7 +1545,12 @@ fn main() -> CliResult<()> {
     .flag("csv", None, "also write report CSVs into this directory")
     .flag("cmu-out", None, "write the programmed CMU image (JSON) here")
     .flag("artifacts", Some("artifacts"), "AOT artifact directory")
-    .flag("requests", Some("64"), "synthetic requests to serve")
+    .flag(
+        "requests",
+        Some("64"),
+        "synthetic requests to serve (bench serve streams the trace, so \
+         million-request runs stay O(1) in memory)",
+    )
     .flag("array", Some("4"), "functional-array size for validate")
     .flag("cases", Some("20"), "random GEMM cases for validate")
     .flag("batch", Some("1"), "inference batch size (simulate)")

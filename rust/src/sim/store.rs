@@ -25,8 +25,14 @@
 //!   (`None` / 0 entries), never a panic;
 //! * writes are **atomic** (temp file + rename), so a crashed or
 //!   concurrent run can leave a stale file but never a torn one, and the
-//!   next successful save repairs any damage.
+//!   next successful save repairs any damage;
+//! * reads are **streaming** — one [`crate::util::json::EventParser`]
+//!   pass validates the envelope stamps and locates the payload before
+//!   any `Value` tree is built, and the shape preload decodes entries
+//!   straight off the token stream (no per-field tree allocation at all).
 
+use std::borrow::Cow;
+use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -39,7 +45,7 @@ use crate::sim::memory::DramTraffic;
 use crate::sim::parallel::{ShapeCache, ShapeKey};
 use crate::sim::Dataflow;
 use crate::topology::{LayerKind, Topology};
-use crate::util::json::{obj, parse, Value};
+use crate::util::json::{obj, parse, EventParser, JsonEvent, Value};
 
 /// Distinguishes per-writer temp files within one process: two threads (or
 /// two sequential saves racing a slow filesystem) must never share a temp
@@ -134,19 +140,18 @@ impl PlanStore {
     /// Load a document's payload, or `None` when the file is missing,
     /// unparseable, schema-stale, or stamped with a different kind or
     /// provenance than requested — all of which read as a cold start.
+    ///
+    /// Reads run on the streaming parser: one event pass checks the
+    /// envelope stamps and locates the payload's byte span, and only that
+    /// span is tree-parsed.  A stamp mismatch therefore costs one scan
+    /// and zero `Value` allocations, however large the payload.
     pub fn load_document(&self, kind: &str, provenance: &str) -> Option<Value> {
         let text = std::fs::read_to_string(self.path_for(kind, provenance)).ok()?;
-        let doc = parse(&text).ok()?;
-        if doc.req_u64("schema").ok()? != STORE_SCHEMA_VERSION {
+        let env = scan_envelope(&text)?;
+        if !env.stamps_match(kind, provenance) {
             return None;
         }
-        if doc.req_str("kind").ok()? != kind {
-            return None;
-        }
-        if doc.req_str("provenance").ok()? != provenance {
-            return None;
-        }
-        doc.get("payload").cloned()
+        parse(&text[env.payload?]).ok()
     }
 
     /// Atomically write a document (payload wrapped in the versioned
@@ -317,20 +322,28 @@ impl PlanStore {
     /// including a single malformed entry — a partially trusted file is
     /// not trusted at all).  Preloading bypasses the hit/miss counters, so
     /// a fully warm run reports a hit rate of 1.0.
+    ///
+    /// This is the store's hottest read (a fleet warm start scans every
+    /// model's memo table), so it stays on the event parser end to end:
+    /// entries decode straight off the token stream — no `Value` tree for
+    /// the payload at all.  `rust/tests/store.rs` and the in-module
+    /// differential test pin this path to the tree decoder's semantics.
     pub fn load_shapes(&self, provenance: &str, cache: &ShapeCache) -> usize {
-        let Some(payload) = self.load_document("shapes", provenance) else {
+        let Ok(text) = std::fs::read_to_string(self.path_for("shapes", provenance)) else {
             return 0;
         };
-        let Some(items) = payload.as_array() else {
+        let Some(env) = scan_envelope(&text) else {
             return 0;
         };
-        let mut entries = Vec::with_capacity(items.len());
-        for item in items {
-            match shape_entry_from_json(item) {
-                Some(entry) => entries.push(entry),
-                None => return 0,
-            }
+        if !env.stamps_match("shapes", provenance) {
+            return 0;
         }
+        let Some(span) = env.payload else {
+            return 0;
+        };
+        let Some(entries) = shape_entries_from_events(&text[span]) else {
+            return 0;
+        };
         let n = entries.len();
         cache.preload(entries);
         n
@@ -386,6 +399,250 @@ impl PlanStore {
             .map(|(key, stats)| shape_entry_to_json(&key, &stats))
             .collect();
         self.save_document("shapes", provenance, Value::Arr(items))
+    }
+}
+
+/// Envelope stamps pulled off a store document in one streaming pass.
+/// The payload is located (byte span into the source text) but not
+/// parsed — callers tree-parse it, or decode it event-by-event.
+struct RawEnvelope {
+    schema: Option<u64>,
+    kind: Option<String>,
+    provenance: Option<String>,
+    payload: Option<Range<usize>>,
+}
+
+impl RawEnvelope {
+    /// Whether the three stamps are present and exactly as requested.
+    fn stamps_match(&self, kind: &str, provenance: &str) -> bool {
+        self.schema == Some(STORE_SCHEMA_VERSION)
+            && self.kind.as_deref() == Some(kind)
+            && self.provenance.as_deref() == Some(provenance)
+    }
+}
+
+/// Scan a `{schema, kind, provenance, payload}` document without building
+/// a `Value` tree: stamps decode as scalars, the payload subtree is
+/// skipped wholesale with only its byte span recorded, and unknown keys
+/// are skipped too.  First occurrence of a duplicate key wins (matching
+/// `Value::get` on the tree path).  `None` on anything the tree path
+/// would also refuse to load: malformed JSON anywhere in the document
+/// (the skip still validates grammar), a non-object top level, or a stamp
+/// of the wrong type.
+fn scan_envelope(text: &str) -> Option<RawEnvelope> {
+    let mut p = EventParser::new(text);
+    if p.next_event().ok()?? != JsonEvent::ObjStart {
+        return None;
+    }
+    let mut env = RawEnvelope {
+        schema: None,
+        kind: None,
+        provenance: None,
+        payload: None,
+    };
+    loop {
+        match p.next_event().ok()?? {
+            JsonEvent::ObjEnd => break,
+            JsonEvent::Key(k) => match k.as_ref() {
+                "schema" if env.schema.is_none() => match p.next_event().ok()?? {
+                    JsonEvent::Num(n) if n >= 0.0 && n.fract() == 0.0 => {
+                        env.schema = Some(n as u64);
+                    }
+                    _ => return None,
+                },
+                "kind" if env.kind.is_none() => match p.next_event().ok()?? {
+                    JsonEvent::Str(s) => env.kind = Some(s.into_owned()),
+                    _ => return None,
+                },
+                "provenance" if env.provenance.is_none() => match p.next_event().ok()?? {
+                    JsonEvent::Str(s) => env.provenance = Some(s.into_owned()),
+                    _ => return None,
+                },
+                "payload" if env.payload.is_none() => {
+                    env.payload = Some(p.skip_value().ok()?);
+                }
+                _ => {
+                    // Unknown key, or a duplicate of one already taken.
+                    p.skip_value().ok()?;
+                }
+            },
+            _ => unreachable!("an object scan sees keys and the closing brace"),
+        }
+    }
+    p.finish().ok()?;
+    Some(env)
+}
+
+/// Integer shape-entry fields, in no particular order.  Shared by the
+/// event decoder (lookup table) and its tests.
+const SHAPE_NUM_FIELDS: [&str; 25] = [
+    "rows",
+    "cols",
+    "ifmap_sram_kib",
+    "filter_sram_kib",
+    "ofmap_sram_kib",
+    "dram_bytes_per_cycle",
+    "bytes_per_element",
+    "ifmap_h",
+    "ifmap_w",
+    "filt_h",
+    "filt_w",
+    "channels",
+    "num_filters",
+    "stride",
+    "batch",
+    "launches",
+    "compute_cycles",
+    "stall_cycles",
+    "macs",
+    "ifmap_reads",
+    "filter_reads",
+    "ofmap_writes",
+    "ofmap_reads",
+    "dram_fetch_bytes",
+    "dram_writeback_bytes",
+];
+
+/// String shape-entry fields (enum names).
+const SHAPE_STR_FIELDS: [&str; 4] = ["kind", "dataflow", "fidelity", "dw_mapping"];
+
+/// Decode a whole shapes payload — `[{...}, ...]` — straight off the
+/// event stream.  `None` if the payload is not an array of valid entries
+/// (the all-or-nothing contract of [`PlanStore::load_shapes`]).
+fn shape_entries_from_events(payload: &str) -> Option<Vec<(ShapeKey, LayerStats)>> {
+    let mut p = EventParser::new(payload);
+    if p.next_event().ok()?? != JsonEvent::ArrStart {
+        return None;
+    }
+    let mut entries = Vec::new();
+    loop {
+        match p.next_event().ok()?? {
+            JsonEvent::ArrEnd => break,
+            JsonEvent::ObjStart => entries.push(shape_entry_from_events(&mut p)?),
+            _ => return None,
+        }
+    }
+    p.finish().ok()?;
+    Some(entries)
+}
+
+/// Decode one shape entry from inside its already-opened object (the
+/// caller consumed the `ObjStart`; this consumes through the matching
+/// `ObjEnd`).  Field semantics are pinned to the tree decoder
+/// (`shape_entry_from_json`): first occurrence of each field wins,
+/// unknown fields are skipped, and a missing or mistyped field rejects
+/// the entry.
+fn shape_entry_from_events<'a>(p: &mut EventParser<'a>) -> Option<(ShapeKey, LayerStats)> {
+    let mut nums: Vec<(&'static str, u64)> = Vec::with_capacity(SHAPE_NUM_FIELDS.len());
+    let mut strs: Vec<(&'static str, Cow<'a, str>)> = Vec::with_capacity(SHAPE_STR_FIELDS.len());
+    loop {
+        match p.next_event().ok()?? {
+            JsonEvent::ObjEnd => break,
+            JsonEvent::Key(k) => {
+                if let Some(name) = SHAPE_NUM_FIELDS.iter().find(|f| **f == k.as_ref()) {
+                    if nums.iter().any(|(n, _)| n == name) {
+                        p.skip_value().ok()?;
+                    } else {
+                        match p.next_event().ok()?? {
+                            // Same acceptance as `Value::as_u64`.
+                            JsonEvent::Num(n) if n >= 0.0 && n.fract() == 0.0 => {
+                                nums.push((name, n as u64));
+                            }
+                            _ => return None,
+                        }
+                    }
+                } else if let Some(name) = SHAPE_STR_FIELDS.iter().find(|f| **f == k.as_ref()) {
+                    if strs.iter().any(|(n, _)| n == name) {
+                        p.skip_value().ok()?;
+                    } else {
+                        match p.next_event().ok()?? {
+                            JsonEvent::Str(s) => strs.push((name, s)),
+                            _ => return None,
+                        }
+                    }
+                } else {
+                    p.skip_value().ok()?;
+                }
+            }
+            _ => unreachable!("an object scan sees keys and the closing brace"),
+        }
+    }
+    let num = |name: &str| nums.iter().find(|(n, _)| *n == name).map(|(_, v)| *v);
+    let txt = |name: &str| strs.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_ref());
+    let u32f = |name: &str| num(name).and_then(|n| u32::try_from(n).ok());
+    let key = ShapeKey {
+        rows: u32f("rows")?,
+        cols: u32f("cols")?,
+        ifmap_sram_kib: num("ifmap_sram_kib")?,
+        filter_sram_kib: num("filter_sram_kib")?,
+        ofmap_sram_kib: num("ofmap_sram_kib")?,
+        dram_bytes_per_cycle: num("dram_bytes_per_cycle")?,
+        bytes_per_element: num("bytes_per_element")?,
+        kind: layer_kind_parse(txt("kind")?)?,
+        ifmap_h: u32f("ifmap_h")?,
+        ifmap_w: u32f("ifmap_w")?,
+        filt_h: u32f("filt_h")?,
+        filt_w: u32f("filt_w")?,
+        channels: u32f("channels")?,
+        num_filters: u32f("num_filters")?,
+        stride: u32f("stride")?,
+        dataflow: Dataflow::parse(txt("dataflow")?)?,
+        fidelity: fidelity_parse(txt("fidelity")?)?,
+        dw_mapping: dw_mapping_parse(txt("dw_mapping")?)?,
+        batch: u32f("batch")?,
+    };
+    Some((
+        key,
+        assemble_layer_stats(
+            &key,
+            num("launches")?,
+            num("compute_cycles")?,
+            num("stall_cycles")?,
+            num("macs")?,
+            OperandTraffic {
+                ifmap_reads: num("ifmap_reads")?,
+                filter_reads: num("filter_reads")?,
+                ofmap_writes: num("ofmap_writes")?,
+                ofmap_reads: num("ofmap_reads")?,
+            },
+            DramTraffic {
+                fetch_bytes: num("dram_fetch_bytes")?,
+                writeback_bytes: num("dram_writeback_bytes")?,
+            },
+        ),
+    ))
+}
+
+/// Shared tail of both decoders: rebuild `LayerStats` from the persisted
+/// integers, recomputing utilization exactly as `simulate_layer` does so
+/// persisted entries stay bit-identical to freshly simulated ones without
+/// storing any float.
+fn assemble_layer_stats(
+    key: &ShapeKey,
+    launches: u64,
+    compute_cycles: u64,
+    stall_cycles: u64,
+    macs: u64,
+    traffic: OperandTraffic,
+    dram: DramTraffic,
+) -> LayerStats {
+    let total = compute_cycles + stall_cycles;
+    let pes = u64::from(key.rows) * u64::from(key.cols);
+    let utilization = if total == 0 {
+        0.0
+    } else {
+        macs as f64 / (total * pes) as f64
+    };
+    LayerStats {
+        name: String::new(),
+        dataflow: key.dataflow,
+        launches,
+        compute_cycles,
+        stall_cycles,
+        macs,
+        traffic,
+        dram,
+        utilization,
     }
 }
 
@@ -474,11 +731,17 @@ fn shape_entry_to_json(key: &ShapeKey, stats: &LayerStats) -> Value {
     ])
 }
 
+#[cfg(test)]
 fn u32_field(v: &Value, key: &str) -> Option<u32> {
     let n = v.req_u64(key).ok()?;
     u32::try_from(n).ok()
 }
 
+/// Tree-path shape-entry decoder, retained as the differential oracle for
+/// [`shape_entry_from_events`] (the production read path): the in-module
+/// tests decode the same documents both ways and require identical
+/// results.
+#[cfg(test)]
 fn shape_entry_from_json(v: &Value) -> Option<(ShapeKey, LayerStats)> {
     let key = ShapeKey {
         rows: u32_field(v, "rows")?,
@@ -501,38 +764,26 @@ fn shape_entry_from_json(v: &Value) -> Option<(ShapeKey, LayerStats)> {
         dw_mapping: dw_mapping_parse(v.req_str("dw_mapping").ok()?)?,
         batch: u32_field(v, "batch")?,
     };
-    let compute_cycles = v.req_u64("compute_cycles").ok()?;
-    let stall_cycles = v.req_u64("stall_cycles").ok()?;
-    let macs = v.req_u64("macs").ok()?;
-    // Recomputed exactly as `simulate_layer` does, so persisted entries are
-    // bit-identical to freshly simulated ones without storing any float.
-    let total = compute_cycles + stall_cycles;
-    let pes = u64::from(key.rows) * u64::from(key.cols);
-    let utilization = if total == 0 {
-        0.0
-    } else {
-        macs as f64 / (total * pes) as f64
-    };
-    let stats = LayerStats {
-        name: String::new(),
-        dataflow: key.dataflow,
-        launches: v.req_u64("launches").ok()?,
-        compute_cycles,
-        stall_cycles,
-        macs,
-        traffic: OperandTraffic {
-            ifmap_reads: v.req_u64("ifmap_reads").ok()?,
-            filter_reads: v.req_u64("filter_reads").ok()?,
-            ofmap_writes: v.req_u64("ofmap_writes").ok()?,
-            ofmap_reads: v.req_u64("ofmap_reads").ok()?,
-        },
-        dram: DramTraffic {
-            fetch_bytes: v.req_u64("dram_fetch_bytes").ok()?,
-            writeback_bytes: v.req_u64("dram_writeback_bytes").ok()?,
-        },
-        utilization,
-    };
-    Some((key, stats))
+    Some((
+        key,
+        assemble_layer_stats(
+            &key,
+            v.req_u64("launches").ok()?,
+            v.req_u64("compute_cycles").ok()?,
+            v.req_u64("stall_cycles").ok()?,
+            v.req_u64("macs").ok()?,
+            OperandTraffic {
+                ifmap_reads: v.req_u64("ifmap_reads").ok()?,
+                filter_reads: v.req_u64("filter_reads").ok()?,
+                ofmap_writes: v.req_u64("ofmap_writes").ok()?,
+                ofmap_reads: v.req_u64("ofmap_reads").ok()?,
+            },
+            DramTraffic {
+                fetch_bytes: v.req_u64("dram_fetch_bytes").ok()?,
+                writeback_bytes: v.req_u64("dram_writeback_bytes").ok()?,
+            },
+        ),
+    ))
 }
 
 #[cfg(test)]
@@ -746,6 +997,104 @@ mod tests {
         // The deduped file still warm-loads.
         let warm = ShapeCache::new();
         assert_eq!(store.load_shapes("pp", &warm), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn event_and_tree_shape_decoders_agree() {
+        // Serialize a full model's memo table (conv + dwconv + fc layers,
+        // all dataflows), then decode the payload text both ways: the
+        // streaming decoder must reproduce the tree decoder exactly,
+        // including the recomputed utilization float.
+        let arch = ArchConfig::square(16);
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let topo = zoo::mobilenet();
+        for layer in &topo.layers {
+            for df in Dataflow::ALL {
+                cache.simulate_layer(&arch, layer, df, opts);
+            }
+        }
+        let mut entries = cache.snapshot();
+        entries.sort_by_cached_key(|(key, _)| format!("{key:?}"));
+        let payload = Value::Arr(
+            entries.iter().map(|(k, s)| shape_entry_to_json(k, s)).collect(),
+        );
+        let text = payload.to_string();
+        let via_events = shape_entries_from_events(&text).unwrap();
+        let via_tree: Vec<(ShapeKey, LayerStats)> = payload
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| shape_entry_from_json(v).unwrap())
+            .collect();
+        assert!(!via_events.is_empty());
+        assert_eq!(via_events, via_tree);
+    }
+
+    #[test]
+    fn event_decoder_matches_tree_on_malformed_entries() {
+        let arch = ArchConfig::square(8);
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        cache.simulate_layer(&arch, &zoo::alexnet().layers[0], Dataflow::Os, opts);
+        let (key, stats) = cache.snapshot().pop().unwrap();
+        let good = shape_entry_to_json(&key, &stats);
+        let mut missing = good.clone();
+        if let Value::Obj(fields) = &mut missing {
+            fields.retain(|(k, _)| k != "macs");
+        }
+        let mut mistyped = good.clone();
+        if let Value::Obj(fields) = &mut mistyped {
+            for (k, v) in fields.iter_mut() {
+                if k == "rows" {
+                    *v = Value::Str("8".into());
+                }
+            }
+        }
+        let mut fractional = good.clone();
+        if let Value::Obj(fields) = &mut fractional {
+            for (k, v) in fields.iter_mut() {
+                if k == "stride" {
+                    *v = Value::Num(1.5);
+                }
+            }
+        }
+        for bad in [missing, mistyped, fractional] {
+            assert!(shape_entry_from_json(&bad).is_none());
+            let text = Value::Arr(vec![bad]).to_string();
+            assert!(shape_entries_from_events(&text).is_none());
+        }
+        // And the pristine entry decodes identically both ways.
+        let text = Value::Arr(vec![good.clone()]).to_string();
+        assert_eq!(
+            shape_entries_from_events(&text).unwrap()[0],
+            shape_entry_from_json(&good).unwrap()
+        );
+    }
+
+    #[test]
+    fn envelope_scan_first_occurrence_wins_and_skips_unknown() {
+        let store = tmp_store("envscan");
+        // Hand-written document: an unknown key before the stamps (its
+        // whole subtree must be skipped, not parsed into a tree) and a
+        // duplicate stamp after the payload (first occurrence wins, as
+        // with `Value::get`).
+        let text = concat!(
+            r#"{"extra": [1, {"deep": [true, null]}], "schema": 1, "#,
+            r#""kind": "plan", "provenance": "pp", "payload": {"x": 7}, "#,
+            r#""kind": "other"}"#
+        );
+        std::fs::write(store.dir().join("plan-pp.json"), text).unwrap();
+        let payload = store.load_document("plan", "pp").unwrap();
+        assert_eq!(payload.req_u64("x").unwrap(), 7);
+        // Trailing garbage after the envelope still reads cold.
+        std::fs::write(
+            store.dir().join("plan-qq.json"),
+            format!("{} tail", text.replace("\"pp\"", "\"qq\"")),
+        )
+        .unwrap();
+        assert!(store.load_document("plan", "qq").is_none());
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

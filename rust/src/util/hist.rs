@@ -1,0 +1,229 @@
+//! Deterministic fixed-bucket log-scale latency histogram.
+//!
+//! The bench used to collect every per-request queue wait into a `Vec`,
+//! sort it, and index out p50/p99 — O(n) memory and an O(n log n) sort
+//! that grows with the trace.  [`LatencyHistogram`] streams the same
+//! statistics in O(buckets) memory: values land in log₂-linear buckets
+//! (every power-of-two octave split into 32 linear sub-buckets, the
+//! HdrHistogram construction), so the relative quantization error is
+//! bounded by 1/32 ≈ 3.1% while the whole table is ~15 KiB regardless of
+//! how many samples were recorded.
+//!
+//! Determinism contract: bucket edges are exact integer arithmetic
+//! (shifts and masks, no floats), so the same sample stream produces the
+//! same percentile on every platform — which is what lets the CI perf
+//! gate keep byte-identical `BenchReport`s while the bench scales to
+//! millions of requests.  The single `f64` multiply in the rank
+//! computation is IEEE-exact for every count below 2⁵³.
+
+/// Linear sub-buckets per power-of-two octave (as a bit width).
+const SUB_BITS: u32 = 5;
+
+/// Linear sub-buckets per octave.
+const SUBS: u64 = 1 << SUB_BITS;
+
+/// Total bucket count: values `0..32` map exactly (one octave's worth),
+/// then one 32-wide octave per remaining leading-bit position of a u64.
+const BUCKETS: usize = ((64 - SUB_BITS as usize) + 1) * SUBS as usize;
+
+/// Streaming log-scale histogram over `u64` samples (cycles or µs).
+///
+/// ```
+/// use flex_tpu::util::hist::LatencyHistogram;
+///
+/// let mut h = LatencyHistogram::new();
+/// for v in [10u64, 20, 30, 40, 1_000_000] {
+///     h.record(v);
+/// }
+/// assert_eq!(h.count(), 5);
+/// assert_eq!(h.max(), 1_000_000);
+/// assert_eq!(h.percentile(0.50), 30); // values below 32 are exact
+/// ```
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Box<[u64]>,
+    count: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index for a value: identity below [`SUBS`], then
+/// `octave * 32 + sub` where the octave is the leading-bit position and
+/// the sub-bucket is the next [`SUB_BITS`] bits below it.
+fn bucket_of(v: u64) -> usize {
+    if v < SUBS {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let octave = (msb - SUB_BITS + 1) as u64;
+    let sub = (v >> (msb - SUB_BITS)) - SUBS;
+    (octave * SUBS + sub) as usize
+}
+
+/// The largest value that maps to bucket `i` (the bucket's inclusive
+/// upper edge — the value a percentile query reports, so the estimate is
+/// always a conservative "no worse than" bound).
+fn upper_edge(i: usize) -> u64 {
+    let i = i as u64;
+    if i < SUBS {
+        return i;
+    }
+    let octave = i / SUBS;
+    let sub = i % SUBS;
+    // Bucket covers [(32+sub) << (octave-1), ((33+sub) << (octave-1)) - 1];
+    // the top bucket's edge saturates at u64::MAX instead of overflowing.
+    match (SUBS + sub + 1).checked_shl((octave - 1) as u32) {
+        Some(top) => top - 1,
+        None => u64::MAX,
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram (~15 KiB, fixed).
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0u64; BUCKETS].into_boxed_slice(),
+            count: 0,
+            max: 0,
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The exact largest sample recorded (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile estimate: the upper edge of the bucket
+    /// holding the rank-`round((n-1)·q)` sample (0-based), clamped to the
+    /// exact observed maximum.  Matches the old sort-and-index estimator
+    /// to within one bucket width (≤ 1/32 relative), is exact below 32,
+    /// and returns 0 on an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        // The same rank the sorted-Vec estimator indexed: 0-based
+        // round((n-1)*q), expressed 1-based for cumulative counting.
+        let rank = ((self.count - 1) as f64 * q).round() as u64 + 1;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return upper_edge(i).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The offline replica of the pre-histogram estimator: sort the full
+    /// sample and index the nearest rank (what `inference::percentile`
+    /// did before the streaming pipeline).
+    fn exact_percentile(samples: &mut [u64], q: f64) -> u64 {
+        if samples.is_empty() {
+            return 0;
+        }
+        samples.sort_unstable();
+        let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+        samples[idx.min(samples.len() - 1)]
+    }
+
+    #[test]
+    fn buckets_partition_the_u64_line() {
+        // Every octave boundary value maps below its successor and edges
+        // are consistent with the mapping.
+        for v in [0u64, 1, 31, 32, 33, 63, 64, 1000, u64::MAX / 2, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(v <= upper_edge(b), "{v} above its bucket edge");
+            if b > 0 {
+                assert!(v > upper_edge(b - 1), "{v} below its bucket floor");
+            }
+        }
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(upper_edge(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(0.5), 16); // round(31 * 0.5) = 16
+        assert_eq!(h.percentile(1.0), 31);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.max(), 0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn percentile_tracks_exact_within_one_bucket() {
+        // Property: against the offline sorted-Vec replica, the histogram
+        // answer is never below the exact nearest-rank value and never
+        // above it by more than one bucket width (1/32 relative).
+        let mut rng = crate::util::rng::Rng::new(0x1557);
+        for case in 0..200 {
+            let n = 1 + rng.range(1, 400);
+            let mut h = LatencyHistogram::new();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Mix magnitudes: µs-scale waits up to multi-second tails.
+                let v = rng.next_u64() % (1u64 << rng.range(1, 40));
+                h.record(v);
+                samples.push(v);
+            }
+            for q in [0.0, 0.25, 0.50, 0.90, 0.99, 1.0] {
+                let exact = exact_percentile(&mut samples, q);
+                let est = h.percentile(q);
+                assert!(est >= exact, "case {case} q {q}: {est} < exact {exact}");
+                let slack = exact / 32 + 1;
+                assert!(
+                    est <= exact.saturating_add(slack),
+                    "case {case} q {q}: {est} > exact {exact} + {slack}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_is_exact_and_clamps_the_top_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(1_000_003);
+        assert_eq!(h.percentile(1.0), 1_000_003);
+        assert_eq!(h.percentile(0.5), 1_000_003, "single sample: every rank is it");
+    }
+}

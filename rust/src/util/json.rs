@@ -4,11 +4,36 @@
 //! escapes (incl. `\uXXXX` and surrogate pairs), numbers, booleans, null.
 //! Object key order is preserved (insertion order) so emitted files diff
 //! cleanly.
+//!
+//! Two read paths share one grammar implementation:
+//!
+//! * [`parse`] builds a [`Value`] tree — the convenient path, used for
+//!   configuration-sized documents.
+//! * [`EventParser`] is the streaming (SAX-style) fast path: a pull
+//!   parser emitting [`JsonEvent`]s straight off the input with zero tree
+//!   allocation, borrowed `&str` slices for escape-free strings, and
+//!   [`EventParser::skip_value`] returning the byte span of any subtree
+//!   so a caller can scan an envelope and tree-parse only the part it
+//!   needs.  [`crate::sim::store::PlanStore`]'s hot read paths (shape
+//!   preload, listing) run on it.
+//!
+//! [`parse`] is itself an iterative fold over the event stream, so the
+//! two paths accept and reject exactly the same documents — including the
+//! [`MAX_DEPTH`] nesting cap, which bounds the parser's stack on
+//! adversarial input (the old recursive parser could overflow the real
+//! stack instead of erroring).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt;
+use std::ops::Range;
 
 use crate::error::{Error, Result};
+
+/// Maximum container nesting either parse path accepts.  Deeper input is
+/// a parse error, not a stack overflow; no artifact this crate writes
+/// comes anywhere near it.
+pub const MAX_DEPTH: usize = 128;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -114,27 +139,244 @@ impl Value {
     }
 }
 
-/// Parse a JSON document.
+/// Parse a JSON document into a [`Value`] tree.
+///
+/// Implemented as an iterative fold over [`EventParser`], so the tree
+/// path and the streaming path accept and reject exactly the same
+/// documents (one grammar, two consumers).
 pub fn parse(text: &str) -> Result<Value> {
-    let mut p = Parser {
-        bytes: text.as_bytes(),
-        pos: 0,
-    };
-    p.skip_ws();
-    let v = p.value()?;
-    p.skip_ws();
-    if p.pos != p.bytes.len() {
-        return Err(p.err("trailing garbage"));
+    /// One partially-built container on the explicit build stack.
+    enum Frame {
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>, Option<String>),
     }
-    Ok(v)
+    let mut p = EventParser::new(text);
+    let mut stack: Vec<Frame> = Vec::new();
+    loop {
+        let ev = match p.next_event()? {
+            Some(ev) => ev,
+            None => return Err(p.err("expected a value")),
+        };
+        let finished = match ev {
+            JsonEvent::Null => Value::Null,
+            JsonEvent::Bool(b) => Value::Bool(b),
+            JsonEvent::Num(n) => Value::Num(n),
+            JsonEvent::Str(s) => Value::Str(s.into_owned()),
+            JsonEvent::ArrStart => {
+                stack.push(Frame::Arr(Vec::new()));
+                continue;
+            }
+            JsonEvent::ObjStart => {
+                stack.push(Frame::Obj(Vec::new(), None));
+                continue;
+            }
+            JsonEvent::Key(k) => {
+                match stack.last_mut() {
+                    Some(Frame::Obj(_, slot)) => *slot = Some(k.into_owned()),
+                    _ => unreachable!("event parser emits keys only inside objects"),
+                }
+                continue;
+            }
+            JsonEvent::ArrEnd => match stack.pop() {
+                Some(Frame::Arr(items)) => Value::Arr(items),
+                _ => unreachable!("event parser balances array ends"),
+            },
+            JsonEvent::ObjEnd => match stack.pop() {
+                Some(Frame::Obj(fields, _)) => Value::Obj(fields),
+                _ => unreachable!("event parser balances object ends"),
+            },
+        };
+        match stack.last_mut() {
+            None => {
+                p.finish()?;
+                return Ok(finished);
+            }
+            Some(Frame::Arr(items)) => items.push(finished),
+            Some(Frame::Obj(fields, slot)) => {
+                let key = slot.take().expect("event parser emits a key before each value");
+                fields.push((key, finished));
+            }
+        }
+    }
 }
 
-struct Parser<'a> {
+/// One streaming parse event (see [`EventParser`]).
+///
+/// Strings borrow from the input whenever they contain no escape
+/// (`Cow::Borrowed` — the overwhelmingly common case in this crate's
+/// artifacts), and are decoded into owned strings only when an escape
+/// forces it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonEvent<'a> {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number, as f64 (same representation as [`Value::Num`]).
+    Num(f64),
+    /// A string value.
+    Str(Cow<'a, str>),
+    /// An object key (always followed by that key's value events).
+    Key(Cow<'a, str>),
+    /// `[` — the array's element events follow, then [`JsonEvent::ArrEnd`].
+    ArrStart,
+    /// `]`.
+    ArrEnd,
+    /// `{` — key/value event pairs follow, then [`JsonEvent::ObjEnd`].
+    ObjStart,
+    /// `}`.
+    ObjEnd,
+}
+
+/// What the parser expects next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// A value (top level, or after an object key's `:`).
+    Value,
+    /// First array element or an immediate `]`.
+    FirstElemOrEnd,
+    /// `,` or `]` after an array element.
+    ElemSep,
+    /// First object key or an immediate `}`.
+    FirstKeyOrEnd,
+    /// A key, after an object `,`.
+    Key,
+    /// `,` or `}` after an object value.
+    KeySep,
+    /// The top-level value is complete; only whitespace may remain.
+    End,
+}
+
+/// Streaming pull parser: call [`EventParser::next_event`] until it
+/// returns `Ok(None)` (document complete).  O(depth) memory, no `Value`
+/// tree; [`EventParser::skip_value`] fast-forwards over one subtree and
+/// returns its byte span so the caller can defer or delegate it.
+///
+/// ```
+/// use flex_tpu::util::json::{EventParser, JsonEvent};
+///
+/// let mut p = EventParser::new(r#"{"kind": "plan", "n": 3}"#);
+/// assert_eq!(p.next_event().unwrap(), Some(JsonEvent::ObjStart));
+/// assert_eq!(p.next_event().unwrap(), Some(JsonEvent::Key("kind".into())));
+/// assert_eq!(p.next_event().unwrap(), Some(JsonEvent::Str("plan".into())));
+/// assert_eq!(p.next_event().unwrap(), Some(JsonEvent::Key("n".into())));
+/// assert_eq!(p.next_event().unwrap(), Some(JsonEvent::Num(3.0)));
+/// assert_eq!(p.next_event().unwrap(), Some(JsonEvent::ObjEnd));
+/// assert_eq!(p.next_event().unwrap(), None);
+/// ```
+pub struct EventParser<'a> {
+    text: &'a str,
     bytes: &'a [u8],
     pos: usize,
+    /// Open containers, innermost last (`b'{'` / `b'['`).
+    stack: Vec<u8>,
+    state: State,
 }
 
-impl<'a> Parser<'a> {
+impl<'a> EventParser<'a> {
+    /// A parser positioned at the start of `text`.
+    pub fn new(text: &'a str) -> Self {
+        Self {
+            text,
+            bytes: text.as_bytes(),
+            pos: 0,
+            stack: Vec::new(),
+            state: State::Value,
+        }
+    }
+
+    /// Current byte offset into the input.
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// The next event, or `Ok(None)` once the document has been fully
+    /// consumed (further calls keep returning `Ok(None)`).
+    pub fn next_event(&mut self) -> Result<Option<JsonEvent<'a>>> {
+        self.skip_ws();
+        match self.state {
+            State::End => {
+                if self.pos == self.bytes.len() {
+                    Ok(None)
+                } else {
+                    Err(self.err("trailing garbage"))
+                }
+            }
+            State::Value => self.value_event().map(Some),
+            State::FirstElemOrEnd => {
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return self.container_end(b'[').map(Some);
+                }
+                self.value_event().map(Some)
+            }
+            State::ElemSep => match self.bump() {
+                Some(b',') => {
+                    self.skip_ws();
+                    self.value_event().map(Some)
+                }
+                Some(b']') => self.container_end(b'[').map(Some),
+                _ => Err(self.err("expected ',' or ']'")),
+            },
+            State::FirstKeyOrEnd => {
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return self.container_end(b'{').map(Some);
+                }
+                self.key_event().map(Some)
+            }
+            State::Key => self.key_event().map(Some),
+            State::KeySep => match self.bump() {
+                Some(b',') => {
+                    self.skip_ws();
+                    self.key_event().map(Some)
+                }
+                Some(b'}') => self.container_end(b'{').map(Some),
+                _ => Err(self.err("expected ',' or '}'")),
+            },
+        }
+    }
+
+    /// Fast-forward over exactly one complete value (scalar or whole
+    /// subtree) and return its byte span in the input — the enabling
+    /// primitive for envelope scans that tree-parse only a payload.
+    /// Valid whenever a value is expected (top level, after a key, or at
+    /// an array position).
+    pub fn skip_value(&mut self) -> Result<Range<usize>> {
+        self.skip_ws();
+        let start = self.pos;
+        let depth0 = self.stack.len();
+        loop {
+            match self.next_event()? {
+                None => return Err(self.err("expected a value")),
+                Some(JsonEvent::ArrStart | JsonEvent::ObjStart | JsonEvent::Key(_)) => {}
+                Some(JsonEvent::ArrEnd | JsonEvent::ObjEnd) if self.stack.len() < depth0 => {
+                    // The end of an *enclosing* container: the caller asked
+                    // to skip a value where none begins.
+                    return Err(self.err("expected a value"));
+                }
+                Some(_) => {
+                    if self.stack.len() == depth0 {
+                        return Ok(start..self.pos);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consume trailing whitespace and require the document to be
+    /// complete (errors on trailing garbage or an unfinished document).
+    pub fn finish(&mut self) -> Result<()> {
+        if self.state != State::End {
+            self.skip_ws();
+            return Err(self.err("unexpected end of document"));
+        }
+        match self.next_event()? {
+            None => Ok(()),
+            Some(_) => unreachable!("End state yields no events"),
+        }
+    }
+
     fn err(&self, msg: &str) -> Error {
         Error::Artifact(format!("JSON parse error at byte {}: {msg}", self.pos))
     }
@@ -165,80 +407,122 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
+    fn lit(&mut self, word: &str) -> Result<()> {
         if self.bytes[self.pos..].starts_with(word.as_bytes()) {
             self.pos += word.len();
-            Ok(v)
+            Ok(())
         } else {
             Err(self.err(&format!("expected {word}")))
         }
     }
 
-    fn value(&mut self) -> Result<Value> {
+    /// The state after a value completes at the current nesting.
+    fn after_value(&mut self) {
+        self.state = match self.stack.last() {
+            None => State::End,
+            Some(b'[') => State::ElemSep,
+            Some(_) => State::KeySep,
+        };
+    }
+
+    fn container_end(&mut self, open: u8) -> Result<JsonEvent<'a>> {
+        debug_assert_eq!(self.stack.pop(), Some(open));
+        self.after_value();
+        Ok(if open == b'[' {
+            JsonEvent::ArrEnd
+        } else {
+            JsonEvent::ObjEnd
+        })
+    }
+
+    fn value_event(&mut self) -> Result<JsonEvent<'a>> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Value::Str(self.string()?)),
-            Some(b't') => self.lit("true", Value::Bool(true)),
-            Some(b'f') => self.lit("false", Value::Bool(false)),
-            Some(b'n') => self.lit("null", Value::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(b'{') => {
+                self.open(b'{')?;
+                self.state = State::FirstKeyOrEnd;
+                Ok(JsonEvent::ObjStart)
+            }
+            Some(b'[') => {
+                self.open(b'[')?;
+                self.state = State::FirstElemOrEnd;
+                Ok(JsonEvent::ArrStart)
+            }
+            Some(b'"') => {
+                let s = self.string()?;
+                self.after_value();
+                Ok(JsonEvent::Str(s))
+            }
+            Some(b't') => {
+                self.lit("true")?;
+                self.after_value();
+                Ok(JsonEvent::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                self.after_value();
+                Ok(JsonEvent::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                self.after_value();
+                Ok(JsonEvent::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(JsonEvent::Num(n))
+            }
             _ => Err(self.err("expected a value")),
         }
     }
 
-    fn object(&mut self) -> Result<Value> {
-        self.expect(b'{')?;
-        let mut fields = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Value::Obj(fields));
+    fn open(&mut self, kind: u8) -> Result<()> {
+        if self.stack.len() >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
         }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            self.skip_ws();
-            let val = self.value()?;
-            fields.push((key, val));
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b'}') => return Ok(Value::Obj(fields)),
-                _ => return Err(self.err("expected ',' or '}'")),
-            }
-        }
+        self.pos += 1;
+        self.stack.push(kind);
+        Ok(())
     }
 
-    fn array(&mut self) -> Result<Value> {
-        self.expect(b'[')?;
-        let mut items = Vec::new();
+    fn key_event(&mut self) -> Result<JsonEvent<'a>> {
         self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Value::Arr(items));
-        }
-        loop {
-            self.skip_ws();
-            items.push(self.value()?);
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b']') => return Ok(Value::Arr(items)),
-                _ => return Err(self.err("expected ',' or ']'")),
-            }
-        }
+        let key = self.string()?;
+        self.skip_ws();
+        self.expect(b':')?;
+        self.state = State::Value;
+        Ok(JsonEvent::Key(key))
     }
 
-    fn string(&mut self) -> Result<String> {
+    fn string(&mut self) -> Result<Cow<'a, str>> {
         self.expect(b'"')?;
-        let mut out = String::new();
+        let start = self.pos;
+        // Fast path: scan for the closing quote; a string with no escape
+        // is borrowed straight from the input ('"' and '\\' are ASCII, so
+        // the slice boundaries are char boundaries of the valid-UTF-8
+        // input).
+        let mut i = self.pos;
+        while i < self.bytes.len() {
+            match self.bytes[i] {
+                b'"' => {
+                    self.pos = i + 1;
+                    return Ok(Cow::Borrowed(&self.text[start..i]));
+                }
+                b'\\' => break,
+                _ => i += 1,
+            }
+        }
+        if i == self.bytes.len() {
+            self.pos = i;
+            return Err(self.err("unterminated string"));
+        }
+        // Slow path: copy the escape-free prefix, then decode escapes.
+        let mut out = String::from(&self.text[start..i]);
+        self.pos = i;
         loop {
             match self.bump() {
                 None => return Err(self.err("unterminated string")),
-                Some(b'"') => return Ok(out),
+                Some(b'"') => return Ok(Cow::Owned(out)),
                 Some(b'\\') => match self.bump() {
                     Some(b'"') => out.push('"'),
                     Some(b'\\') => out.push('\\'),
@@ -274,20 +558,20 @@ impl<'a> Parser<'a> {
                 Some(c) if c < 0x80 => out.push(c as char),
                 Some(c) => {
                     // Re-decode UTF-8 multibyte sequences.
-                    let start = self.pos - 1;
+                    let seq = self.pos - 1;
                     let len = match c {
                         0xC0..=0xDF => 2,
                         0xE0..=0xEF => 3,
                         0xF0..=0xF7 => 4,
                         _ => return Err(self.err("bad utf8")),
                     };
-                    if start + len > self.bytes.len() {
+                    if seq + len > self.bytes.len() {
                         return Err(self.err("truncated utf8"));
                     }
-                    let s = std::str::from_utf8(&self.bytes[start..start + len])
+                    let s = std::str::from_utf8(&self.bytes[seq..seq + len])
                         .map_err(|_| self.err("bad utf8"))?;
                     out.push_str(s);
-                    self.pos = start + len;
+                    self.pos = seq + len;
                 }
             }
         }
@@ -303,7 +587,7 @@ impl<'a> Parser<'a> {
         Ok(v)
     }
 
-    fn number(&mut self) -> Result<Value> {
+    fn number(&mut self) -> Result<f64> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -327,10 +611,21 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| self.err("bad number"))
+        text.parse::<f64>().map_err(|_| self.err("bad number"))
     }
+}
+
+/// Visitor-style driver over [`EventParser`]: feed every event of `text`
+/// to `visit`, which may abort the scan by returning an error.
+pub fn parse_events<'a, F>(text: &'a str, mut visit: F) -> Result<()>
+where
+    F: FnMut(JsonEvent<'a>) -> Result<()>,
+{
+    let mut p = EventParser::new(text);
+    while let Some(ev) = p.next_event()? {
+        visit(ev)?;
+    }
+    p.finish()
 }
 
 fn escape(s: &str, out: &mut String) {
@@ -465,6 +760,63 @@ mod tests {
         let v = obj(vec![("n", Value::Num(8.0))]);
         assert!(v.to_string().contains("\"n\": 8"));
         assert!(!v.to_string().contains("8.0"));
+    }
+
+    #[test]
+    fn event_stream_borrows_plain_strings() {
+        let mut p = EventParser::new(r#"["plain", "es\ncaped"]"#);
+        assert_eq!(p.next_event().unwrap(), Some(JsonEvent::ArrStart));
+        match p.next_event().unwrap().unwrap() {
+            JsonEvent::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain"),
+            other => panic!("expected a borrowed string, got {other:?}"),
+        }
+        match p.next_event().unwrap().unwrap() {
+            JsonEvent::Str(Cow::Owned(s)) => assert_eq!(s, "es\ncaped"),
+            other => panic!("expected an owned string, got {other:?}"),
+        }
+        assert_eq!(p.next_event().unwrap(), Some(JsonEvent::ArrEnd));
+        assert_eq!(p.next_event().unwrap(), None);
+        // Exhausted parsers keep reporting completion.
+        assert_eq!(p.next_event().unwrap(), None);
+    }
+
+    #[test]
+    fn depth_cap_is_an_error_not_an_overflow() {
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(parse(&deep).is_err());
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok());
+        // An unclosed deep prefix (no closers at all) errors the same way.
+        assert!(parse(&"[".repeat(4096)).is_err());
+    }
+
+    #[test]
+    fn skip_value_returns_exact_spans() {
+        let text = r#"{"a": {"nested": [1, 2, {"x": "y"}]}, "b": 5}"#;
+        let mut p = EventParser::new(text);
+        assert_eq!(p.next_event().unwrap(), Some(JsonEvent::ObjStart));
+        assert_eq!(p.next_event().unwrap(), Some(JsonEvent::Key("a".into())));
+        let span = p.skip_value().unwrap();
+        assert_eq!(&text[span], r#"{"nested": [1, 2, {"x": "y"}]}"#);
+        assert_eq!(p.next_event().unwrap(), Some(JsonEvent::Key("b".into())));
+        let span = p.skip_value().unwrap();
+        assert_eq!(&text[span], "5");
+        assert_eq!(p.next_event().unwrap(), Some(JsonEvent::ObjEnd));
+        p.finish().unwrap();
+    }
+
+    #[test]
+    fn parse_events_visits_everything_and_rejects_garbage() {
+        let mut n = 0usize;
+        parse_events(r#"{"a": [1, true, null]}"#, |_| {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 8, "ObjStart Key ArrStart Num Bool Null ArrEnd ObjEnd");
+        for bad in ["", "{", "[1,]", "{\"a\":}", "tru", "1 2", "\"\\q\""] {
+            assert!(parse_events(bad, |_| Ok(())).is_err(), "{bad:?} should fail");
+        }
     }
 
     #[test]

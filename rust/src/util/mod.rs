@@ -13,8 +13,11 @@
 //!   examples.
 //! * [`rng`] — a splitmix/xorshift PRNG powering the in-tree
 //!   property-testing loops (proptest substitute).
+//! * [`hist`] — a deterministic log-scale latency histogram (HdrHistogram
+//!   substitute) streaming p50/p99/max in O(buckets) memory.
 
 pub mod cli;
+pub mod hist;
 pub mod json;
 pub mod kvconf;
 pub mod rng;

@@ -1,0 +1,252 @@
+//! Adversarial agreement tests for the two JSON read paths (ISSUE 8).
+//!
+//! `util::json` now has a tree parser and a streaming event parser built
+//! on the same grammar machinery.  Agreement is enforced here from the
+//! *outside*: an independent recursive fold over [`EventParser`] (written
+//! in this test, not the library) rebuilds a `Value` and must match
+//! [`parse`] exactly — same value or same rejection — on deep nesting up
+//! to and past the depth cap, truncated documents, corrupted bytes,
+//! surrogate/escape pathologies, and numbers at the u64/f64 boundaries.
+
+use flex_tpu::util::json::{parse, parse_events, EventParser, JsonEvent, Value, MAX_DEPTH};
+use flex_tpu::util::rng::{property, Rng};
+
+/// Rebuild a `Value` by folding the event stream — deliberately an
+/// independent consumer, so a bug in the library's own event-driven
+/// `parse` fold can't hide itself.
+fn value_via_events(text: &str) -> Result<Value, String> {
+    let mut p = EventParser::new(text);
+    let ev = first(&mut p)?;
+    let v = build(&mut p, ev)?;
+    p.finish().map_err(|e| e.to_string())?;
+    Ok(v)
+}
+
+fn first<'a>(p: &mut EventParser<'a>) -> Result<JsonEvent<'a>, String> {
+    p.next_event()
+        .map_err(|e| e.to_string())?
+        .ok_or_else(|| "no value".to_string())
+}
+
+fn build<'a>(p: &mut EventParser<'a>, ev: JsonEvent<'a>) -> Result<Value, String> {
+    Ok(match ev {
+        JsonEvent::Null => Value::Null,
+        JsonEvent::Bool(b) => Value::Bool(b),
+        JsonEvent::Num(n) => Value::Num(n),
+        JsonEvent::Str(s) => Value::Str(s.into_owned()),
+        JsonEvent::ArrStart => {
+            let mut items = Vec::new();
+            loop {
+                match first(p)? {
+                    JsonEvent::ArrEnd => break,
+                    ev => items.push(build(p, ev)?),
+                }
+            }
+            Value::Arr(items)
+        }
+        JsonEvent::ObjStart => {
+            let mut fields = Vec::new();
+            loop {
+                match first(p)? {
+                    JsonEvent::ObjEnd => break,
+                    JsonEvent::Key(k) => {
+                        let key = k.into_owned();
+                        let ev = first(p)?;
+                        fields.push((key, build(p, ev)?));
+                    }
+                    other => return Err(format!("unexpected {other:?}")),
+                }
+            }
+            Value::Obj(fields)
+        }
+        other => return Err(format!("unexpected {other:?}")),
+    })
+}
+
+/// Both paths on one input: same parsed value, or both rejecting.  Also
+/// checks the `parse_events` visitor wrapper accepts/rejects in lockstep.
+fn agree(text: &str) -> Option<Value> {
+    let tree = parse(text).ok();
+    let via_events = value_via_events(text).ok();
+    assert_eq!(tree, via_events, "paths disagree on {text:?}");
+    assert_eq!(
+        tree.is_some(),
+        parse_events(text, |_| Ok(())).is_ok(),
+        "visitor wrapper disagrees on {text:?}"
+    );
+    tree
+}
+
+#[test]
+fn depth_cap_splits_accept_from_reject_identically() {
+    for depth in [1usize, 64, MAX_DEPTH - 1, MAX_DEPTH, MAX_DEPTH + 1, 200, 2000] {
+        let arrays = format!("{}0{}", "[".repeat(depth), "]".repeat(depth));
+        let got = agree(&arrays);
+        assert_eq!(got.is_some(), depth <= MAX_DEPTH, "arrays at depth {depth}");
+        let objects = format!("{}0{}", "{\"k\":".repeat(depth), "}".repeat(depth));
+        let got = agree(&objects);
+        assert_eq!(got.is_some(), depth <= MAX_DEPTH, "objects at depth {depth}");
+        // Unclosed deep prefixes reject (cap or truncation) on both paths.
+        assert!(agree(&"[".repeat(depth)).is_none());
+    }
+}
+
+#[test]
+fn surrogate_and_escape_pathologies_agree() {
+    // (input, expected decoded string or None for rejection)
+    let cases: &[(&str, Option<&str>)] = &[
+        (r#""\ud83d\ude00""#, Some("\u{1F600}")), // valid surrogate pair
+        (r#""\ud800""#, None),                    // lone high surrogate
+        (r#""\ud800x""#, None),                   // high followed by raw char
+        (r#""\ud800\ud800""#, None),              // high followed by high
+        (r#""\udc00""#, None),                    // lone low surrogate
+        (r#""\udfff\udfff""#, None),              // low-low pair
+        (r#""\u0041\u00e9""#, Some("Aé")),        // BMP escapes
+        (r#""\uffff""#, Some("\u{FFFF}")),        // BMP ceiling
+        (r#""\q""#, None),                        // unknown escape
+        (r#""\u00""#, None),                      // truncated \u
+        (r#""\u00zz""#, None),                    // non-hex \u
+        (r#""\""#, None),                         // escape then EOF
+        ("\"unterminated", None),
+        (r#""mixed \n raw	tab""#, Some("mixed \n raw\ttab")),
+    ];
+    for (text, want) in cases {
+        let got = agree(text);
+        match want {
+            Some(s) => assert_eq!(
+                got.as_ref().and_then(|v| v.as_str()),
+                Some(*s),
+                "{text:?}"
+            ),
+            None => assert!(got.is_none(), "{text:?} must reject"),
+        }
+    }
+}
+
+#[test]
+fn boundary_numbers_agree_bitwise() {
+    let texts = [
+        "0",
+        "-0",
+        "9007199254740992",     // 2^53
+        "9007199254740993",     // 2^53 + 1 (rounds; both must round alike)
+        "18446744073709551615", // u64::MAX
+        "1.7976931348623157e308",
+        "5e-324",               // smallest subnormal
+        "2.2250738585072014e-308",
+        "1e999",                // overflows to +inf on both paths
+        "-1e999",
+        "0.1",
+        "1.",                   // quirk: f64::from_str accepts it; keep both doing so
+        "007",                  // quirk: leading zeros accepted; keep both doing so
+    ];
+    for text in texts {
+        let tree = parse(text);
+        let mut p = EventParser::new(text);
+        match (tree, p.next_event()) {
+            (Ok(Value::Num(a)), Ok(Some(JsonEvent::Num(b)))) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{text}");
+            }
+            (tree, ev) => panic!("{text}: tree {tree:?} events {ev:?}"),
+        }
+    }
+    for text in ["-", "+1", "1e", "1e+", ".5", "--1", "1..2"] {
+        assert!(agree(text).is_none(), "{text:?} must reject");
+    }
+}
+
+#[test]
+fn malformed_structures_agree() {
+    let corpus = [
+        "",
+        " \t\n",
+        "[",
+        "]",
+        "{",
+        "}",
+        "{\"a\"",
+        "{\"a\":",
+        "{\"a\":}",
+        "{\"a\":1,}",
+        "{1: 2}",
+        "[1 2]",
+        "{\"a\" 1}",
+        "[1,]",
+        "[,1]",
+        "nul",
+        "truex",
+        "falsey",
+        "null null",
+        "[] []",
+        "[]{}",
+        "[]",
+        "{}",
+        "[[]]",
+        "{\"a\": {}}",
+        " 7 ",
+        "\t\nnull\r ",
+    ];
+    for text in corpus {
+        agree(text);
+    }
+}
+
+fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+    const STRINGS: &[&str] = &[
+        "",
+        "plain",
+        "esc \"q\" \\b\\",
+        "nl\nand\ttab",
+        "ünïcodé \u{1F600}",
+        "ctrl \u{0001}\u{001f}",
+    ];
+    let pick = if depth >= 3 { rng.range(0, 3) } else { rng.range(0, 5) };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(rng.range(0, 1) == 1),
+        2 => Value::Num(match rng.range(0, 2) {
+            0 => rng.range_u64(0, 5000) as f64 - 2500.0,
+            1 => rng.next_u64() as f64,
+            _ => rng.f64() * 1e9,
+        }),
+        3 => Value::Str((*rng.pick(STRINGS)).to_string()),
+        4 => {
+            let n = rng.range(0, 4);
+            Value::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+        }
+        _ => {
+            let n = rng.range(0, 4);
+            Value::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn random_documents_truncations_and_corruptions_agree() {
+    property("json event/tree agreement", 0xE_4E47, 120, |rng| {
+        let value = gen_value(rng, 0);
+        let text = value.to_string();
+        let parsed = agree(&text).expect("emitted JSON must parse on both paths");
+        assert_eq!(parsed, value);
+        // Every char-boundary truncation agrees (almost all reject; a
+        // prefix like "12" of "123" legitimately parses on both).
+        for cut in 0..text.len() {
+            if text.is_char_boundary(cut) {
+                agree(&text[..cut]);
+            }
+        }
+        // Single-byte corruption with a structural character agrees.
+        let mut bytes = text.clone().into_bytes();
+        let i = rng.range(0, bytes.len() - 1);
+        if bytes[i].is_ascii() {
+            bytes[i] = *rng.pick(b"{}[]:,\"\\x09 ".as_slice());
+            if let Ok(corrupted) = String::from_utf8(bytes) {
+                agree(&corrupted);
+            }
+        }
+    });
+}

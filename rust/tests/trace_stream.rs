@@ -1,0 +1,147 @@
+//! Acceptance tests for the streaming trace pipeline (ISSUE 8).
+//!
+//! The driver no longer owns a `Vec<TraceEvent>`: it pulls arrivals off a
+//! lazy iterator through a one-event peek window.  These tests pin the
+//! two contracts that switch rests on:
+//!
+//! 1. **iterator ≡ collected trace** — `TraceSpec::events` replays the
+//!    exact LCG draw sequence of the collecting `generate`, is
+//!    `ExactSizeIterator`-honest, and is deterministic per spec;
+//! 2. **driver byte identity** — `bench::run` (which streams) and
+//!    `bench::run_with_trace` fed the same trace as an owned `Vec`
+//!    serialize to byte-identical `BenchReport` JSON, open and closed
+//!    loop, so streaming can never change a gated number.
+
+use std::sync::Arc;
+
+use flex_tpu::bench::trace::generate;
+use flex_tpu::bench::{run, run_with_trace, BenchConfig, LoopMode, Scenario, TraceSpec};
+use flex_tpu::config::ArchConfig;
+use flex_tpu::inference::{ModelRegistry, SchedulePolicy, SimBackend};
+
+const MODELS: [&str; 3] = ["alexnet", "resnet18", "vgg13"];
+
+fn registry() -> Arc<ModelRegistry> {
+    let registry = ModelRegistry::new(ArchConfig::square(64), None).unwrap();
+    for name in MODELS {
+        registry
+            .register(Arc::new(SimBackend::from_zoo(name, 4).unwrap()))
+            .unwrap();
+    }
+    Arc::new(registry)
+}
+
+fn config() -> BenchConfig {
+    BenchConfig {
+        scenario: Scenario::MixedModel,
+        seed: 7,
+        requests: 400,
+        mean_interarrival_us: 2_000,
+        models: MODELS.iter().map(|s| s.to_string()).collect(),
+        policy: SchedulePolicy::Fifo,
+        mode: LoopMode::Open,
+        concurrency: 32,
+        deadline_us: None,
+        admission: std::collections::BTreeMap::new(),
+        priorities: std::collections::BTreeMap::new(),
+        overload_control: false,
+    }
+}
+
+/// The trace `bench::run` derives from a config (same construction as the
+/// driver's own).
+fn spec_of(cfg: &BenchConfig) -> TraceSpec {
+    TraceSpec {
+        scenario: cfg.scenario,
+        seed: cfg.seed,
+        requests: cfg.requests,
+        models: cfg.models.len(),
+        mean_interarrival_us: cfg.mean_interarrival_us,
+    }
+}
+
+#[test]
+fn iterator_collects_to_exactly_the_generated_trace() {
+    for scenario in Scenario::ALL {
+        for seed in 0..25u64 {
+            for requests in [0u64, 1, 17, 400] {
+                let spec = TraceSpec {
+                    scenario,
+                    seed,
+                    requests,
+                    models: 3,
+                    mean_interarrival_us: 1_500,
+                };
+                let collected: Vec<_> = spec.events().collect();
+                assert_eq!(
+                    collected,
+                    generate(&spec),
+                    "{scenario} seed {seed} n {requests}"
+                );
+                // Two independent iterators replay the same draw sequence.
+                assert!(
+                    spec.events().eq(spec.events()),
+                    "{scenario} seed {seed} n {requests}: iterator not deterministic"
+                );
+                assert_eq!(collected.len() as u64, requests, "{scenario} seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn iterator_is_exact_size_and_well_formed() {
+    let spec = TraceSpec {
+        scenario: Scenario::Bursty,
+        seed: 11,
+        requests: 300,
+        models: 4,
+        mean_interarrival_us: 2_000,
+    };
+    let mut it = spec.events();
+    assert_eq!(it.len(), 300);
+    let mut last_at = 0u64;
+    for expect_id in 0..300u64 {
+        assert_eq!(it.size_hint(), (300 - expect_id as usize, Some(300 - expect_id as usize)));
+        let e = it.next().unwrap();
+        assert_eq!(e.id, expect_id, "ids are arrival-ordered");
+        assert!(e.model < 4);
+        assert!(e.at_us >= last_at, "time monotone");
+        last_at = e.at_us;
+    }
+    assert_eq!(it.len(), 0);
+    assert_eq!(it.next(), None);
+    // Exhausted iterators stay exhausted.
+    assert_eq!(it.next(), None);
+}
+
+#[test]
+fn driver_reports_are_byte_identical_for_vec_and_iterator_input() {
+    let reg = registry();
+    for (mode, policy) in [
+        (LoopMode::Open, SchedulePolicy::Fifo),
+        (LoopMode::Open, SchedulePolicy::ReconfigAware),
+        (LoopMode::Open, SchedulePolicy::DeadlineEdf),
+        (LoopMode::Closed, SchedulePolicy::Fifo),
+        (LoopMode::Closed, SchedulePolicy::ReconfigAware),
+    ] {
+        let mut cfg = config();
+        cfg.mode = mode;
+        cfg.policy = policy;
+        if policy == SchedulePolicy::DeadlineEdf {
+            cfg.deadline_us = Some(2_000_000);
+        }
+        let spec = spec_of(&cfg);
+        let streamed = run(&reg, &cfg).unwrap().to_json().to_string();
+        let from_vec = run_with_trace(&reg, &cfg, generate(&spec))
+            .unwrap()
+            .to_json()
+            .to_string();
+        let from_iter = run_with_trace(&reg, &cfg, spec.events())
+            .unwrap()
+            .to_json()
+            .to_string();
+        assert_eq!(streamed, from_vec, "{mode:?}/{policy:?}: Vec input diverged");
+        assert_eq!(streamed, from_iter, "{mode:?}/{policy:?}: iterator input diverged");
+    }
+}
