@@ -217,8 +217,13 @@ impl Iterator for TraceIter {
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
-        let left = (self.requests - self.next_id) as usize;
-        (left, Some(left))
+        // Saturate rather than truncate on 32-bit targets where the
+        // remaining count can exceed usize::MAX; the hint is only exact
+        // when the conversion is.
+        match usize::try_from(self.requests - self.next_id) {
+            Ok(left) => (left, Some(left)),
+            Err(_) => (usize::MAX, None),
+        }
     }
 }
 

@@ -76,10 +76,13 @@ fn upper_edge(i: usize) -> u64 {
     let octave = i / SUBS;
     let sub = i % SUBS;
     // Bucket covers [(32+sub) << (octave-1), ((33+sub) << (octave-1)) - 1];
-    // the top bucket's edge saturates at u64::MAX instead of overflowing.
-    match (SUBS + sub + 1).checked_shl((octave - 1) as u32) {
-        Some(top) => top - 1,
-        None => u64::MAX,
+    // the top bucket's edge is 2^64 - 1, so compute in u128 and saturate
+    // rather than shifting in u64 (64 << 58 wraps to 0 there).
+    let top = u128::from(SUBS + sub + 1) << (octave - 1);
+    if top > u64::MAX as u128 {
+        u64::MAX
+    } else {
+        (top - 1) as u64
     }
 }
 
