@@ -51,6 +51,8 @@ use std::collections::{BTreeMap, VecDeque};
 use std::iter::Peekable;
 
 use crate::config::ArchConfig;
+use crate::cost::energy::layer_energy;
+use crate::cost::pe::PeVariant;
 use crate::error::{Error, Result};
 use crate::inference::scheduler::{BatchPlan, SchedulePolicy, Scheduler};
 use crate::inference::{ModelDeployment, ModelPlacement, ModelRegistry};
@@ -258,18 +260,36 @@ struct DriveInfo {
     /// schedule simulated at the full compiled batch, plus the plan's
     /// internal reconfiguration charges.
     batch_cost: u64,
+    /// Predicted energy one launch burns, integer picojoules: the same
+    /// per-layer stats `batch_cost` sums, run through
+    /// [`crate::cost::energy::layer_energy`] (switch/upload energy is not
+    /// modeled).
+    batch_energy_pj: u64,
     /// Host-link weight upload charged when this model becomes resident.
     switch_cycles: u64,
     /// Compiled batch size.
     batch: u64,
 }
 
-/// Convert trace microseconds to device cycles (truncating, like the
-/// virtual clock everywhere else in the driver).
-fn us_to_cycles(us: u64, clock_ns: f64) -> u64 {
-    (us as f64 * 1000.0 / clock_ns) as u64
+/// The virtual clock quantized to integer picoseconds (≥ 1): the unit the
+/// µs→cycles conversion divides in, so the conversion is pure integer
+/// arithmetic.
+fn clock_ps(clock_ns: f64) -> u128 {
+    ((clock_ns * 1000.0).round() as u128).max(1)
 }
 
+/// Convert trace microseconds to device cycles (truncating, like the
+/// virtual clock everywhere else in the driver).  Computed in u128
+/// integer arithmetic: the old `us as f64 * 1000.0 / clock_ns` path lost
+/// integer precision above 2⁵³/1000 µs, which a million-request
+/// long-horizon trace can reach; saturates at `u64::MAX` cycles.
+fn us_to_cycles(us: u64, clock_ns: f64) -> u64 {
+    let cycles = u128::from(us) * 1_000_000 / clock_ps(clock_ns);
+    u64::try_from(cycles).unwrap_or(u64::MAX)
+}
+
+/// Cycles back to microseconds — reporting only (`f64` fields of the
+/// report), so f64 rounding here never feeds back into the virtual clock.
 fn cycles_to_us(cycles: u64, clock_ns: f64) -> f64 {
     cycles as f64 * clock_ns / 1000.0
 }
@@ -364,12 +384,15 @@ where
         // takes the deployed plan verbatim (the PR-5 path, bit for bit).
         let mut profile = dep.profile();
         let mut batch_cost = 0u64;
+        // Launch energy accumulates in f64 picojoules over the same stats
+        // as the cycle cost and rounds once per model, so the total is as
+        // deterministic as the cycle arithmetic (fixed layer order).
+        let mut batch_energy = 0.0f64;
         if chips <= 1 {
             for (layer, &df) in topo.layers.iter().zip(dep.plan_dataflows.iter()) {
-                batch_cost += registry
-                    .cache()
-                    .simulate_layer(&arch, layer, df, opts)
-                    .total_cycles();
+                let stats = registry.cache().simulate_layer(&arch, layer, df, opts);
+                batch_cost += stats.total_cycles();
+                batch_energy += layer_energy(&arch, PeVariant::Flex, &stats).total_pj();
             }
             batch_cost += reconfig_charges(&dep.plan_dataflows, arch.reconfig_cycles);
         } else {
@@ -377,7 +400,7 @@ where
             let dataflows: Vec<Dataflow> =
                 schedule.choices.iter().map(|c| c.dataflow).collect();
             for (layer, choice) in topo.layers.iter().zip(schedule.choices.iter()) {
-                batch_cost += simulate_layer_sharded_cached(
+                let stats = simulate_layer_sharded_cached(
                     &arch,
                     layer,
                     choice.dataflow,
@@ -385,14 +408,20 @@ where
                     chips,
                     opts,
                     registry.cache(),
-                )
-                .total_cycles();
+                );
+                batch_cost += stats.total_cycles();
+                batch_energy += stats
+                    .per_chip
+                    .iter()
+                    .map(|s| layer_energy(&arch, PeVariant::Flex, s).total_pj())
+                    .sum::<f64>();
             }
             batch_cost += reconfig_charges(&dataflows, arch.reconfig_cycles);
             // The scheduler must forecast boundaries from the plan that
             // actually runs, not the single-chip one.
             profile.forecast = schedule.forecast;
         }
+        let batch_energy_pj = batch_energy.round() as u64;
         profile.priority = cfg.priorities.get(name.as_str()).copied().unwrap_or(0);
         sched.set_profile(profile);
         if placement_mode {
@@ -408,6 +437,7 @@ where
             name.clone(),
             DriveInfo {
                 batch_cost,
+                batch_energy_pj,
                 switch_cycles,
                 batch,
             },
@@ -461,6 +491,7 @@ where
     let mut degraded_batches = 0u64;
     let mut miss_by_tier: BTreeMap<u8, u64> = BTreeMap::new();
     let mut sim_cycles_total = 0u64;
+    let mut energy_pj_total = 0u64;
     // Queue-wait percentiles stream through a fixed-size log-scale
     // histogram (O(buckets), ~15 KiB) instead of a per-request Vec.
     let mut wait_hist = LatencyHistogram::new();
@@ -690,6 +721,7 @@ where
                 reconfigurations += plan.reconfigurations;
                 model_switches += u64::from(plan.model_switch);
                 sim_cycles_total += cost;
+                energy_pj_total = energy_pj_total.saturating_add(di.batch_energy_pj);
                 let m = per.get_mut(&plan.model).expect("configured model");
                 m.served += live;
                 m.slo_met += live_met;
@@ -697,6 +729,7 @@ where
                 m.padded_slots += di.batch - live;
                 m.reconfigurations += plan.reconfigurations;
                 m.sim_cycles += cost;
+                m.energy_pj = m.energy_pj.saturating_add(di.batch_energy_pj);
                 // The group id folds into the digest only on a multi-group
                 // run, so single-group placement stays byte-identical to
                 // the single-device driver.
@@ -745,6 +778,7 @@ where
         reconfigurations,
         model_switches,
         sim_cycles_total,
+        energy_pj_total,
         chip_groups: devices.len() as u64,
         group_cycles: devices.iter().map(|d| d.cycles).collect(),
         sim_wall_us: cycles_to_us(wall_cycles, clock_ns),
@@ -763,4 +797,70 @@ where
         schedule_digest: format!("{digest:016x}"),
         per_model: per,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact integer inverse of [`us_to_cycles`], valid whenever the
+    /// conversion did not truncate (the clock divides the µs evenly).
+    fn cycles_to_us_exact(cycles: u64, clock_ns: f64) -> u128 {
+        u128::from(cycles) * clock_ps(clock_ns) / 1_000_000
+    }
+
+    #[test]
+    fn us_to_cycles_is_exact_integer_arithmetic_at_u64_scale() {
+        // Clocks whose picosecond quantum divides 1 µs evenly: every µs
+        // maps to a whole number of cycles with zero truncation, so the
+        // round-trip must be exact — including above 2^53/1000 µs, where
+        // the old f64 path rounded the product.
+        for clock_ns in [1.0f64, 2.0, 4.0, 5.0, 10.0, 100.0, 1000.0] {
+            let per_us = 1_000_000 / clock_ps(clock_ns);
+            let max_exact = (u128::from(u64::MAX) / per_us) as u64;
+            for us in [
+                0u64,
+                1,
+                1_000_003,
+                (1u64 << 53) / 1000,       // the f64 precision cliff
+                (1u64 << 53) / 1000 + 1,   // first value past it
+                (1u64 << 53) + 1,          // not representable as f64
+                max_exact / 2,
+                max_exact,                 // largest non-saturating input
+            ] {
+                let cycles = us_to_cycles(us, clock_ns);
+                assert_eq!(
+                    u128::from(cycles),
+                    u128::from(us) * per_us,
+                    "clock {clock_ns} ns, {us} us"
+                );
+                assert_eq!(
+                    cycles_to_us_exact(cycles, clock_ns),
+                    u128::from(us),
+                    "round-trip at clock {clock_ns} ns, {us} us"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn us_to_cycles_truncates_and_saturates_like_the_virtual_clock() {
+        // A non-dividing clock truncates toward zero (the driver's clock
+        // contract), exactly as the rational floor says.
+        assert_eq!(us_to_cycles(1, 3.0), 333); // 1_000_000 / 3_000
+        assert_eq!(us_to_cycles(2, 7.0), 285); // 2_000_000 / 7_000
+        // Inputs whose cycle count exceeds u64 saturate instead of
+        // wrapping (sub-ns clocks at u64-scale timestamps).
+        assert_eq!(us_to_cycles(u64::MAX, 0.001), u64::MAX);
+    }
+
+    #[test]
+    fn default_clock_matches_the_old_f64_conversion_in_range() {
+        // The golden benches ran the f64 path at the 10 ns default clock;
+        // the integer path must agree on every in-range timestamp.
+        for us in [0u64, 1, 13, 600, 2_000, 123_457, 2_000_000, 1 << 40] {
+            let old = (us as f64 * 1000.0 / 10.0) as u64;
+            assert_eq!(us_to_cycles(us, 10.0), old, "{us} us");
+        }
+    }
 }

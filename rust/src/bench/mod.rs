@@ -59,6 +59,12 @@ pub const MAX_THROUGHPUT_REGRESSION: f64 = 0.10;
 /// (guards against float noise while still catching real growth).
 pub const RECONFIG_HEADROOM: f64 = 1.05;
 
+/// CI gate: maximum tolerated joules-per-request regression vs the
+/// baseline.  Only enforced when the baseline recorded energy at all
+/// (`energy_pj_total > 0`), so pre-energy baselines gate exactly as
+/// before.
+pub const MAX_ENERGY_REGRESSION: f64 = 0.10;
+
 /// CI gate: the speedup `reconfig-aware` must sustain over `fifo` on the
 /// gated scenario (the PR's acceptance criterion).
 pub const MIN_COALESCING_SPEEDUP: f64 = 1.2;
@@ -319,8 +325,10 @@ impl BenchSuite {
 ///    outright on throughput at no more reconfigurations (when both ran:
 ///    the tentpole's acceptance criterion);
 /// 5. per policy present in both suites: throughput within
-///    [`MAX_THROUGHPUT_REGRESSION`] of the baseline and
-///    reconfigurations-per-request within [`RECONFIG_HEADROOM`].
+///    [`MAX_THROUGHPUT_REGRESSION`] of the baseline,
+///    reconfigurations-per-request within [`RECONFIG_HEADROOM`], and —
+///    when the baseline recorded energy — joules/request within
+///    [`MAX_ENERGY_REGRESSION`].
 pub fn gate(current: &BenchSuite, baseline: &BenchSuite) -> Result<Vec<String>> {
     let fail = |msg: String| -> Result<Vec<String>> { Err(Error::InvalidConfig(msg)) };
     let mut passed = Vec::new();
@@ -407,6 +415,27 @@ pub fn gate(current: &BenchSuite, baseline: &BenchSuite) -> Result<Vec<String>> 
                 base.policy,
                 cur.reconfigs_per_request(),
                 base.reconfigs_per_request()
+            ));
+        }
+        if base.energy_pj_total > 0 {
+            let energy_ceiling =
+                base.joules_per_request() * (1.0 + MAX_ENERGY_REGRESSION) + 1e-18;
+            if cur.joules_per_request() > energy_ceiling {
+                return fail(format!(
+                    "{}: {:.6} J/request rose above {:.6} (baseline {:.6} + {:.0}%)",
+                    base.policy,
+                    cur.joules_per_request(),
+                    energy_ceiling,
+                    base.joules_per_request(),
+                    MAX_ENERGY_REGRESSION * 100.0
+                ));
+            }
+            passed.push(format!(
+                "{}: {:.6} J/request (baseline {:.6}), {:.3} mJ total",
+                base.policy,
+                cur.joules_per_request(),
+                base.joules_per_request(),
+                cur.energy_mj()
             ));
         }
         passed.push(format!(
@@ -517,6 +546,30 @@ mod tests {
         let mut churny = suite.clone();
         churny.reports[0].reconfigurations *= 3;
         assert!(gate(&churny, &suite).is_err(), "reconfig growth");
+    }
+
+    #[test]
+    fn gate_energy_check_activates_only_with_an_energy_baseline() {
+        let reg = registry(2);
+        let suite = BenchSuite::run(&reg, &config(), &[SchedulePolicy::Fifo]).unwrap();
+        assert!(
+            suite.reports[0].energy_pj_total > 0,
+            "the driver must record launch energy"
+        );
+        // A current run burning more J/request than the baseline allows
+        // fails the gate...
+        let mut hungry = suite.clone();
+        hungry.reports[0].energy_pj_total = suite.reports[0].energy_pj_total * 2;
+        assert!(gate(&hungry, &suite).is_err(), "energy regression");
+        // ...unless the baseline predates energy accounting entirely.
+        let mut old_baseline = suite.clone();
+        for r in &mut old_baseline.reports {
+            r.energy_pj_total = 0;
+        }
+        assert!(
+            gate(&hungry, &old_baseline).is_ok(),
+            "pre-energy baselines must gate exactly as before"
+        );
     }
 
     #[test]

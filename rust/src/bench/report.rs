@@ -41,6 +41,9 @@ pub struct ModelBenchStats {
     pub reconfigurations: u64,
     /// Simulated device cycles its launches occupied (incl. switch costs).
     pub sim_cycles: u64,
+    /// Predicted energy its launches burned, integer picojoules (divide
+    /// by 1e9 for mJ).  0 on reports persisted before energy accounting.
+    pub energy_pj: u64,
 }
 
 /// Aggregate result of one bench run (one policy on one trace).
@@ -82,6 +85,12 @@ pub struct BenchReport {
     pub model_switches: u64,
     /// Simulated device-occupied cycles over the whole run.
     pub sim_cycles_total: u64,
+    /// Predicted energy over the whole run, integer picojoules (the sum
+    /// of every launch's per-layer [`crate::cost::energy`] model; switch
+    /// and upload energy are not modeled).  0 on reports persisted before
+    /// energy accounting — the bench gate only compares energy when the
+    /// baseline recorded some.
+    pub energy_pj_total: u64,
     /// Chip groups the run drove (1 for every classic policy; the
     /// registry's placement group count under `placement`).
     pub chip_groups: u64,
@@ -118,6 +127,22 @@ impl BenchReport {
         }
     }
 
+    /// Total predicted energy in millijoules (1 mJ = 10⁹ pJ).
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_pj_total as f64 * 1e-9
+    }
+
+    /// Joules per served request — the energy twin of
+    /// [`BenchReport::reconfigs_per_request`], and what the CI energy gate
+    /// compares (1 J = 10¹² pJ).
+    pub fn joules_per_request(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.energy_pj_total as f64 * 1e-12 / self.served as f64
+        }
+    }
+
     /// Serialize to the store's JSON layout.
     pub fn to_json(&self) -> Value {
         let per_model = self
@@ -137,6 +162,7 @@ impl BenchReport {
                         ("padded_slots", Value::Num(m.padded_slots as f64)),
                         ("reconfigurations", Value::Num(m.reconfigurations as f64)),
                         ("sim_cycles", Value::Num(m.sim_cycles as f64)),
+                        ("energy_pj", Value::Num(m.energy_pj as f64)),
                     ]),
                 )
             })
@@ -168,6 +194,9 @@ impl BenchReport {
             ("reconfigurations", Value::Num(self.reconfigurations as f64)),
             ("model_switches", Value::Num(self.model_switches as f64)),
             ("sim_cycles_total", Value::Num(self.sim_cycles_total as f64)),
+            ("energy_pj_total", Value::Num(self.energy_pj_total as f64)),
+            ("energy_mj", Value::Num(self.energy_mj())),
+            ("joules_per_request", Value::Num(self.joules_per_request())),
             ("chip_groups", Value::Num(self.chip_groups as f64)),
             (
                 "group_cycles",
@@ -219,6 +248,8 @@ impl BenchReport {
                     padded_slots: m.req_u64("padded_slots")?,
                     reconfigurations: m.req_u64("reconfigurations")?,
                     sim_cycles: m.req_u64("sim_cycles")?,
+                    // Pre-energy reports recorded no energy at all.
+                    energy_pj: m.get("energy_pj").and_then(Value::as_u64).unwrap_or(0),
                 },
             );
         }
@@ -265,6 +296,12 @@ impl BenchReport {
             reconfigurations: v.req_u64("reconfigurations")?,
             model_switches: v.req_u64("model_switches")?,
             sim_cycles_total: v.req_u64("sim_cycles_total")?,
+            // Pre-energy reports recorded no energy; `energy_mj` and
+            // `joules_per_request` are derived, so recomputed not trusted.
+            energy_pj_total: v
+                .get("energy_pj_total")
+                .and_then(Value::as_u64)
+                .unwrap_or(0),
             // Pre-pod reports carry neither field: one implicit group
             // whose per-group breakdown was never recorded.
             chip_groups: v.get("chip_groups").and_then(Value::as_u64).unwrap_or(1),
@@ -333,6 +370,7 @@ mod tests {
                 padded_slots: 3,
                 reconfigurations: 5,
                 sim_cycles: 123_456,
+                energy_pj: 4_000_000,
             },
         );
         let mut miss_by_tier = BTreeMap::new();
@@ -356,6 +394,7 @@ mod tests {
             reconfigurations: 5,
             model_switches: 2,
             sim_cycles_total: 123_456,
+            energy_pj_total: 4_000_000,
             chip_groups: 2,
             group_cycles: vec![100_000, 23_456],
             sim_wall_us: 1234.5,
@@ -383,6 +422,61 @@ mod tests {
         assert!((r.reconfigs_per_request() - 5.0 / 9.0).abs() < 1e-12);
         r.served = 0;
         assert_eq!(r.reconfigs_per_request(), 0.0);
+    }
+
+    #[test]
+    fn energy_derivations_and_zero_served_guard() {
+        let mut r = report();
+        assert!((r.energy_mj() - 4e-3).abs() < 1e-15);
+        assert!((r.joules_per_request() - 4e-6 / 8.0).abs() < 1e-18);
+        r.served = 0;
+        assert_eq!(r.joules_per_request(), 0.0);
+    }
+
+    #[test]
+    fn pre_energy_reports_default_to_zero_energy() {
+        // Reports persisted before energy accounting carry no energy
+        // fields anywhere; they must read back as zero (which keeps the
+        // bench energy gate inert against old baselines).
+        let Value::Obj(fields) = report().to_json() else {
+            panic!("report serializes to an object")
+        };
+        let energy_fields = ["energy_pj_total", "energy_mj", "joules_per_request", "energy_pj"];
+        let stripped = Value::Obj(
+            fields
+                .into_iter()
+                .map(|(k, v)| {
+                    if k == "per_model" {
+                        let Value::Obj(models) = v else { panic!("per_model object") };
+                        let models = models
+                            .into_iter()
+                            .map(|(name, m)| {
+                                let Value::Obj(mf) = m else { panic!("model object") };
+                                (
+                                    name,
+                                    Value::Obj(
+                                        mf.into_iter()
+                                            .filter(|(k, _)| {
+                                                !energy_fields.contains(&k.as_str())
+                                            })
+                                            .collect(),
+                                    ),
+                                )
+                            })
+                            .collect();
+                        (k, Value::Obj(models))
+                    } else {
+                        (k, v)
+                    }
+                })
+                .filter(|(k, _)| !energy_fields.contains(&k.as_str()))
+                .collect(),
+        );
+        let back = BenchReport::from_json(&stripped).unwrap();
+        assert_eq!(back.energy_pj_total, 0);
+        assert_eq!(back.energy_mj(), 0.0);
+        assert_eq!(back.joules_per_request(), 0.0);
+        assert_eq!(back.per_model["alexnet"].energy_pj, 0);
     }
 
     #[test]

@@ -220,6 +220,9 @@ pub struct TunedConfig {
     pub throughput_rps: f64,
     /// The selected point's goodput, SLO-met responses/sec.
     pub goodput_rps: f64,
+    /// The selected point's predicted energy per served request, joules
+    /// (0 on configs tuned before energy accounting).
+    pub joules_per_request: f64,
     /// Per-model admit budgets (`2 × batch`): the door rejects a request
     /// whose model already holds this many queued.
     pub admission: BTreeMap<String, usize>,
@@ -255,6 +258,7 @@ impl TunedConfig {
             ("feasible", Value::Bool(self.feasible)),
             ("throughput_rps", Value::Num(self.throughput_rps)),
             ("goodput_rps", Value::Num(self.goodput_rps)),
+            ("joules_per_request", Value::Num(self.joules_per_request)),
             (
                 "admission",
                 obj(self
@@ -301,6 +305,11 @@ impl TunedConfig {
                 .ok_or_else(|| bad("feasible is not a bool"))?,
             throughput_rps: v.req_f64("throughput_rps")?,
             goodput_rps: v.req_f64("goodput_rps")?,
+            // Pre-energy tuned configs recorded no energy.
+            joules_per_request: v
+                .get("joules_per_request")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0),
             admission,
             priorities,
             expected_mix: parse_u64_map(v.req("expected_mix")?, "expected_mix")?,
@@ -415,6 +424,7 @@ pub fn tune(
         feasible: chosen.feasible,
         throughput_rps: chosen.report.throughput_rps,
         goodput_rps: chosen.report.goodput_rps,
+        joules_per_request: chosen.report.joules_per_request(),
         admission,
         priorities,
         expected_mix: mix,
@@ -622,6 +632,7 @@ mod tests {
             feasible: true,
             throughput_rps: 123.5,
             goodput_rps: 120.25,
+            joules_per_request: 0.000125,
             admission: [("a".to_string(), 8usize)].into_iter().collect(),
             priorities: [("a".to_string(), 0u8), ("b".to_string(), 1u8)]
                 .into_iter()

@@ -37,15 +37,22 @@ pub mod sweep;
 
 pub use cmu::Cmu;
 pub use controller::MainController;
-pub use partition::{select_joint, select_joint_parallel, PartitionSelection, ShardChoice};
+pub use partition::{
+    select_joint, select_joint_objective, select_joint_objective_parallel, select_joint_parallel,
+    PartitionSelection, ShardChoice,
+};
 pub use pipeline::{Deployment, FlexPipeline};
-pub use plan::{compile_plan, compile_plan_parallel, provenance_key, ExecutionPlan, PlanLayer};
+pub use plan::{
+    compile_plan, compile_plan_objective, compile_plan_objective_parallel, compile_plan_parallel,
+    provenance_key, provenance_key_objective, ExecutionPlan, PlanLayer, PlanObjective,
+};
 pub use selector::{
     select_exhaustive, select_exhaustive_cached, select_exhaustive_parallel, select_heuristic,
     select_heuristic_cached, Selection,
 };
 pub use sweep::{
-    sweep_models, sweep_models_sharded, sweep_zoo, sweep_zoo_chip_grid, sweep_zoo_sharded,
-    sweep_zoo_sharded_stored, sweep_zoo_sizes, sweep_zoo_stored, ModelShardSweep, ModelSweep,
-    ShardSweepResult, SweepResult,
+    sweep_models, sweep_models_objective, sweep_models_sharded, sweep_models_sharded_objective,
+    sweep_zoo, sweep_zoo_chip_grid, sweep_zoo_sharded, sweep_zoo_sharded_stored,
+    sweep_zoo_sharded_stored_objective, sweep_zoo_sizes, sweep_zoo_stored,
+    sweep_zoo_stored_objective, ModelShardSweep, ModelSweep, ShardSweepResult, SweepResult,
 };

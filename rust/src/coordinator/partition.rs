@@ -21,7 +21,7 @@ use crate::sim::shard::ShardStrategy;
 use crate::sim::Dataflow;
 use crate::topology::Topology;
 
-use super::plan;
+use super::plan::{self, PlanObjective};
 use super::selector::df_index;
 
 /// One layer's joint pick: which dataflow to run and how to split it.
@@ -140,7 +140,21 @@ pub fn select_joint(
     chips: u32,
     cache: &ShapeCache,
 ) -> PartitionSelection {
-    plan::compile_plan(arch, topo, opts, chips, cache).partition_selection()
+    select_joint_objective(arch, topo, opts, chips, PlanObjective::default(), cache)
+}
+
+/// [`select_joint`] under an explicit [`PlanObjective`]: the per-layer
+/// argmin runs over the cycles grid, the energy grid, or the EDP product
+/// of the two.  `PlanObjective::Latency` is bit-for-bit `select_joint`.
+pub fn select_joint_objective(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    objective: PlanObjective,
+    cache: &ShapeCache,
+) -> PartitionSelection {
+    plan::compile_plan_objective(arch, topo, opts, chips, objective, cache).partition_selection()
 }
 
 /// [`select_joint`] with the per-layer grids fanned across `threads`
@@ -153,7 +167,22 @@ pub fn select_joint_parallel(
     threads: usize,
     cache: &ShapeCache,
 ) -> PartitionSelection {
-    plan::compile_plan_parallel(arch, topo, opts, chips, threads, cache).partition_selection()
+    select_joint_objective_parallel(arch, topo, opts, chips, PlanObjective::default(), threads, cache)
+}
+
+/// [`select_joint_objective`] fanned across `threads` workers (0 = all
+/// cores); byte-identical to the serial objective path.
+pub fn select_joint_objective_parallel(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    objective: PlanObjective,
+    threads: usize,
+    cache: &ShapeCache,
+) -> PartitionSelection {
+    plan::compile_plan_objective_parallel(arch, topo, opts, chips, objective, threads, cache)
+        .partition_selection()
 }
 
 #[cfg(test)]
@@ -227,6 +256,17 @@ mod tests {
             let got = select_joint_parallel(&arch(), &topo, opts, 4, threads, &cache);
             assert_eq!(want, got, "{threads} threads");
         }
+    }
+
+    #[test]
+    fn latency_objective_wrapper_is_byte_identical() {
+        let topo = zoo::alexnet();
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        let want = select_joint(&arch(), &topo, opts, 4, &cache);
+        let got =
+            select_joint_objective(&arch(), &topo, opts, 4, PlanObjective::Latency, &cache);
+        assert_eq!(want, got);
     }
 
     #[test]

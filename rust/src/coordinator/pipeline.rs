@@ -30,7 +30,7 @@ use crate::topology::Topology;
 
 use super::cmu::Cmu;
 use super::controller::MainController;
-use super::plan::{self, ExecutionPlan};
+use super::plan::{self, ExecutionPlan, PlanObjective};
 use super::selector::{self, Selection};
 
 /// Which selector the pipeline uses.
@@ -49,6 +49,10 @@ pub struct FlexPipeline {
     arch: ArchConfig,
     opts: SimOptions,
     selector: SelectorKind,
+    /// Planning objective the exhaustive compile optimizes for.  The
+    /// heuristic selector ignores it (shape rules predict latency only),
+    /// so heuristic plans always carry the latency objective.
+    objective: PlanObjective,
     /// Optional shared layer-shape memo table; when set, every profiling
     /// and baseline simulation goes through it (identical results, shared
     /// work across models/sizes in a sweep).
@@ -79,6 +83,7 @@ impl FlexPipeline {
             arch,
             opts: SimOptions::default(),
             selector: SelectorKind::default(),
+            objective: PlanObjective::default(),
             cache: None,
         }
     }
@@ -92,6 +97,15 @@ impl FlexPipeline {
     /// Choose which selector the deploy flow runs.
     pub fn with_selector(mut self, selector: SelectorKind) -> Self {
         self.selector = selector;
+        self
+    }
+
+    /// Choose the planning objective the exhaustive compile optimizes for
+    /// (default [`PlanObjective::Latency`], which is bit-for-bit the
+    /// pre-objective pipeline).  The heuristic selector always plans for
+    /// latency regardless of this setting.
+    pub fn with_objective(mut self, objective: PlanObjective) -> Self {
+        self.objective = objective;
         self
     }
 
@@ -117,7 +131,9 @@ impl FlexPipeline {
             }
         };
         match self.selector {
-            SelectorKind::Exhaustive => plan::compile_plan(&self.arch, topo, self.opts, 1, cache),
+            SelectorKind::Exhaustive => {
+                plan::compile_plan_objective(&self.arch, topo, self.opts, 1, self.objective, cache)
+            }
             SelectorKind::Heuristic => {
                 let selection =
                     selector::select_heuristic_cached(&self.arch, topo, self.opts, cache);
@@ -271,6 +287,23 @@ mod tests {
             prev = avg;
         }
         assert!(prev > 1.15, "256x256 avg Flex-vs-OS speedup only {prev}");
+    }
+
+    #[test]
+    fn energy_objective_plans_compile_and_deploy() {
+        let topo = zoo::resnet18();
+        let pipe =
+            FlexPipeline::new(ArchConfig::square(32)).with_objective(PlanObjective::Energy);
+        let plan = pipe.compile(&topo);
+        assert_eq!(plan.objective, PlanObjective::Energy);
+        let d = pipe.deploy_plan(&topo, &plan).unwrap();
+        assert_eq!(d.plan.objective, PlanObjective::Energy);
+        // The default pipeline is bit-for-bit the latency objective.
+        let default_plan = FlexPipeline::new(ArchConfig::square(32)).compile(&topo);
+        let latency_plan = FlexPipeline::new(ArchConfig::square(32))
+            .with_objective(PlanObjective::Latency)
+            .compile(&topo);
+        assert_eq!(default_plan, latency_plan);
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //!   path (`Dataflow::ALL`-major, [`ShardStrategy::ALL`]-minor, first
 //!   strict minimum), so serial, cached, parallel and sharded selections
 //!   stay byte-identical;
+//! * every candidate cell also carries its predicted energy (integer
+//!   picojoules, from [`crate::cost::energy::layer_energy`] over the same
+//!   cached stats), and a [`PlanObjective`] decides which grid the argmin
+//!   runs over — pure latency (the default, byte-identical to the
+//!   historical tie-break), pure energy, or energy-delay product;
 //! * plans serialize through [`crate::util::json`] and persist in a
 //!   [`PlanStore`] keyed by their provenance, enabling cross-run warm
 //!   starts (`flex-tpu plan compile|show|check`, `--plan-cache`).
@@ -49,6 +54,8 @@
 //! ```
 
 use crate::config::ArchConfig;
+use crate::cost::energy::layer_energy;
+use crate::cost::pe::PeVariant;
 use crate::error::{Error, Result};
 use crate::sim::engine::{LayerStats, SimOptions};
 use crate::sim::parallel::{parallel_map, ShapeCache};
@@ -63,24 +70,142 @@ use super::selector::{df_index, Selection};
 
 /// Version of the plan/store layout.  Part of every provenance hash, so
 /// bumping it invalidates persisted plans and shape entries wholesale.
-pub const PLAN_SCHEMA_VERSION: u32 = 1;
+/// v2: per-candidate energy grids + the planning objective joined the plan
+/// IR and the provenance key, so v1 stores read cold instead of mis-keyed.
+pub const PLAN_SCHEMA_VERSION: u32 = 2;
+
+/// What the per-layer argmin minimizes.
+///
+/// `Latency` reproduces the historical cycles-only tie-break bit for bit
+/// and is the default everywhere; the other two run the same grid search
+/// over the energy axis ([`PlanLayer::energy_pj`]).  The objective is part
+/// of every provenance key, so plans compiled under different objectives
+/// never warm-start each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanObjective {
+    /// Minimize end-to-end cycles (the paper's objective; the default).
+    #[default]
+    Latency,
+    /// Minimize predicted energy (pJ); ties break toward fewer cycles,
+    /// then grid order.
+    Energy,
+    /// Minimize the energy-delay product (pJ x cycles, exact in u128);
+    /// ties break toward grid order.
+    Edp,
+}
+
+impl PlanObjective {
+    /// Every objective, in CLI listing order.
+    pub const ALL: [PlanObjective; 3] =
+        [PlanObjective::Latency, PlanObjective::Energy, PlanObjective::Edp];
+
+    /// Canonical lowercase name (CLI flag value and provenance token).
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanObjective::Latency => "latency",
+            PlanObjective::Energy => "energy",
+            PlanObjective::Edp => "edp",
+        }
+    }
+
+    /// Parse a CLI flag / stored token; `None` on anything unknown.
+    pub fn parse(s: &str) -> Option<PlanObjective> {
+        match s {
+            "latency" => Some(PlanObjective::Latency),
+            "energy" => Some(PlanObjective::Energy),
+            "edp" => Some(PlanObjective::Edp),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PlanObjective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The documented fallback for a fully saturated grid: the first cell in
+/// listing order.  A grid of all `u64::MAX` means every candidate was
+/// infeasible — nothing was *chosen*, so the degenerate pick is explicit
+/// (and debug builds assert) instead of falling out of the loop silently.
+const SATURATED_FALLBACK: ShardChoice = ShardChoice {
+    dataflow: Dataflow::Is,
+    strategy: ShardStrategy::Rows,
+};
+
+/// True when every cell of the grid is saturated (`u64::MAX`).
+fn grid_saturated(grid: &[[u64; 3]; 3]) -> bool {
+    grid.iter().flatten().all(|&c| c == u64::MAX)
+}
 
 /// The one per-layer tie-break every selection path shares: first strict
 /// minimum of the grid in `Dataflow::ALL`-major, [`ShardStrategy::ALL`]-minor
 /// order (IS < OS < WS, then Rows < Cols < Batch).  Single-chip selection is
 /// the degenerate case where all strategy columns of a row are equal, which
 /// makes its dataflow pick identical to the historical per-row argmin.
+///
+/// A grid of all `u64::MAX` (every candidate infeasible/saturated) has no
+/// minimum; debug builds assert and release builds return the documented
+/// [`SATURATED_FALLBACK`] `(Is, Rows)`.
 pub(crate) fn argmin_choice(grid: &[[u64; 3]; 3]) -> ShardChoice {
-    let mut best = ShardChoice {
-        dataflow: Dataflow::Is,
-        strategy: ShardStrategy::Rows,
-    };
+    debug_assert!(
+        !grid_saturated(grid),
+        "argmin_choice on a fully saturated grid: every candidate is infeasible"
+    );
+    if grid_saturated(grid) {
+        return SATURATED_FALLBACK;
+    }
+    let mut best = SATURATED_FALLBACK;
     let mut best_cycles = u64::MAX;
     for df in Dataflow::ALL {
         for strategy in ShardStrategy::ALL {
             let cycles = grid[df_index(df)][strategy_index(strategy)];
             if cycles < best_cycles {
                 best_cycles = cycles;
+                best = ShardChoice { dataflow: df, strategy };
+            }
+        }
+    }
+    best
+}
+
+/// [`argmin_choice`] generalized over the [`PlanObjective`] axis.
+///
+/// `Latency` delegates to [`argmin_choice`] untouched, so default-objective
+/// selections stay byte-identical to every pre-objective release.  `Energy`
+/// takes the first strict minimum of `(energy, cycles)` in grid order;
+/// `Edp` the first strict minimum of the exact u128 product
+/// `cycles x energy`.  The saturated-grid contract matches
+/// [`argmin_choice`]: debug-assert, then the documented `(Is, Rows)`
+/// fallback.
+pub(crate) fn argmin_choice_objective(
+    cycles: &[[u64; 3]; 3],
+    energy: &[[u64; 3]; 3],
+    objective: PlanObjective,
+) -> ShardChoice {
+    if objective == PlanObjective::Latency {
+        return argmin_choice(cycles);
+    }
+    debug_assert!(
+        !(grid_saturated(cycles) && grid_saturated(energy)),
+        "argmin_choice_objective on a fully saturated grid"
+    );
+    let mut best = SATURATED_FALLBACK;
+    let mut best_key = (u128::MAX, u128::MAX);
+    let mut found = false;
+    for df in Dataflow::ALL {
+        for strategy in ShardStrategy::ALL {
+            let c = u128::from(cycles[df_index(df)][strategy_index(strategy)]);
+            let e = u128::from(energy[df_index(df)][strategy_index(strategy)]);
+            let key = match objective {
+                PlanObjective::Latency => unreachable!("handled above"),
+                PlanObjective::Energy => (e, c),
+                PlanObjective::Edp => (c * e, 0),
+            };
+            if !found || key < best_key {
+                found = true;
+                best_key = key;
                 best = ShardChoice { dataflow: df, strategy };
             }
         }
@@ -122,6 +247,12 @@ pub struct PlanLayer {
     /// `[Dataflow::ALL order][ShardStrategy::ALL order]`; on single-chip
     /// plans every strategy column of a row holds the same value.
     pub candidates: [[u64; 3]; 3],
+    /// Predicted energy of every candidate in integer picojoules (rounded
+    /// once from the f64 [`crate::cost::energy::EnergyBreakdown`] total, so
+    /// grids are deterministic), same indexing as `candidates`.  Multi-chip
+    /// cells sum the per-shard breakdowns; inter-chip link transfer energy
+    /// is not modeled.
+    pub energy_pj: [[u64; 3]; 3],
 }
 
 impl PlanLayer {
@@ -133,6 +264,11 @@ impl PlanLayer {
     /// Predicted cycles including the reconfiguration charge.
     pub fn total_cycles(&self) -> u64 {
         self.layer_cycles() + self.reconfig_cycles
+    }
+
+    /// Predicted energy (pJ) of the chosen candidate.
+    pub fn chosen_energy_pj(&self) -> u64 {
+        self.energy_pj[df_index(self.choice.dataflow)][strategy_index(self.choice.strategy)]
     }
 }
 
@@ -178,6 +314,8 @@ pub struct ExecutionPlan {
     /// Content hash of everything the plan depends on (see
     /// [`provenance_key`]); the key plans persist and reload under.
     pub provenance: String,
+    /// The objective the per-layer argmin ran under.
+    pub objective: PlanObjective,
     /// Per-layer decisions in execution order.
     pub layers: Vec<PlanLayer>,
 }
@@ -187,6 +325,25 @@ impl ExecutionPlan {
     /// charges — the number every sweep/table reports.
     pub fn flex_cycles(&self) -> u64 {
         self.layers.iter().map(PlanLayer::total_cycles).sum()
+    }
+
+    /// Total predicted energy of the chosen schedule, integer picojoules
+    /// (sum of the per-layer winners; reconfiguration energy is not
+    /// modeled, so the pure-energy objective minimizes this total
+    /// layer-by-layer).
+    pub fn flex_energy_pj(&self) -> u64 {
+        self.layers.iter().map(PlanLayer::chosen_energy_pj).sum()
+    }
+
+    /// Total predicted energy in millijoules (reporting unit).
+    pub fn flex_energy_mj(&self) -> f64 {
+        self.flex_energy_pj() as f64 * 1e-9
+    }
+
+    /// Total energy (pJ) had every layer run statically under `df` (first
+    /// strategy column, mirroring [`Self::static_dataflow_cycles`]).
+    pub fn static_dataflow_energy_pj(&self, df: Dataflow) -> u64 {
+        self.layers.iter().map(|l| l.energy_pj[df_index(df)][0]).sum()
     }
 
     /// Total reconfiguration cycles charged across the plan.
@@ -245,18 +402,17 @@ impl ExecutionPlan {
 
     /// Serialize to the store's JSON layout.
     pub fn to_json(&self) -> Value {
+        let grid_json = |grid: &[[u64; 3]; 3]| {
+            Value::Arr(
+                grid.iter()
+                    .map(|row| Value::Arr(row.iter().map(|&c| Value::Num(c as f64)).collect()))
+                    .collect(),
+            )
+        };
         let layers = self
             .layers
             .iter()
             .map(|l| {
-                let candidates = Value::Arr(
-                    l.candidates
-                        .iter()
-                        .map(|row| {
-                            Value::Arr(row.iter().map(|&c| Value::Num(c as f64)).collect())
-                        })
-                        .collect(),
-                );
                 obj(vec![
                     ("name", Value::Str(l.name.clone())),
                     ("dataflow", Value::Str(l.choice.dataflow.name().to_string())),
@@ -265,7 +421,8 @@ impl ExecutionPlan {
                     ("compute_cycles", Value::Num(l.compute_cycles as f64)),
                     ("stall_cycles", Value::Num(l.stall_cycles as f64)),
                     ("comm_cycles", Value::Num(l.comm_cycles as f64)),
-                    ("candidates", candidates),
+                    ("candidates", grid_json(&l.candidates)),
+                    ("energy_pj", grid_json(&l.energy_pj)),
                 ])
             })
             .collect();
@@ -273,6 +430,7 @@ impl ExecutionPlan {
             ("model", Value::Str(self.model.clone())),
             ("chips", Value::Num(f64::from(self.chips))),
             ("provenance", Value::Str(self.provenance.clone())),
+            ("objective", Value::Str(self.objective.name().to_string())),
             ("layers", Value::Arr(layers)),
         ])
     }
@@ -285,31 +443,35 @@ impl ExecutionPlan {
             .as_array()
             .ok_or_else(|| bad("layers is not an array"))?;
         let mut layers = Vec::with_capacity(layers_json.len());
+        let parse_grid = |l: &Value, key: &str| -> Result<[[u64; 3]; 3]> {
+            let rows = l
+                .req(key)?
+                .as_array()
+                .ok_or_else(|| bad(&format!("{key} is not an array")))?;
+            if rows.len() != 3 {
+                return Err(bad(&format!("{key} grid must have 3 rows")));
+            }
+            let mut grid = [[0u64; 3]; 3];
+            for (i, row) in rows.iter().enumerate() {
+                let cells = row
+                    .as_array()
+                    .ok_or_else(|| bad(&format!("{key} row is not an array")))?;
+                if cells.len() != 3 {
+                    return Err(bad(&format!("{key} row must have 3 cells")));
+                }
+                for (j, cell) in cells.iter().enumerate() {
+                    grid[i][j] = cell
+                        .as_u64()
+                        .ok_or_else(|| bad(&format!("{key} cell is not a u64")))?;
+                }
+            }
+            Ok(grid)
+        };
         for l in layers_json {
             let dataflow = Dataflow::parse(l.req_str("dataflow")?)
                 .ok_or_else(|| bad("unknown dataflow"))?;
             let strategy = ShardStrategy::parse(l.req_str("strategy")?)
                 .ok_or_else(|| bad("unknown strategy"))?;
-            let rows = l
-                .req("candidates")?
-                .as_array()
-                .ok_or_else(|| bad("candidates is not an array"))?;
-            if rows.len() != 3 {
-                return Err(bad("candidate grid must have 3 rows"));
-            }
-            let mut candidates = [[0u64; 3]; 3];
-            for (i, row) in rows.iter().enumerate() {
-                let cells = row
-                    .as_array()
-                    .ok_or_else(|| bad("candidate row is not an array"))?;
-                if cells.len() != 3 {
-                    return Err(bad("candidate row must have 3 cells"));
-                }
-                for (j, cell) in cells.iter().enumerate() {
-                    candidates[i][j] =
-                        cell.as_u64().ok_or_else(|| bad("candidate cell is not a u64"))?;
-                }
-            }
             layers.push(PlanLayer {
                 name: l.req_str("name")?.to_string(),
                 choice: ShardChoice { dataflow, strategy },
@@ -317,17 +479,21 @@ impl ExecutionPlan {
                 compute_cycles: l.req_u64("compute_cycles")?,
                 stall_cycles: l.req_u64("stall_cycles")?,
                 comm_cycles: l.req_u64("comm_cycles")?,
-                candidates,
+                candidates: parse_grid(l, "candidates")?,
+                energy_pj: parse_grid(l, "energy_pj")?,
             });
         }
         let chips = v.req_u64("chips")?;
         if chips == 0 || chips > u64::from(ArchConfig::MAX_CHIPS) {
             return Err(bad("chip count out of range"));
         }
+        let objective = PlanObjective::parse(v.req_str("objective")?)
+            .ok_or_else(|| bad("unknown objective"))?;
         Ok(ExecutionPlan {
             model: v.req_str("model")?.to_string(),
             chips: chips as u32,
             provenance: v.req_str("provenance")?.to_string(),
+            objective,
             layers,
         })
     }
@@ -383,24 +549,37 @@ fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
     h
 }
 
-/// Content hash keying compiled plans and persisted shape entries: covers
-/// the schema version, the full [`ArchConfig`] (geometry, memory,
-/// reconfiguration cost, clock, interconnect), every layer of every
-/// topology in `models`, the [`SimOptions`], and the chip count.  Worker
-/// thread counts are deliberately excluded — selection is byte-identical at
-/// any thread count, so warm starts must be too.
+/// [`provenance_key_objective`] at the default (pure-latency) objective —
+/// the key every historical call site computes.
 pub fn provenance_key(
     arch: &ArchConfig,
     models: &[Topology],
     opts: SimOptions,
     chips: u32,
 ) -> String {
+    provenance_key_objective(arch, models, opts, chips, PlanObjective::default())
+}
+
+/// Content hash keying compiled plans and persisted shape entries: covers
+/// the schema version, the full [`ArchConfig`] (geometry, memory,
+/// reconfiguration cost, clock, interconnect), every layer of every
+/// topology in `models`, the [`SimOptions`], the chip count, and the
+/// planning objective.  Worker thread counts are deliberately excluded —
+/// selection is byte-identical at any thread count, so warm starts must be
+/// too.
+pub fn provenance_key_objective(
+    arch: &ArchConfig,
+    models: &[Topology],
+    opts: SimOptions,
+    chips: u32,
+    objective: PlanObjective,
+) -> String {
     use std::fmt::Write as _;
     let mut s = String::new();
     let _ = write!(
         s,
-        "schema={PLAN_SCHEMA_VERSION};arch={}x{};mem={}/{}/{}/{}/{};reconfig={};clock={:016x};\
-         link={}/{};chips={};opts={:?}/{:?}/{}",
+        "schema={PLAN_SCHEMA_VERSION};objective={objective};arch={}x{};mem={}/{}/{}/{}/{};\
+         reconfig={};clock={:016x};link={}/{};chips={};opts={:?}/{:?}/{}",
         arch.array_rows,
         arch.array_cols,
         arch.memory.ifmap_sram_kib,
@@ -450,13 +629,22 @@ pub fn combined_provenance(parts: &[String]) -> String {
     format!("{h:016x}")
 }
 
+/// One candidate's predicted energy as a plan-grid cell: the f64 breakdown
+/// total (Flex PE variant — the planner plans for the flexible array)
+/// rounded once to integer picojoules.
+fn energy_cell_pj(arch: &ArchConfig, stats: &LayerStats) -> u64 {
+    layer_energy(arch, PeVariant::Flex, stats).total_pj().round() as u64
+}
+
 /// Compile one layer: evaluate the candidate grid through the shared cache,
-/// apply the one tie-break, and record the chosen configuration's forecast.
+/// apply the objective's tie-break, and record the chosen configuration's
+/// forecast.
 fn plan_layer(
     arch: &ArchConfig,
     layer: &Layer,
     chips: u32,
     opts: SimOptions,
+    objective: PlanObjective,
     cache: &ShapeCache,
 ) -> PlanLayer {
     if chips <= 1 {
@@ -465,11 +653,14 @@ fn plan_layer(
             .map(|&df| cache.simulate_layer(arch, layer, df, opts))
             .collect();
         let mut row = [0u64; 3];
+        let mut energy_row = [0u64; 3];
         for (i, stats) in row_stats.iter().enumerate() {
             row[i] = stats.total_cycles();
+            energy_row[i] = energy_cell_pj(arch, stats);
         }
         let candidates = row_grid(&row);
-        let choice = argmin_choice(&candidates);
+        let energy_pj = row_grid(&energy_row);
+        let choice = argmin_choice_objective(&candidates, &energy_pj, objective);
         let chosen = &row_stats[df_index(choice.dataflow)];
         PlanLayer {
             name: layer.name.clone(),
@@ -479,19 +670,29 @@ fn plan_layer(
             stall_cycles: chosen.stall_cycles,
             comm_cycles: 0,
             candidates,
+            energy_pj,
         }
     } else {
         let mut candidates = [[0u64; 3]; 3];
+        let mut energy_pj = [[0u64; 3]; 3];
         let mut cells = Vec::with_capacity(9);
         for df in Dataflow::ALL {
             for strategy in ShardStrategy::ALL {
                 let stats =
                     simulate_layer_sharded_cached(arch, layer, df, strategy, chips, opts, cache);
                 candidates[df_index(df)][strategy_index(strategy)] = stats.total_cycles();
+                // Every shard burns its own MAC/SRAM/DRAM/leakage budget;
+                // sum the per-chip breakdowns in f64 and round once.
+                let total_pj: f64 = stats
+                    .per_chip
+                    .iter()
+                    .map(|s| layer_energy(arch, PeVariant::Flex, s).total_pj())
+                    .sum();
+                energy_pj[df_index(df)][strategy_index(strategy)] = total_pj.round() as u64;
                 cells.push(stats);
             }
         }
-        let choice = argmin_choice(&candidates);
+        let choice = argmin_choice_objective(&candidates, &energy_pj, objective);
         let chosen =
             &cells[df_index(choice.dataflow) * 3 + strategy_index(choice.strategy)];
         PlanLayer {
@@ -502,6 +703,7 @@ fn plan_layer(
             stall_cycles: chosen.stall_cycles,
             comm_cycles: chosen.comm_cycles,
             candidates,
+            energy_pj,
         }
     }
 }
@@ -514,6 +716,7 @@ fn assemble_plan(
     topo: &Topology,
     opts: SimOptions,
     chips: u32,
+    objective: PlanObjective,
     mut layers: Vec<PlanLayer>,
 ) -> ExecutionPlan {
     for i in 1..layers.len() {
@@ -524,18 +727,20 @@ fn assemble_plan(
     ExecutionPlan {
         model: topo.name.clone(),
         chips: chips.max(1),
-        provenance: provenance_key(arch, std::slice::from_ref(topo), opts, chips),
+        provenance: provenance_key_objective(
+            arch,
+            std::slice::from_ref(topo),
+            opts,
+            chips,
+            objective,
+        ),
+        objective,
         layers,
     }
 }
 
-/// Compile `topo` into an [`ExecutionPlan`] at `chips` chips, serially.
-///
-/// At one chip this is the paper's exhaustive selector (three profiling
-/// passes per layer); at more it is the joint (dataflow × shard strategy)
-/// grid search.  Every simulation flows through `cache`, so a warm cache
-/// (e.g. preloaded from a [`PlanStore`]) compiles without any
-/// `simulate_layer` calls.
+/// [`compile_plan_objective`] at the default (pure-latency) objective —
+/// byte-identical to every pre-objective release.
 pub fn compile_plan(
     arch: &ArchConfig,
     topo: &Topology,
@@ -543,12 +748,30 @@ pub fn compile_plan(
     chips: u32,
     cache: &ShapeCache,
 ) -> ExecutionPlan {
+    compile_plan_objective(arch, topo, opts, chips, PlanObjective::default(), cache)
+}
+
+/// Compile `topo` into an [`ExecutionPlan`] at `chips` chips, serially.
+///
+/// At one chip this is the paper's exhaustive selector (three profiling
+/// passes per layer); at more it is the joint (dataflow × shard strategy)
+/// grid search, with the per-layer argmin run over `objective`'s axis.
+/// Every simulation flows through `cache`, so a warm cache (e.g. preloaded
+/// from a [`PlanStore`]) compiles without any `simulate_layer` calls.
+pub fn compile_plan_objective(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    objective: PlanObjective,
+    cache: &ShapeCache,
+) -> ExecutionPlan {
     let layers = topo
         .layers
         .iter()
-        .map(|layer| plan_layer(arch, layer, chips, opts, cache))
+        .map(|layer| plan_layer(arch, layer, chips, opts, objective, cache))
         .collect();
-    assemble_plan(arch, topo, opts, chips, layers)
+    assemble_plan(arch, topo, opts, chips, objective, layers)
 }
 
 /// [`compile_plan`] with the per-layer grids fanned across `threads`
@@ -561,16 +784,41 @@ pub fn compile_plan_parallel(
     threads: usize,
     cache: &ShapeCache,
 ) -> ExecutionPlan {
+    compile_plan_objective_parallel(
+        arch,
+        topo,
+        opts,
+        chips,
+        PlanObjective::default(),
+        threads,
+        cache,
+    )
+}
+
+/// [`compile_plan_objective`] with the per-layer grids fanned across
+/// `threads` workers (0 = all cores); byte-identical to the serial compile.
+pub fn compile_plan_objective_parallel(
+    arch: &ArchConfig,
+    topo: &Topology,
+    opts: SimOptions,
+    chips: u32,
+    objective: PlanObjective,
+    threads: usize,
+    cache: &ShapeCache,
+) -> ExecutionPlan {
     let layers = parallel_map(threads, &topo.layers, |_, layer| {
-        plan_layer(arch, layer, chips, opts, cache)
+        plan_layer(arch, layer, chips, opts, objective, cache)
     });
-    assemble_plan(arch, topo, opts, chips, layers)
+    assemble_plan(arch, topo, opts, chips, objective, layers)
 }
 
 /// Adopt an externally produced [`Selection`] (e.g. the heuristic
 /// selector's) into plan form: choices and candidate rows come from the
 /// selection, forecasts from the cache, reconfiguration charges and
-/// provenance from the shared assembly.
+/// provenance from the shared assembly.  The selection's decisions were
+/// latency-driven, so the plan is stamped with the default objective; the
+/// energy grid only prices the *chosen* dataflow per layer (replicated
+/// across the row), because the heuristic path never simulated the others.
 pub fn plan_from_selection(
     arch: &ArchConfig,
     topo: &Topology,
@@ -590,6 +838,7 @@ pub fn plan_from_selection(
         .map(|(i, layer)| {
             let df = selection.per_layer[i];
             let stats = cache.simulate_layer(arch, layer, df, opts);
+            let chosen_pj = energy_cell_pj(arch, &stats);
             PlanLayer {
                 name: layer.name.clone(),
                 choice: ShardChoice {
@@ -601,10 +850,11 @@ pub fn plan_from_selection(
                 stall_cycles: stats.stall_cycles,
                 comm_cycles: 0,
                 candidates: row_grid(&selection.cycles[i]),
+                energy_pj: row_grid(&[chosen_pj; 3]),
             }
         })
         .collect();
-    assemble_plan(arch, topo, opts, 1, layers)
+    assemble_plan(arch, topo, opts, 1, PlanObjective::default(), layers)
 }
 
 #[cfg(test)]
@@ -700,11 +950,148 @@ mod tests {
         use crate::util::json::parse;
         for bad in [
             "{}",
-            r#"{"model": "m", "chips": 0, "provenance": "x", "layers": []}"#,
-            r#"{"model": "m", "chips": 1, "provenance": "x", "layers": [{"name": "l"}]}"#,
+            r#"{"model": "m", "chips": 0, "provenance": "x", "objective": "latency", "layers": []}"#,
+            r#"{"model": "m", "chips": 1, "provenance": "x", "objective": "latency", "layers": [{"name": "l"}]}"#,
+            r#"{"model": "m", "chips": 1, "provenance": "x", "objective": "power", "layers": []}"#,
+            r#"{"model": "m", "chips": 1, "provenance": "x", "layers": []}"#,
         ] {
             let v = parse(bad).unwrap();
             assert!(ExecutionPlan::from_json(&v).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "fully saturated grid")]
+    fn saturated_grid_asserts_in_debug() {
+        argmin_choice(&[[u64::MAX; 3]; 3]);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn saturated_grid_falls_back_deterministically() {
+        // Release builds return the documented first-cell fallback instead
+        // of pretending a candidate won.
+        assert_eq!(argmin_choice(&[[u64::MAX; 3]; 3]), SATURATED_FALLBACK);
+        for objective in PlanObjective::ALL {
+            assert_eq!(
+                argmin_choice_objective(
+                    &[[u64::MAX; 3]; 3],
+                    &[[u64::MAX; 3]; 3],
+                    objective
+                ),
+                SATURATED_FALLBACK,
+                "{objective}"
+            );
+        }
+    }
+
+    #[test]
+    fn near_saturated_grid_picks_the_finite_cell() {
+        let mut grid = [[u64::MAX; 3]; 3];
+        grid[df_index(Dataflow::Ws)][strategy_index(ShardStrategy::Batch)] = 7;
+        let c = argmin_choice(&grid);
+        assert_eq!(c.dataflow, Dataflow::Ws);
+        assert_eq!(c.strategy, ShardStrategy::Batch);
+    }
+
+    #[test]
+    fn objective_argmin_tie_breaks_as_documented() {
+        let cycles = [[10, 20, 30], [40, 5, 60], [70, 80, 9]];
+        let energy = [[100, 2, 300], [400, 500, 2], [700, 800, 900]];
+        let pick = |objective| {
+            let c = argmin_choice_objective(&cycles, &energy, objective);
+            (c.dataflow, c.strategy)
+        };
+        // Latency: global cycle minimum (5).
+        assert_eq!(pick(PlanObjective::Latency), (Dataflow::Os, ShardStrategy::Cols));
+        // Energy: 2 pJ twice; the cycle tie-break prefers 20 over 60.
+        assert_eq!(pick(PlanObjective::Energy), (Dataflow::Is, ShardStrategy::Cols));
+        // EDP: 20 x 2 = 40 is the minimum product.
+        assert_eq!(pick(PlanObjective::Edp), (Dataflow::Is, ShardStrategy::Cols));
+    }
+
+    #[test]
+    fn latency_objective_is_byte_identical_to_default() {
+        let topo = zoo::alexnet();
+        let opts = SimOptions::default();
+        for chips in [1u32, 4] {
+            let cache = ShapeCache::new();
+            let default = compile_plan(&arch(), &topo, opts, chips, &cache);
+            let explicit = compile_plan_objective(
+                &arch(),
+                &topo,
+                opts,
+                chips,
+                PlanObjective::Latency,
+                &cache,
+            );
+            assert_eq!(default, explicit, "{chips} chips");
+        }
+    }
+
+    #[test]
+    fn energy_objective_never_picks_higher_energy() {
+        let topo = zoo::resnet18();
+        let opts = SimOptions::default();
+        let cache = ShapeCache::new();
+        for chips in [1u32, 4] {
+            let latency = compile_plan(&arch(), &topo, opts, chips, &cache);
+            let energy = compile_plan_objective(
+                &arch(),
+                &topo,
+                opts,
+                chips,
+                PlanObjective::Energy,
+                &cache,
+            );
+            for (l, e) in latency.layers.iter().zip(&energy.layers) {
+                assert!(
+                    e.chosen_energy_pj() <= l.chosen_energy_pj(),
+                    "{}: energy pick {} pJ > latency pick {} pJ",
+                    l.name,
+                    e.chosen_energy_pj(),
+                    l.chosen_energy_pj()
+                );
+            }
+            assert!(energy.flex_energy_pj() <= latency.flex_energy_pj());
+        }
+    }
+
+    #[test]
+    fn objective_is_part_of_provenance() {
+        let topo = zoo::alexnet();
+        let opts = SimOptions::default();
+        let slice = std::slice::from_ref(&topo);
+        let keys: Vec<String> = PlanObjective::ALL
+            .iter()
+            .map(|&o| provenance_key_objective(&arch(), slice, opts, 1, o))
+            .collect();
+        assert_eq!(keys[0], provenance_key(&arch(), slice, opts, 1), "latency is the default");
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j], "{i} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn objective_roundtrips_and_names_parse() {
+        for objective in PlanObjective::ALL {
+            assert_eq!(PlanObjective::parse(objective.name()), Some(objective));
+        }
+        assert_eq!(PlanObjective::parse("perf"), None);
+        let cache = ShapeCache::new();
+        let plan = compile_plan_objective(
+            &arch(),
+            &zoo::mobilenet(),
+            SimOptions::default(),
+            1,
+            PlanObjective::Edp,
+            &cache,
+        );
+        let back = ExecutionPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+        assert_eq!(back.objective, PlanObjective::Edp);
     }
 }

@@ -30,7 +30,7 @@ use crate::sim::Dataflow;
 use crate::topology::{zoo, Topology};
 
 use super::partition::PartitionSelection;
-use super::plan;
+use super::plan::{self, PlanObjective};
 use super::selector::{self, Selection};
 
 /// One model's sweep outcome (the content of a paper Table I row).
@@ -44,6 +44,9 @@ pub struct ModelSweep {
     pub flex_cycles: u64,
     /// Static baselines in `Dataflow::ALL` order (IS, OS, WS).
     pub static_cycles: [u64; 3],
+    /// Predicted energy of the per-layer winners, integer picojoules
+    /// (divide by 1e9 for mJ — see [`plan::ExecutionPlan::flex_energy_mj`]).
+    pub flex_energy_pj: u64,
 }
 
 impl ModelSweep {
@@ -95,13 +98,14 @@ fn sweep_model(
     arch: &ArchConfig,
     topo: &Topology,
     opts: SimOptions,
+    objective: PlanObjective,
     layer_threads: usize,
     cache: &ShapeCache,
 ) -> ModelSweep {
     let plan = if layer_threads > 1 {
-        plan::compile_plan_parallel(arch, topo, opts, 1, layer_threads, cache)
+        plan::compile_plan_objective_parallel(arch, topo, opts, 1, objective, layer_threads, cache)
     } else {
-        plan::compile_plan(arch, topo, opts, 1, cache)
+        plan::compile_plan_objective(arch, topo, opts, 1, objective, cache)
     };
     // Totals are read off the compiled plan rather than re-derived from the
     // selection — the plan IR is the single source of truth for roll-ups.
@@ -111,11 +115,13 @@ fn sweep_model(
         plan.static_dataflow_cycles(Dataflow::Os),
         plan.static_dataflow_cycles(Dataflow::Ws),
     ];
+    let flex_energy_pj = plan.flex_energy_pj();
     ModelSweep {
         model: topo.name.clone(),
         selection: plan.selection(),
         flex_cycles,
         static_cycles,
+        flex_energy_pj,
     }
 }
 
@@ -132,9 +138,22 @@ pub fn sweep_models(
     opts: SimOptions,
     cache: &ShapeCache,
 ) -> SweepResult {
+    sweep_models_objective(arch, models, threads, opts, PlanObjective::default(), cache)
+}
+
+/// [`sweep_models`] under an explicit [`PlanObjective`];
+/// `PlanObjective::Latency` is bit-for-bit the plain sweep.
+pub fn sweep_models_objective(
+    arch: &ArchConfig,
+    models: &[Topology],
+    threads: usize,
+    opts: SimOptions,
+    objective: PlanObjective,
+    cache: &ShapeCache,
+) -> SweepResult {
     let (threads, layer_threads) = split_threads(threads, models.len());
     let models = parallel_map(threads, models, |_, topo| {
-        sweep_model(arch, topo, opts, layer_threads, cache)
+        sweep_model(arch, topo, opts, objective, layer_threads, cache)
     });
     SweepResult {
         arch: *arch,
@@ -194,6 +213,9 @@ pub struct ModelShardSweep {
     /// The single-chip flex total from the plain sweep path (the PR-1
     /// engine), for speedup accounting.
     pub single_chip_cycles: u64,
+    /// Predicted energy of the per-layer joint winners, integer
+    /// picojoules.
+    pub flex_energy_pj: u64,
 }
 
 impl ModelShardSweep {
@@ -224,21 +246,33 @@ fn sweep_model_sharded(
     topo: &Topology,
     chips: u32,
     opts: SimOptions,
+    objective: PlanObjective,
     layer_threads: usize,
     cache: &ShapeCache,
 ) -> ModelShardSweep {
     let plan = if layer_threads > 1 {
-        plan::compile_plan_parallel(arch, topo, opts, chips, layer_threads, cache)
+        plan::compile_plan_objective_parallel(
+            arch,
+            topo,
+            opts,
+            chips,
+            objective,
+            layer_threads,
+            cache,
+        )
     } else {
-        plan::compile_plan(arch, topo, opts, chips, cache)
+        plan::compile_plan_objective(arch, topo, opts, chips, objective, cache)
     };
     let flex_cycles = plan.flex_cycles();
-    let single_chip_cycles = sweep_model(arch, topo, opts, layer_threads, cache).flex_cycles;
+    let flex_energy_pj = plan.flex_energy_pj();
+    let single_chip_cycles =
+        sweep_model(arch, topo, opts, objective, layer_threads, cache).flex_cycles;
     ModelShardSweep {
         model: topo.name.clone(),
         selection: plan.partition_selection(),
         flex_cycles,
         single_chip_cycles,
+        flex_energy_pj,
     }
 }
 
@@ -256,9 +290,31 @@ pub fn sweep_models_sharded(
     opts: SimOptions,
     cache: &ShapeCache,
 ) -> ShardSweepResult {
+    sweep_models_sharded_objective(
+        arch,
+        models,
+        chips,
+        threads,
+        opts,
+        PlanObjective::default(),
+        cache,
+    )
+}
+
+/// [`sweep_models_sharded`] under an explicit [`PlanObjective`];
+/// `PlanObjective::Latency` is bit-for-bit the plain sharded sweep.
+pub fn sweep_models_sharded_objective(
+    arch: &ArchConfig,
+    models: &[Topology],
+    chips: u32,
+    threads: usize,
+    opts: SimOptions,
+    objective: PlanObjective,
+    cache: &ShapeCache,
+) -> ShardSweepResult {
     let (threads, layer_threads) = split_threads(threads, models.len());
     let models = parallel_map(threads, models, |_, topo| {
-        sweep_model_sharded(arch, topo, chips, opts, layer_threads, cache)
+        sweep_model_sharded(arch, topo, chips, opts, objective, layer_threads, cache)
     });
     ShardSweepResult {
         arch: *arch,
@@ -309,10 +365,11 @@ fn stored_sweep<R>(
     opts: SimOptions,
     arch: &ArchConfig,
     chips: u32,
+    objective: PlanObjective,
     store: Option<&PlanStore>,
     run: impl FnOnce(&[Topology], &ShapeCache) -> R,
 ) -> Result<(R, usize)> {
-    let provenance = plan::provenance_key(arch, models, opts, chips);
+    let provenance = plan::provenance_key_objective(arch, models, opts, chips, objective);
     let cache = ShapeCache::new();
     let loaded = match store {
         Some(store) => store.load_shapes(&provenance, &cache),
@@ -341,9 +398,28 @@ pub fn sweep_zoo_stored(
     opts: SimOptions,
     store: Option<&PlanStore>,
 ) -> Result<(SweepResult, usize)> {
-    stored_sweep(&zoo::all_models(), opts, arch, 1, store, |models, cache| {
-        sweep_models(arch, models, threads, opts, cache)
-    })
+    sweep_zoo_stored_objective(arch, threads, opts, PlanObjective::default(), store)
+}
+
+/// [`sweep_zoo_stored`] under an explicit objective (`flex-tpu sweep
+/// --objective ...`); shape entries persist under the objective-qualified
+/// provenance key, so cross-objective runs never share warm starts.
+pub fn sweep_zoo_stored_objective(
+    arch: &ArchConfig,
+    threads: usize,
+    opts: SimOptions,
+    objective: PlanObjective,
+    store: Option<&PlanStore>,
+) -> Result<(SweepResult, usize)> {
+    stored_sweep(
+        &zoo::all_models(),
+        opts,
+        arch,
+        1,
+        objective,
+        store,
+        |models, cache| sweep_models_objective(arch, models, threads, opts, objective, cache),
+    )
 }
 
 /// [`sweep_zoo_sharded`] with the same [`PlanStore`] warm start as
@@ -356,9 +432,29 @@ pub fn sweep_zoo_sharded_stored(
     opts: SimOptions,
     store: Option<&PlanStore>,
 ) -> Result<(ShardSweepResult, usize)> {
-    stored_sweep(&zoo::all_models(), opts, arch, chips, store, |models, cache| {
-        sweep_models_sharded(arch, models, chips, threads, opts, cache)
-    })
+    sweep_zoo_sharded_stored_objective(arch, chips, threads, opts, PlanObjective::default(), store)
+}
+
+/// [`sweep_zoo_sharded_stored`] under an explicit objective.
+pub fn sweep_zoo_sharded_stored_objective(
+    arch: &ArchConfig,
+    chips: u32,
+    threads: usize,
+    opts: SimOptions,
+    objective: PlanObjective,
+    store: Option<&PlanStore>,
+) -> Result<(ShardSweepResult, usize)> {
+    stored_sweep(
+        &zoo::all_models(),
+        opts,
+        arch,
+        chips,
+        objective,
+        store,
+        |models, cache| {
+            sweep_models_sharded_objective(arch, models, chips, threads, opts, objective, cache)
+        },
+    )
 }
 
 #[cfg(test)]

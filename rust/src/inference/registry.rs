@@ -31,7 +31,10 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 
 use crate::config::ArchConfig;
-use crate::coordinator::plan::{compile_plan, provenance_key, ExecutionPlan, ReconfigForecast};
+use crate::coordinator::plan::{
+    compile_plan_objective, provenance_key_objective, ExecutionPlan, PlanObjective,
+    ReconfigForecast,
+};
 use crate::error::{Error, Result};
 use crate::sim::engine::SimOptions;
 use crate::sim::parallel::{CacheStats, ShapeCache};
@@ -121,6 +124,10 @@ pub struct ModelRegistry {
     models: RwLock<BTreeMap<String, Arc<ModelDeployment>>>,
     placement: PlacementPolicy,
     assignments: RwLock<BTreeMap<String, ModelPlacement>>,
+    /// Planning objective every registration (and width-N schedule)
+    /// compiles under.  Part of each plan's provenance key, so registries
+    /// with different objectives never share persisted plans.
+    objective: PlanObjective,
 }
 
 impl ModelRegistry {
@@ -141,6 +148,18 @@ impl ModelRegistry {
         store: Option<PlanStore>,
         placement: PlacementPolicy,
     ) -> Result<Self> {
+        Self::with_placement_objective(arch, store, placement, PlanObjective::default())
+    }
+
+    /// The full constructor: placement policy plus the planning objective
+    /// every registration compiles under.  `PlanObjective::Latency` is
+    /// bit-for-bit [`ModelRegistry::with_placement`].
+    pub fn with_placement_objective(
+        arch: ArchConfig,
+        store: Option<PlanStore>,
+        placement: PlacementPolicy,
+        objective: PlanObjective,
+    ) -> Result<Self> {
         arch.validate()?;
         if placement == PlacementPolicy::Single && arch.chips > 1 {
             return Err(Error::InvalidConfig(format!(
@@ -156,12 +175,18 @@ impl ModelRegistry {
             models: RwLock::new(BTreeMap::new()),
             placement,
             assignments: RwLock::new(BTreeMap::new()),
+            objective,
         })
     }
 
     /// The architecture every model deploys onto.
     pub fn arch(&self) -> &ArchConfig {
         &self.arch
+    }
+
+    /// The planning objective every registration compiles under.
+    pub fn objective(&self) -> PlanObjective {
+        self.objective
     }
 
     /// The shared cache's counters (cumulative over all registrations and
@@ -193,7 +218,13 @@ impl ModelRegistry {
             )));
         }
         let opts = SimOptions::default();
-        let provenance = provenance_key(&self.arch, std::slice::from_ref(&topo), opts, 1);
+        let provenance = provenance_key_objective(
+            &self.arch,
+            std::slice::from_ref(&topo),
+            opts,
+            1,
+            self.objective,
+        );
         let shapes_preloaded = self
             .store
             .as_ref()
@@ -206,7 +237,8 @@ impl ModelRegistry {
         {
             Some(stored) => (stored, PlanSource::Loaded),
             None => {
-                let compiled = compile_plan(&self.arch, &topo, opts, 1, &self.cache);
+                let compiled =
+                    compile_plan_objective(&self.arch, &topo, opts, 1, self.objective, &self.cache);
                 if let Some(store) = &self.store {
                     compiled.save(store)?;
                 }
@@ -294,7 +326,13 @@ impl ModelRegistry {
     /// process its warm start, so it is deliberately not propagated.
     fn plan_at(&self, topo: &Topology, chips: u32) -> ExecutionPlan {
         let opts = SimOptions::default();
-        let key = provenance_key(&self.arch, std::slice::from_ref(topo), opts, chips);
+        let key = provenance_key_objective(
+            &self.arch,
+            std::slice::from_ref(topo),
+            opts,
+            chips,
+            self.objective,
+        );
         if let Some(stored) = self
             .store
             .as_ref()
@@ -302,7 +340,8 @@ impl ModelRegistry {
         {
             return stored;
         }
-        let compiled = compile_plan(&self.arch, topo, opts, chips, &self.cache);
+        let compiled =
+            compile_plan_objective(&self.arch, topo, opts, chips, self.objective, &self.cache);
         if let Some(store) = &self.store {
             let _ = compiled.save(store);
         }
@@ -529,6 +568,27 @@ mod tests {
         assert_eq!(s4.chips, 4);
         assert_eq!(s4.choices.len(), dep.plan_dataflows.len());
         assert!(r.schedule_for("missing", 4).is_err());
+    }
+
+    #[test]
+    fn objective_is_part_of_deployment_provenance() {
+        let latency = registry();
+        let energy = ModelRegistry::with_placement_objective(
+            ArchConfig::square(8),
+            None,
+            PlacementPolicy::Single,
+            PlanObjective::Energy,
+        )
+        .unwrap();
+        let dl = latency
+            .register(Arc::new(SimBackend::from_zoo("alexnet", 1).unwrap()))
+            .unwrap();
+        let de = energy
+            .register(Arc::new(SimBackend::from_zoo("alexnet", 1).unwrap()))
+            .unwrap();
+        assert_ne!(dl.provenance, de.provenance, "objective must key the store");
+        assert_eq!(latency.objective(), PlanObjective::Latency);
+        assert_eq!(energy.objective(), PlanObjective::Energy);
     }
 
     #[test]

@@ -3,9 +3,12 @@
 //! ```text
 //! flex-tpu simulate --model resnet18 --size 32 --dataflow os [--memory] [--per-layer]
 //! flex-tpu deploy   --model resnet18 --size 32 [--cmu-out cmu.json] [--heuristic]
-//! flex-tpu sweep    [--size 32] [--threads 0] [--chips 4] [--plan-cache DIR]
-//! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer] [--plan-cache DIR]
-//! flex-tpu plan     <compile|show|check> --model resnet18 [--chips 4] [--plan-cache DIR]
+//! flex-tpu sweep    [--size 32] [--threads 0] [--chips 4] [--objective latency]
+//!                   [--plan-cache DIR]
+//! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer] [--objective latency]
+//!                   [--plan-cache DIR]
+//! flex-tpu plan     <compile|show|check> --model resnet18 [--chips 4] [--objective latency]
+//!                   [--plan-cache DIR]
 //! flex-tpu plan     gc --plan-cache DIR [--size 32 --size 128] [--chips 1]
 //! flex-tpu report   <table1|table2|fig1|fig5|fig6|fig7|paper|all> [--size 32] [--csv DIR]
 //!                   [--plan-cache DIR]
@@ -13,17 +16,18 @@
 //!                   [--chips 2] [--plan-cache DIR]
 //! flex-tpu serve    --model resnet18 --model alexnet ... [--requests 300] [--workers 4]
 //!                   [--batch 4] [--size 32] [--policy fifo] [--chips 4] [--placement pod]
-//!                   [--plan-cache DIR] [--tuned] [--priority alexnet=1]
+//!                   [--objective latency] [--plan-cache DIR] [--tuned] [--priority alexnet=1]
 //! flex-tpu bench    serve --scenario mixed --seed 7 --policy all [--requests 600]
 //!                   [--batch 4] [--size 128] [--chips 4] [--placement co-locate]
-//!                   [--mean-us 2000] [--mode open] [--deadline-us 0]
+//!                   [--mean-us 2000] [--mode open] [--deadline-us 0] [--objective latency]
 //!                   [--out BENCH_PR5.json] [--plan-cache DIR]
 //! flex-tpu bench    compare [--report BENCH_PR5.json]
 //!                   [--baseline rust/tests/golden/bench_baseline.json]
 //! flex-tpu tune     --model resnet18 --model alexnet ... [--size 128] [--batches 1,2,4,8]
 //!                   [--policy fifo --policy deadline-edf] [--scenario mixed] [--seed 7]
 //!                   [--mean-us 2000] [--deadline-us 2000000] [--out BENCH_PR5.json]
-//!                   [--chips 4] [--placement co-locate] [--plan-cache DIR]
+//!                   [--chips 4] [--placement co-locate] [--objective latency]
+//!                   [--plan-cache DIR]
 //! flex-tpu fleet    status --plan-cache DIR
 //! flex-tpu validate [--array 4] [--cases 20]
 //! flex-tpu dse      --model resnet18 --sizes 8,16,32,64,128 [--threads 0] [--plan-cache DIR]
@@ -129,19 +133,27 @@ fn effective_chips(p: &Parsed, arch: &ArchConfig) -> CliResult<u32> {
     Ok(chips)
 }
 
+/// Parse `--objective` into the plan-compiler objective.
+fn objective_from(p: &Parsed) -> CliResult<plan::PlanObjective> {
+    plan::PlanObjective::parse(p.req("objective")?)
+        .ok_or_else(|| "bad --objective (latency/energy/edp)".into())
+}
+
 /// Build the fleet registry for `serve` / `bench serve`: resolve `--chips`
 /// against the arch config and apply the `--placement` chip-group policy.
 /// A multi-chip pod needs a placement that can serve it —
 /// [`ModelRegistry::with_placement`] rejects the mismatch instead of
-/// silently serving one chip.
+/// silently serving one chip.  The `--objective` flag picks what the
+/// per-layer plans minimize and is part of every deployment's provenance.
 fn fleet_registry(p: &Parsed, arch: ArchConfig) -> CliResult<Arc<ModelRegistry>> {
     let chips = effective_chips(p, &arch)?;
     let placement = PlacementPolicy::parse(p.req("placement")?)
         .ok_or("bad --placement (single/pod/co-locate)")?;
-    Ok(Arc::new(ModelRegistry::with_placement(
+    Ok(Arc::new(ModelRegistry::with_placement_objective(
         arch.with_chips(chips),
         open_store(p)?,
         placement,
+        objective_from(p)?,
     )?))
 }
 
@@ -221,11 +233,13 @@ fn cmd_sweep(p: &Parsed) -> CliResult<()> {
     let chips = effective_chips(p, &arch)?;
     let threads = p.threads("threads")?;
     let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let objective = objective_from(p)?;
     let store = open_store(p)?;
     if chips > 1 {
-        return sweep_sharded(&arch, chips, threads, sim, store.as_ref());
+        return sweep_sharded(&arch, chips, threads, sim, objective, store.as_ref());
     }
-    let (result, loaded) = sweep::sweep_zoo_stored(&arch, threads, sim, store.as_ref())?;
+    let (result, loaded) =
+        sweep::sweep_zoo_stored_objective(&arch, threads, sim, objective, store.as_ref())?;
     let mut t = Table::new(&[
         "Model",
         "Flex Cycles",
@@ -234,6 +248,7 @@ fn cmd_sweep(p: &Parsed) -> CliResult<()> {
         "WS",
         "Best Static",
         "Speedup",
+        "Flex mJ",
     ]);
     for m in &result.models {
         let (best_df, best) = m.best_static();
@@ -245,11 +260,12 @@ fn cmd_sweep(p: &Parsed) -> CliResult<()> {
             m.static_cycles[2].to_string(),
             format!("{best_df} ({best})"),
             format!("{:.3}x", best as f64 / m.flex_cycles as f64),
+            format!("{:.3}", m.flex_energy_pj as f64 * 1e-9),
         ]);
     }
     println!("{}", t.render());
     println!(
-        "swept {} models on {} threads ({}x{} array)",
+        "swept {} models on {} threads ({}x{} array, objective {objective})",
         result.models.len(),
         result.threads,
         arch.array_rows,
@@ -277,9 +293,11 @@ fn sweep_sharded(
     chips: u32,
     threads: usize,
     sim: SimOptions,
+    objective: plan::PlanObjective,
     store: Option<&PlanStore>,
 ) -> CliResult<()> {
-    let (result, loaded) = sweep::sweep_zoo_sharded_stored(arch, chips, threads, sim, store)?;
+    let (result, loaded) =
+        sweep::sweep_zoo_sharded_stored_objective(arch, chips, threads, sim, objective, store)?;
     let sharded_col = format!("{chips}-chip Flex");
     let mut t = Table::new(&[
         "Model",
@@ -289,6 +307,7 @@ fn sweep_sharded(
         "DF Wins (IS/OS/WS)",
         "Shard Wins (R/C/B)",
         "Speedup",
+        "Flex mJ",
     ]);
     for m in &result.models {
         let dw = m.selection.dataflow_wins();
@@ -301,6 +320,7 @@ fn sweep_sharded(
             format!("{}/{}/{}", dw[0], dw[1], dw[2]),
             format!("{}/{}/{}", sw[0], sw[1], sw[2]),
             format!("{:.3}x", m.speedup_vs_single_chip()),
+            format!("{:.3}", m.flex_energy_pj as f64 * 1e-9),
         ]);
     }
     println!("{}", t.render());
@@ -332,13 +352,17 @@ fn cmd_shard(p: &Parsed) -> CliResult<()> {
     let chips = effective_chips(p, &arch)?;
     let threads = p.threads("threads")?;
     let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let objective = objective_from(p)?;
     let store = open_store(p)?;
-    let provenance = plan::provenance_key(&arch, std::slice::from_ref(&topo), sim, chips);
+    let provenance =
+        plan::provenance_key_objective(&arch, std::slice::from_ref(&topo), sim, chips, objective);
     let cache = ShapeCache::new();
     let loaded = store
         .as_ref()
         .map_or(0, |s| s.load_shapes(&provenance, &cache));
-    let joint = partition::select_joint_parallel(&arch, &topo, sim, chips, threads, &cache);
+    let joint = partition::select_joint_objective_parallel(
+        &arch, &topo, sim, chips, objective, threads, &cache,
+    );
     let plain = select_exhaustive_cached(&arch, &topo, sim, &cache);
 
     let per_layer_detail = p.is_set("per-layer");
@@ -453,12 +477,18 @@ fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
             for &batch in &batches {
                 let sim = opts(memory, batch as u32);
                 for topo in &models {
-                    live.push(plan::provenance_key(
-                        arch,
-                        std::slice::from_ref(topo),
-                        sim,
-                        chips,
-                    ));
+                    // Plans are keyed per objective; keep every axis value
+                    // alive so an energy-tuned deployment survives a gc run
+                    // issued from a latency-minded shell.
+                    for objective in plan::PlanObjective::ALL {
+                        live.push(plan::provenance_key_objective(
+                            arch,
+                            std::slice::from_ref(topo),
+                            sim,
+                            chips,
+                            objective,
+                        ));
+                    }
                 }
             }
         }
@@ -485,20 +515,23 @@ fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
         for &chips_flag in &chips_flags {
             let chips = if chips_flag == 0 { arch.chips } else { chips_flag as u32 };
             let fleet_arch = arch.with_chips(chips);
-            let mut parts: Vec<String> = fleet
-                .iter()
-                .map(|t| {
-                    plan::provenance_key(
-                        &fleet_arch,
-                        std::slice::from_ref(t),
-                        SimOptions::default(),
-                        1,
-                    )
-                })
-                .collect();
-            parts.push(format!("tuned;chips={chips};placement={placement:?}"));
-            live.push(plan::combined_provenance(&parts));
-            tuned_keys += 1;
+            for objective in plan::PlanObjective::ALL {
+                let mut parts: Vec<String> = fleet
+                    .iter()
+                    .map(|t| {
+                        plan::provenance_key_objective(
+                            &fleet_arch,
+                            std::slice::from_ref(t),
+                            SimOptions::default(),
+                            1,
+                            objective,
+                        )
+                    })
+                    .collect();
+                parts.push(format!("tuned;chips={chips};placement={placement:?}"));
+                live.push(plan::combined_provenance(&parts));
+                tuned_keys += 1;
+            }
         }
     }
     let stats = store.compact(&live)?;
@@ -514,7 +547,7 @@ fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
     );
     println!(
         "plan gc live set: {} keys ({} models x {} architectures (sizes {:?}{}) x chips {:?} x \
-         batches {:?}, + {} tuned-config fleet keys over {} model(s))",
+         batches {:?} x {} objectives, + {} tuned-config fleet keys over {} model(s))",
         live.len(),
         models.len(),
         arches.len(),
@@ -522,6 +555,7 @@ fn cmd_plan_gc(p: &Parsed) -> CliResult<()> {
         if p.get("config").is_some() { " + --config" } else { "" },
         chips_flags,
         batches,
+        plan::PlanObjective::ALL.len(),
         tuned_keys,
         fleet.len(),
     );
@@ -548,10 +582,12 @@ fn cmd_plan(p: &Parsed) -> CliResult<()> {
     let chips = effective_chips(p, &arch)?;
     let threads = p.threads("threads")?;
     let sim = opts(p.is_set("memory"), p.u32("batch")?);
+    let objective = objective_from(p)?;
     let store = open_store(p)?;
-    let provenance = plan::provenance_key(&arch, std::slice::from_ref(&topo), sim, chips);
+    let provenance =
+        plan::provenance_key_objective(&arch, std::slice::from_ref(&topo), sim, chips, objective);
     let compile = |cache: &ShapeCache| {
-        plan::compile_plan_parallel(&arch, &topo, sim, chips, threads, cache)
+        plan::compile_plan_objective_parallel(&arch, &topo, sim, chips, objective, threads, cache)
     };
     match action {
         "compile" => {
@@ -631,6 +667,11 @@ fn print_plan(compiled: &plan::ExecutionPlan) {
         compiled.flex_cycles(),
         compiled.reconfig_total(),
         compiled.provenance
+    );
+    println!(
+        "objective {}: {:.4} mJ flex energy per inference batch",
+        compiled.objective,
+        compiled.flex_energy_mj()
     );
 }
 
@@ -1050,6 +1091,7 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
         "p50 Queue (us)",
         "p99 Queue (us)",
         "Sim req/s",
+        "Energy (mJ)",
     ]);
     for r in &suite.reports {
         t.row(vec![
@@ -1063,12 +1105,13 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
             format!("{:.0}", r.queue_p50_us),
             format!("{:.0}", r.queue_p99_us),
             format!("{:.1}", r.throughput_rps),
+            format!("{:.3}", r.energy_mj()),
         ]);
     }
     println!("{}", t.render());
     println!(
         "bench: scenario {scenario}, seed {}, {} requests over {} models ({}x{} array x {} \
-         chip(s), placement {}, batch {batch}, {} loop, mean gap {} us)",
+         chip(s), placement {}, batch {batch}, {} loop, mean gap {} us, objective {})",
         cfg.seed,
         cfg.requests,
         names.len(),
@@ -1078,7 +1121,16 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
         registry.placement_policy(),
         mode,
         cfg.mean_interarrival_us,
+        registry.objective(),
     );
+    if let Some(first) = suite.reports.first() {
+        println!(
+            "energy: {:.3} mJ total under {} ({:.6} J/request)",
+            first.energy_mj(),
+            first.policy,
+            first.joules_per_request(),
+        );
+    }
     if let (Some(fifo), Some(ra)) = (suite.report("fifo"), suite.report("reconfig-aware")) {
         println!(
             "reconfig-aware vs fifo: {:.2}x throughput, {} vs {} reconfigurations, {} vs {} \
@@ -1245,14 +1297,16 @@ fn cmd_tune(p: &Parsed) -> CliResult<()> {
         spec.policy_candidates = policies;
     }
     let store = open_store(p)?;
+    let objective = objective_from(p)?;
     let fleet_arch = arch.with_chips(chips);
     let factory_store = store.clone();
     let factory_topos = topos;
     let factory = move |batch: u32| -> flex_tpu::error::Result<Arc<ModelRegistry>> {
-        let registry = Arc::new(ModelRegistry::with_placement(
+        let registry = Arc::new(ModelRegistry::with_placement_objective(
             fleet_arch,
             factory_store.clone(),
             placement,
+            objective,
         )?);
         for topo in &factory_topos {
             registry.register(Arc::new(SimBackend::new(topo.clone(), batch)))?;
@@ -1272,7 +1326,8 @@ fn cmd_tune(p: &Parsed) -> CliResult<()> {
     }
     let tuned = outcome.tuned.clone();
     println!(
-        "tune: selected batch {} under {} — {} ({:.1} req/s, {:.1} goodput req/s)",
+        "tune: selected batch {} under {} — {} ({:.1} req/s, {:.1} goodput req/s, \
+         {:.6} J/request, objective {objective})",
         tuned.batch,
         tuned.policy,
         if tuned.feasible {
@@ -1282,6 +1337,7 @@ fn cmd_tune(p: &Parsed) -> CliResult<()> {
         },
         tuned.throughput_rps,
         tuned.goodput_rps,
+        tuned.joules_per_request,
     );
     let budgets: Vec<String> = tuned
         .admission
@@ -1338,6 +1394,13 @@ fn cmd_tune(p: &Parsed) -> CliResult<()> {
             plain.goodput_rps,
         );
     }
+    println!(
+        "energy: controlled {:.3} mJ ({:.6} J/request), plain edf {:.3} mJ ({:.6} J/request)",
+        controlled.energy_mj(),
+        controlled.joules_per_request(),
+        plain.energy_mj(),
+        plain.joules_per_request(),
+    );
     if let Some(store) = &store {
         println!(
             "tuned-config cache: {} under key {} ({})",
@@ -1574,6 +1637,12 @@ fn main() -> CliResult<()> {
         "placement",
         Some("single"),
         "fleet chip-group placement: single / pod / co-locate (serve + bench serve)",
+    )
+    .flag(
+        "objective",
+        Some("latency"),
+        "plan objective: latency / energy / edp (plan compile, sweep, shard, serve, \
+         bench serve, tune; part of the plan provenance)",
     )
     .flag("scenario", Some("mixed"), "bench trace shape: mixed / bursty / skewed")
     .flag("seed", Some("7"), "bench trace seed (same seed = byte-identical report)")

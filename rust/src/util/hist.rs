@@ -125,10 +125,25 @@ impl LatencyHistogram {
     /// exact observed maximum.  Matches the old sort-and-index estimator
     /// to within one bucket width (≤ 1/32 relative), is exact below 32,
     /// and returns 0 on an empty histogram.
+    ///
+    /// `q` is a quantile in `[0, 1]`; out-of-range values clamp to the
+    /// nearest bound and `NaN` (a debug-assert) reads as the minimum.
+    /// The old float-cast path silently mapped both `q < 0` and `NaN` to
+    /// the minimum and relied on the cumulative scan falling off the end
+    /// for `q > 1`, which made `percentile(99.0)` — the classic "forgot
+    /// to divide by 100" call — look like a valid maximum query.
     pub fn percentile(&self, q: f64) -> u64 {
+        debug_assert!(!q.is_nan(), "percentile quantile must not be NaN");
+        debug_assert!(
+            (0.0..=1.0).contains(&q),
+            "percentile quantile {q} outside [0, 1] (did you mean q/100?)"
+        );
         if self.count == 0 {
             return 0;
         }
+        // NaN.clamp(..) stays NaN, so route it explicitly to the minimum
+        // (the release-mode behaviour the old cast happened to produce).
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
         // The same rank the sorted-Vec estimator indexed: 0-based
         // round((n-1)*q), expressed 1-based for cumulative counting.
         let rank = ((self.count - 1) as f64 * q).round() as u64 + 1;
@@ -220,6 +235,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn out_of_range_quantile_panics_in_debug() {
+        let mut h = LatencyHistogram::new();
+        h.record(7);
+        // The classic "forgot to divide by 100" call.
+        h.percentile(99.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "must not be NaN")]
+    fn nan_quantile_panics_in_debug() {
+        let mut h = LatencyHistogram::new();
+        h.record(7);
+        h.percentile(f64::NAN);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn out_of_range_quantiles_clamp_in_release() {
+        let mut h = LatencyHistogram::new();
+        for v in [1u64, 5, 9, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(-1.0), 1, "below-range clamps to the minimum");
+        assert_eq!(h.percentile(2.0), 30, "above-range clamps to the maximum");
+        assert_eq!(h.percentile(f64::NEG_INFINITY), 1);
+        assert_eq!(h.percentile(f64::INFINITY), 30);
+        assert_eq!(h.percentile(f64::NAN), 1, "NaN reads as the minimum");
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Acceptance tests for energy-aware plan objectives:
+//!
+//! 1. **latency default is byte-identical** — `compile_plan` (the
+//!    historical entry point) and an explicit `PlanObjective::Latency`
+//!    compile produce equal plans across the whole zoo, so the objective
+//!    axis cannot perturb any existing golden;
+//! 2. **energy dominance** — the pure-energy objective never compiles a
+//!    plan with more total energy than the latency plan over the same
+//!    candidate grids, layer by layer and in total, and strictly improves
+//!    on at least one zoo model at 8x8 (the divergence that makes the
+//!    objective worth having);
+//! 3. **EDP sits between** — per layer, the EDP choice's cycles x energy
+//!    product is never above either single-axis plan's product;
+//! 4. **provenance isolation** — the objective is part of every
+//!    deployment's provenance: re-opening a store under the same
+//!    objective warm-starts (zero simulate calls), a different objective
+//!    reads cold instead of reusing the wrong plan.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::plan::{compile_plan, compile_plan_objective, PlanObjective};
+use flex_tpu::inference::{ModelRegistry, PlacementPolicy, PlanSource, SimBackend};
+use flex_tpu::sim::engine::SimOptions;
+use flex_tpu::sim::parallel::ShapeCache;
+use flex_tpu::sim::PlanStore;
+use flex_tpu::topology::zoo;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("flex-tpu-objective-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn latency_objective_is_byte_identical_across_the_zoo() {
+    let opts = SimOptions::default();
+    for size in [8u32, 32] {
+        let arch = ArchConfig::square(size);
+        for topo in zoo::all_models() {
+            let cache = ShapeCache::new();
+            let legacy = compile_plan(&arch, &topo, opts, 1, &cache);
+            let explicit =
+                compile_plan_objective(&arch, &topo, opts, 1, PlanObjective::Latency, &cache);
+            assert_eq!(
+                legacy, explicit,
+                "{} at {size}x{size}: latency objective must reproduce the default",
+                topo.name
+            );
+            assert_eq!(legacy.objective, PlanObjective::Latency);
+        }
+    }
+}
+
+#[test]
+fn energy_objective_never_costs_more_energy_and_wins_somewhere() {
+    let arch = ArchConfig::square(8);
+    let opts = SimOptions::default();
+    let mut strictly_better = Vec::new();
+    for topo in zoo::all_models() {
+        let cache = ShapeCache::new();
+        let lat = compile_plan_objective(&arch, &topo, opts, 1, PlanObjective::Latency, &cache);
+        let en = compile_plan_objective(&arch, &topo, opts, 1, PlanObjective::Energy, &cache);
+        for (ll, le) in lat.layers.iter().zip(en.layers.iter()) {
+            assert!(
+                le.chosen_energy_pj() <= ll.chosen_energy_pj(),
+                "{} layer {}: energy objective chose {} pJ over latency's {} pJ",
+                topo.name,
+                le.name,
+                le.chosen_energy_pj(),
+                ll.chosen_energy_pj()
+            );
+        }
+        assert!(en.flex_energy_pj() <= lat.flex_energy_pj(), "{}", topo.name);
+        if en.flex_energy_pj() < lat.flex_energy_pj() {
+            strictly_better.push(topo.name.clone());
+        }
+    }
+    assert!(
+        !strictly_better.is_empty(),
+        "pure-energy must strictly reduce total energy on at least one zoo model at 8x8"
+    );
+}
+
+#[test]
+fn edp_objective_minimizes_the_per_layer_product() {
+    let arch = ArchConfig::square(8);
+    let opts = SimOptions::default();
+    for topo in zoo::all_models() {
+        let cache = ShapeCache::new();
+        let lat = compile_plan_objective(&arch, &topo, opts, 1, PlanObjective::Latency, &cache);
+        let en = compile_plan_objective(&arch, &topo, opts, 1, PlanObjective::Energy, &cache);
+        let edp = compile_plan_objective(&arch, &topo, opts, 1, PlanObjective::Edp, &cache);
+        let product =
+            |l: &flex_tpu::coordinator::plan::PlanLayer| -> u128 {
+                u128::from(l.layer_cycles()) * u128::from(l.chosen_energy_pj())
+            };
+        for ((ll, le), lp) in lat.layers.iter().zip(en.layers.iter()).zip(edp.layers.iter()) {
+            assert!(
+                product(lp) <= product(ll) && product(lp) <= product(le),
+                "{} layer {}: EDP product above a single-axis plan's",
+                topo.name,
+                lp.name
+            );
+        }
+    }
+}
+
+#[test]
+fn objective_is_part_of_store_provenance() {
+    let dir = tmpdir("provenance");
+    let arch = ArchConfig::square(8);
+    let backend = || Arc::new(SimBackend::from_zoo("alexnet", 2).unwrap());
+    let open = |objective: PlanObjective| {
+        ModelRegistry::with_placement_objective(
+            arch,
+            Some(PlanStore::open(&dir).unwrap()),
+            PlacementPolicy::Single,
+            objective,
+        )
+        .unwrap()
+    };
+    // Cold: the energy plan compiles and persists under its own key.
+    let cold = open(PlanObjective::Energy).register(backend()).unwrap();
+    assert_eq!(cold.plan_source, PlanSource::Compiled);
+    // Same objective re-opens warm: plan loaded, zero simulate calls.
+    let warm_registry = open(PlanObjective::Energy);
+    let warm = warm_registry.register(backend()).unwrap();
+    assert_eq!(warm.plan_source, PlanSource::Loaded);
+    assert_eq!(warm.provenance, cold.provenance);
+    assert!(warm.shapes_preloaded > 0);
+    let stats = warm_registry.cache_stats();
+    assert_eq!(stats.misses, 0, "warm same-objective start must not simulate: {stats:?}");
+    assert_eq!(stats.hit_rate(), 1.0);
+    // A different objective must not pick up the energy plan.
+    let cross = open(PlanObjective::Latency).register(backend()).unwrap();
+    assert_eq!(
+        cross.plan_source,
+        PlanSource::Compiled,
+        "cross-objective registration reused a plan compiled under another objective"
+    );
+    assert_ne!(cross.provenance, cold.provenance);
+    let _ = std::fs::remove_dir_all(&dir);
+}
