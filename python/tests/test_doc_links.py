@@ -1,0 +1,64 @@
+"""Docs-link check: relative links in the durable docs must resolve.
+
+Scans the maintained documentation set (architecture, workload taxonomy,
+CLI reference, roadmap) for markdown links and verifies every relative
+target exists in the checkout.  External URLs and pure anchors are left
+alone.  Also pins the ISSUE-10 cross-linking contract: the workload
+taxonomy is reachable from both the CLI README and ARCHITECTURE.md.
+
+Dependency-free (stdlib only) so it runs on minimal CI runners.
+"""
+
+import os
+import re
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+# The durable docs: new documentation must be added here to get link
+# checking (paper dumps like PAPERS.md / SNIPPETS.md are excluded — they
+# quote external material verbatim).
+DOCS = [
+    "ARCHITECTURE.md",
+    "WORKLOADS.md",
+    "ROADMAP.md",
+    "rust/README.md",
+]
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _links(doc):
+    with open(os.path.join(REPO_ROOT, doc)) as f:
+        text = f.read()
+    # Strip fenced code blocks: CLI examples legitimately contain
+    # bracket-paren sequences that are not links.
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return LINK.findall(text)
+
+
+def test_all_docs_exist():
+    for doc in DOCS:
+        assert os.path.isfile(os.path.join(REPO_ROOT, doc)), doc
+
+
+def test_relative_links_resolve():
+    broken = []
+    for doc in DOCS:
+        base = os.path.dirname(os.path.join(REPO_ROOT, doc))
+        for target in _links(doc):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, path))):
+                broken.append("%s -> %s" % (doc, target))
+    assert not broken, "broken relative links:\n" + "\n".join(broken)
+
+
+def test_workloads_taxonomy_is_cross_linked():
+    for doc in ["ARCHITECTURE.md", "rust/README.md"]:
+        targets = [t.split("#", 1)[0] for t in _links(doc)]
+        assert any(t.endswith("WORKLOADS.md") for t in targets), (
+            "%s must link to the workload taxonomy (WORKLOADS.md)" % doc
+        )

@@ -1,0 +1,187 @@
+#!/usr/bin/env python3
+"""Offline replica of the Rust bench trace generator, used to cross-validate
+the committed sequence-trace baseline.
+
+The Rust side (``rust/src/bench/trace.rs``) generates serving-bench traces
+from one explicit 64-bit LCG with pure integer arithmetic, so a
+``(scenario, seed)`` pair names exactly one trace on every platform.  This
+module reimplements that generator from the spec — the LCG recurrence, the
+Q12 exponential-quantile gap table, the per-scenario draw order, the
+sequence-length draw (strictly after the gap/model draws, only for
+sequence models) and the power-of-two bucket rounding — without reading
+any Rust output.  Running it writes
+``rust/tests/golden/bench_seq_trace_baseline.json``; the Rust test
+``seq_trace_matches_committed_python_replica_baseline`` replays the same
+trace natively and must agree bit for bit, and
+``python/tests/test_bench_baseline.py`` checks the committed file matches
+a fresh replica run.
+
+Deliberately dependency-free (stdlib only) so it runs on minimal CI
+runners.
+"""
+
+import json
+import os
+
+MASK64 = (1 << 64) - 1
+
+# -ln((i+0.5)/16) in Q12 fixed point — the 16 exponential quantile
+# midpoints the gap sampler draws from.
+EXP_Q12 = [
+    14196, 9696, 7603, 6225, 5196, 4374, 3690, 3103,
+    2591, 2135, 1725, 1353, 1011, 696, 403, 130,
+]
+
+# The gated mixed CNN+transformer scenario (must mirror seq_config() in
+# rust/tests/bench.rs).
+GATED = {
+    "scenario": "mixed",
+    "seed": 3,
+    "requests": 400,
+    "models": ["alexnet", "transformer3"],
+    "mean_interarrival_us": 2000,
+    "seq_min": 32,
+    "seq_max": 128,
+    "seq_models": [1],
+}
+
+
+class Lcg:
+    """Knuth/Numerical-Recipes 64-bit LCG, high 32 bits per draw."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK64
+        self.next_u32()  # scramble step so nearby seeds diverge
+
+    def next_u32(self):
+        self.state = (self.state * 6364136223846793005 + 1442695040888963407) & MASK64
+        return self.state >> 32
+
+    def pick(self, n):
+        return self.next_u32() % n
+
+
+def exp_gap_us(lcg, mean_us):
+    return mean_us * EXP_Q12[lcg.pick(16)] // 4096
+
+
+def events(scenario, seed, requests, models, mean_us, seq=None):
+    """Yield ``(at_us, id, model, seq_len)`` tuples; ``seq`` is a dict with
+    ``min``/``max``/``models`` (indices that draw a sequence length)."""
+    lcg = Lcg(seed)
+    at = 0
+    burst_left = 0
+    burst_model = 0
+    for eid in range(requests):
+        if scenario == "mixed":
+            at += exp_gap_us(lcg, mean_us)
+            model = lcg.pick(models)
+        elif scenario == "skewed":
+            at += exp_gap_us(lcg, mean_us)
+            r = lcg.pick((1 << models) - 1)
+            model = 0
+            weight = 1 << (models - 1)
+            acc = weight
+            while r >= acc:
+                model += 1
+                weight >>= 1
+                acc += weight
+        elif scenario == "bursty":
+            if burst_left == 0:
+                burst_left = 4 + lcg.pick(13)
+                burst_model = lcg.pick(models)
+                at += exp_gap_us(lcg, mean_us * 3)
+            burst_left -= 1
+            at += exp_gap_us(lcg, mean_us // 4 + 1)
+            model = burst_model
+        else:
+            raise ValueError("unknown scenario %r" % scenario)
+        seq_len = None
+        if seq is not None and model in seq["models"]:
+            if seq["min"] == seq["max"]:
+                seq_len = seq["min"]
+            else:
+                span = seq["max"] - seq["min"] + 1
+                seq_len = seq["min"] + lcg.pick(span)
+        yield at, eid, model, seq_len
+
+
+def bucket_of(seq_len, lo, hi):
+    """Power-of-two bucket rounding: next_power_of_two(max(s, 1)) clamped
+    to [lo, hi]."""
+    s = max(seq_len, 1)
+    b = 1 << (s - 1).bit_length()
+    return min(max(b, lo), hi)
+
+
+def fnv1a(h, data):
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+def le8(x):
+    return int(x).to_bytes(8, "little")
+
+
+def baseline_doc(cfg=GATED):
+    """The trace-baseline document for one gated config: aggregates plus an
+    FNV-1a digest over the full event stream."""
+    seq = {"min": cfg["seq_min"], "max": cfg["seq_max"], "models": cfg["seq_models"]}
+    digest = 0xCBF29CE484222325
+    last_at = 0
+    seq_sum = 0
+    count = 0
+    offered = {}
+    for at, eid, model, seq_len in events(
+        cfg["scenario"],
+        cfg["seed"],
+        cfg["requests"],
+        len(cfg["models"]),
+        cfg["mean_interarrival_us"],
+        seq,
+    ):
+        raw = 0 if seq_len is None else seq_len
+        digest = fnv1a(digest, le8(at) + le8(eid) + le8(model) + le8(raw) + b";")
+        last_at = at
+        seq_sum += raw
+        count += 1
+        if seq_len is None:
+            name = cfg["models"][model]
+        else:
+            b = bucket_of(seq_len, cfg["seq_min"], cfg["seq_max"])
+            name = "%s@%d" % (cfg["models"][model], b)
+        offered[name] = offered.get(name, 0) + 1
+    return {
+        "schema": 1,
+        "scenario": cfg["scenario"],
+        "seed": cfg["seed"],
+        "requests": cfg["requests"],
+        "models": cfg["models"],
+        "mean_interarrival_us": cfg["mean_interarrival_us"],
+        "seq_min": cfg["seq_min"],
+        "seq_max": cfg["seq_max"],
+        "seq_models": cfg["seq_models"],
+        "events": count,
+        "last_at_us": last_at,
+        "seq_len_sum": seq_sum,
+        "trace_digest": "%016x" % digest,
+        "offered": dict(sorted(offered.items())),
+    }
+
+
+def main():
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    path = os.path.normpath(
+        os.path.join(root, "rust", "tests", "golden", "bench_seq_trace_baseline.json")
+    )
+    doc = baseline_doc()
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print("wrote %s (digest %s)" % (path, doc["trace_digest"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""Offline replica of ``flex-tpu synth``: the per-layer dataflow-selection
+tables WORKLOADS.md embeds.
+
+Everything the Rust CLI prints for a sequence-family model is closed-form
+— the seed-derived configs (``util::rng::Rng``), the GEMM lowering
+(``topology/synth.rs``), the per-dataflow cycle counts
+(``sim/dataflow/{is,os,ws}.rs``), the latency argmin with its IS > OS > WS
+tie-break (``coordinator/plan.rs``) and the 45 nm energy model
+(``cost/{pe,gates,energy}.rs``).  This module reimplements those formulas
+from the spec, so ``synth_output(...)`` reproduces the CLI output without
+running Rust, and the tables committed in WORKLOADS.md are verifiable
+(``python/tests/test_workloads_doc.py`` checks them against a fresh run).
+
+Deliberately dependency-free (stdlib only) so it runs on minimal CI
+runners.
+"""
+
+import math
+
+MASK64 = (1 << 64) - 1
+
+# --- util::rng::Rng (splitmix64 scramble + xorshift64*) -------------------
+
+
+class Rng:
+    """Replica of ``rust/src/util/rng.rs``."""
+
+    def __init__(self, seed):
+        z = (seed + 0x9E3779B97F4A7C15) & MASK64
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        self.state = ((z ^ (z >> 31)) | 1) & MASK64
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def range_u64(self, lo, hi):
+        return lo + self.next_u64() % (hi - lo + 1)
+
+    def pick(self, items):
+        return items[self.range_u64(0, len(items) - 1)]
+
+
+# --- topology/synth.rs: seed-derived configs and GEMM lowering ------------
+
+LSTM_MAX_UNROLL = 32
+
+
+def family_config(family, seed):
+    """``SeqModel::from_seed`` — the draw order is part of the contract."""
+    rng = Rng(seed)
+    if family == "transformer":
+        dh = rng.pick([32, 64])
+        heads = rng.pick([4, 8, 12])
+        return {
+            "d_model": dh * heads,
+            "heads": heads,
+            "blocks": 2 + rng.range_u64(0, 2),
+            "ffn_mult": 4,
+        }
+    if family == "lstm":
+        return {
+            "input": rng.pick([64, 128, 256]),
+            "hidden": rng.pick([128, 256, 512]),
+            "cells": 1 + rng.range_u64(0, 1),
+            "classes": rng.pick([10, 100, 1000]),
+        }
+    if family == "mlp":
+        return {
+            "input": rng.pick([256, 784, 2048]),
+            "width": rng.pick([512, 1024, 2048]),
+            "hidden_layers": 2 + rng.range_u64(0, 2),
+            "classes": rng.pick([10, 100, 1000]),
+        }
+    raise ValueError("unknown family %r" % family)
+
+
+def layers(family, cfg, seq_len):
+    """The per-layer GEMM list as ``(name, M, K, N)`` tuples."""
+    s = max(seq_len, 1)
+    out = []
+    if family == "transformer":
+        d, h = cfg["d_model"], cfg["heads"]
+        dh = d // h
+        f = d * cfg["ffn_mult"]
+        for b in range(cfg["blocks"]):
+            out += [
+                ("blk%d_qkv" % b, s, d, 3 * d),
+                ("blk%d_scores" % b, h * s, dh, s),
+                ("blk%d_ctx" % b, h * s, s, dh),
+                ("blk%d_proj" % b, s, d, d),
+                ("blk%d_ffn_up" % b, s, d, f),
+                ("blk%d_ffn_dn" % b, s, f, d),
+            ]
+    elif family == "lstm":
+        hidden = cfg["hidden"]
+        steps = min(s, LSTM_MAX_UNROLL)
+        for c in range(cfg["cells"]):
+            fed = cfg["input"] if c == 0 else hidden
+            for i in range(steps):
+                rows = s // steps + (1 if i < s % steps else 0)
+                out.append(("cell%d_t%d" % (c, i), rows, fed + hidden, 4 * hidden))
+        out.append(("head", 1, hidden, cfg["classes"]))
+    elif family == "mlp":
+        width = cfg["width"]
+        out.append(("fc0", s, cfg["input"], width))
+        for i in range(1, cfg["hidden_layers"] + 1):
+            out.append(("fc%d" % i, s, width, width))
+        out.append(("head", s, width, cfg["classes"]))
+    else:
+        raise ValueError("unknown family %r" % family)
+    return out
+
+
+# --- sim/dataflow: closed-form cycles and SRAM traffic per dataflow -------
+
+
+def _ceil(a, b):
+    return -(-a // b)
+
+
+def dataflow_cost(df, m, k, n, r, c):
+    """``(cycles, sram_accesses)`` of one GEMM under one dataflow."""
+    skew = r + c - 2
+    if df == "IS":
+        folds = _ceil(m, r) * _ceil(k, c)
+        accum = _ceil(m, r) * (_ceil(k, c) - 1)
+        cycles = folds * (r + n + skew)
+        traffic = folds * r * c + folds * n * c + folds * r * n + accum * r * n
+    elif df == "OS":
+        folds = _ceil(m, r) * _ceil(n, c)
+        cycles = folds * (k + skew + r)
+        traffic = folds * r * k + folds * c * k + folds * r * c
+    elif df == "WS":
+        folds = _ceil(k, r) * _ceil(n, c)
+        accum = (_ceil(k, r) - 1) * _ceil(n, c)
+        cycles = folds * (r + m + skew)
+        traffic = folds * m * r + folds * r * c + folds * m * c + accum * m * c
+    else:
+        raise ValueError(df)
+    return cycles, traffic
+
+
+# --- cost/{gates,pe,energy}.rs: the 45 nm energy model --------------------
+
+# Cell power in µW: (DFF, FULL_ADDER, AND2, MUX2), composed exactly as
+# pe_cost() does so the f64 arithmetic matches bit for bit.
+_DFF_UW, _FA_UW, _AND2_UW, _MUX2_UW = 0.35, 0.25, 0.05, 0.08
+SRAM_PJ_PER_ACCESS = 1.2
+LEAKAGE_FRACTION = 0.08
+CLOCK_NS = 10.0
+
+
+def flex_pe_power_uw():
+    conv = 64 * _AND2_UW + 96 * _FA_UW + 48 * _DFF_UW  # 8x8 MAC + pipes
+    delta = 8 * _DFF_UW + 40 * _MUX2_UW  # stationary reg + two muxes
+    return conv + delta
+
+
+def layer_energy_pj(macs, cycles, traffic, num_pes):
+    """``layer_energy`` for the Flex PE, rounded to integer pJ like
+    ``energy_cell_pj`` (half away from zero)."""
+    power = flex_pe_power_uw()
+    e_mac = power * CLOCK_NS * 1e-3
+    leak_per_cycle = power * LEAKAGE_FRACTION * num_pes * CLOCK_NS * 1e-3
+    total = macs * e_mac + traffic * SRAM_PJ_PER_ACCESS + cycles * leak_per_cycle
+    return math.floor(total + 0.5)
+
+
+# --- coordinator/plan.rs + metrics::Table: the synth CLI output -----------
+
+DATAFLOWS = ["IS", "OS", "WS"]  # Dataflow::ALL — also the argmin tie-break
+
+
+def render_table(header, rows):
+    """Replica of ``metrics::Table::render`` with trailing blanks stripped
+    (the CLI pads every cell, including the last column)."""
+    widths = [
+        max(len(header[i]), *(len(r[i]) for r in rows)) if rows else len(header[i])
+        for i in range(len(header))
+    ]
+    line = lambda cells: "".join(
+        c.ljust(widths[i]) + "  " for i, c in enumerate(cells)
+    ).rstrip()
+    out = [line(header), "-" * (sum(widths) + 2 * len(widths))]
+    out += [line(r) for r in rows]
+    return "\n".join(out)
+
+
+def synth_output(family, seed, seq_len=128, size=32, objective="latency"):
+    """The exact stdout of ``flex-tpu synth --family F --seed S --seq-len L
+    --size SZ`` (latency objective), with per-line trailing blanks
+    stripped."""
+    assert objective == "latency", "only the latency argmin is replicated"
+    cfg = family_config(family, seed)
+    gemms = layers(family, cfg, seq_len)
+    r = c = size
+    rows, picks, cycle_grid = [], [], []
+    for name, m, k, n in gemms:
+        per_df = [dataflow_cost(df, m, k, n, r, c) for df in DATAFLOWS]
+        cycles = [cy for cy, _ in per_df]
+        best = min(range(3), key=lambda i: (cycles[i], i))  # strict-< argmin
+        picks.append(best)
+        cycle_grid.append(per_df)
+        rows.append(
+            [name, "%dx%dx%d" % (m, k, n), str(m * k * n)]
+            + [str(cy) for cy in cycles]
+            + [DATAFLOWS[best]]
+        )
+    table = render_table(
+        ["Layer", "GEMM MxKxN", "MACs", "IS", "OS", "WS", "Selected"], rows
+    )
+    # Totals: per-layer winners + 1 reconfig cycle per dataflow change
+    # (ArchConfig::square default reconfig_cycles = 1, first layer free).
+    flex = sum(cycle_grid[i][picks[i]][0] for i in range(len(gemms)))
+    flex += sum(1 for i in range(1, len(picks)) if picks[i] != picks[i - 1])
+    energy = sum(
+        layer_energy_pj(m * k * n, *cycle_grid[i][picks[i]], r * c)
+        for i, (_, m, k, n) in enumerate(gemms)
+    )
+    out = [table, ""]
+    out.append(
+        "%s%d (%s, seq %d, %d layers) on %dx%d, objective %s"
+        % (family, seed, family, seq_len, len(gemms), r, c, objective)
+    )
+    out.append("flex total: %d cycles" % flex)
+    for i, df in enumerate(DATAFLOWS):
+        static = sum(g[i][0] for g in cycle_grid)
+        out.append(
+            "  vs static %s: %d cycles, speedup %.3fx" % (df, static, static / flex)
+        )
+    out.append("flex energy: %.3f mJ" % (energy * 1e-9))
+    return "\n".join(out)
+
+
+SHOWCASE = [("transformer", 0), ("lstm", 0), ("mlp", 0)]
+
+
+def main():
+    for family, seed in SHOWCASE:
+        print("$ flex-tpu synth --family %s --seed %d --seq-len 128" % (family, seed))
+        print(synth_output(family, seed))
+        print()
+
+
+if __name__ == "__main__":
+    main()

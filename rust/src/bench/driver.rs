@@ -62,7 +62,7 @@ use crate::sim::Dataflow;
 use crate::util::hist::LatencyHistogram;
 
 use super::report::{BenchReport, ModelBenchStats};
-use super::trace::{Scenario, TraceEvent, TraceSpec};
+use super::trace::{Scenario, SeqDist, TraceEvent, TraceSpec};
 
 /// How the driver paces the trace.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -132,6 +132,16 @@ pub struct BenchConfig {
     /// Enable scheduler overload control (degraded mode under sustained
     /// deadline pressure).  Off by default.
     pub overload_control: bool,
+    /// Sequence-length axis (`None` = dense bench, bit for bit the
+    /// pre-seq driver).  When set, every configured model *without* a
+    /// direct registration is treated as a bucketed family
+    /// ([`crate::inference::ModelRegistry::register_seq`]): the trace
+    /// draws each of its requests a sequence length uniformly in
+    /// `[buckets.min(), buckets.max()]`, and the driver routes the
+    /// request to the `"{base}@{bucket}"` deployment whose bucket covers
+    /// the drawn length.  Directly registered models keep serving every
+    /// request regardless of drawn length, exactly like the fleet.
+    pub seq: Option<crate::topology::synth::SeqBuckets>,
 }
 
 impl BenchConfig {
@@ -169,6 +179,7 @@ impl BenchConfig {
                 admission: BTreeMap::new(),
                 priorities: BTreeMap::new(),
                 overload_control: false,
+                seq: None,
             },
         }
     }
@@ -248,6 +259,13 @@ impl BenchConfigBuilder {
         self
     }
 
+    /// Sequence-length axis (`None` = dense bench; see
+    /// [`BenchConfig::seq`]).
+    pub fn seq(mut self, seq: Option<crate::topology::synth::SeqBuckets>) -> Self {
+        self.cfg.seq = seq;
+        self
+    }
+
     /// The finished configuration.
     pub fn build(self) -> BenchConfig {
         self.cfg
@@ -306,6 +324,30 @@ fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
     h
 }
 
+/// The routed deployment name for `(model index, drawn seq_len)` over the
+/// driver's expanded route table: the single direct entry when the model
+/// is dense (sentinel bucket 0), else the smallest bucket covering the
+/// drawn length — the largest when the draw overshoots every bucket, the
+/// smallest when no length was drawn.  The same rule as
+/// [`crate::inference::ModelRegistry::resolve`], so the bench exercises
+/// exactly the fleet's routing.
+fn route_of<'a>(
+    routes: &'a [Vec<(u32, String)>],
+    model_idx: usize,
+    seq_len: Option<u32>,
+) -> &'a String {
+    let buckets = &routes[model_idx];
+    if buckets.len() == 1 && buckets[0].0 == 0 {
+        return &buckets[0].1;
+    }
+    let s = seq_len.unwrap_or(1).max(1);
+    let hit = buckets
+        .iter()
+        .find(|(b, _)| *b >= s)
+        .unwrap_or_else(|| buckets.last().expect("non-empty route"));
+    &hit.1
+}
+
 /// Simulate `cfg` against the deployments in `registry` and return the
 /// report.  Errors when a configured model is not registered.
 ///
@@ -317,12 +359,27 @@ pub fn run(registry: &ModelRegistry, cfg: &BenchConfig) -> Result<BenchReport> {
     if cfg.models.is_empty() {
         return Err(Error::InvalidConfig("bench needs at least one model".into()));
     }
+    // The seq axis draws lengths only for models that route through
+    // buckets — directly registered (dense) models keep the exact LCG
+    // draw sequence of a dense trace.
+    let seq = cfg.seq.map(|buckets| SeqDist {
+        min: buckets.min(),
+        max: buckets.max(),
+        seq_models: cfg
+            .models
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| registry.get(m).is_none())
+            .map(|(i, _)| i)
+            .collect(),
+    });
     let spec = TraceSpec {
         scenario: cfg.scenario,
         seed: cfg.seed,
         requests: cfg.requests,
         models: cfg.models.len(),
         mean_interarrival_us: cfg.mean_interarrival_us,
+        seq,
     };
     run_with_trace(registry, cfg, spec.events())
 }
@@ -352,6 +409,35 @@ where
     let pod_chips = arch.chips.max(1);
     let placement_mode = cfg.policy == SchedulePolicy::Placement;
 
+    // Expand each configured model into the deployments it can route to.
+    // A directly registered name serves every request (one entry, the
+    // sentinel bucket 0); a bucketed family routes each request to the
+    // bucket covering its drawn sequence length, so every bucket's
+    // deployment is a distinct driver-side model with its own queue,
+    // launch cost and stats row.
+    let mut routes: Vec<Vec<(u32, String)>> = Vec::with_capacity(cfg.models.len());
+    for name in &cfg.models {
+        if registry.get(name).is_some() {
+            routes.push(vec![(0, name.clone())]);
+        } else {
+            let buckets = registry.buckets_of(name);
+            if buckets.is_empty() {
+                return Err(Error::InvalidConfig(format!(
+                    "bench model {name:?} is not registered"
+                )));
+            }
+            routes.push(buckets.iter().map(|&b| (b, format!("{name}@{b}"))).collect());
+        }
+    }
+    let base_of: BTreeMap<&str, &str> = cfg
+        .models
+        .iter()
+        .zip(&routes)
+        .flat_map(|(base, buckets)| {
+            buckets.iter().map(move |(_, n)| (n.as_str(), base.as_str()))
+        })
+        .collect();
+
     // Per-model scheduler profiles + device cost constants.  Classic
     // policies treat the whole pod as one device (blind all-chip sharding
     // when multi-chip); placement executes each model at its own group's
@@ -360,7 +446,13 @@ where
     sched.set_overload_control(cfg.overload_control);
     let mut info: BTreeMap<String, DriveInfo> = BTreeMap::new();
     let mut group_ids: Vec<usize> = Vec::new();
-    for name in &cfg.models {
+    let drive_models: Vec<(&str, &String)> = cfg
+        .models
+        .iter()
+        .zip(&routes)
+        .flat_map(|(base, buckets)| buckets.iter().map(move |(_, n)| (base.as_str(), n)))
+        .collect();
+    for &(base, name) in &drive_models {
         let dep: std::sync::Arc<ModelDeployment> = registry.get(name).ok_or_else(|| {
             Error::InvalidConfig(format!("bench model {name:?} is not registered"))
         })?;
@@ -422,7 +514,9 @@ where
             profile.forecast = schedule.forecast;
         }
         let batch_energy_pj = batch_energy.round() as u64;
-        profile.priority = cfg.priorities.get(name.as_str()).copied().unwrap_or(0);
+        // Priority tiers key on the base model name, like the fleet: every
+        // bucket of a family shares its family's tier.
+        profile.priority = cfg.priorities.get(base).copied().unwrap_or(0);
         sched.set_profile(profile);
         if placement_mode {
             sched.assign_group(name, group);
@@ -495,26 +589,34 @@ where
     // Queue-wait percentiles stream through a fixed-size log-scale
     // histogram (O(buckets), ~15 KiB) instead of a per-request Vec.
     let mut wait_hist = LatencyHistogram::new();
-    let mut per: BTreeMap<String, ModelBenchStats> = cfg
-        .models
+    let mut per: BTreeMap<String, ModelBenchStats> = drive_models
         .iter()
-        .map(|m| (m.clone(), ModelBenchStats::default()))
+        .map(|&(_, m)| (m.clone(), ModelBenchStats::default()))
         .collect();
     let mut digest = 0xcbf2_9ce4_8422_2325u64;
 
-    let tier_of = |model: &str| cfg.priorities.get(model).copied().unwrap_or(0);
+    // Scheduler drop/shed lists name routed deployments; tiers (like
+    // admission budgets) are declared on base model names.
+    let tier_of = |model: &str| {
+        let base = base_of.get(model).copied().unwrap_or(model);
+        cfg.priorities.get(base).copied().unwrap_or(0)
+    };
     let admit = |sched: &mut Scheduler<u64>,
                  per: &mut BTreeMap<String, ModelBenchStats>,
                  rejected: &mut u64,
                  at: u64,
                  id: u64,
-                 model_idx: usize|
+                 model_idx: usize,
+                 seq_len: Option<u32>|
      -> bool {
-        let model = &cfg.models[model_idx];
+        let model = route_of(&routes, model_idx, seq_len);
         let m = per.get_mut(model).expect("configured model");
         m.offered += 1;
         let deadline = deadline_cycles.map(|d| at + d);
-        match cfg.admission.get(model) {
+        // The admission budget keys on the base name but bounds the
+        // routed deployment's queue, so each bucket queue is capped
+        // independently — the fleet's contract.
+        match cfg.admission.get(&cfg.models[model_idx]) {
             Some(&cap) => {
                 if sched.try_push(model, at, deadline, id, cap) {
                     true
@@ -539,7 +641,7 @@ where
                       arrivals: &mut Peekable<I::IntoIter>,
                       at: u64| {
         while let Some(e) = arrivals.next() {
-            if admit(sched, per, rejected, at, e.id, e.model) {
+            if admit(sched, per, rejected, at, e.id, e.model, e.seq_len) {
                 break;
             }
         }
@@ -595,9 +697,9 @@ where
                 if us_to_cycles(e.at_us, clock_ns) != t {
                     break;
                 }
-                let (id, model) = (e.id, e.model);
+                let (id, model, seq_len) = (e.id, e.model, e.seq_len);
                 arrivals.next();
-                admit(&mut sched, &mut per, &mut rejected, t, id, model);
+                admit(&mut sched, &mut per, &mut rejected, t, id, model, seq_len);
             }
         }
         if cfg.mode == LoopMode::Closed {

@@ -37,7 +37,7 @@ pub mod tune;
 
 pub use driver::{run, run_with_trace, BenchConfig, BenchConfigBuilder, LoopMode};
 pub use report::{BenchReport, ModelBenchStats};
-pub use trace::{Lcg, Scenario, TraceEvent, TraceIter, TraceSpec};
+pub use trace::{Lcg, Scenario, SeqDist, TraceEvent, TraceIter, TraceSpec};
 pub use tune::{
     gate_tune, mix_drift_millis, overload_comparison, tune_or_load, TuneDoc, TuneOutcome,
     TuneSpec, TunedConfig, DRIFT_RETUNE_MILLIS, TUNED_CONFIG_KIND, TUNE_SCHEMA_VERSION,
@@ -73,8 +73,7 @@ pub const MIN_COALESCING_SPEEDUP: f64 = 1.2;
 /// models' plan provenances folded with the full run configuration, so a
 /// change to either invalidates the stored record.
 pub fn bench_provenance(registry: &ModelRegistry, cfg: &BenchConfig) -> String {
-    let mut parts: Vec<String> = cfg
-        .models
+    let mut parts: Vec<String> = routed_names(registry, cfg)
         .iter()
         .filter_map(|m| registry.get(m).map(|d| d.provenance.clone()))
         .collect();
@@ -103,15 +102,39 @@ pub fn bench_provenance(registry: &ModelRegistry, cfg: &BenchConfig) -> String {
             cfg.admission, cfg.priorities, cfg.overload_control
         );
     }
+    // The seq axis joins the key only when set, so every dense provenance
+    // (and the records stored under it) survives unchanged.
+    if let Some(buckets) = cfg.seq {
+        use std::fmt::Write as _;
+        let _ = write!(config, ";seq={buckets}");
+    }
     parts.push(config);
     combined_provenance(&parts)
 }
 
-/// Per-model serving batch sizes, in `cfg.models` order — part of the
-/// measured configuration (the deployment plan's provenance is compiled
-/// at batch 1, so the serving batch must be recorded separately).
+/// Deployment names a bench config drives, in `cfg.models` order: the
+/// model itself when directly registered, else every sequence bucket's
+/// `"{base}@{bucket}"` deployment of the family (ascending buckets).
+fn routed_names(registry: &ModelRegistry, cfg: &BenchConfig) -> Vec<String> {
+    let mut names = Vec::new();
+    for m in &cfg.models {
+        if registry.get(m).is_some() {
+            names.push(m.clone());
+        } else {
+            for b in registry.buckets_of(m) {
+                names.push(format!("{m}@{b}"));
+            }
+        }
+    }
+    names
+}
+
+/// Per-deployment serving batch sizes, in [`routed_names`] order — part
+/// of the measured configuration (the deployment plan's provenance is
+/// compiled at batch 1, so the serving batch must be recorded
+/// separately).
 fn model_batches(registry: &ModelRegistry, cfg: &BenchConfig) -> Vec<u64> {
-    cfg.models
+    routed_names(registry, cfg)
         .iter()
         .filter_map(|m| registry.get(m).map(|d| u64::from(d.server.batch())))
         .collect()
@@ -142,11 +165,19 @@ pub struct BenchSuite {
     /// Registry placement policy name (`single` / `pod` / `co-locate`;
     /// pre-pod baselines deserialize as `single`).
     pub placement: String,
-    /// Model names, in trace-index order.
+    /// Model names, in trace-index order (base family names for bucketed
+    /// models — the per-bucket deployments appear in
+    /// `model_provenances`/`model_batches`).
     pub models: Vec<String>,
-    /// The participating models' plan provenances — ties the suite to the
-    /// exact cycle model it was measured on, so a model change fails the
-    /// gate loudly (re-bless) instead of sliding silently.
+    /// Smallest sequence length the trace draws (0 = dense trace with no
+    /// seq axis; pre-seq baselines deserialize as 0).
+    pub seq_min: u64,
+    /// Largest sequence length the trace draws (0 = dense trace).
+    pub seq_max: u64,
+    /// The participating deployments' plan provenances — one per routed
+    /// deployment (every bucket of a bucketed family), tying the suite to
+    /// the exact cycle model it was measured on, so a model change fails
+    /// the gate loudly (re-bless) instead of sliding silently.
     pub model_provenances: Vec<String>,
     /// Per-model serving batch sizes (plan provenances are compiled at
     /// batch 1, so the serving batch is part of the config separately).
@@ -183,8 +214,9 @@ impl BenchSuite {
             chips: u64::from(registry.arch().chips.max(1)),
             placement: registry.placement_policy().name().to_string(),
             models: cfg.models.clone(),
-            model_provenances: cfg
-                .models
+            seq_min: cfg.seq.map_or(0, |b| u64::from(b.min())),
+            seq_max: cfg.seq.map_or(0, |b| u64::from(b.max())),
+            model_provenances: routed_names(registry, cfg)
                 .iter()
                 .filter_map(|m| registry.get(m).map(|d| d.provenance.clone()))
                 .collect(),
@@ -219,6 +251,8 @@ impl BenchSuite {
                     ("chips", Value::Num(self.chips as f64)),
                     ("placement", Value::Str(self.placement.clone())),
                     ("models", strs(&self.models)),
+                    ("seq_min", Value::Num(self.seq_min as f64)),
+                    ("seq_max", Value::Num(self.seq_max as f64)),
                     ("model_provenances", strs(&self.model_provenances)),
                     (
                         "model_batches",
@@ -286,6 +320,9 @@ impl BenchSuite {
                 .unwrap_or("single")
                 .to_string(),
             models: strs("models")?,
+            // Pre-seq baselines predate the sequence axis: dense trace.
+            seq_min: config.get("seq_min").and_then(Value::as_u64).unwrap_or(0),
+            seq_max: config.get("seq_max").and_then(Value::as_u64).unwrap_or(0),
             model_provenances: strs("model_provenances")?,
             model_batches,
             reports,
@@ -305,6 +342,8 @@ impl BenchSuite {
             && self.chips == other.chips
             && self.placement == other.placement
             && self.models == other.models
+            && self.seq_min == other.seq_min
+            && self.seq_max == other.seq_max
             && self.model_provenances == other.model_provenances
             && self.model_batches == other.model_batches
     }
@@ -500,6 +539,7 @@ mod tests {
             admission: std::collections::BTreeMap::new(),
             priorities: std::collections::BTreeMap::new(),
             overload_control: false,
+            seq: None,
         }
     }
 

@@ -102,6 +102,24 @@ impl std::fmt::Display for Scenario {
     }
 }
 
+/// Per-request sequence-length distribution: requests addressing a
+/// sequence-parameterized model draw a length uniformly from
+/// `[min, max]` (one extra LCG draw per such event, placed after the
+/// gap and model draws; `min == max` pins the length with **zero**
+/// extra draws).  Requests to models outside `seq_models` draw nothing,
+/// so a spec with `seq: None` — or whose `seq_models` is empty — replays
+/// the exact pre-sequence LCG stream byte for byte.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeqDist {
+    /// Smallest drawable sequence length (>= 1).
+    pub min: u32,
+    /// Largest drawable sequence length (>= `min`).
+    pub max: u32,
+    /// Indices (into the caller's model list) of the models whose
+    /// requests carry a sequence length.
+    pub seq_models: Vec<usize>,
+}
+
 /// What trace to generate.
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
@@ -116,6 +134,10 @@ pub struct TraceSpec {
     /// Mean inter-arrival gap in microseconds (the load knob; the bursty
     /// scenario uses `mean/4` inside bursts and `3×mean` between them).
     pub mean_interarrival_us: u64,
+    /// Per-request sequence lengths for sequence-parameterized models
+    /// (`None`: every event's `seq_len` is `None`, and the LCG stream is
+    /// bit-for-bit the pre-sequence trace).
+    pub seq: Option<SeqDist>,
 }
 
 /// One request of a trace: arrival instant (µs since trace start), request
@@ -128,6 +150,9 @@ pub struct TraceEvent {
     pub id: u64,
     /// Index into the caller's model list.
     pub model: usize,
+    /// Sequence length drawn from the spec's [`SeqDist`] when `model` is
+    /// one of its `seq_models`; `None` for dense models.
+    pub seq_len: Option<u32>,
 }
 
 impl TraceSpec {
@@ -138,12 +163,20 @@ impl TraceSpec {
     /// consumer to streaming can never change a trace.
     pub fn events(&self) -> TraceIter {
         assert!(self.models > 0, "trace needs at least one model");
+        if let Some(seq) = &self.seq {
+            assert!(seq.min >= 1 && seq.min <= seq.max, "seq range 1 <= min <= max");
+            assert!(
+                seq.seq_models.iter().all(|&m| m < self.models),
+                "seq_models must index the model list"
+            );
+        }
         TraceIter {
             lcg: Lcg::new(self.seed),
             scenario: self.scenario,
             requests: self.requests,
             models: self.models as u64,
             mean_us: self.mean_interarrival_us,
+            seq: self.seq.clone(),
             at: 0,
             next_id: 0,
             burst_left: 0,
@@ -163,6 +196,7 @@ pub struct TraceIter {
     requests: u64,
     models: u64,
     mean_us: u64,
+    seq: Option<SeqDist>,
     /// Virtual clock, µs (non-decreasing across events).
     at: u64,
     /// Next request id to emit (also the count already emitted).
@@ -213,7 +247,26 @@ impl Iterator for TraceIter {
                 self.burst_model
             }
         };
-        Some(TraceEvent { at_us: self.at, id, model })
+        // The sequence draw comes strictly after the gap/model draws, and
+        // only for seq models — so dense-only traces replay the exact
+        // pre-sequence LCG stream.
+        let seq_len = match &self.seq {
+            Some(seq) if seq.seq_models.contains(&model) => {
+                if seq.min == seq.max {
+                    Some(seq.min)
+                } else {
+                    let span = u64::from(seq.max - seq.min) + 1;
+                    Some(seq.min + self.lcg.pick(span) as u32)
+                }
+            }
+            _ => None,
+        };
+        Some(TraceEvent {
+            at_us: self.at,
+            id,
+            model,
+            seq_len,
+        })
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
@@ -247,6 +300,7 @@ mod tests {
             requests: 500,
             models: 3,
             mean_interarrival_us: 2_000,
+            seq: None,
         }
     }
 
@@ -305,6 +359,64 @@ mod tests {
         // a uniform mix would produce (bursts are single-model).
         let changes = trace.windows(2).filter(|w| w[0].model != w[1].model).count();
         assert!(changes * 4 < trace.len(), "only {changes} changes in {}", trace.len());
+    }
+
+    #[test]
+    fn seq_draws_leave_dense_trace_untouched() {
+        // Adding a SeqDist must not perturb arrivals or model picks: seq
+        // draws come after the gap/model draws and only for seq models, so
+        // an empty seq_models list is byte-identical to seq: None.
+        for scenario in Scenario::ALL {
+            let dense = generate(&spec(scenario, 11));
+            let mut with_empty = spec(scenario, 11);
+            with_empty.seq = Some(SeqDist {
+                min: 16,
+                max: 64,
+                seq_models: vec![],
+            });
+            let a = generate(&with_empty);
+            assert_eq!(a.len(), dense.len());
+            for (x, y) in a.iter().zip(dense.iter()) {
+                assert_eq!((x.at_us, x.id, x.model), (y.at_us, y.id, y.model));
+                assert_eq!(x.seq_len, None);
+            }
+            // Pinned length (min == max) also adds zero draws.
+            let mut pinned = spec(scenario, 11);
+            pinned.seq = Some(SeqDist {
+                min: 48,
+                max: 48,
+                seq_models: vec![0, 1, 2],
+            });
+            let b = generate(&pinned);
+            for (x, y) in b.iter().zip(dense.iter()) {
+                assert_eq!((x.at_us, x.id, x.model), (y.at_us, y.id, y.model));
+                assert_eq!(x.seq_len, Some(48));
+            }
+        }
+    }
+
+    #[test]
+    fn seq_draws_are_bounded_reproducible_and_model_scoped() {
+        let mut s = spec(Scenario::MixedModel, 21);
+        s.seq = Some(SeqDist {
+            min: 16,
+            max: 64,
+            seq_models: vec![1],
+        });
+        let a = generate(&s);
+        assert_eq!(a, generate(&s), "reproducible");
+        let mut seen_lengths = std::collections::BTreeSet::new();
+        for ev in &a {
+            match ev.seq_len {
+                Some(len) => {
+                    assert_eq!(ev.model, 1, "only seq models draw lengths");
+                    assert!((16..=64).contains(&len), "len {len}");
+                    seen_lengths.insert(len);
+                }
+                None => assert_ne!(ev.model, 1),
+            }
+        }
+        assert!(seen_lengths.len() > 10, "lengths spread over the range");
     }
 
     #[test]

@@ -139,6 +139,7 @@ impl TuneSpec {
             requests: self.requests,
             models: self.models.len(),
             mean_interarrival_us: self.mean_interarrival_us,
+            seq: None,
         };
         let mut mix: BTreeMap<String, u64> =
             self.models.iter().map(|m| (m.clone(), 0)).collect();

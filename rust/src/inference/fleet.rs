@@ -201,6 +201,7 @@ struct ModelAccum {
 ///         pixels: vec![0.0; SimBackend::DIGEST_PIXELS],
 ///         deadline_us: None,
 ///         priority: 0,
+///         seq_len: None,
 ///     },
 ///     otx,
 /// )).unwrap();
@@ -465,11 +466,23 @@ impl FleetServer {
         let mut admit = |sched: &mut Scheduler<(Envelope, Instant)>,
                          held: &mut BTreeMap<String, Arc<ModelDeployment>>,
                          env: Envelope| {
-            let model = env.0.model.clone();
+            let base = env.0.model.clone();
+            // Sequence-bucketed models route on (model, seq_len): the
+            // covering bucket's deployment `"{base}@{bucket}"` owns the
+            // queue, so each bucket batches against its own plan.  A
+            // directly registered name always wins (dense models ignore
+            // seq_len), and an unresolvable name falls through to the
+            // vacant lookup below to be counted once as unknown.
+            let model = match self.registry.resolve(&base, env.0.seq_len) {
+                Some(dep) if dep.name != base => dep.name.clone(),
+                _ => base.clone(),
+            };
             // Admission control at the door: a model at its admit budget
             // rejects before any queue state is touched, so overload on
             // one model cannot grow its queue beyond the tuned bound.
-            if let Some(&cap) = self.admission.get(&model) {
+            // Budgets are configured per base model and bound each bucket
+            // queue independently.
+            if let Some(&cap) = self.admission.get(&base) {
                 if sched.pending_for(&model) >= cap {
                     admission_rejected += 1;
                     *admission_by_model.entry(model).or_insert(0) += 1;
@@ -494,7 +507,9 @@ impl FleetServer {
             }
             if vacant {
                 let mut profile = dep.profile();
-                profile.priority = self.priorities.get(&model).copied().unwrap_or(0);
+                // Priority tiers, like admission budgets, key on the base
+                // model name a caller addresses, not the bucket.
+                profile.priority = self.priorities.get(&base).copied().unwrap_or(0);
                 if self.policy == SchedulePolicy::Placement {
                     if let Some(p) = self.registry.placement_of(&model) {
                         // Forecast boundaries from the plan the group

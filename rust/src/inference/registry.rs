@@ -287,6 +287,81 @@ impl ModelRegistry {
         Ok(deployment)
     }
 
+    /// Register a sequence-parameterized model as **bucketed plans**: one
+    /// deployment per power-of-two sequence bucket, each named
+    /// `"{base}@{bucket}"` and compiled/persisted under its own provenance
+    /// key (bucket shapes differ, so the keys differ automatically).  The
+    /// buckets coexist in the shared store and warm-start independently;
+    /// [`ModelRegistry::resolve`] routes a request's `seq_len` to the
+    /// covering bucket.
+    ///
+    /// ```
+    /// use flex_tpu::config::ArchConfig;
+    /// use flex_tpu::inference::ModelRegistry;
+    /// use flex_tpu::topology::synth::{SeqBuckets, SeqFamily, SeqModel};
+    ///
+    /// let registry = ModelRegistry::new(ArchConfig::square(8), None).unwrap();
+    /// let model = SeqModel::from_seed(SeqFamily::Mlp, 1);
+    /// let buckets = SeqBuckets::new(32, 64).unwrap();
+    /// let deps = registry.register_seq("mlp1", &model, 1, buckets).unwrap();
+    /// assert_eq!(deps.len(), 2);
+    /// assert_eq!(registry.buckets_of("mlp1"), vec![32, 64]);
+    /// // seq 40 rounds up to the 64 bucket; absent seq takes the smallest.
+    /// assert_eq!(registry.resolve("mlp1", Some(40)).unwrap().name, "mlp1@64");
+    /// assert_eq!(registry.resolve("mlp1", None).unwrap().name, "mlp1@32");
+    /// ```
+    pub fn register_seq(
+        &self,
+        base: &str,
+        model: &crate::topology::synth::SeqModel,
+        batch: u32,
+        buckets: crate::topology::synth::SeqBuckets,
+    ) -> Result<Vec<Arc<ModelDeployment>>> {
+        if base.contains('@') {
+            return Err(Error::InvalidConfig(format!(
+                "base model name {base:?} may not contain '@' (reserved for buckets)"
+            )));
+        }
+        let mut deps = Vec::new();
+        for bucket in buckets.all() {
+            let topo = model.topology(&format!("{base}@{bucket}"), bucket);
+            deps.push(self.register(Arc::new(super::SimBackend::new(topo, batch)))?);
+        }
+        Ok(deps)
+    }
+
+    /// The registered sequence buckets of `base`, ascending (empty when
+    /// `base` has no bucketed deployments).
+    pub fn buckets_of(&self, base: &str) -> Vec<u32> {
+        let prefix = format!("{base}@");
+        let mut buckets: Vec<u32> = self
+            .models
+            .read()
+            .expect("registry lock")
+            .keys()
+            .filter_map(|name| name.strip_prefix(&prefix)?.parse().ok())
+            .collect();
+        buckets.sort_unstable();
+        buckets
+    }
+
+    /// Route a `(model, seq_len)` pair to its deployment.  A directly
+    /// registered name always wins; otherwise the request routes to the
+    /// smallest bucket `>= seq_len` (the largest bucket absorbs longer
+    /// requests, and an absent `seq_len` takes the smallest bucket).
+    pub fn resolve(&self, model: &str, seq_len: Option<u32>) -> Option<Arc<ModelDeployment>> {
+        if let Some(dep) = self.get(model) {
+            return Some(dep);
+        }
+        let buckets = self.buckets_of(model);
+        let (first, last) = (*buckets.first()?, *buckets.last()?);
+        let bucket = match seq_len {
+            None => first,
+            Some(s) => *buckets.iter().find(|&&b| b >= s).unwrap_or(&last),
+        };
+        self.get(&format!("{model}@{bucket}"))
+    }
+
     /// Remove a model from routing.  Returns whether it was registered.
     /// In-flight batches keep serving through their own [`Arc`].
     pub fn remove(&self, name: &str) -> bool {
@@ -589,6 +664,47 @@ mod tests {
         assert_ne!(dl.provenance, de.provenance, "objective must key the store");
         assert_eq!(latency.objective(), PlanObjective::Latency);
         assert_eq!(energy.objective(), PlanObjective::Energy);
+    }
+
+    #[test]
+    fn bucketed_registration_routes_by_rounded_seq_len() {
+        use crate::topology::synth::{SeqBuckets, SeqFamily, SeqModel};
+        let r = registry();
+        let model = SeqModel::from_seed(SeqFamily::Transformer, 3);
+        let deps = r
+            .register_seq("tx", &model, 1, SeqBuckets::new(32, 128).unwrap())
+            .unwrap();
+        assert_eq!(deps.len(), 3);
+        assert_eq!(r.buckets_of("tx"), vec![32, 64, 128]);
+        // Every bucket persists under a distinct provenance key.
+        let mut keys: Vec<&str> = deps.iter().map(|d| d.provenance.as_str()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 3, "bucket plans must not share provenance");
+        // Rounding: covering bucket, clamped at the edges, smallest when
+        // the request carries no sequence length.
+        assert_eq!(r.resolve("tx", Some(1)).unwrap().name, "tx@32");
+        assert_eq!(r.resolve("tx", Some(33)).unwrap().name, "tx@64");
+        assert_eq!(r.resolve("tx", Some(128)).unwrap().name, "tx@128");
+        assert_eq!(r.resolve("tx", Some(9000)).unwrap().name, "tx@128");
+        assert_eq!(r.resolve("tx", None).unwrap().name, "tx@32");
+        // Exact names still resolve directly; unknown models do not.
+        assert_eq!(r.resolve("tx@64", Some(999)).unwrap().name, "tx@64");
+        assert!(r.resolve("vgg13", Some(64)).is_none());
+        // Dense models ignore seq_len.
+        r.register(Arc::new(SimBackend::from_zoo("alexnet", 1).unwrap()))
+            .unwrap();
+        assert_eq!(r.resolve("alexnet", Some(64)).unwrap().name, "alexnet");
+    }
+
+    #[test]
+    fn register_seq_rejects_reserved_names() {
+        use crate::topology::synth::{SeqBuckets, SeqFamily, SeqModel};
+        let r = registry();
+        let model = SeqModel::from_seed(SeqFamily::Mlp, 0);
+        let err = r.register_seq("bad@name", &model, 1, SeqBuckets::new(32, 32).unwrap());
+        assert!(err.is_err(), "'@' is the bucket separator");
+        assert!(r.is_empty());
     }
 
     #[test]

@@ -28,6 +28,14 @@ pub struct InferenceRequest {
     /// normally assigned per model (`flex-tpu serve --priority
     /// model=tier`); requests inherit their model's tier.
     pub priority: u8,
+    /// Sequence length for sequence-parameterized models (transformer /
+    /// LSTM / MLP families, see [`crate::topology::synth::SeqModel`]), or
+    /// `None` for fixed-shape CNNs.  The fleet rounds it up to the
+    /// model's power-of-two bucket
+    /// ([`crate::topology::synth::SeqBuckets::bucket`]) and routes to the
+    /// per-bucket deployment `"{model}@{bucket}"`; dense models ignore
+    /// it.
+    pub seq_len: Option<u32>,
 }
 
 /// Simulated Flex-TPU timing attached to a response.

@@ -526,6 +526,7 @@ impl InferenceServer {
     ///     pixels: vec![0.0; 28 * 28],
     ///     deadline_us: None,
     ///     priority: 0,
+    ///     seq_len: None,
     /// };
     /// tx.send((req, otx))?;
     /// drop(tx); // close the front door so the serving loops exit

@@ -5,6 +5,8 @@
 //! flex-tpu deploy   --model resnet18 --size 32 [--cmu-out cmu.json] [--heuristic]
 //! flex-tpu sweep    [--size 32] [--threads 0] [--chips 4] [--objective latency]
 //!                   [--plan-cache DIR]
+//! flex-tpu synth    --family transformer|lstm|mlp [--seed 0] [--seq-len 128] [--size 32]
+//!                   [--objective latency]
 //! flex-tpu shard    --model resnet18 --size 32 --chips 4 [--per-layer] [--objective latency]
 //!                   [--plan-cache DIR]
 //! flex-tpu plan     <compile|show|check> --model resnet18 [--chips 4] [--objective latency]
@@ -14,13 +16,14 @@
 //!                   [--plan-cache DIR]
 //! flex-tpu infer    [--artifacts artifacts] [--requests 64] [--size 8] [--workers 2]
 //!                   [--chips 2] [--plan-cache DIR]
-//! flex-tpu serve    --model resnet18 --model alexnet ... [--requests 300] [--workers 4]
-//!                   [--batch 4] [--size 32] [--policy fifo] [--chips 4] [--placement pod]
-//!                   [--objective latency] [--plan-cache DIR] [--tuned] [--priority alexnet=1]
+//! flex-tpu serve    --model resnet18 --model synth:transformer:3 ... [--requests 300]
+//!                   [--workers 4] [--batch 4] [--size 32] [--policy fifo] [--chips 4]
+//!                   [--placement pod] [--objective latency] [--plan-cache DIR] [--tuned]
+//!                   [--priority alexnet=1] [--seq-dist 32:256] [--seq-len 0]
 //! flex-tpu bench    serve --scenario mixed --seed 7 --policy all [--requests 600]
 //!                   [--batch 4] [--size 128] [--chips 4] [--placement co-locate]
 //!                   [--mean-us 2000] [--mode open] [--deadline-us 0] [--objective latency]
-//!                   [--out BENCH_PR5.json] [--plan-cache DIR]
+//!                   [--seq-dist 32:256] [--out BENCH_PR5.json] [--plan-cache DIR]
 //! flex-tpu bench    compare [--report BENCH_PR5.json]
 //!                   [--baseline rust/tests/golden/bench_baseline.json]
 //! flex-tpu tune     --model resnet18 --model alexnet ... [--size 128] [--batches 1,2,4,8]
@@ -52,20 +55,73 @@ use flex_tpu::sim::engine::{reconfig_charges, simulate_network, SimOptions};
 use flex_tpu::sim::parallel::ShapeCache;
 use flex_tpu::sim::shard::simulate_layer_sharded_cached;
 use flex_tpu::sim::{Dataflow, DwMapping, PlanStore};
-use flex_tpu::topology::{parse_csv, zoo, Topology};
+use flex_tpu::topology::{parse_csv, synth, zoo, Topology};
 use flex_tpu::util::cli::{Args, Parsed};
 
 /// CLI-level result: any error type boxes into the exit diagnostic.
 type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
 
-const SUBCOMMANDS: &str = "simulate | deploy | sweep | shard | plan | report | infer | serve | \
-                           bench | tune | fleet | validate | dse";
+const SUBCOMMANDS: &str = "simulate | deploy | sweep | synth | shard | plan | report | infer | \
+                           serve | bench | tune | fleet | validate | dse";
 
 fn load_model(name: &str) -> CliResult<Topology> {
     if name.ends_with(".csv") {
         Ok(parse_csv(name.as_ref())?)
     } else {
         Ok(zoo::by_name(name)?)
+    }
+}
+
+/// What one `--model` spec resolves to for the fleet commands.
+enum ModelSpec {
+    /// A fixed-shape topology (zoo name or CSV path) — registered once.
+    Dense(Topology),
+    /// A `synth:FAMILY[:SEED]` sequence-parameterized family — registered
+    /// once per sequence bucket as `"{base}@{bucket}"` and routed by each
+    /// request's sequence length.
+    Seq { base: String, model: synth::SeqModel },
+}
+
+/// Parse a `--model` spec: `synth:FAMILY[:SEED]` names a seed-derived
+/// sequence family (transformer / lstm / mlp); anything else is a zoo
+/// name or topology CSV path.
+fn parse_model_spec(name: &str) -> CliResult<ModelSpec> {
+    let Some(rest) = name.strip_prefix("synth:") else {
+        return Ok(ModelSpec::Dense(load_model(name)?));
+    };
+    let (family, seed) = match rest.split_once(':') {
+        Some((f, s)) => {
+            let seed: u64 = s
+                .parse()
+                .map_err(|_| format!("synth seed must be an integer, got {s:?}"))?;
+            (f, seed)
+        }
+        None => (rest, 0),
+    };
+    let family = synth::SeqFamily::parse(family)
+        .ok_or_else(|| format!("unknown synth family {family:?} (transformer/lstm/mlp)"))?;
+    Ok(ModelSpec::Seq {
+        base: format!("{}{seed}", family.name()),
+        model: synth::SeqModel::from_seed(family, seed),
+    })
+}
+
+/// The sequence buckets `serve` / `bench serve` compile plans for:
+/// `--seq-dist MIN:MAX` rounds the range out to power-of-two buckets,
+/// `--seq-len N` pins a single bucket, and neither flag means the default
+/// 32..256 range.
+fn seq_buckets_from(p: &Parsed) -> CliResult<synth::SeqBuckets> {
+    if let Some(spec) = p.get("seq-dist") {
+        let (lo, hi) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("--seq-dist must be MIN:MAX, got {spec:?}"))?;
+        let lo: u32 = lo.parse().map_err(|_| format!("bad --seq-dist min {lo:?}"))?;
+        let hi: u32 = hi.parse().map_err(|_| format!("bad --seq-dist max {hi:?}"))?;
+        return Ok(synth::SeqBuckets::covering(lo, hi)?);
+    }
+    match p.u32("seq-len")? {
+        0 => Ok(synth::SeqBuckets::default()),
+        len => Ok(synth::SeqBuckets::covering(len, len)?),
     }
 }
 
@@ -273,6 +329,68 @@ fn cmd_sweep(p: &Parsed) -> CliResult<()> {
     );
     print_store_line(store.as_ref(), loaded);
     print_cache_line(&result.cache);
+    Ok(())
+}
+
+/// `flex-tpu synth`: generate one sequence-family model at a pinned
+/// sequence length and show the per-layer GEMM lowering plus the
+/// objective-driven dataflow selection.
+fn cmd_synth(p: &Parsed) -> CliResult<()> {
+    let family = synth::SeqFamily::parse(p.req("family")?)
+        .ok_or("bad --family (transformer/lstm/mlp)")?;
+    let seed = p.u64("seed")?;
+    let seq_len = match p.u32("seq-len")? {
+        0 => 128,
+        len => len,
+    };
+    let arch = arch_from(p)?;
+    let objective = objective_from(p)?;
+    let model = synth::SeqModel::from_seed(family, seed);
+    let name = format!("{}{seed}", family.name());
+    let topo = model.topology(&name, seq_len);
+    let cache = ShapeCache::new();
+    let plan = plan::compile_plan_objective(
+        &arch,
+        &topo,
+        opts(p.is_set("memory"), p.u32("batch")?),
+        1,
+        objective,
+        &cache,
+    );
+    let sel = plan.selection();
+    let mut t = Table::new(&["Layer", "GEMM MxKxN", "MACs", "IS", "OS", "WS", "Selected"]);
+    for (i, l) in topo.layers.iter().enumerate() {
+        let m = u64::from(l.out_h()) * u64::from(l.out_w());
+        let k = u64::from(l.filt_h) * u64::from(l.filt_w) * u64::from(l.channels);
+        let n = u64::from(l.num_filters);
+        let c = sel.cycles[i];
+        t.row(vec![
+            l.name.clone(),
+            format!("{m}x{k}x{n}"),
+            l.macs().to_string(),
+            c[0].to_string(),
+            c[1].to_string(),
+            c[2].to_string(),
+            sel.per_layer[i].to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{name} ({family}, seq {seq_len}, {} layers) on {}x{}, objective {objective}",
+        topo.layers.len(),
+        arch.array_rows,
+        arch.array_cols
+    );
+    let flex = plan.flex_cycles();
+    println!("flex total: {flex} cycles");
+    for df in Dataflow::ALL {
+        let cycles = plan.static_dataflow_cycles(df);
+        println!(
+            "  vs static {df}: {cycles} cycles, speedup {:.3}x",
+            cycles as f64 / flex as f64
+        );
+    }
+    println!("flex energy: {:.3} mJ", plan.flex_energy_pj() as f64 * 1e-9);
     Ok(())
 }
 
@@ -790,6 +908,7 @@ fn cmd_infer(p: &Parsed) -> CliResult<()> {
                 pixels,
                 deadline_us: None,
                 priority: 0,
+                seq_len: None,
             };
             tx.send((req, otx)).expect("server alive");
             response_rxs.push(orx);
@@ -840,20 +959,44 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         names.push(name);
     }
     let registry = fleet_registry(p, arch)?;
+    let seq_buckets = seq_buckets_from(p)?;
     // Route by the *registered* name (a CSV path registers under its
-    // topology name, which is what the fleet's routing key is).
+    // topology name, which is what the fleet's routing key is).  A
+    // `synth:` family registers one deployment per sequence bucket
+    // (`base@bucket`) but keeps routing on the base name, so the fleet
+    // picks the bucket from each request's sequence length.
     let mut routed: Vec<String> = Vec::with_capacity(names.len());
+    let mut seq_bases: std::collections::BTreeSet<String> = Default::default();
     for name in &names {
-        let topo = load_model(name)?;
-        let dep = registry.register(Arc::new(SimBackend::new(topo, batch)))?;
-        println!(
-            "fleet: registered {} (plan {}, {} shape entries preloaded, {} flex cycles/inference)",
-            dep.name,
-            dep.plan_source,
-            dep.shapes_preloaded,
-            dep.server.timing().flex_cycles
-        );
-        routed.push(dep.name.clone());
+        match parse_model_spec(name)? {
+            ModelSpec::Dense(topo) => {
+                let dep = registry.register(Arc::new(SimBackend::new(topo, batch)))?;
+                println!(
+                    "fleet: registered {} (plan {}, {} shape entries preloaded, {} flex \
+                     cycles/inference)",
+                    dep.name,
+                    dep.plan_source,
+                    dep.shapes_preloaded,
+                    dep.server.timing().flex_cycles
+                );
+                routed.push(dep.name.clone());
+            }
+            ModelSpec::Seq { base, model } => {
+                let deps = registry.register_seq(&base, &model, batch, seq_buckets)?;
+                for dep in &deps {
+                    println!(
+                        "fleet: registered {} (plan {}, {} shape entries preloaded, {} flex \
+                         cycles/inference)",
+                        dep.name,
+                        dep.plan_source,
+                        dep.shapes_preloaded,
+                        dep.server.timing().flex_cycles
+                    );
+                }
+                seq_bases.insert(base.clone());
+                routed.push(base);
+            }
+        }
     }
     let names = routed;
     // Per-model priority tiers: explicit `--priority model=tier` flags,
@@ -915,20 +1058,34 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
     let img = SimBackend::DIGEST_PIXELS;
     let producer_names = names.clone();
     let producer_priorities = priorities;
+    let seq_seed = p.u64("seed")?;
     let producer = std::thread::spawn(move || {
         let mut response_rxs = Vec::new();
+        // Seeded sequence-length draws for the `synth:` families: uniform
+        // over the compiled bucket range, same seed ⇒ same stream.
+        let mut lcg = bench::Lcg::new(seq_seed);
+        let (smin, smax) = (seq_buckets.min(), seq_buckets.max());
         for id in 0..requests {
             let model = producer_names[(id as usize) % producer_names.len()].clone();
             let (otx, orx) = std::sync::mpsc::channel();
             let pixels: Vec<f32> = (0..img)
                 .map(|px| ((id as usize + px) % 17) as f32 / 17.0)
                 .collect();
+            let seq_len = if !seq_bases.contains(&model) {
+                None
+            } else if smin == smax {
+                Some(smin)
+            } else {
+                let span = u64::from(smax - smin) + 1;
+                Some(smin + lcg.pick(span) as u32)
+            };
             let req = InferenceRequest {
                 id,
                 model: model.clone(),
                 pixels,
                 deadline_us: None,
                 priority: producer_priorities.get(&model).copied().unwrap_or(0),
+                seq_len,
             };
             tx.send((req, otx)).expect("fleet alive");
             response_rxs.push((model, orx));
@@ -939,7 +1096,13 @@ fn cmd_serve(p: &Parsed) -> CliResult<()> {
         for (model, orx) in response_rxs {
             if let Ok(resp) = orx.recv() {
                 delivered += 1;
-                if resp.model != model {
+                // A seq base legitimately resolves to one of its
+                // `base@bucket` deployments; anything else is a mis-route.
+                let bucket_of_base = resp
+                    .model
+                    .strip_prefix(model.as_str())
+                    .is_some_and(|rest| rest.starts_with('@'));
+                if resp.model != model && !bucket_of_base {
                     cross_routed += 1;
                 }
             }
@@ -1059,13 +1222,30 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
         names.push(name);
     }
     let registry = fleet_registry(p, arch)?;
+    let seq_buckets = seq_buckets_from(p)?;
     // Bench by the *registered* name (a CSV path registers under its
-    // topology name, which is the registry's routing key).
+    // topology name, which is the registry's routing key).  `synth:`
+    // families register one deployment per sequence bucket and keep
+    // their base name in the config — the trace generator draws each
+    // request's sequence length and the driver routes it to a bucket.
     let mut routed: Vec<String> = Vec::with_capacity(names.len());
+    let mut has_seq = false;
     for name in &names {
-        let topo = load_model(name)?;
-        let dep = registry.register(Arc::new(SimBackend::new(topo, batch)))?;
-        routed.push(dep.name.clone());
+        match parse_model_spec(name)? {
+            ModelSpec::Dense(topo) => {
+                let dep = registry.register(Arc::new(SimBackend::new(topo, batch)))?;
+                routed.push(dep.name.clone());
+            }
+            ModelSpec::Seq { base, model } => {
+                let deps = registry.register_seq(&base, &model, batch, seq_buckets)?;
+                println!(
+                    "bench: registered {base} across {} sequence buckets ({seq_buckets})",
+                    deps.len()
+                );
+                has_seq = true;
+                routed.push(base);
+            }
+        }
     }
     let names = routed;
     let cfg = BenchConfig::builder(names.clone())
@@ -1077,6 +1257,7 @@ fn cmd_bench_serve(p: &Parsed) -> CliResult<()> {
         .mode(mode)
         .concurrency(p.u64("concurrency")?)
         .deadline_us(if deadline > 0 { Some(deadline) } else { None })
+        .seq(if has_seq { Some(seq_buckets) } else { None })
         .build();
     let suite = BenchSuite::run(&registry, &cfg, &policies)?;
 
@@ -1672,6 +1853,19 @@ fn main() -> CliResult<()> {
         "serve: per-model priority tier, model=tier (0 = highest, larger tiers shed \
          first; repeatable)",
     )
+    .flag("family", Some("transformer"), "synth: sequence family (transformer / lstm / mlp)")
+    .flag(
+        "seq-len",
+        Some("0"),
+        "pinned sequence length: synth shows this length (0 = 128); serve / bench serve \
+         compile one bucket for it (0 = default 32..256 bucket range)",
+    )
+    .flag(
+        "seq-dist",
+        None,
+        "serve / bench serve: MIN:MAX sequence-length range, rounded out to \
+         power-of-two plan buckets (overrides --seq-len)",
+    )
     .switch("memory", "enable the SRAM/DRAM stall model")
     .switch("per-layer", "print per-layer detail")
     .switch("heuristic", "use the shape-heuristic selector (future-work mode)")
@@ -1692,6 +1886,7 @@ fn main() -> CliResult<()> {
         Some("simulate") => cmd_simulate(&parsed),
         Some("deploy") => cmd_deploy(&parsed),
         Some("sweep") => cmd_sweep(&parsed),
+        Some("synth") => cmd_synth(&parsed),
         Some("shard") => cmd_shard(&parsed),
         Some("plan") => cmd_plan(&parsed),
         Some("report") => cmd_report(&parsed),

@@ -86,6 +86,39 @@ impl Layer {
         }
     }
 
+    /// An `M x K x N` GEMM encoded in ScaleSim convention: the `m` output
+    /// rows become a degenerate `m x 1` ifmap under a `1 x 1` filter, the
+    /// contraction dimension `k` maps to `channels` and `n` to
+    /// `num_filters` — so [`Layer::macs`] is exactly `m * k * n` and the
+    /// layer flows through `simulate_layer` / the plan compiler unchanged.
+    /// This is how the transformer / LSTM / MLP generators
+    /// ([`crate::topology::synth`]) express attention and projection
+    /// matmuls; an `m = 1` GEMM is precisely [`Layer::fc`] geometry.
+    ///
+    /// ```
+    /// use flex_tpu::topology::Layer;
+    ///
+    /// // One attention-score GEMM: (heads*seq) x head_dim x seq.
+    /// let l = Layer::gemm("scores", 8 * 128, 64, 128);
+    /// assert_eq!(l.macs(), 8 * 128 * 64 * 128);
+    /// assert_eq!(l.out_h(), 8 * 128);
+    /// assert_eq!(l.out_channels(), 128);
+    /// l.validate().unwrap();
+    /// ```
+    pub fn gemm(name: &str, m: u32, k: u32, n: u32) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            ifmap_h: m,
+            ifmap_w: 1,
+            filt_h: 1,
+            filt_w: 1,
+            channels: k,
+            num_filters: n,
+            stride: 1,
+        }
+    }
+
     /// Fully connected layer with `fan_in` inputs and `fan_out` outputs.
     pub fn fc(name: &str, fan_in: u32, fan_out: u32) -> Self {
         Self {
@@ -219,6 +252,23 @@ mod tests {
         assert_eq!(l.out_w(), 112);
         assert_eq!(l.out_channels(), 64);
         l.validate().unwrap();
+    }
+
+    #[test]
+    fn gemm_macs_are_exact_and_fc_is_the_m1_case() {
+        let g = Layer::gemm("g", 128, 512, 64);
+        assert_eq!(g.out_h(), 128);
+        assert_eq!(g.out_w(), 1);
+        assert_eq!(g.out_channels(), 64);
+        assert_eq!(g.macs(), 128 * 512 * 64);
+        g.validate().unwrap();
+        // m = 1 collapses to fully-connected geometry.
+        let one = Layer::gemm("one", 1, 512, 64);
+        let fc = Layer::fc("one", 512, 64);
+        assert_eq!(one.ifmap_h, fc.ifmap_h);
+        assert_eq!(one.channels, fc.channels);
+        assert_eq!(one.num_filters, fc.num_filters);
+        assert_eq!(one.macs(), fc.macs());
     }
 
     #[test]

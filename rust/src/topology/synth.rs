@@ -1,11 +1,24 @@
-//! Synthetic workload generator.
+//! Synthetic workload generators.
 //!
-//! Generates random-but-realistic conv-net topologies (spatial pyramid with
-//! widening channels, occasional pointwise/depthwise/downsample layers,
-//! optional FC head) for selector robustness sweeps, property tests and the
-//! `workload_sweep` ablation bench — the "workload generator" half of the
-//! benchmark harness that the fixed zoo can't provide.
+//! Two halves:
+//!
+//! * The original conv-net generator ([`generate`]): random-but-realistic
+//!   spatial pyramids (widening channels, occasional pointwise/depthwise/
+//!   downsample layers, optional FC head) for selector robustness sweeps
+//!   and property tests — workloads the fixed zoo can't provide.
+//! * The **sequence families** ([`SeqModel`]): deterministic transformer /
+//!   LSTM / MLP generators whose layer shapes are a function of a runtime
+//!   sequence length.  Every layer lowers to an explicit `M x K x N` GEMM
+//!   ([`Layer::gemm`]), so the existing `simulate_layer` / `ShapeCache` /
+//!   plan-compiler path consumes them unchanged; the serving side compiles
+//!   one plan per power-of-two sequence bucket ([`SeqBuckets`], see
+//!   `ModelRegistry::register_seq`).
+//!
+//! See `WORKLOADS.md` at the repository root for the full taxonomy — which
+//! GEMM each layer kind lowers to and which dataflow the selector tends to
+//! pick per family.
 
+use crate::error::{Error, Result};
 use crate::topology::{Layer, Topology};
 use crate::util::rng::Rng;
 
@@ -106,6 +119,415 @@ pub fn generate(name: &str, cfg: &SynthConfig, seed: u64) -> Topology {
     topo
 }
 
+/// The sequence-parameterized workload families (the non-CNN side of the
+/// datacenter mix: attention, recurrence, and wide dense layers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SeqFamily {
+    /// Transformer blocks: QKV projections, attention score/context GEMMs
+    /// (shapes depend on sequence length), output projection, FFN pair.
+    Transformer,
+    /// LSTM cells: gate GEMMs unrolled over timesteps (`seq_len`
+    /// timesteps, coalesced past [`LSTM_MAX_UNROLL`]).
+    Lstm,
+    /// Wide MLPs: a dense chain where the sequence axis is the microbatch.
+    Mlp,
+}
+
+impl SeqFamily {
+    /// Every family, in CLI listing order.
+    pub const ALL: [SeqFamily; 3] = [SeqFamily::Transformer, SeqFamily::Lstm, SeqFamily::Mlp];
+
+    /// CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeqFamily::Transformer => "transformer",
+            SeqFamily::Lstm => "lstm",
+            SeqFamily::Mlp => "mlp",
+        }
+    }
+
+    /// Parse a family name (case-insensitive).
+    pub fn parse(s: &str) -> Option<SeqFamily> {
+        match s.to_ascii_lowercase().as_str() {
+            "transformer" | "tx" => Some(SeqFamily::Transformer),
+            "lstm" => Some(SeqFamily::Lstm),
+            "mlp" => Some(SeqFamily::Mlp),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SeqFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Knobs for the transformer generator (weight geometry; the sequence
+/// length is a per-instantiation runtime parameter, not a knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransformerConfig {
+    /// Embedding width `D` (must divide evenly by `heads`).
+    pub d_model: u32,
+    /// Attention heads `H`.
+    pub heads: u32,
+    /// Encoder blocks to stack.
+    pub blocks: u32,
+    /// FFN expansion: the hidden width is `ffn_mult * d_model`.
+    pub ffn_mult: u32,
+}
+
+impl Default for TransformerConfig {
+    fn default() -> Self {
+        Self {
+            d_model: 256,
+            heads: 8,
+            blocks: 2,
+            ffn_mult: 4,
+        }
+    }
+}
+
+/// Knobs for the LSTM generator (weight geometry; the timestep count is
+/// the runtime sequence length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LstmConfig {
+    /// Input feature width of the first cell.
+    pub input: u32,
+    /// Hidden state width (each gate GEMM produces `4 * hidden`).
+    pub hidden: u32,
+    /// Stacked cells (cell `c > 0` consumes cell `c-1`'s hidden state).
+    pub cells: u32,
+    /// Classifier head outputs appended after the last timestep.
+    pub classes: u32,
+}
+
+impl Default for LstmConfig {
+    fn default() -> Self {
+        Self {
+            input: 128,
+            hidden: 256,
+            cells: 1,
+            classes: 10,
+        }
+    }
+}
+
+/// Knobs for the wide-MLP generator (weight geometry; the microbatch —
+/// the GEMM `M` dimension — is the runtime sequence length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpConfig {
+    /// Input feature width.
+    pub input: u32,
+    /// Hidden layer width.
+    pub width: u32,
+    /// Number of `width x width` hidden layers after the input layer.
+    pub hidden_layers: u32,
+    /// Classifier outputs.
+    pub classes: u32,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        Self {
+            input: 784,
+            width: 1024,
+            hidden_layers: 3,
+            classes: 10,
+        }
+    }
+}
+
+/// Unrolling cap for the LSTM generator: past this many timesteps,
+/// consecutive timesteps coalesce into chunked gate GEMMs (MAC-exact —
+/// the chunk's rows sum to the timestep count) so a 512-step sequence
+/// does not compile a 512-layer plan.
+pub const LSTM_MAX_UNROLL: u32 = 32;
+
+/// Generate a transformer encoder stack at one sequence length.
+///
+/// Per block, with `D = d_model`, `H = heads`, `dh = D/H`,
+/// `F = ffn_mult * D` and `S = seq_len`, the six GEMMs are:
+///
+/// | layer    | M       | K   | N   | role                         |
+/// |----------|---------|-----|-----|------------------------------|
+/// | `qkv`    | `S`     | `D` | `3D`| fused Q/K/V projection       |
+/// | `scores` | `H * S` | `dh`| `S` | attention scores `Q Kᵀ`      |
+/// | `ctx`    | `H * S` | `S` | `dh`| context `softmax(…) V`       |
+/// | `proj`   | `S`     | `D` | `D` | output projection            |
+/// | `ffn_up` | `S`     | `D` | `F` | FFN expansion                |
+/// | `ffn_dn` | `S`     | `F` | `D` | FFN contraction              |
+///
+/// `scores` and `ctx` are the sequence-quadratic layers — their `K`/`N`
+/// dims carry `S`, which is why a serving fleet needs per-bucket plans.
+///
+/// ```
+/// use flex_tpu::topology::synth::{transformer, TransformerConfig};
+///
+/// let cfg = TransformerConfig { d_model: 256, heads: 8, blocks: 2, ffn_mult: 4 };
+/// let topo = transformer("tx", &cfg, 128);
+/// assert_eq!(topo.num_layers(), 2 * 6);
+/// // The attention-score GEMM is (H*S) x (D/H) x S.
+/// let scores = &topo.layers[1];
+/// assert_eq!((scores.ifmap_h, scores.channels, scores.num_filters), (8 * 128, 32, 128));
+/// topo.validate().unwrap();
+/// ```
+pub fn transformer(name: &str, cfg: &TransformerConfig, seq_len: u32) -> Topology {
+    let s = seq_len.max(1);
+    let d = cfg.d_model.max(1);
+    let h = cfg.heads.max(1);
+    assert!(d % h == 0, "transformer d_model {d} must divide by heads {h}");
+    let dh = d / h;
+    let f = cfg.ffn_mult.max(1) * d;
+    let mut layers = Vec::new();
+    for b in 0..cfg.blocks.max(1) {
+        layers.push(Layer::gemm(&format!("blk{b}_qkv"), s, d, 3 * d));
+        layers.push(Layer::gemm(&format!("blk{b}_scores"), h * s, dh, s));
+        layers.push(Layer::gemm(&format!("blk{b}_ctx"), h * s, s, dh));
+        layers.push(Layer::gemm(&format!("blk{b}_proj"), s, d, d));
+        layers.push(Layer::gemm(&format!("blk{b}_ffn_up"), s, d, f));
+        layers.push(Layer::gemm(&format!("blk{b}_ffn_dn"), s, f, d));
+    }
+    let topo = Topology::new(name, layers);
+    topo.validate().expect("transformer generator must produce valid topologies");
+    topo
+}
+
+/// Generate an unrolled LSTM at one timestep count (`seq_len` timesteps).
+///
+/// Each timestep of cell `c` is one gate GEMM
+/// `1 x (input_c + hidden) x 4*hidden` (the four gates fused on the `N`
+/// axis, input and recurrent weights fused on the `K` axis).  Past
+/// [`LSTM_MAX_UNROLL`] timesteps, consecutive steps coalesce into chunked
+/// GEMMs whose `M` rows sum to exactly `seq_len`, so total MACs are
+/// independent of the chunking.  A `hidden -> classes` FC head closes the
+/// network.
+///
+/// ```
+/// use flex_tpu::topology::synth::{lstm, LstmConfig};
+///
+/// let topo = lstm("rnn", &LstmConfig::default(), 16);
+/// // 16 timesteps x 1 cell, each a 1 x (128+256) x 1024 gate GEMM + head.
+/// assert_eq!(topo.num_layers(), 17);
+/// assert_eq!(topo.layers[0].channels, 128 + 256);
+/// assert_eq!(topo.layers[0].num_filters, 4 * 256);
+/// topo.validate().unwrap();
+/// ```
+pub fn lstm(name: &str, cfg: &LstmConfig, seq_len: u32) -> Topology {
+    let t = seq_len.max(1);
+    let hidden = cfg.hidden.max(1);
+    let steps = t.min(LSTM_MAX_UNROLL);
+    let mut layers = Vec::new();
+    for c in 0..cfg.cells.max(1) {
+        let fed = if c == 0 { cfg.input.max(1) } else { hidden };
+        let k = fed + hidden;
+        for i in 0..steps {
+            // Chunk sizes differ by at most one and sum to exactly `t`.
+            let rows = t / steps + u32::from(i < t % steps);
+            layers.push(Layer::gemm(&format!("cell{c}_t{i}"), rows, k, 4 * hidden));
+        }
+    }
+    layers.push(Layer::fc("head", hidden, cfg.classes.max(1)));
+    let topo = Topology::new(name, layers);
+    topo.validate().expect("lstm generator must produce valid topologies");
+    topo
+}
+
+/// Generate a wide MLP at one microbatch size (the sequence axis of the
+/// dense families: `seq_len` rows through every GEMM).
+///
+/// ```
+/// use flex_tpu::topology::synth::{mlp, MlpConfig};
+///
+/// let cfg = MlpConfig { input: 784, width: 1024, hidden_layers: 3, classes: 10 };
+/// let topo = mlp("dense", &cfg, 32);
+/// assert_eq!(topo.num_layers(), 1 + 3 + 1); // input + hidden + head
+/// assert_eq!(topo.layers[0].macs(), 32 * 784 * 1024);
+/// topo.validate().unwrap();
+/// ```
+pub fn mlp(name: &str, cfg: &MlpConfig, seq_len: u32) -> Topology {
+    let m = seq_len.max(1);
+    let width = cfg.width.max(1);
+    let mut layers = vec![Layer::gemm("fc0", m, cfg.input.max(1), width)];
+    for i in 1..=cfg.hidden_layers.max(1) {
+        layers.push(Layer::gemm(&format!("fc{i}"), m, width, width));
+    }
+    layers.push(Layer::gemm("head", m, width, cfg.classes.max(1)));
+    let topo = Topology::new(name, layers);
+    topo.validate().expect("mlp generator must produce valid topologies");
+    topo
+}
+
+/// A seed-derived sequence-parameterized model: one fixed weight geometry
+/// (deterministic in `(family, seed)`) that instantiates a [`Topology`]
+/// at any sequence length.  The same `SeqModel` instantiated at every
+/// bucket of a [`SeqBuckets`] range is what `ModelRegistry::register_seq`
+/// deploys as bucketed plans.
+///
+/// ```
+/// use flex_tpu::topology::synth::{SeqFamily, SeqModel};
+///
+/// let model = SeqModel::from_seed(SeqFamily::Transformer, 1);
+/// assert_eq!(model, SeqModel::from_seed(SeqFamily::Transformer, 1));
+/// let a = model.topology("tx@128", 128);
+/// let b = model.topology("tx@256", 256);
+/// // Same weights, different sequence length: the projection layers are
+/// // shape-identical, the attention layers are not.
+/// assert_eq!(a.layers[0].channels, b.layers[0].channels);
+/// assert_ne!(a.layers[1].ifmap_h, b.layers[1].ifmap_h);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqModel {
+    /// A transformer encoder stack.
+    Transformer(TransformerConfig),
+    /// An unrolled LSTM.
+    Lstm(LstmConfig),
+    /// A wide MLP.
+    Mlp(MlpConfig),
+}
+
+impl SeqModel {
+    /// Derive a model of `family` from `seed` (deterministic: the seed
+    /// picks widths/depths from small realistic menus).
+    pub fn from_seed(family: SeqFamily, seed: u64) -> SeqModel {
+        let mut rng = Rng::new(seed);
+        match family {
+            SeqFamily::Transformer => {
+                let dh = *rng.pick(&[32u32, 64]);
+                let heads = *rng.pick(&[4u32, 8, 12]);
+                SeqModel::Transformer(TransformerConfig {
+                    d_model: dh * heads,
+                    heads,
+                    blocks: 2 + rng.range_u64(0, 2) as u32,
+                    ffn_mult: 4,
+                })
+            }
+            SeqFamily::Lstm => SeqModel::Lstm(LstmConfig {
+                input: *rng.pick(&[64u32, 128, 256]),
+                hidden: *rng.pick(&[128u32, 256, 512]),
+                cells: 1 + rng.range_u64(0, 1) as u32,
+                classes: *rng.pick(&[10u32, 100, 1000]),
+            }),
+            SeqFamily::Mlp => SeqModel::Mlp(MlpConfig {
+                input: *rng.pick(&[256u32, 784, 2048]),
+                width: *rng.pick(&[512u32, 1024, 2048]),
+                hidden_layers: 2 + rng.range_u64(0, 2) as u32,
+                classes: *rng.pick(&[10u32, 100, 1000]),
+            }),
+        }
+    }
+
+    /// Which family this model belongs to.
+    pub fn family(&self) -> SeqFamily {
+        match self {
+            SeqModel::Transformer(_) => SeqFamily::Transformer,
+            SeqModel::Lstm(_) => SeqFamily::Lstm,
+            SeqModel::Mlp(_) => SeqFamily::Mlp,
+        }
+    }
+
+    /// Instantiate the model at one sequence length.
+    pub fn topology(&self, name: &str, seq_len: u32) -> Topology {
+        match self {
+            SeqModel::Transformer(cfg) => transformer(name, cfg, seq_len),
+            SeqModel::Lstm(cfg) => lstm(name, cfg, seq_len),
+            SeqModel::Mlp(cfg) => mlp(name, cfg, seq_len),
+        }
+    }
+}
+
+/// The power-of-two sequence-bucket range the serving side compiles plans
+/// for.  The rounding rule: a request of length `s` lands in bucket
+/// `next_power_of_two(s)` clamped to `[min, max]` — so every bucket `b`
+/// serves lengths `(b/2, b]` (the bottom bucket also absorbs shorter
+/// requests, the top one longer).
+///
+/// ```
+/// use flex_tpu::topology::synth::SeqBuckets;
+///
+/// let buckets = SeqBuckets::new(32, 256).unwrap();
+/// assert_eq!(buckets.all(), vec![32, 64, 128, 256]);
+/// assert_eq!(buckets.bucket(1), 32);    // clamped up
+/// assert_eq!(buckets.bucket(33), 64);   // rounded up
+/// assert_eq!(buckets.bucket(64), 64);   // exact powers stay put
+/// assert_eq!(buckets.bucket(9999), 256); // clamped down
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqBuckets {
+    min: u32,
+    max: u32,
+}
+
+impl SeqBuckets {
+    /// Default bottom bucket (`flex-tpu serve/bench --seq-dist` default).
+    pub const DEFAULT_MIN: u32 = 32;
+    /// Default top bucket.
+    pub const DEFAULT_MAX: u32 = 256;
+
+    /// A bucket range; both bounds must be powers of two with
+    /// `min <= max`.
+    pub fn new(min: u32, max: u32) -> Result<SeqBuckets> {
+        if min == 0 || !min.is_power_of_two() || !max.is_power_of_two() || min > max {
+            return Err(Error::InvalidConfig(format!(
+                "sequence buckets must be powers of two with min <= max, got {min}..{max}"
+            )));
+        }
+        Ok(SeqBuckets { min, max })
+    }
+
+    /// The bucket range covering arbitrary lengths `[min_len, max_len]`
+    /// (bounds round up to the next power of two).
+    pub fn covering(min_len: u32, max_len: u32) -> Result<SeqBuckets> {
+        if min_len == 0 || min_len > max_len {
+            return Err(Error::InvalidConfig(format!(
+                "sequence range must satisfy 1 <= min <= max, got {min_len}..{max_len}"
+            )));
+        }
+        SeqBuckets::new(min_len.next_power_of_two(), max_len.next_power_of_two())
+    }
+
+    /// Bottom bucket.
+    pub fn min(&self) -> u32 {
+        self.min
+    }
+
+    /// Top bucket.
+    pub fn max(&self) -> u32 {
+        self.max
+    }
+
+    /// The bucket a sequence length lands in (the rounding rule above).
+    pub fn bucket(&self, seq_len: u32) -> u32 {
+        seq_len.max(1).next_power_of_two().clamp(self.min, self.max)
+    }
+
+    /// Every bucket, ascending.
+    pub fn all(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut b = self.min;
+        while b <= self.max {
+            out.push(b);
+            b <<= 1;
+        }
+        out
+    }
+}
+
+impl Default for SeqBuckets {
+    fn default() -> Self {
+        SeqBuckets {
+            min: Self::DEFAULT_MIN,
+            max: Self::DEFAULT_MAX,
+        }
+    }
+}
+
+impl std::fmt::Display for SeqBuckets {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.min, self.max)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +566,89 @@ mod tests {
                 assert!(d.speedup_vs(df) >= 1.0, "{df} on seeded net");
             }
         });
+    }
+
+    #[test]
+    fn seq_families_deterministic_in_seed_and_parse() {
+        for family in SeqFamily::ALL {
+            assert_eq!(SeqFamily::parse(family.name()), Some(family));
+            for seed in 0..8 {
+                let a = SeqModel::from_seed(family, seed);
+                let b = SeqModel::from_seed(family, seed);
+                assert_eq!(a, b);
+                assert_eq!(a.family(), family);
+                assert_eq!(
+                    a.topology("m", 64).layers,
+                    b.topology("m", 64).layers,
+                    "{family} seed {seed}"
+                );
+            }
+        }
+        assert_eq!(SeqFamily::parse("TX"), Some(SeqFamily::Transformer));
+        assert_eq!(SeqFamily::parse("resnet"), None);
+    }
+
+    #[test]
+    fn transformer_macs_follow_from_geometry() {
+        let cfg = TransformerConfig::default();
+        for s in [1u64, 16, 100, 128, 512] {
+            let topo = transformer("tx", &cfg, s as u32);
+            let (d, h, f) = (256u64, 8u64, 1024u64);
+            let qkv = s * d * 3 * d;
+            let scores = h * s * (d / h) * s;
+            let ctx = h * s * s * (d / h);
+            let proj = s * d * d;
+            let ffn = s * d * f + s * f * d;
+            let per_block = qkv + scores + ctx + proj + ffn;
+            assert_eq!(topo.total_macs(), 2 * per_block, "seq {s}");
+        }
+    }
+
+    #[test]
+    fn lstm_coalescing_is_mac_exact() {
+        let cfg = LstmConfig {
+            input: 64,
+            hidden: 128,
+            cells: 2,
+            classes: 10,
+        };
+        for t in [1u64, 5, 32, 33, 100, 512] {
+            let topo = lstm("rnn", &cfg, t as u32);
+            // Gate MACs are t * k * 4H per cell regardless of chunking.
+            let gates = t * (64 + 128) * 4 * 128 + t * (128 + 128) * 4 * 128;
+            let head = 128 * 10;
+            assert_eq!(topo.total_macs(), gates + head, "t = {t}");
+            let cap = 2 * u64::from(LSTM_MAX_UNROLL) + 1;
+            assert!(topo.num_layers() as u64 <= cap, "t = {t}");
+        }
+    }
+
+    #[test]
+    fn bucket_rounding_rule() {
+        let b = SeqBuckets::new(32, 256).unwrap();
+        assert_eq!(b.all(), vec![32, 64, 128, 256]);
+        for (seq, want) in [
+            (0u32, 32u32),
+            (1, 32),
+            (32, 32),
+            (33, 64),
+            (64, 64),
+            (65, 128),
+            (200, 256),
+            (256, 256),
+            (257, 256),
+            (100_000, 256),
+        ] {
+            assert_eq!(b.bucket(seq), want, "seq {seq}");
+        }
+        assert_eq!(SeqBuckets::covering(20, 200).unwrap(), b);
+        assert!(SeqBuckets::new(0, 64).is_err());
+        assert!(SeqBuckets::new(48, 64).is_err());
+        assert!(SeqBuckets::new(128, 64).is_err());
+        assert!(SeqBuckets::covering(0, 64).is_err());
+        let one = SeqBuckets::new(64, 64).unwrap();
+        assert_eq!(one.all(), vec![64]);
+        assert_eq!(one.to_string(), "64:64");
     }
 
     #[test]

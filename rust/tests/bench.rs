@@ -54,6 +54,7 @@ fn gated_config() -> BenchConfig {
         admission: std::collections::BTreeMap::new(),
         priorities: std::collections::BTreeMap::new(),
         overload_control: false,
+        seq: None,
     }
 }
 
@@ -453,6 +454,202 @@ fn placement_beats_blind_all_chip_sharding_on_the_gated_pod_scenario() {
         pl.reconfigurations,
         fifo.reconfigurations
     );
+}
+
+// --------------------------------------------------------------------------
+// Mixed CNN + transformer fleet (ISSUE 10): a zoo CNN and a bucketed
+// transformer share one registry; the trace draws per-request sequence
+// lengths and the driver routes each request to its power-of-two bucket.
+
+use flex_tpu::bench::{SeqDist, TraceSpec};
+use flex_tpu::topology::synth::{SeqBuckets, SeqFamily, SeqModel};
+
+fn seq_buckets() -> SeqBuckets {
+    SeqBuckets::new(32, 128).unwrap()
+}
+
+/// The gated mixed fleet: alexnet (dense) + a seed-3 transformer compiled
+/// at three sequence buckets, all on the 128x128 array.
+fn seq_registry() -> Arc<ModelRegistry> {
+    let registry = ModelRegistry::new(ArchConfig::square(GATED_SIZE), None).unwrap();
+    registry
+        .register(Arc::new(SimBackend::from_zoo("alexnet", GATED_BATCH).unwrap()))
+        .unwrap();
+    registry
+        .register_seq(
+            "transformer3",
+            &SeqModel::from_seed(SeqFamily::Transformer, 3),
+            GATED_BATCH,
+            seq_buckets(),
+        )
+        .unwrap();
+    Arc::new(registry)
+}
+
+fn seq_config() -> BenchConfig {
+    BenchConfig {
+        // Seed 3 (not the dense suite's 7) so the uniform 32..128 draw
+        // hits all three buckets, including exactly-32 for the bottom one.
+        seed: 3,
+        requests: 400,
+        deadline_us: None,
+        models: vec!["alexnet".to_string(), "transformer3".to_string()],
+        seq: Some(seq_buckets()),
+        ..gated_config()
+    }
+}
+
+#[test]
+fn seq_suite_is_deterministic_and_routes_every_bucket() {
+    let cfg = seq_config();
+    let policies = [SchedulePolicy::Fifo, SchedulePolicy::ReconfigAware];
+    let a = BenchSuite::run(&seq_registry(), &cfg, &policies).unwrap();
+    // A fresh registry (cold cache, recompiled bucket plans) must
+    // serialize to the same bytes.
+    let b = BenchSuite::run(&seq_registry(), &cfg, &policies).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(a.seq_min, 32);
+    assert_eq!(a.seq_max, 128);
+    for report in &a.reports {
+        assert_eq!(report.served, 400, "{}", report.policy);
+        // Every bucket is a first-class per-model row; the 32..128 draw
+        // range touches all three.
+        for name in ["alexnet", "transformer3@32", "transformer3@64", "transformer3@128"] {
+            let m = report
+                .per_model
+                .get(name)
+                .unwrap_or_else(|| panic!("{}: missing per-model row {name}", report.policy));
+            assert!(m.offered > 0, "{}: {name} never offered", report.policy);
+            assert_eq!(m.served, m.offered, "{}: {name} books must close", report.policy);
+        }
+        let offered: u64 = report.per_model.values().map(|m| m.offered).sum();
+        assert_eq!(offered, 400, "{}: per-bucket offers partition the trace", report.policy);
+    }
+    // A different seed draws different sequence lengths.
+    let mut reseeded = cfg.clone();
+    reseeded.seed = 8;
+    let c = BenchSuite::run(&seq_registry(), &reseeded, &policies).unwrap();
+    assert_ne!(a.to_json().to_string(), c.to_json().to_string());
+}
+
+#[test]
+fn seq_gated_suite_matches_committed_baseline() {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/bench_seq_baseline.json");
+    let suite = BenchSuite::run(
+        &seq_registry(),
+        &seq_config(),
+        &[SchedulePolicy::Fifo, SchedulePolicy::ReconfigAware],
+    )
+    .unwrap();
+    if std::env::var_os("FLEX_TPU_UPDATE_GOLDEN").is_some() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{}\n", suite.to_json())).unwrap();
+        if std::env::var_os("FLEX_TPU_UPDATE_GOLDEN").is_none() {
+            eprintln!(
+                "NOTE: wrote missing seq bench baseline {} — commit it so CI gates \
+                 against a fixed reference",
+                path.display()
+            );
+        }
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("seq baseline {} unreadable: {e}", path.display()));
+    let baseline = BenchSuite::from_json(&parse(&text).unwrap()).unwrap();
+    match bench::gate(&suite, &baseline) {
+        Ok(passed) => assert!(!passed.is_empty()),
+        Err(e) => panic!(
+            "seq bench gate failed against the committed baseline: {e}\n\
+             If the cycle model, scheduler or generators changed intentionally,\n\
+             regenerate with\n\
+             FLEX_TPU_UPDATE_GOLDEN=1 cargo test --test bench\n\
+             and commit the diff (it documents the performance drift for review)."
+        ),
+    }
+}
+
+/// FNV-1a over the trace stream — the digest the committed trace baseline
+/// stores (and the offline Python replica recomputes independently).
+fn trace_digest(spec: &TraceSpec) -> (u64, u64, u64, std::collections::BTreeMap<String, u64>) {
+    let buckets = seq_buckets();
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    let mut last_at = 0u64;
+    let mut seq_sum = 0u64;
+    let mut offered: std::collections::BTreeMap<String, u64> = Default::default();
+    for e in spec.events() {
+        eat(&e.at_us.to_le_bytes());
+        eat(&e.id.to_le_bytes());
+        eat(&(e.model as u64).to_le_bytes());
+        eat(&u64::from(e.seq_len.unwrap_or(0)).to_le_bytes());
+        eat(b";");
+        last_at = e.at_us;
+        seq_sum += u64::from(e.seq_len.unwrap_or(0));
+        let name = match e.model {
+            0 => "alexnet".to_string(),
+            _ => format!("transformer3@{}", buckets.bucket(e.seq_len.unwrap_or(1))),
+        };
+        *offered.entry(name).or_insert(0) += 1;
+    }
+    (h, last_at, seq_sum, offered)
+}
+
+#[test]
+fn seq_trace_matches_committed_python_replica_baseline() {
+    // The committed trace baseline is generated by the *offline Python
+    // replica* (python/tools/gen_seq_trace_baseline.py), which reimplements
+    // the LCG, the gap/model/sequence draw order and the bucket rounding
+    // from scratch.  Equality here cross-validates the Rust generator
+    // against an independent implementation, bit for bit.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/bench_seq_trace_baseline.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("trace baseline {} unreadable: {e}", path.display()));
+    let doc = parse(&text).unwrap();
+    let cfg = seq_config();
+    assert_eq!(doc.req_u64("schema").unwrap(), 1);
+    assert_eq!(doc.req_str("scenario").unwrap(), cfg.scenario.name());
+    assert_eq!(doc.req_u64("seed").unwrap(), cfg.seed);
+    assert_eq!(doc.req_u64("requests").unwrap(), cfg.requests);
+    assert_eq!(doc.req_u64("mean_interarrival_us").unwrap(), cfg.mean_interarrival_us);
+    assert_eq!(doc.req_u64("seq_min").unwrap(), 32);
+    assert_eq!(doc.req_u64("seq_max").unwrap(), 128);
+    let spec = TraceSpec {
+        scenario: cfg.scenario,
+        seed: cfg.seed,
+        requests: cfg.requests,
+        models: cfg.models.len(),
+        mean_interarrival_us: cfg.mean_interarrival_us,
+        seq: Some(SeqDist {
+            min: 32,
+            max: 128,
+            seq_models: vec![1],
+        }),
+    };
+    let (digest, last_at, seq_sum, offered) = trace_digest(&spec);
+    assert_eq!(
+        format!("{digest:016x}"),
+        doc.req_str("trace_digest").unwrap(),
+        "trace digest diverged from the Python replica"
+    );
+    assert_eq!(doc.req_u64("last_at_us").unwrap(), last_at);
+    assert_eq!(doc.req_u64("seq_len_sum").unwrap(), seq_sum);
+    let want = doc.req("offered").unwrap();
+    let want = want.as_object_sorted().unwrap();
+    assert_eq!(want.len(), offered.len(), "offered route set diverged");
+    for (name, count) in &offered {
+        let got = want
+            .get(name.as_str())
+            .and_then(|v| v.as_u64())
+            .unwrap_or_else(|| panic!("baseline missing offered count for {name}"));
+        assert_eq!(got, *count, "{name}");
+    }
 }
 
 #[test]

@@ -51,6 +51,7 @@ fn request(id: u64, model: &str) -> InferenceRequest {
         pixels,
         deadline_us: None,
         priority: 0,
+        seq_len: None,
     }
 }
 
@@ -465,6 +466,7 @@ fn malformed_requests_are_rejected_not_fatal() {
             pixels: vec![0.0; 3],
             deadline_us: None,
             priority: 0,
+            seq_len: None,
         };
         tx.send((bad, otx)).unwrap();
         // A well-formed request behind it still serves.

@@ -122,6 +122,7 @@ fn batched_server_serves_all_requests() {
                 pixels,
                 deadline_us: None,
                 priority: 0,
+                seq_len: None,
             };
             tx.send((req, otx)).unwrap();
             rxs.push((id, orx));

@@ -1,0 +1,226 @@
+//! Acceptance tests for the sequence-parameterized workload families and
+//! their bucketed serving plans (ISSUE 10):
+//!
+//! 1. **shape consistency** — every generated transformer / LSTM / MLP
+//!    topology validates, its per-layer GEMMs chain (producer `N` feeds
+//!    consumer `K` where the family implies it), and its MAC totals follow
+//!    from the weight geometry at every sequence length;
+//! 2. **bucketed warm restart** — `register_seq` against a shared store
+//!    restarts with every bucket's plan loaded, shapes preloaded, hit
+//!    rate exactly 1.0 and zero `simulate_layer` calls;
+//! 3. **thread invariance** — the objective sweep selects byte-identical
+//!    per-layer dataflows for the new families serial and parallel, under
+//!    all three objectives.
+
+use std::path::PathBuf;
+
+use flex_tpu::config::ArchConfig;
+use flex_tpu::coordinator::plan::PlanObjective;
+use flex_tpu::coordinator::sweep::sweep_models_objective;
+use flex_tpu::inference::{ModelRegistry, PlanSource};
+use flex_tpu::sim::engine::SimOptions;
+use flex_tpu::sim::parallel::ShapeCache;
+use flex_tpu::sim::PlanStore;
+use flex_tpu::topology::synth::{SeqBuckets, SeqFamily, SeqModel, LSTM_MAX_UNROLL};
+use flex_tpu::topology::Topology;
+use flex_tpu::util::rng::property;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flex-tpu-seq-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// GEMM dims of a generated layer: `(M, K, N)` as `Layer::gemm` lays
+/// them out (`ifmap_h`, `channels`, `num_filters`).
+fn dims(topo: &Topology, i: usize) -> (u64, u64, u64) {
+    let l = &topo.layers[i];
+    (
+        u64::from(l.ifmap_h),
+        u64::from(l.channels),
+        u64::from(l.num_filters),
+    )
+}
+
+#[test]
+fn transformer_shapes_are_internally_consistent() {
+    property("seq-transformer-shapes", 0xA77, 24, |rng| {
+        let seed = rng.next_u64() % 64;
+        let s = 1 + rng.range_u64(0, 511);
+        let model = SeqModel::from_seed(SeqFamily::Transformer, seed);
+        let topo = model.topology("tx", s as u32);
+        topo.validate().unwrap();
+        assert_eq!(topo.num_layers() % 6, 0, "six GEMMs per block");
+        let (qm, d, qn) = dims(&topo, 0);
+        assert_eq!(qm, s, "QKV M is the sequence length");
+        assert_eq!(qn, 3 * d, "QKV fuses three projections");
+        let (sm, dh, sn) = dims(&topo, 1);
+        assert_eq!(sm % s, 0, "scores M is heads * seq");
+        let h = sm / s;
+        assert_eq!(h * dh, d, "head_dim * heads is d_model");
+        assert_eq!(sn, s, "scores N carries the sequence length");
+        for b in 0..topo.num_layers() / 6 {
+            let qkv = dims(&topo, 6 * b);
+            let scores = dims(&topo, 6 * b + 1);
+            let ctx = dims(&topo, 6 * b + 2);
+            let proj = dims(&topo, 6 * b + 3);
+            let up = dims(&topo, 6 * b + 4);
+            let dn = dims(&topo, 6 * b + 5);
+            assert_eq!(qkv, (s, d, 3 * d), "block {b} qkv");
+            assert_eq!(scores, (h * s, dh, s), "block {b} scores");
+            assert_eq!(ctx, (h * s, s, dh), "block {b} ctx");
+            assert_eq!(proj, (s, d, d), "block {b} proj");
+            assert_eq!((up.0, up.1), (s, d), "block {b} ffn_up");
+            assert_eq!(dn, (s, up.2, d), "block {b} ffn_dn");
+        }
+        // Total MACs follow from the geometry (the quadratic terms are
+        // the attention score/context GEMMs).
+        let blocks = topo.num_layers() as u64 / 6;
+        let f = dims(&topo, 4).2;
+        let per_block = s * d * 3 * d + 2 * (h * s) * dh * s + s * d * d + 2 * s * d * f;
+        assert_eq!(topo.total_macs(), blocks * per_block, "seed {seed} seq {s}");
+    });
+}
+
+#[test]
+fn lstm_shapes_are_internally_consistent() {
+    property("seq-lstm-shapes", 0xB3D, 24, |rng| {
+        let seed = rng.next_u64() % 64;
+        let t = 1 + rng.range_u64(0, 511);
+        let model = SeqModel::from_seed(SeqFamily::Lstm, seed);
+        let topo = model.topology("rnn", t as u32);
+        topo.validate().unwrap();
+        let steps = t.min(u64::from(LSTM_MAX_UNROLL));
+        let gate_layers = (topo.num_layers() - 1) as u64;
+        assert_eq!(gate_layers % steps, 0, "whole cells only");
+        let cells = gate_layers / steps;
+        let (_, _, gate_n) = dims(&topo, 0);
+        let hidden = gate_n / 4;
+        let mut macs = 0u64;
+        for c in 0..cells {
+            let mut rows = 0u64;
+            for i in 0..steps {
+                let (m, k, n) = dims(&topo, (c * steps + i) as usize);
+                rows += m;
+                assert_eq!(n, 4 * hidden, "cell {c} gates fuse on N");
+                if c > 0 {
+                    assert_eq!(k, 2 * hidden, "stacked cell {c} feeds on hidden");
+                }
+                macs += m * k * n;
+            }
+            // Coalescing is MAC-exact: chunk rows sum to the timesteps.
+            assert_eq!(rows, t, "cell {c} rows, seed {seed} t {t}");
+        }
+        let head = topo.layers.last().unwrap();
+        assert_eq!(u64::from(head.channels), hidden, "head reads the hidden state");
+        assert_eq!(topo.total_macs(), macs + head.macs(), "seed {seed} t {t}");
+    });
+}
+
+#[test]
+fn mlp_shapes_are_internally_consistent() {
+    property("seq-mlp-shapes", 0xC41, 24, |rng| {
+        let seed = rng.next_u64() % 64;
+        let s = 1 + rng.range_u64(0, 511);
+        let model = SeqModel::from_seed(SeqFamily::Mlp, seed);
+        let topo = model.topology("dense", s as u32);
+        topo.validate().unwrap();
+        for i in 0..topo.num_layers() {
+            let (m, _, n) = dims(&topo, i);
+            assert_eq!(m, s, "layer {i}: the sequence axis is the microbatch");
+            if i + 1 < topo.num_layers() {
+                let (_, next_k, _) = dims(&topo, i + 1);
+                assert_eq!(n, next_k, "layer {i} output feeds layer {}", i + 1);
+            }
+        }
+        // M scales every GEMM, so total MACs are linear in seq length.
+        let unit = model.topology("dense", 1).total_macs();
+        assert_eq!(topo.total_macs(), s * unit, "seed {seed} seq {s}");
+    });
+}
+
+#[test]
+fn bucketed_plans_warm_restart_with_hit_rate_one() {
+    let dir = tmpdir("warm");
+    let arch = ArchConfig::square(8);
+    let model = SeqModel::from_seed(SeqFamily::Transformer, 3);
+    let buckets = SeqBuckets::new(32, 128).unwrap();
+
+    // Cold: every bucket compiles its own plan under its own provenance
+    // key, all into one shared store.
+    let cold_keys = {
+        let store = PlanStore::open(&dir).unwrap();
+        let registry = ModelRegistry::new(arch, Some(store)).unwrap();
+        let deps = registry.register_seq("tx3", &model, 1, buckets).unwrap();
+        assert_eq!(deps.len(), buckets.all().len());
+        for dep in &deps {
+            assert_eq!(dep.plan_source, PlanSource::Compiled, "{}", dep.name);
+        }
+        assert!(registry.cache_stats().misses > 0, "cold fleet must simulate");
+        assert_eq!(registry.buckets_of("tx3"), vec![32, 64, 128]);
+        let keys: Vec<String> = deps.iter().map(|d| d.provenance.clone()).collect();
+        let mut unique = keys.clone();
+        unique.sort();
+        unique.dedup();
+        assert_eq!(unique.len(), keys.len(), "per-bucket provenance keys differ");
+        keys
+    };
+
+    // Warm restart: every bucket loads its plan and shapes independently —
+    // hit rate exactly 1.0, zero simulate_layer calls.
+    let store = PlanStore::open(&dir).unwrap();
+    let registry = ModelRegistry::new(arch, Some(store)).unwrap();
+    let deps = registry.register_seq("tx3", &model, 1, buckets).unwrap();
+    for (dep, cold_key) in deps.iter().zip(&cold_keys) {
+        assert_eq!(dep.plan_source, PlanSource::Loaded, "{}", dep.name);
+        assert!(dep.shapes_preloaded > 0, "{}", dep.name);
+        assert_eq!(&dep.provenance, cold_key, "{}: provenance is stable", dep.name);
+    }
+    let stats = registry.cache_stats();
+    assert_eq!(stats.misses, 0, "warm bucketed fleet must not simulate: {stats:?}");
+    assert!(stats.hits > 0);
+    assert_eq!(stats.hit_rate(), 1.0);
+    // Routing still works over the warm deployments.
+    assert_eq!(registry.resolve("tx3", Some(40)).unwrap().name, "tx3@64");
+    assert_eq!(registry.resolve("tx3", Some(4096)).unwrap().name, "tx3@128");
+    assert_eq!(registry.resolve("tx3", None).unwrap().name, "tx3@32");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn seq_family_selection_is_thread_invariant() {
+    let arch = ArchConfig::square(16);
+    let models: Vec<Topology> = SeqFamily::ALL
+        .iter()
+        .flat_map(|&family| {
+            let model = SeqModel::from_seed(family, 1);
+            [48u32, 128].map(|s| model.topology(&format!("{family}-{s}"), s))
+        })
+        .collect();
+    for objective in PlanObjective::ALL {
+        let serial = sweep_models_objective(
+            &arch,
+            &models,
+            1,
+            SimOptions::default(),
+            objective,
+            &ShapeCache::new(),
+        );
+        let parallel = sweep_models_objective(
+            &arch,
+            &models,
+            4,
+            SimOptions::default(),
+            objective,
+            &ShapeCache::new(),
+        );
+        assert_eq!(
+            serial.models, parallel.models,
+            "{objective}: parallel sweep diverged from serial"
+        );
+        for m in &serial.models {
+            let (_, best) = m.best_static();
+            assert!(m.flex_cycles <= best, "{objective}/{}: flex beats static", m.model);
+        }
+    }
+}

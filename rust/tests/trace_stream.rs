@@ -45,6 +45,7 @@ fn config() -> BenchConfig {
         admission: std::collections::BTreeMap::new(),
         priorities: std::collections::BTreeMap::new(),
         overload_control: false,
+        seq: None,
     }
 }
 
@@ -57,6 +58,7 @@ fn spec_of(cfg: &BenchConfig) -> TraceSpec {
         requests: cfg.requests,
         models: cfg.models.len(),
         mean_interarrival_us: cfg.mean_interarrival_us,
+        seq: None,
     }
 }
 
@@ -71,6 +73,7 @@ fn iterator_collects_to_exactly_the_generated_trace() {
                     requests,
                     models: 3,
                     mean_interarrival_us: 1_500,
+                    seq: None,
                 };
                 let collected: Vec<_> = spec.events().collect();
                 assert_eq!(
@@ -97,6 +100,7 @@ fn iterator_is_exact_size_and_well_formed() {
         requests: 300,
         models: 4,
         mean_interarrival_us: 2_000,
+        seq: None,
     };
     let mut it = spec.events();
     assert_eq!(it.len(), 300);
